@@ -1,0 +1,61 @@
+//! Programmability (§6.5): writing a NEW task-parallel application
+//! against the TVM interface — here, parallel array-max via fork/join
+//! reduction — and running it on the sequential TVM interpreter.
+//!
+//! (AOT-compiling a new app additionally needs its ~60-line vectorized
+//! twin in python/compile/apps/ — see fib.py for the template.)
+//!
+//!     cargo run --release --example custom_app
+
+use trees::tvm::{Interp, TaskCtx, TvmProgram};
+
+/// max(lo, hi): small range -> emit local max
+///              else fork halves; join max2(slot_a, slot_b)
+struct ArrayMax;
+
+const T_MAX: usize = 1;
+const T_MAX2: usize = 2;
+
+impl TvmProgram for ArrayMax {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_MAX => {
+                let (lo, hi) = (args[0], args[1]);
+                if hi - lo <= 4 {
+                    let m = (lo..hi).map(|i| ctx.const_i[i as usize]).max().unwrap();
+                    ctx.emit(m);
+                } else {
+                    let mid = (lo + hi) / 2;
+                    let a = ctx.fork(T_MAX, vec![lo, mid]) as i32;
+                    let b = ctx.fork(T_MAX, vec![mid, hi]) as i32;
+                    ctx.join(T_MAX2, vec![a, b]);
+                }
+            }
+            T_MAX2 => {
+                ctx.emit(ctx.res[args[0] as usize].max(ctx.res[args[1] as usize]));
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+fn main() {
+    let data: Vec<i32> = (0..10_000).map(|i| (i * 2654435761u64 as i64 % 99991) as i32).collect();
+    let want = *data.iter().max().unwrap();
+
+    let mut m = Interp::new(&ArrayMax, 1 << 16, vec![0, data.len() as i32])
+        .with_heaps(vec![], vec![], data, vec![]);
+    let stats = m.run();
+    println!("parallel max = {} (reference {})", m.root_result(), want);
+    assert_eq!(m.root_result(), want);
+    println!(
+        "T1 = {} tasks, T-inf = {} epochs, parallelism = {:.0}",
+        stats.work,
+        stats.epochs,
+        stats.work as f64 / stats.epochs as f64
+    );
+}

@@ -1,0 +1,57 @@
+//! Fig 9 in miniature: the three sorting configurations side by side —
+//! naive TREES mergesort (serial merge tasks), TREES + data-parallel
+//! map merges, and the hand-coded native bitonic network.
+//!
+//!     make artifacts && cargo run --release --example sorting_showdown
+
+use trees::apps::msort;
+use trees::baselines::Bitonic;
+use trees::benchkit::Table;
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (manifest, dir) = load_manifest()?;
+    let dev = Device::cpu()?;
+    let n = 1024usize;
+    let mut rng = Rng::new(99);
+    let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 1e4).collect();
+    let mut want = xs.clone();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut table = Table::new(
+        &format!("sorting {n} floats"),
+        &["config", "time ms", "epochs", "map launches", "sorted"],
+    );
+
+    for app_name in ["mergesort", "msort_map"] {
+        let app = manifest.app(app_name)?;
+        let (w, nmax, n2) = msort::workload(app, &xs)?;
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default())?;
+        let t0 = std::time::Instant::now();
+        let (st, stats) = co.run(&w)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let off = msort::final_offset(nmax, n2);
+        let ok = st.heap_f[off..off + n] == want[..];
+        assert!(ok, "{app_name} mis-sorted");
+        table.row(vec![
+            (if app_name == "mergesort" { "TREES naive" } else { "TREES + map" }).into(),
+            format!("{ms:.1}"),
+            format!("{}", stats.epochs),
+            format!("{}", stats.map_launches),
+            "yes".into(),
+        ]);
+    }
+
+    let b = Bitonic::new(&dev, &dir, manifest.app("native_bitonic")?, n)?;
+    let t0 = std::time::Instant::now();
+    let got = b.sort(&xs)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(got, want);
+    table.row(vec!["native bitonic".into(), format!("{ms:.1}"), "-".into(),
+                   "-".into(), "yes".into()]);
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT lowering: every (app x window-bucket x size-class) epoch-step
+computation -> HLO text + a JSON manifest for the Rust coordinator.
+
+HLO *text* (not serialized proto) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Build-time only. `make artifacts` runs this; the Rust binary then never
+touches Python.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--app fib] [--force]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .apps import APP_NAMES, load_app
+from .treeslang.core import Program
+from .treeslang.epoch import EpochIO, make_epoch_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_epoch(prog: Program, io: EpochIO) -> str:
+    step = make_epoch_step(prog, io)
+    specs = io.input_specs(prog)
+    # NB: donation (input_output_alias) was tried here and reverted —
+    # it survives the HLO-text round trip but measured ~10% SLOWER on
+    # this PJRT CPU build (defensive copies + sync; EXPERIMENTS.md §Perf).
+    return to_hlo_text(jax.jit(step, keep_unused=True).lower(*specs))
+
+
+def lower_map(prog: Program, io: EpochIO, Wm: int) -> str:
+    Am = max(prog.map_args, 1)
+    i32, f32 = jnp.int32, jnp.float32
+    S = jax.ShapeDtypeStruct
+
+    def mstep(map_args, heap_i, heap_f, const_i, const_f, scalars):
+        nm = scalars[0]
+        mask = jnp.arange(Wm, dtype=i32) < nm
+        hi2, hf2 = prog.map_fn(
+            dict(heap_i=heap_i, heap_f=heap_f,
+                 const_i=const_i, const_f=const_f),
+            map_args, mask)
+        return hi2, hf2
+
+    specs = (
+        S((Wm, Am), i32), S((io.Hi,), i32), S((io.Hf,), f32),
+        S((io.Ci,), i32), S((io.Cf,), f32), S((8,), i32),
+    )
+    return to_hlo_text(jax.jit(mstep, keep_unused=True).lower(*specs))
+
+
+IO_KEYS = ("N", "Hi", "Hf", "Ci", "Cf", "R")
+
+
+def io_for(sz: dict, W: int) -> EpochIO:
+    """Build an EpochIO from a class dict (which may carry extra app
+    keys like VMAX/EMAX that only the app layout cares about)."""
+    return EpochIO(W=W, **{k: sz[k] for k in IO_KEYS if k in sz})
+
+
+def build_app(name: str, out_dir: str, force: bool) -> dict:
+    mod = load_app(name)
+    # apps whose programs depend on class layout expose program_for_class
+    per_class = getattr(mod, "program_for_class", None)
+    prog: Program = mod.program() if per_class is None else None
+    classes = mod.CLASSES
+    buckets = mod.BUCKETS
+    probe = prog if prog is not None else per_class(next(iter(classes.values())))
+    map_buckets = getattr(mod, "MAP_BUCKETS", [4096] if probe.map_fn else [])
+
+    entry = {
+        "T": probe.T,
+        "A": probe.num_args,
+        "K": probe.K,
+        "Km": probe.Km,
+        "Am": probe.map_args,
+        "G": probe.gather_width,
+        "task_types": [tt.name for tt in probe.task_types],
+        "max_forks": [tt.max_forks for tt in probe.task_types],
+        "artifacts": [],
+        "map_artifacts": [],
+        "classes": {k: dict(v) for k, v in classes.items()},
+    }
+
+    for cls, sz in classes.items():
+        cprog = prog if prog is not None else per_class(sz)
+        for W in buckets:
+            io = io_for(sz, W)
+            fname = f"{name}__w{W}__{cls}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if force or not os.path.exists(path):
+                text = lower_epoch(cprog, io)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  wrote {fname} ({len(text)//1024} KiB)")
+            entry["artifacts"].append(
+                dict(file=fname, W=W, cls=cls, R=io.R, **{
+                    k: v for k, v in sz.items() if k != "R"}))
+        for Wm in map_buckets:
+            io = io_for(sz, 1)
+            fname = f"{name}__map{Wm}__{cls}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if force or not os.path.exists(path):
+                text = lower_map(cprog, io, Wm)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  wrote {fname} ({len(text)//1024} KiB)")
+            entry["map_artifacts"].append(
+                dict(file=fname, Wm=Wm, cls=cls, R=io.R, **{
+                    k: v for k, v in sz.items() if k != "R"}))
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--app", action="append", default=None,
+                    help="limit to specific app(s)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    from .baselines import BASELINE_NAMES, load_baseline
+
+    names = args.app or (APP_NAMES + BASELINE_NAMES)
+    manifest = {"version": 1, "apps": {}}
+    for name in names:
+        print(f"[aot] {name}")
+        try:
+            if name in BASELINE_NAMES:
+                manifest["apps"][name] = load_baseline(name).build(
+                    name, args.out_dir, args.force)
+            else:
+                manifest["apps"][name] = build_app(name, args.out_dir, args.force)
+        except ModuleNotFoundError as e:
+            print(f"  skipped ({e})")
+    # merge with any existing manifest so per-app rebuilds keep others
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath) and args.app:
+        with open(mpath) as f:
+            old = json.load(f)
+        old["apps"].update(manifest["apps"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest: {mpath} ({len(manifest['apps'])} apps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""TREES applications (L2): one module per app, each exporting
+``program()`` returning a `treeslang.Program` plus the AOT size-class
+table consumed by `aot.py`.
+
+Registry order is stable; the Rust side mirrors task-type ids.
+"""
+
+from importlib import import_module
+
+APP_NAMES = [
+    "fib",
+    "tree",
+    "bfs",
+    "sssp",
+    "fft",
+    "mergesort",
+    "msort_map",
+    "nqueens",
+    "matmul",
+    "tsp",
+    "annealing",
+]
+
+
+def load_app(name: str):
+    return import_module(f"compile.apps.{name}")
+
+
+def all_apps():
+    return [(n, load_app(n)) for n in APP_NAMES]

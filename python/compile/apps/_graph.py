@@ -1,0 +1,170 @@
+"""Shared BFS/SSSP program builder (Fig 7/8).
+
+Data-driven relaxation in TVM form (the task-parallel analogue of the
+Lonestar worklist algorithms the paper compares against):
+
+  visit(u, d):          if dist[u] != d: die            # stale visit
+                        else fork expand(u, rp[u], rp[u+1], d)
+  expand(u, lo, hi, d): if dist[u] != d: die            # stale subtree
+                        if hi-lo > 2: fork 2 half-range expands
+                        else: for each edge e in [lo,hi):
+                                v = col[e]; nd = d + w(e)
+                                if nd < dist[v]:
+                                    dist[v] <- min (epoch-end merge)
+                                    fork visit(v, nd)
+
+Unlike the paper's atomic worklist push, fork slots come from the
+prefix-sum allocator (work-together Tenet 2). Duplicate visits (several
+same-epoch relaxations of one vertex with equal distance) are tolerated:
+the dist gate kills all but the ones carrying the current best distance,
+matching Lonestar's own duplicate-work behaviour.
+
+Duplicate-visit dedup ("claim"): with many equal-length paths (grids!),
+several same-epoch relaxations of one vertex would each fork a visit and
+each expand the vertex's adjacency — exponential duplication. Each
+improving relax therefore min-scatters
+
+    claim[v] = nd * 2^16 + (window_lane & 0xffff)
+
+and only the winning lane forks the visit. Packing distance in the high
+bits makes staleness harmless: an old claim always carries nd_old >=
+dist[v] > nd, so a strictly-improving relax always beats it. (Requires
+distances < 2^15 — asserted by the Rust workload builder.) This is the
+work-together analogue of Lonestar's atomic test-and-set on the output
+worklist. The scalar interpreter oracle skips dedup (duplicates are
+semantically harmless), so differential tests compare distances, not
+task counts.
+
+const_i layout (static per size class):
+  [0]=V [1]=E [2]=src [3]=reserved
+  [4          .. 4+VMAX]        row_ptr  (VMAX+1 entries)
+  [4+VMAX+1   .. +EMAX]         col
+  [.. +EMAX]                    weights  (sssp only)
+heap_i: dist[VMAX] ++ claim[VMAX]
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+INF = 1 << 30
+A = 4
+i32 = jnp.int32
+
+T_VISIT = 1
+T_EXPAND = 2
+
+
+def make_graph_program(name: str, weighted: bool, VMAX: int, EMAX: int) -> Program:
+    RP = 4
+    COL = RP + VMAX + 1
+    WOFF = COL + EMAX
+
+    def visit_fn(env, args, mask, child_slots):
+        W = env.W
+        u = jnp.clip(args[:, 0], 0, VMAX - 1)
+        d = args[:, 1]
+        dist_u = env.heap_i[u]
+        ok = mask & (dist_u == d)
+        rp0 = env.const_i[RP + u]
+        rp1 = env.const_i[RP + u + 1]
+        fork = ok & (rp1 > rp0)
+
+        fa = jnp.zeros((W, 1, A), i32)
+        fa = fa.at[:, 0, 0].set(args[:, 0])
+        fa = fa.at[:, 0, 1].set(rp0)
+        fa = fa.at[:, 0, 2].set(rp1)
+        fa = fa.at[:, 0, 3].set(d)
+        return Effects(
+            fork_count=fork.astype(i32),
+            fork_type=jnp.full((W, 1), T_EXPAND, i32),
+            fork_args=fa,
+        )
+
+    def expand_fn(env, args, mask, child_slots):
+        W = env.W
+        u = jnp.clip(args[:, 0], 0, VMAX - 1)
+        lo, hi, d = args[:, 1], args[:, 2], args[:, 3]
+        dist_u = env.heap_i[u]
+        ok = mask & (dist_u == d)
+        small = (hi - lo) <= 2
+        mid = (lo + hi) // 2
+
+        # --- leaf: relax up to 2 edges -------------------------------
+        e0 = jnp.clip(lo, 0, EMAX - 1)
+        e1 = jnp.clip(lo + 1, 0, EMAX - 1)
+        has1 = lo + 1 < hi
+        v0 = jnp.clip(env.const_i[COL + e0], 0, VMAX - 1)
+        v1 = jnp.clip(env.const_i[COL + e1], 0, VMAX - 1)
+        if weighted:
+            w0 = env.const_i[WOFF + e0]
+            w1 = env.const_i[WOFF + e1]
+        else:
+            w0 = jnp.ones((W,), i32)
+            w1 = jnp.ones((W,), i32)
+        nd0 = d + w0
+        nd1 = d + w1
+        leaf = ok & small
+        imp0 = leaf & (nd0 < env.heap_i[v0])
+        imp1 = leaf & has1 & (nd1 < env.heap_i[v1])
+
+        # claim dedup: winner of the epoch-collective min forks the visit
+        lane16 = jnp.arange(W, dtype=i32) & 0xFFFF
+        cv0 = nd0 * 65536 + lane16
+        cv1 = nd1 * 65536 + lane16
+        c_idx0 = jnp.where(imp0, VMAX + v0, 2 * VMAX)
+        c_idx1 = jnp.where(imp1, VMAX + v1, 2 * VMAX)
+        claim2 = env.heap_i.at[c_idx0].min(cv0, mode="drop")
+        claim2 = claim2.at[c_idx1].min(cv1, mode="drop")
+        win0 = imp0 & (claim2[VMAX + v0] == cv0)
+        win1 = imp1 & (claim2[VMAX + v1] == cv1)
+
+        # lane-local compaction: if only edge 1 wins it takes slot 0
+        first_v = jnp.where(win0, v0, v1)
+        first_nd = jnp.where(win0, nd0, nd1)
+
+        # --- assemble forks ------------------------------------------
+        n_leaf = win0.astype(i32) + win1.astype(i32)
+        fork_count = jnp.where(ok, jnp.where(small, n_leaf, 2), 0)
+        ftype = jnp.where(
+            small[:, None], T_VISIT, T_EXPAND
+        ) * jnp.ones((W, 2), i32)
+
+        fa = jnp.zeros((W, 2, A), i32)
+        # slot 0: visit(first_v, first_nd)  |  expand(u, lo, mid, d)
+        fa = fa.at[:, 0, 0].set(jnp.where(small, first_v, args[:, 0]))
+        fa = fa.at[:, 0, 1].set(jnp.where(small, first_nd, lo))
+        fa = fa.at[:, 0, 2].set(jnp.where(small, 0, mid))
+        fa = fa.at[:, 0, 3].set(jnp.where(small, 0, d))
+        # slot 1: visit(v1, nd1)            |  expand(u, mid, hi, d)
+        fa = fa.at[:, 1, 0].set(jnp.where(small, v1, args[:, 0]))
+        fa = fa.at[:, 1, 1].set(jnp.where(small, nd1, mid))
+        fa = fa.at[:, 1, 2].set(jnp.where(small, 0, hi))
+        fa = fa.at[:, 1, 3].set(jnp.where(small, 0, d))
+
+        return Effects(
+            fork_count=fork_count,
+            fork_type=ftype,
+            fork_args=fa,
+            heap_i_scatter=[
+                (v0, nd0, imp0, "min"),
+                (v1, nd1, imp1, "min"),
+                (VMAX + v0, cv0, imp0, "min"),
+                (VMAX + v1, cv1, imp1, "min"),
+            ],
+        )
+
+    return Program(
+        name=name,
+        task_types=[
+            TaskType("visit", visit_fn, max_forks=1),
+            TaskType("expand", expand_fn, max_forks=2),
+        ],
+        num_args=A,
+    )
+
+
+def class_dict(VMAX: int, EMAX: int, N: int, weighted: bool) -> dict:
+    ci = 4 + VMAX + 1 + EMAX + (EMAX if weighted else 0)
+    # heap: dist[VMAX] ++ claim[VMAX]
+    return dict(N=N, Hi=2 * VMAX, Hf=1, Ci=ci, Cf=1, R=1, VMAX=VMAX, EMAX=EMAX)

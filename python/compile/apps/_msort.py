@@ -1,0 +1,144 @@
+"""Shared mergesort program builder (Fig 9): naive (serial-merge task)
+and sophisticated (data-parallel map merge) variants.
+
+  sort(lo, hi):  hi-lo <= G -> leaf: sorting-network sort in place
+                 else fork sort(lo,mid), sort(mid,hi); join merge(lo,mid,hi)
+  merge(lo, mid, hi):
+     naive: two-pointer serial merge inside the task (a fori_loop over
+            the whole output — the "abysmal" single-work-item merge the
+            paper uses to motivate map)
+     map:   emit one map descriptor; the merge-path kernel merges the
+            whole level data-parallel after the epoch
+
+Buffers ping-pong by level: heap_f = bufA[NMAX] ++ bufB[NMAX]. Leaves
+(level 0) sort in place in A; the merge at level L (block size G*2^L)
+reads parity (L-1)%2 and writes parity L%2.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+from ..kernels.merge import merge_level
+
+A = 4
+G = 4  # leaf run length
+i32 = jnp.int32
+f32 = jnp.float32
+
+T_SORT = 1
+T_MERGE = 2
+
+
+def _level_of(size):
+    """Merge level L for block size `size` = G * 2^L (exact for pow2)."""
+    return jnp.round(jnp.log2(size.astype(f32) / G)).astype(i32)
+
+
+def _offsets(size, NMAX):
+    lvl = _level_of(size)
+    src = ((lvl - 1) % 2) * NMAX
+    dst = (lvl % 2) * NMAX
+    return src, dst
+
+
+def make_msort_program(name: str, use_map: bool, NMAX: int) -> Program:
+    def sort_fn(env, args, mask, child_slots):
+        W = env.W
+        lo, hi = args[:, 0], args[:, 1]
+        size = hi - lo
+        leaf = size <= G
+        mid = (lo + hi) // 2
+
+        # leaf: gather G elements from buffer A, sort, scatter back
+        gidx = jnp.clip(lo[:, None] + jnp.arange(G, dtype=i32)[None, :],
+                        0, NMAX - 1)  # (W,G)
+        vals = env.heap_f[gidx]
+        svals = jnp.sort(vals, axis=1)
+        scat = []
+        for k in range(G):
+            scat.append((gidx[:, k], svals[:, k], mask & leaf, "set"))
+
+        fa = jnp.zeros((W, 2, A), i32)
+        fa = fa.at[:, 0, 0].set(lo)
+        fa = fa.at[:, 0, 1].set(mid)
+        fa = fa.at[:, 1, 0].set(mid)
+        fa = fa.at[:, 1, 1].set(hi)
+        ja = jnp.zeros((W, A), i32)
+        ja = ja.at[:, 0].set(lo)
+        ja = ja.at[:, 1].set(mid)
+        ja = ja.at[:, 2].set(hi)
+        return Effects(
+            fork_count=jnp.where(mask & ~leaf, 2, 0).astype(i32),
+            fork_type=jnp.full((W, 2), T_SORT, i32),
+            fork_args=fa,
+            join_mask=~leaf,
+            join_type=jnp.full((W,), T_MERGE, i32),
+            join_args=ja,
+            heap_f_scatter=scat,
+        )
+
+    def merge_map_fn(env, args, mask, child_slots):
+        W = env.W
+        ma = jnp.zeros((W, 1, A), i32)
+        ma = ma.at[:, 0, 0].set(args[:, 0])
+        ma = ma.at[:, 0, 1].set(args[:, 1])
+        ma = ma.at[:, 0, 2].set(args[:, 2])
+        return Effects(
+            map_count=mask.astype(i32),
+            map_args=ma,
+        )
+
+    def merge_naive_fn(env, args, mask, child_slots):
+        lo, mid, hi = args[:, 0], args[:, 1], args[:, 2]
+        size = hi - lo
+        src, dst = _offsets(size, NMAX)
+
+        def step(j, carry):
+            heap, ia, ib = carry
+            a = heap[jnp.clip(src + ia, 0, 2 * NMAX - 1)]
+            b = heap[jnp.clip(src + ib, 0, 2 * NMAX - 1)]
+            take_a = (ia < mid) & ((ib >= hi) | (a <= b))
+            v = jnp.where(take_a, a, b)
+            valid = mask & (j < size)
+            idx = jnp.where(valid, dst + lo + j, 2 * NMAX)
+            heap = heap.at[idx].set(v, mode="drop")
+            ia = ia + (take_a & valid).astype(i32)
+            ib = ib + (~take_a & valid).astype(i32)
+            return heap, ia, ib
+
+        heap, _, _ = jax.lax.fori_loop(
+            0, NMAX, step, (env.heap_f, lo, mid))
+        return Effects(heap_f=heap)
+
+    def map_fn(envd, map_args, mask):
+        heap_f = envd["heap_f"]
+        lo0, mid0, hi0 = map_args[0, 0], map_args[0, 1], map_args[0, 2]
+        size = hi0 - lo0
+        nm = mask.sum().astype(i32)
+        total = nm * size
+        src, dst = _offsets(size, NMAX)
+        merged = merge_level(heap_f, size, total, src, nmax=NMAX)
+        # write merged[0:total] into the dst half
+        iota = jnp.arange(NMAX, dtype=i32)
+        dst_half = jax.lax.dynamic_slice(heap_f, (dst,), (NMAX,))
+        new_half = jnp.where(iota < total, merged, dst_half)
+        heap_f = jax.lax.dynamic_update_slice(heap_f, new_half, (dst,))
+        return envd["heap_i"], heap_f
+
+    merge_fn = merge_map_fn if use_map else merge_naive_fn
+    return Program(
+        name=name,
+        task_types=[
+            TaskType("sort", sort_fn, max_forks=2),
+            TaskType("merge", merge_fn, max_forks=0,
+                     max_maps=1 if use_map else 0),
+        ],
+        num_args=A,
+        map_args=A if use_map else 0,
+        map_fn=map_fn if use_map else None,
+    )
+
+
+def class_dict(NMAX: int, N: int) -> dict:
+    return dict(N=N, Hi=1, Hf=2 * NMAX, Ci=1, Cf=1, R=1, NMAX=NMAX)

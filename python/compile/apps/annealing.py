@@ -1,0 +1,115 @@
+"""Parallel simulated annealing (§6.5 app): many independent chains,
+each a sequence of tasks (the continuation-passing style the TVM
+requires — each step forks its successor).
+
+  root(chains, steps): fork chain(x0_c, 0, steps, c) per chain (c < K=8)
+  chain(x, step, steps, c): propose x' = neighbor(x, hash); accept by
+      Metropolis with hash-derived threshold (deterministic: both the
+      artifact and the interpreter compute the same decision);
+      publish energy bound to heap_i[0] (min-merge);
+      step+1 < steps -> fork continuation else emit best energy
+
+Energy: a rugged integer hash landscape  e(x) = popcount-weighted mix —
+no external data needed. Deterministic across layers.
+
+heap_i: [0] = best energy seen (global min-merge)
+const_i: [steps, n_chains, temp0, reserved]
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+K_CHAINS = 8
+i32 = jnp.int32
+u32 = jnp.uint32
+
+T_ROOT = 1
+T_CHAIN = 2
+
+
+def _mix(x):
+    """xorshift-mult hash, matching rust apps::annealing::mix."""
+    x = x.astype(u32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def energy(x):
+    """Rugged landscape in [0, 2^16)."""
+    return (_mix(x) & jnp.uint32(0xFFFF)).astype(i32)
+
+
+def _root_fn(env, args, mask, child_slots):
+    W = env.W
+    steps = env.const_i[0]
+    nchains = env.const_i[1]
+    fa = jnp.zeros((W, K_CHAINS, A), i32)
+    for c in range(K_CHAINS):
+        x0 = (_mix(jnp.full((W,), c * 7919 + 13, i32)) & jnp.uint32(0xFFFFF))
+        fa = fa.at[:, c, 0].set(x0.astype(i32))
+        fa = fa.at[:, c, 1].set(0)
+        fa = fa.at[:, c, 2].set(steps)
+        fa = fa.at[:, c, 3].set(c)
+    return Effects(
+        fork_count=jnp.where(mask, jnp.minimum(nchains, K_CHAINS), 0),
+        fork_type=jnp.full((W, K_CHAINS), T_CHAIN, i32),
+        fork_args=fa,
+    )
+
+
+def _chain_fn(env, args, mask, child_slots):
+    W = env.W
+    x, step, steps, c = args[:, 0], args[:, 1], args[:, 2], args[:, 3]
+    h = _mix(x * 31 + step * 101 + c * 1009)
+    # neighbor: flip one of the low 20 bits
+    bit = (h % 20).astype(i32)
+    x2 = x ^ (1 << bit)
+    e1 = energy(x)
+    e2 = energy(x2)
+    # Metropolis: accept if better, else with prob exp(-(de)/T); the
+    # threshold comes from the hash (deterministic). T decays with step.
+    t = jnp.maximum(1, env.const_i[2] - step)  # linear cooling
+    de = e2 - e1
+    r = (_mix(h) & jnp.uint32(0x3FF)).astype(i32)  # 0..1023
+    # accept iff de <= 0 or r < 1024 * exp(-de/t) ~ approx via shift:
+    accept = (de <= 0) | (r < (1024 * t) // jnp.maximum(de * 4 + t, 1))
+    xn = jnp.where(accept, x2, x)
+    en = jnp.minimum(e1, jnp.where(accept, e2, e1))
+
+    last = step + 1 >= steps
+    fa = jnp.zeros((W, K_CHAINS, A), i32)
+    fa = fa.at[:, 0, 0].set(xn)
+    fa = fa.at[:, 0, 1].set(step + 1)
+    fa = fa.at[:, 0, 2].set(steps)
+    fa = fa.at[:, 0, 3].set(c)
+    return Effects(
+        fork_count=jnp.where(mask & ~last, 1, 0).astype(i32),
+        fork_type=jnp.full((W, K_CHAINS), T_CHAIN, i32),
+        fork_args=fa,
+        emit_mask=last,
+        emit_val=en,
+        heap_i_scatter=[(jnp.zeros((W,), i32), en, mask, "min")],
+    )
+
+
+def program():
+    return Program(
+        name="annealing",
+        task_types=[
+            TaskType("root", _root_fn, max_forks=K_CHAINS),
+            TaskType("chain", _chain_fn, max_forks=1),
+        ],
+        num_args=A,
+    )
+
+
+CLASSES = {
+    "S": dict(N=1 << 14, Hi=1, Hf=1, Ci=4, Cf=1, R=1),
+}
+BUCKETS = [256]

@@ -1,0 +1,14 @@
+"""BFS (Fig 7): unweighted data-driven relaxation. See _graph.py."""
+
+from ._graph import class_dict, make_graph_program
+
+
+def program_for_class(sz: dict):
+    return make_graph_program("bfs", False, sz["VMAX"], sz["EMAX"])
+
+
+CLASSES = {
+    "S": class_dict(VMAX=256, EMAX=4096, N=1 << 14, weighted=False),
+    "M": class_dict(VMAX=16384, EMAX=262144, N=1 << 20, weighted=False),
+}
+BUCKETS = [256, 1024, 4096]

@@ -1,0 +1,149 @@
+"""Task-parallel FFT (Fig 6) — radix-2 decimation-in-frequency.
+
+Matches the paper's setup: a fork/join FFT whose butterfly passes are
+task trees (NO data-parallel map — §6.2 notes map is deliberately not
+used, which would benefit TREES). Output is in bit-reversed order, as
+is standard for in-place DIF; the Rust side applies the bit-reversal
+permutation when checking numerics.
+
+  fft(lo, n):  n <= 2 -> inline butterfly
+               else fork bfr(lo, n, 0, n/2); join next(lo, n)
+  bfr(lo, n, klo, khi): butterfly-range tree; leaves do <= 2 butterflies
+               x[lo+k], x[lo+k+n/2] = a+b, (a-b)*w^k_n   (disjoint writes)
+  next(lo, n): fork fft(lo, n/2), fft(lo+n/2, n/2)
+
+heap_f: re[NMAX] ++ im[NMAX]
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+i32 = jnp.int32
+f32 = jnp.float32
+
+T_FFT = 1
+T_BFR = 2
+T_NEXT = 3
+
+
+def make_fft_program(NMAX: int) -> Program:
+    def butterfly_scatters(env, lo, n, k, active):
+        """One butterfly per lane at global position k of block (lo,n)."""
+        i0 = jnp.clip(lo + k, 0, NMAX - 1)
+        i1 = jnp.clip(lo + k + n // 2, 0, NMAX - 1)
+        re, im = env.heap_f, env.heap_f  # single array: re at [0,NMAX), im offset
+        a_re = env.heap_f[i0]
+        a_im = env.heap_f[NMAX + i0]
+        b_re = env.heap_f[i1]
+        b_im = env.heap_f[NMAX + i1]
+        ang = -2.0 * jnp.pi * k.astype(f32) / jnp.maximum(n, 1).astype(f32)
+        w_re = jnp.cos(ang)
+        w_im = jnp.sin(ang)
+        s_re = a_re + b_re
+        s_im = a_im + b_im
+        d_re = a_re - b_re
+        d_im = a_im - b_im
+        t_re = d_re * w_re - d_im * w_im
+        t_im = d_re * w_im + d_im * w_re
+        _ = (re, im)
+        return [
+            (i0, s_re, active, "set"),
+            (NMAX + i0, s_im, active, "set"),
+            (i1, t_re, active, "set"),
+            (NMAX + i1, t_im, active, "set"),
+        ]
+
+    def fft_fn(env, args, mask, child_slots):
+        W = env.W
+        lo, n = args[:, 0], args[:, 1]
+        tiny = n <= 2
+        # inline butterfly for n == 2 (k = 0, twiddle 1)
+        scat = butterfly_scatters(env, lo, n, jnp.zeros((W,), i32),
+                                  mask & tiny & (n == 2))
+
+        fa = jnp.zeros((W, 1, A), i32)
+        fa = fa.at[:, 0, 0].set(lo)
+        fa = fa.at[:, 0, 1].set(n)
+        fa = fa.at[:, 0, 2].set(0)
+        fa = fa.at[:, 0, 3].set(n // 2)
+        ja = jnp.zeros((W, A), i32)
+        ja = ja.at[:, 0].set(lo)
+        ja = ja.at[:, 1].set(n)
+        return Effects(
+            fork_count=jnp.where(mask & ~tiny, 1, 0).astype(i32),
+            fork_type=jnp.full((W, 1), T_BFR, i32),
+            fork_args=fa,
+            join_mask=~tiny,
+            join_type=jnp.full((W,), T_NEXT, i32),
+            join_args=ja,
+            heap_f_scatter=scat,
+        )
+
+    def bfr_fn(env, args, mask, child_slots):
+        W = env.W
+        lo, n, klo, khi = args[:, 0], args[:, 1], args[:, 2], args[:, 3]
+        small = (khi - klo) <= 2
+        mid = (klo + khi) // 2
+        # leaves: butterflies at klo and klo+1
+        scat = butterfly_scatters(env, lo, n, klo, mask & small)
+        scat += butterfly_scatters(env, lo, n, klo + 1,
+                                   mask & small & (klo + 1 < khi))
+
+        fa = jnp.zeros((W, 2, A), i32)
+        fa = fa.at[:, 0, 0].set(lo)
+        fa = fa.at[:, 0, 1].set(n)
+        fa = fa.at[:, 0, 2].set(klo)
+        fa = fa.at[:, 0, 3].set(mid)
+        fa = fa.at[:, 1, 0].set(lo)
+        fa = fa.at[:, 1, 1].set(n)
+        fa = fa.at[:, 1, 2].set(mid)
+        fa = fa.at[:, 1, 3].set(khi)
+        return Effects(
+            fork_count=jnp.where(mask & ~small, 2, 0).astype(i32),
+            fork_type=jnp.full((W, 2), T_BFR, i32),
+            fork_args=fa,
+            heap_f_scatter=scat,
+        )
+
+    def next_fn(env, args, mask, child_slots):
+        W = env.W
+        lo, n = args[:, 0], args[:, 1]
+        h = n // 2
+        recurse = h >= 2
+        fa = jnp.zeros((W, 2, A), i32)
+        fa = fa.at[:, 0, 0].set(lo)
+        fa = fa.at[:, 0, 1].set(h)
+        fa = fa.at[:, 1, 0].set(lo + h)
+        fa = fa.at[:, 1, 1].set(h)
+        return Effects(
+            fork_count=jnp.where(mask & recurse, 2, 0).astype(i32),
+            fork_type=jnp.full((W, 2), T_FFT, i32),
+            fork_args=fa,
+        )
+
+    return Program(
+        name="fft",
+        task_types=[
+            TaskType("fft", fft_fn, max_forks=1),
+            TaskType("bfr", bfr_fn, max_forks=2),
+            TaskType("next", next_fn, max_forks=2),
+        ],
+        num_args=A,
+    )
+
+
+def program_for_class(sz: dict):
+    return make_fft_program(sz["NMAX"])
+
+
+def class_dict(NMAX: int, N: int) -> dict:
+    return dict(N=N, Hi=1, Hf=2 * NMAX, Ci=1, Cf=1, R=1, NMAX=NMAX)
+
+
+CLASSES = {
+    "S": class_dict(NMAX=1 << 10, N=1 << 13),
+    "M": class_dict(NMAX=1 << 16, N=1 << 19),
+}
+BUCKETS = [256, 1024, 4096]

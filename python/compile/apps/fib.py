@@ -1,0 +1,87 @@
+"""Naive Fibonacci — the paper's worst-case stress test (Fig 5).
+
+fib(n):  n < 2 -> emit n
+         else  -> fork fib(n-1); fork fib(n-2); join sum2(c0, c1)
+sum2(a, b): emit res[a] + res[b]
+
+Maximizes runtime overhead per unit of work: each task does O(1)
+arithmetic, so Fig 5 measures the runtime itself.
+
+args layout: fib:  [n, -, -, -]
+             sum2: [slot_of_child0, slot_of_child1, -, -]
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+i32 = jnp.int32
+
+
+def _fib_fn(env, args, mask, child_slots):
+    W = env.W
+    n = args[:, 0]
+    leaf = n < 2
+
+    fork_count = jnp.where(leaf, 0, 2).astype(i32)
+    fork_type = jnp.full((W, 2), 1, i32)  # both forks are fib
+    fa = jnp.zeros((W, 2, A), i32)
+    fa = fa.at[:, 0, 0].set(n - 1)
+    fa = fa.at[:, 1, 0].set(n - 2)
+
+    ja = jnp.zeros((W, A), i32)
+    ja = ja.at[:, 0].set(child_slots[:, 0])
+    ja = ja.at[:, 1].set(child_slots[:, 1])
+
+    return Effects(
+        fork_count=fork_count,
+        fork_type=fork_type,
+        fork_args=fa,
+        join_mask=~leaf,
+        join_type=jnp.full((W,), 2, i32),  # sum2
+        join_args=ja,
+        emit_mask=leaf,
+        emit_val=n,
+    )
+
+
+def _sum2_fn(env, args, mask, child_slots):
+    a = env.res_win[:, 0]
+    b = env.res_win[:, 1]
+    return Effects(
+        emit_mask=jnp.ones_like(mask),
+        emit_val=(a + b).astype(i32),
+    )
+
+
+def _gather(tid, args, res):
+    """Host-side res gather: sum2's operands live at its child slots."""
+    if tid == 2:
+        return [res[args[0]], res[args[1]]]
+    return [0, 0]
+
+
+def program() -> Program:
+    return Program(
+        name="fib",
+        task_types=[
+            TaskType("fib", _fib_fn, max_forks=2),
+            TaskType("sum2", _sum2_fn),
+        ],
+        num_args=A,
+        gather_width=2,
+        gather=_gather,
+    )
+
+
+# AOT size classes: N must hold the peak TV size (~2*fib(n+1) entries).
+# class S covers fib<=22, M fib<=28, L fib<=32.
+CLASSES = {
+    "S": dict(N=1 << 16, Hi=1, Hf=1, Ci=1, Cf=1),
+    "M": dict(N=1 << 19, Hi=1, Hf=1, Ci=1, Cf=1),
+    "L": dict(N=1 << 21, Hi=1, Hf=1, Ci=1, Cf=1),
+}
+BUCKETS = [256, 1024, 4096]
+
+# Rust-side workload: initial task = fib(n) with args [n,0,0,0].

@@ -1,0 +1,90 @@
+"""Blocked task-parallel matrix multiply (§6.5 programmability app).
+
+  mm(ro, co, size): size <= 2 -> leaf: compute the 2x2 output block by a
+                    fori_loop inner product (scatter-add free: disjoint
+                    'set' writes into C)
+                    else fork the four quadrant tasks (no join needed —
+                    output blocks are disjoint)
+
+const_f: A (n*n row-major) ++ B (n*n); heap_f: C (n*n)
+const_i: [n]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+B0 = 2  # leaf block edge
+i32 = jnp.int32
+f32 = jnp.float32
+
+T_MM = 1
+
+
+def make_matmul_program(NMAT: int) -> Program:
+    def mm_fn(env, args, mask, child_slots):
+        W = env.W
+        n = env.const_i[0]
+        ro, co, size = args[:, 0], args[:, 1], args[:, 2]
+        leaf = size <= B0
+        half = size // 2
+
+        # --- leaf: 2x2 block inner products --------------------------
+        def body(k, acc):
+            accs = acc
+            new = []
+            for dr in range(B0):
+                for dc in range(B0):
+                    a = env.const_f[jnp.clip((ro + dr) * n + k, 0, NMAT * NMAT - 1)]
+                    b = env.const_f[
+                        jnp.clip(NMAT * NMAT + k * n + (co + dc), 0,
+                                 2 * NMAT * NMAT - 1)]
+                    new.append(accs[dr * B0 + dc] + a * b)
+            return tuple(new)
+
+        acc0 = tuple(jnp.zeros((W,), f32) for _ in range(B0 * B0))
+        acc = jax.lax.fori_loop(0, n, body, acc0)
+        scat = []
+        for dr in range(B0):
+            for dc in range(B0):
+                idx = jnp.clip((ro + dr) * n + (co + dc), 0, NMAT * NMAT - 1)
+                ok = mask & leaf & (ro + dr < n) & (co + dc < n)
+                scat.append((idx, acc[dr * B0 + dc], ok, "set"))
+
+        # --- split: four quadrants ------------------------------------
+        fa = jnp.zeros((W, 4, A), i32)
+        quads = [(0, 0), (0, 1), (1, 0), (1, 1)]
+        for q, (qr, qc) in enumerate(quads):
+            fa = fa.at[:, q, 0].set(ro + qr * half)
+            fa = fa.at[:, q, 1].set(co + qc * half)
+            fa = fa.at[:, q, 2].set(half)
+        return Effects(
+            fork_count=jnp.where(mask & ~leaf, 4, 0).astype(i32),
+            fork_type=jnp.full((W, 4), T_MM, i32),
+            fork_args=fa,
+            heap_f_scatter=scat,
+        )
+
+    return Program(
+        name="matmul",
+        task_types=[TaskType("mm", mm_fn, max_forks=4)],
+        num_args=A,
+    )
+
+
+def program_for_class(sz: dict):
+    return make_matmul_program(sz["NMAT"])
+
+
+def class_dict(NMAT: int, N: int) -> dict:
+    return dict(N=N, Hi=1, Hf=NMAT * NMAT, Ci=1, Cf=2 * NMAT * NMAT, R=1,
+                NMAT=NMAT)
+
+
+CLASSES = {
+    "S": class_dict(NMAT=16, N=1 << 10),
+    "M": class_dict(NMAT=128, N=1 << 15),
+}
+BUCKETS = [256, 1024, 4096]

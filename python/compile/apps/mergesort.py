@@ -1,0 +1,15 @@
+"""Naive TREES mergesort (Fig 9): serial merge inside a single task —
+the configuration the paper shows performing "abysmally"."""
+
+from ._msort import class_dict, make_msort_program
+
+
+def program_for_class(sz: dict):
+    return make_msort_program("mergesort", False, sz["NMAX"])
+
+
+CLASSES = {
+    "S": class_dict(NMAX=1 << 10, N=1 << 12),
+    "M": class_dict(NMAX=1 << 14, N=1 << 16),
+}
+BUCKETS = [256, 1024, 4096]

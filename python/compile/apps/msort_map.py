@@ -1,0 +1,17 @@
+"""Sophisticated TREES mergesort (Fig 9): merges via the data-parallel
+map operation (merge-path kernel), closing most of the gap to the
+native bitonic sort."""
+
+from ._msort import class_dict, make_msort_program
+
+
+def program_for_class(sz: dict):
+    return make_msort_program("msort_map", True, sz["NMAX"])
+
+
+CLASSES = {
+    "S": class_dict(NMAX=1 << 10, N=1 << 12),
+    "M": class_dict(NMAX=1 << 16, N=1 << 19),
+}
+BUCKETS = [256, 1024, 4096]
+MAP_BUCKETS = [4096]

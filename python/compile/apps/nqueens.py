@@ -1,0 +1,102 @@
+"""N-Queens solution counting (§6.5 programmability app).
+
+  nq(row, cols, d1, d2): row == n -> emit 1 (a solution)
+      else fork nq(row+1, ...) for each non-attacked column;
+           join sumk(first_child_slot, count)
+  sumk(first, count): emit sum(res[first .. first+count))
+
+Bitmask pruning (cols/diagonals packed in i32). Forked children land in
+a CONTIGUOUS slot run (prefix-sum allocation — paper §5.1.2 observation
+2), so the join only needs the first slot and the count.
+
+const_i: [n]. Supports n <= 12 (K = 12).
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+NQ_MAX = 12
+i32 = jnp.int32
+
+T_NQ = 1
+T_SUMK = 2
+
+
+def _nq_fn(env, args, mask, child_slots):
+    W = env.W
+    n = env.const_i[0]
+    row, cols, d1, d2 = args[:, 0], args[:, 1], args[:, 2], args[:, 3]
+    done = row >= n
+    attacked = cols | d1 | d2
+    fa = jnp.zeros((W, NQ_MAX, A), i32)
+    pos = jnp.zeros((W,), i32)
+    for c in range(NQ_MAX):
+        bit = 1 << c
+        ok = mask & ~done & (c < n) & ((attacked & bit) == 0)
+        lanes = jnp.arange(W)
+        p = jnp.where(ok, pos, NQ_MAX - 1)  # parked writes get overwritten
+        fa = fa.at[(lanes, p, jnp.full((W,), 0))].set(
+            jnp.where(ok, row + 1, fa[(lanes, p, jnp.full((W,), 0))]))
+        fa = fa.at[(lanes, p, jnp.full((W,), 1))].set(
+            jnp.where(ok, cols | bit, fa[(lanes, p, jnp.full((W,), 1))]))
+        fa = fa.at[(lanes, p, jnp.full((W,), 2))].set(
+            jnp.where(ok, ((d1 | bit) << 1) & 0xFFF,
+                      fa[(lanes, p, jnp.full((W,), 2))]))
+        fa = fa.at[(lanes, p, jnp.full((W,), 3))].set(
+            jnp.where(ok, (d2 | bit) >> 1, fa[(lanes, p, jnp.full((W,), 3))]))
+        pos = pos + ok.astype(i32)
+
+    fork_count = jnp.where(mask & ~done, pos, 0)
+    ja = jnp.zeros((W, A), i32)
+    ja = ja.at[:, 0].set(child_slots[:, 0])
+    ja = ja.at[:, 1].set(fork_count)
+    has_kids = fork_count > 0
+    return Effects(
+        fork_count=fork_count,
+        fork_type=jnp.full((W, NQ_MAX), T_NQ, i32),
+        fork_args=fa,
+        join_mask=~done & has_kids,
+        join_type=jnp.full((W,), T_SUMK, i32),
+        join_args=ja,
+        # dead ends (no kids, not done) emit 0; completed rows emit 1
+        emit_mask=done | (~done & ~has_kids),
+        emit_val=done.astype(i32),
+    )
+
+
+def _sumk_fn(env, args, mask, child_slots):
+    W = env.W
+    count = args[:, 1]
+    total = jnp.zeros((W,), i32)
+    for k in range(NQ_MAX):
+        total = total + jnp.where(k < count, env.res_win[:, k], 0)
+    return Effects(emit_mask=jnp.ones_like(mask), emit_val=total)
+
+
+def _gather(tid, args, res):
+    if tid == T_SUMK:
+        first, count = args[0], args[1]
+        return [res[first + k] if k < count else 0 for k in range(NQ_MAX)]
+    return [0] * NQ_MAX
+
+
+def program() -> Program:
+    return Program(
+        name="nqueens",
+        task_types=[
+            TaskType("nq", _nq_fn, max_forks=NQ_MAX),
+            TaskType("sumk", _sumk_fn),
+        ],
+        num_args=A,
+        gather_width=NQ_MAX,
+        gather=_gather,
+    )
+
+
+CLASSES = {
+    "S": dict(N=1 << 16, Hi=1, Hf=1, Ci=1, Cf=1, R=1 << 16),
+    "M": dict(N=1 << 21, Hi=1, Hf=1, Ci=1, Cf=1, R=1 << 21),
+}
+BUCKETS = [256, 1024, 4096]

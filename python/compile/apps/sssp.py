@@ -1,0 +1,14 @@
+"""SSSP (Fig 8): weighted data-driven relaxation. See _graph.py."""
+
+from ._graph import class_dict, make_graph_program
+
+
+def program_for_class(sz: dict):
+    return make_graph_program("sssp", True, sz["VMAX"], sz["EMAX"])
+
+
+CLASSES = {
+    "S": class_dict(VMAX=256, EMAX=4096, N=1 << 14, weighted=True),
+    "M": class_dict(VMAX=16384, EMAX=262144, N=1 << 20, weighted=True),
+}
+BUCKETS = [256, 1024, 4096]

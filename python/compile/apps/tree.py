@@ -1,0 +1,100 @@
+"""Postorder tree traversal — the paper's own walkthrough example
+(Fig 2-4). Doubles as a subtree-size reduction so correctness is
+observable:
+
+  postorder(node): leaf -> emit 1
+                   else fork postorder(left), postorder(right)
+                        join visitAfter(node, c_left, c_right)
+  visitAfter(node, c0, c1): stamp heap_i[node] = cen (visit order proof)
+                            emit 1 + res[c0] + res[c1]
+
+const_i: [n, reserved x3, left[NMAX], right[NMAX]]  (-1 = absent child)
+heap_i:  execution-order stamp per node (postorder => parent stamped later)
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+i32 = jnp.int32
+
+T_POST = 1
+T_VISIT = 2
+
+
+def make_tree_program(NMAX: int) -> Program:
+    LEFT = 4
+    RIGHT = LEFT + NMAX
+
+    def post_fn(env, args, mask, child_slots):
+        W = env.W
+        node = jnp.clip(args[:, 0], 0, NMAX - 1)
+        left = env.const_i[LEFT + node]
+        right = env.const_i[RIGHT + node]
+        has_l = left >= 0
+        has_r = right >= 0
+        leaf = ~has_l & ~has_r
+
+        # children compact into fork slots 0..count
+        first = jnp.where(has_l, left, right)
+        fork_count = has_l.astype(i32) + has_r.astype(i32)
+        fa = jnp.zeros((W, 2, A), i32)
+        fa = fa.at[:, 0, 0].set(first)
+        fa = fa.at[:, 1, 0].set(right)
+
+        # join args: node, slot of child 0, slot of child 1 (or -1)
+        ja = jnp.zeros((W, A), i32)
+        ja = ja.at[:, 0].set(node)
+        ja = ja.at[:, 1].set(jnp.where(fork_count >= 1, child_slots[:, 0], -1))
+        ja = ja.at[:, 2].set(jnp.where(fork_count >= 2, child_slots[:, 1], -1))
+        return Effects(
+            fork_count=jnp.where(mask & ~leaf, fork_count, 0),
+            fork_type=jnp.full((W, 2), T_POST, i32),
+            fork_args=fa,
+            join_mask=~leaf,
+            join_type=jnp.full((W,), T_VISIT, i32),
+            join_args=ja,
+            emit_mask=leaf,
+            emit_val=jnp.ones((W,), i32),
+        )
+
+    def visit_fn(env, args, mask, child_slots):
+        node = jnp.clip(args[:, 0], 0, NMAX - 1)
+        r0 = env.res_win[:, 0]
+        r1 = env.res_win[:, 1]
+        return Effects(
+            emit_mask=jnp.ones_like(mask),
+            emit_val=(1 + r0 + r1).astype(i32),
+            heap_i_scatter=[(node, env.seed * jnp.ones_like(node), mask, "set")],
+        )
+
+    def gather(tid, args, res):
+        if tid == T_VISIT:
+            c0, c1 = args[1], args[2]
+            return [res[c0] if c0 >= 0 else 0, res[c1] if c1 >= 0 else 0]
+        return [0, 0]
+
+    return Program(
+        name="tree",
+        task_types=[
+            TaskType("postorder", post_fn, max_forks=2),
+            TaskType("visitAfter", visit_fn),
+        ],
+        num_args=A,
+        gather_width=2,
+        gather=gather,
+    )
+
+
+def program_for_class(sz: dict):
+    return make_tree_program(sz["NMAX"])
+
+
+CLASSES = {
+    "S": dict(N=1 << 12, Hi=1 << 10, Hf=1, Ci=4 + 2 * (1 << 10), Cf=1,
+              NMAX=1 << 10),
+    "M": dict(N=1 << 18, Hi=1 << 16, Hf=1, Ci=4 + 2 * (1 << 16), Cf=1,
+              NMAX=1 << 16),
+}
+BUCKETS = [256, 1024, 4096]

@@ -1,0 +1,120 @@
+"""Exhaustive TSP with branch-and-bound pruning (§6.5 app).
+
+  tour(last, visited, cost, depth):
+      prune if cost >= best (heap_i[0], min-merged global bound)
+      depth == n -> close the tour: emit cost + d(last, 0); publish bound
+      else fork tour(c, ...) per unvisited city c; join mink(first, count)
+  mink(first, count): emit min(res[first..first+count))
+
+The global bound is shared through the heap with epoch-end min-merge —
+the work-together version of a racy global best (reads may be one epoch
+stale; pruning is conservative, never wrong).
+
+const_i: [n, reserved x3, dist matrix n*n (row-major, <= 12x12)]
+heap_i:  [0] = best tour cost seen (INF-initialized)
+Supports n <= 10 (K = 10). INF emitted for pruned branches.
+"""
+
+import jax.numpy as jnp
+
+from ..treeslang import TaskType, Program, Effects
+
+A = 4
+TSP_MAX = 10
+INF = 1 << 28
+i32 = jnp.int32
+
+T_TOUR = 1
+T_MINK = 2
+
+
+def make_tsp_program(NC: int) -> Program:
+    D = 4  # dist matrix offset in const_i
+
+    def tour_fn(env, args, mask, child_slots):
+        W = env.W
+        n = env.const_i[0]
+        last, visited, cost = args[:, 0], args[:, 1], args[:, 2]
+        depth = args[:, 3]
+        best = env.heap_i[0]
+        pruned = cost >= best
+        complete = depth >= n
+
+        back = env.const_i[D + jnp.clip(last * NC + 0, 0, NC * NC - 1) + 0]
+        closed = cost + back
+
+        fa = jnp.zeros((W, TSP_MAX, A), i32)
+        pos = jnp.zeros((W,), i32)
+        lanes = jnp.arange(W)
+        for c in range(TSP_MAX):
+            step = env.const_i[D + jnp.clip(last * NC + c, 0, NC * NC - 1)]
+            ncost = cost + step
+            ok = (mask & ~pruned & ~complete & (c < n)
+                  & ((visited & (1 << c)) == 0) & (ncost < best))
+            p = jnp.where(ok, pos, TSP_MAX - 1)
+            for (slot, val) in [(0, jnp.full((W,), c, i32)),
+                                (1, visited | (1 << c)),
+                                (2, ncost),
+                                (3, depth + 1)]:
+                cur = fa[(lanes, p, jnp.full((W,), slot))]
+                fa = fa.at[(lanes, p, jnp.full((W,), slot))].set(
+                    jnp.where(ok, val, cur))
+            pos = pos + ok.astype(i32)
+
+        fork_count = pos
+        has_kids = fork_count > 0
+        ja = jnp.zeros((W, A), i32)
+        ja = ja.at[:, 0].set(child_slots[:, 0])
+        ja = ja.at[:, 1].set(fork_count)
+
+        emit_complete = mask & ~pruned & complete
+        return Effects(
+            fork_count=fork_count,
+            fork_type=jnp.full((W, TSP_MAX), T_TOUR, i32),
+            fork_args=fa,
+            join_mask=~pruned & ~complete & has_kids,
+            join_type=jnp.full((W,), T_MINK, i32),
+            join_args=ja,
+            emit_mask=pruned | complete | (~complete & ~has_kids),
+            emit_val=jnp.where(emit_complete, closed, INF),
+            heap_i_scatter=[
+                (jnp.zeros((W,), i32), closed, emit_complete, "min"),
+            ],
+        )
+
+    def mink_fn(env, args, mask, child_slots):
+        W = env.W
+        count = args[:, 1]
+        best = jnp.full((W,), INF, i32)
+        for k in range(TSP_MAX):
+            best = jnp.minimum(
+                best, jnp.where(k < count, env.res_win[:, k], INF))
+        return Effects(emit_mask=jnp.ones_like(mask), emit_val=best)
+
+    def gather(tid, args, res):
+        if tid == T_MINK:
+            first, count = args[0], args[1]
+            return [res[first + k] if k < count else INF
+                    for k in range(TSP_MAX)]
+        return [INF] * TSP_MAX
+
+    return Program(
+        name="tsp",
+        task_types=[
+            TaskType("tour", tour_fn, max_forks=TSP_MAX),
+            TaskType("mink", mink_fn),
+        ],
+        num_args=A,
+        gather_width=TSP_MAX,
+        gather=gather,
+    )
+
+
+def program_for_class(sz: dict):
+    return make_tsp_program(sz["NC"])
+
+
+CLASSES = {
+    "S": dict(N=1 << 16, Hi=1, Hf=1, Ci=4 + 100, Cf=1, R=1 << 16, NC=10),
+}
+BUCKETS = [256, 1024, 4096]

@@ -1,0 +1,17 @@
+"""Hand-coded native baselines (no TREES machinery): the comparators of
+Fig 7/8 (worklist BFS/SSSP) and Fig 9 (bitonic sort). Each module
+exposes ``build(out_dir, force) -> manifest entry``; aot.py includes
+them under pseudo-app names.
+"""
+
+BASELINE_NAMES = ["native_bfs", "native_sssp", "native_bitonic"]
+
+
+def load_baseline(name: str):
+    from importlib import import_module
+    mod = {
+        "native_bfs": "worklist",
+        "native_sssp": "worklist",
+        "native_bitonic": "bitonic",
+    }[name]
+    return import_module(f"compile.baselines.{mod}")

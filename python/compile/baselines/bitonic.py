@@ -1,0 +1,60 @@
+"""Native bitonic sort — the hand-coded comparator of Fig 9.
+
+A classic data-parallel bitonic network over a power-of-two array: one
+artifact executes the full log^2(n) stage schedule in a single fused
+computation (the Rust driver launches it once per sort — the strongest
+native baseline configuration).
+
+Artifact signature (per size class):
+  inputs : data f32[NMAX], scalars i32[8] ([0] = n, power of two)
+  outputs: data' f32[NMAX]
+
+Elements at index >= n must be pre-set to +inf by the driver.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bitonic import bitonic_sort
+
+CLASSES = {
+    "S": dict(NMAX=1 << 10),
+    "M": dict(NMAX=1 << 16),
+    "L": dict(NMAX=1 << 20),
+}
+
+
+def lower(NMAX: int) -> str:
+    from ..aot import to_hlo_text
+
+    def step(data, scalars):
+        _ = scalars
+        return (bitonic_sort(data),)
+
+    S = jax.ShapeDtypeStruct
+    specs = (S((NMAX,), jnp.float32), S((8,), jnp.int32))
+    return to_hlo_text(jax.jit(step, keep_unused=True).lower(*specs))
+
+
+def build(name: str, out_dir: str, force: bool) -> dict:
+    entry = {
+        "T": 0, "A": 0, "K": 0, "Km": 0, "Am": 0,
+        "task_types": [], "max_forks": [],
+        "artifacts": [], "map_artifacts": [], "classes": {},
+    }
+    for cls, sz in CLASSES.items():
+        NMAX = sz["NMAX"]
+        entry["classes"][cls] = dict(NMAX=NMAX)
+        fname = f"{name}__{cls}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path):
+            text = lower(NMAX)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text)//1024} KiB)")
+        entry["artifacts"].append(dict(
+            file=fname, W=0, cls=cls, N=0, R=0,
+            Hi=1, Hf=NMAX, Ci=1, Cf=1, NMAX=NMAX))
+    return entry

@@ -1,0 +1,99 @@
+"""Native worklist BFS/SSSP — the hand-coded comparator of Fig 7/8.
+
+The Lonestar benchmarks keep input/output worklists and relax the
+frontier each kernel; the host transfers one int per iteration to decide
+whether another relaxation kernel is needed. This is exactly that loop,
+minus the TREES generality layer: one fused relaxation step per
+iteration (Pallas edge-relax kernel + scatter-min + frontier rebuild),
+with the Rust driver reading back the `changed` flag.
+
+Artifact signature (per size class):
+  inputs : dist i32[VMAX], frontier i32[VMAX], const_i i32[Ci], scalars i32[8]
+  outputs: dist' i32[VMAX], frontier' i32[VMAX], changed i32
+
+const_i layout:
+  [0]=V [1]=E [2]=src [3]=reserved
+  [4 ..]                 esrc  (EMAX)   edge source vertex
+  [4+EMAX ..]            ecol  (EMAX)   edge target vertex
+  [4+2*EMAX ..]          ew    (EMAX)   weight (sssp only; bfs uses 1)
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.relax import INF, relax_proposals
+
+i32 = jnp.int32
+
+CLASSES = {
+    "S": dict(VMAX=256, EMAX=4096),
+    "M": dict(VMAX=4096, EMAX=16384),
+    "L": dict(VMAX=8192, EMAX=65536),
+    "XL": dict(VMAX=16384, EMAX=262144),
+}
+
+
+def make_step(weighted: bool, VMAX: int, EMAX: int):
+    ESRC = 4
+    ECOL = ESRC + EMAX
+    EW = ECOL + EMAX
+
+    def step(dist, frontier, const_i, scalars):
+        esrc = const_i[ESRC:ESRC + EMAX]
+        ecol = const_i[ECOL:ECOL + EMAX]
+        ew = (
+            const_i[EW:EW + EMAX]
+            if weighted
+            else jnp.ones((EMAX,), i32)
+        )
+        nd = relax_proposals(dist, esrc, ew, frontier)
+        dist2 = dist.at[ecol].min(nd)  # INF proposals are no-ops
+        frontier2 = (dist2 < dist).astype(i32)
+        changed = frontier2.sum().astype(i32)
+        _ = scalars
+        return dist2, frontier2, changed
+
+    return step
+
+
+def lower(weighted: bool, VMAX: int, EMAX: int) -> str:
+    from ..aot import to_hlo_text
+
+    ci = 4 + (3 if weighted else 2) * EMAX
+    S = jax.ShapeDtypeStruct
+    specs = (
+        S((VMAX,), i32),
+        S((VMAX,), i32),
+        S((ci,), i32),
+        S((8,), i32),
+    )
+    step = make_step(weighted, VMAX, EMAX)
+    return to_hlo_text(jax.jit(step, keep_unused=True).lower(*specs))
+
+
+def build(name: str, out_dir: str, force: bool) -> dict:
+    weighted = name == "native_sssp"
+    entry = {
+        "T": 0, "A": 0, "K": 0, "Km": 0, "Am": 0,
+        "task_types": [], "max_forks": [],
+        "artifacts": [], "map_artifacts": [],
+        "classes": {},
+    }
+    for cls, sz in CLASSES.items():
+        VMAX, EMAX = sz["VMAX"], sz["EMAX"]
+        ci = 4 + (3 if weighted else 2) * EMAX
+        entry["classes"][cls] = dict(VMAX=VMAX, EMAX=EMAX, Ci=ci)
+        fname = f"{name}__{cls}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path):
+            text = lower(weighted, VMAX, EMAX)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text)//1024} KiB)")
+        entry["artifacts"].append(dict(
+            file=fname, W=0, cls=cls, N=0, R=0,
+            Hi=VMAX, Hf=1, Ci=ci, Cf=1, VMAX=VMAX, EMAX=EMAX))
+    return entry

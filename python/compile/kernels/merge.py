@@ -1,0 +1,96 @@
+"""Merge-path kernel: one data-parallel pass merging all same-size run
+pairs of a mergesort level — the map operation of the sophisticated
+TREES mergesort (Fig 9).
+
+For output element i: block = i // (2R), j = i - block*2R; binary-search
+the merge-path partition a (elements taken from the left run among the
+first j outputs), then out = min(L[a], R[j-a]) with +inf sentinels.
+O(log R) gathers per element, perfectly regular — the GPU-friendly merge
+the paper's map operation is meant to enable.
+
+TPU mapping: the source buffer stays VMEM-resident (<= 512 KiB for the
+M class); output tiles stream; the binary search is a fixed-trip
+fori_loop on the VPU. interpret=True mandatory on this install.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+i32 = jnp.int32
+f32 = jnp.float32
+TILE = 8192
+SEARCH_ITERS = 21  # supports runs up to 2^20
+
+
+def _merge_kernel(params_ref, buf_ref, o_ref, *, nmax: int, tile: int):
+    size = params_ref[0]  # 2R (block size at this level)
+    total = params_ref[1]  # number of valid output elements
+    src_off = params_ref[2]
+    tstart = params_ref[3] if params_ref.shape[0] > 3 else 0
+
+    pid = pl.program_id(0) if o_ref.shape[0] != nmax else 0
+    i = tstart + pid * tile + jnp.arange(tile, dtype=i32)
+    buf = buf_ref[...]
+
+    r = size // 2
+    block = i // jnp.maximum(size, 1)
+    lo = block * size
+    j = i - lo
+    mid = lo + r
+
+    def left(a):
+        # L[a] with +inf when a >= r (or out of the valid region)
+        idx = jnp.clip(src_off + lo + a, 0, buf.shape[0] - 1)
+        return jnp.where(a < r, buf[idx], jnp.inf)
+
+    def right(b):
+        idx = jnp.clip(src_off + mid + b, 0, buf.shape[0] - 1)
+        return jnp.where(b < r, buf[idx], jnp.inf)
+
+    # find the largest a in [max(0, j-r), min(j, r)] with L[a-1] <= R[j-a]
+    lo_a = jnp.maximum(0, j - r)
+    hi_a = jnp.minimum(j, r)
+
+    def body(_, carry):
+        lo_a, hi_a = carry
+        a = (lo_a + hi_a + 1) // 2
+        ok = (a <= lo_a) | (left(a - 1) <= right(j - a))
+        return jnp.where(ok, a, lo_a), jnp.where(ok, hi_a, a - 1)
+
+    lo_a, hi_a = jax.lax.fori_loop(0, SEARCH_ITERS, body, (lo_a, hi_a))
+    a = lo_a
+    out = jnp.minimum(left(a), right(j - a))
+    o_ref[...] = jnp.where(i < total, out, jnp.inf)
+
+
+def merge_level(buf, size, total, src_off, *, nmax: int, interpret: bool = True):
+    """Merge all 2R-sized blocks of `buf[src_off:src_off+nmax]`.
+
+    Returns the merged values for output positions [0, nmax) (positions
+    >= total are +inf). `size`, `total`, `src_off` are traced scalars.
+    """
+    params = jnp.stack([size, total, src_off, jnp.zeros((), i32)])
+    if nmax <= TILE:
+        import functools
+
+        return pl.pallas_call(
+            functools.partial(_merge_kernel, nmax=nmax, tile=nmax),
+            out_shape=jax.ShapeDtypeStruct((nmax,), f32),
+            interpret=interpret,
+        )(params, buf)
+    import functools
+
+    assert nmax % TILE == 0
+    grid = (nmax // TILE,)
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, nmax=nmax, tile=TILE),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec(buf.shape, lambda i: (0,)),  # resident source
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nmax,), f32),
+        interpret=interpret,
+    )(params, buf)

@@ -1,0 +1,47 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel — the core L1
+correctness signal (each kernel's pytest asserts allclose against
+these)."""
+
+import numpy as np
+
+INF = 1 << 30
+
+
+def exclusive_scan_ref(x):
+    """scan[i] = sum(x[:i]); also returns total."""
+    x = np.asarray(x)
+    c = np.cumsum(x)
+    return c - x, int(c[-1]) if len(x) else 0
+
+
+def relax_ref(dist, esrc, ew, frontier):
+    """nd[e] = dist[esrc[e]] + ew[e] if esrc[e] active & reached else INF."""
+    dist = np.asarray(dist)
+    esrc = np.asarray(esrc)
+    out = np.full(len(esrc), INF, np.int64)
+    for e, s in enumerate(esrc):
+        if frontier[s] != 0 and dist[s] < INF:
+            out[e] = int(dist[s]) + int(ew[e])
+    return out.astype(np.int32)
+
+
+def bitonic_sort_ref(x):
+    return np.sort(np.asarray(x))
+
+
+def merge_level_ref(buf, size, total, src_off, nmax):
+    """Merge all `size`-wide (2R) blocks of buf[src_off:src_off+nmax];
+    positions >= total are +inf."""
+    buf = np.asarray(buf)
+    out = np.full(nmax, np.inf, np.float32)
+    if size <= 0:
+        return out
+    nblocks = total // size
+    for b in range(nblocks):
+        lo = b * size
+        run = np.sort(np.concatenate([
+            buf[src_off + lo:src_off + lo + size // 2],
+            buf[src_off + lo + size // 2:src_off + lo + size],
+        ]))
+        out[lo:lo + size] = run
+    return out

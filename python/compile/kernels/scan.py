@@ -1,0 +1,94 @@
+"""Exclusive prefix-sum (scan) Pallas kernel — the fork allocator.
+
+This is the load-bearing L1 kernel of the runtime itself: every epoch,
+fork slots are assigned `next_free + exclusive_scan(fork_count)`. It is
+the work-together (Tenet 2) replacement for the paper's per-wavefront
+atomic increment of `nextFreeCore`: all lanes cooperatively compute their
+slots with coalesced reads/writes and zero atomics.
+
+Structure (two passes, classic scan-then-propagate):
+  pass 1: grid over chunks; each chunk writes its local exclusive scan
+          and its chunk total (one VMEM-resident block per grid step).
+  bridge: exclusive scan of the (tiny) chunk totals — plain jnp.
+  pass 2: grid over chunks; adds the chunk offset to each element.
+
+TPU mapping (documented for DESIGN.md §Hardware-Adaptation): each chunk
+is a VMEM block; BlockSpec index_map streams HBM->VMEM chunk by chunk;
+the within-chunk cumsum vectorizes on the VPU (8x128 lanes). interpret
+mode is mandatory on this CPU-only install — see aot notes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk size: one VMEM block. 1024 i32 = 4 KiB, comfortably inside the
+# ~16 MiB VMEM budget even with double buffering.
+CHUNK = 1024
+
+
+def _scan_chunk_kernel(x_ref, ex_ref, tot_ref):
+    x = x_ref[...]
+    c = jnp.cumsum(x)
+    ex_ref[...] = c - x
+    tot_ref[...] = c[-1:]  # chunk total (shape (1,))
+
+
+def _add_offset_kernel(ex_ref, off_ref, o_ref):
+    o_ref[...] = ex_ref[...] + off_ref[0]
+
+
+def exclusive_scan(x: jnp.ndarray, *, interpret: bool = True):
+    """Exclusive prefix sum of a 1-D i32 array.
+
+    Returns (scan, total) where scan[i] = sum(x[:i]) and total = sum(x).
+    Length must be a multiple of CHUNK or smaller than CHUNK.
+    """
+    (n,) = x.shape
+    if n <= CHUNK:
+        # single chunk: one kernel invocation, no bridge needed
+        ex, tot = pl.pallas_call(
+            _scan_chunk_kernel,
+            out_shape=(
+                jax.ShapeDtypeStruct((n,), x.dtype),
+                jax.ShapeDtypeStruct((1,), x.dtype),
+            ),
+            interpret=interpret,
+        )(x)
+        return ex, tot[0]
+    if n % CHUNK != 0:
+        raise ValueError(f"scan length {n} not a multiple of {CHUNK}")
+    nchunks = n // CHUNK
+
+    ex, tots = pl.pallas_call(
+        _scan_chunk_kernel,
+        grid=(nchunks,),
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((nchunks,), x.dtype),
+        ),
+        interpret=interpret,
+    )(x)
+
+    offs = jnp.cumsum(tots) - tots  # bridge scan: nchunks elements, tiny
+    total = offs[-1] + tots[-1]
+
+    out = pl.pallas_call(
+        _add_offset_kernel,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((CHUNK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(ex, offs)
+    return out, total

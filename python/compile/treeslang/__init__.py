@@ -1,0 +1,30 @@
+"""treeslang: the Task Vector Machine (TVM) expressed as vectorized JAX.
+
+This is Layer 2 of the stack. A TREES application is a `Program`: a set of
+`TaskType`s whose bodies are *vectorized* JAX functions over the active
+window of the Task Vector. `epoch.make_epoch_step` fuses all task types of
+a program into a single epoch-step computation — the paper's "Phase 2"
+bulk kernel — which `aot.py` lowers to HLO text for the Rust coordinator.
+
+Encoding (paper §5.1.2, footnote 2):
+    code = epoch * num_task_types + task_type      (task_type in 1..T)
+    code == 0  =>  invalid entry
+
+Fork allocation uses an exclusive prefix sum (the Pallas scan kernel in
+``kernels/scan.py``) instead of the paper's per-wavefront atomic
+increment: the deterministic, cooperative (work-together Tenet 2)
+equivalent on a vector machine.
+"""
+
+from .core import TaskType, Program, Effects, Env, no_effects
+from .epoch import make_epoch_step, EpochIO
+
+__all__ = [
+    "TaskType",
+    "Program",
+    "Effects",
+    "Env",
+    "no_effects",
+    "make_epoch_step",
+    "EpochIO",
+]

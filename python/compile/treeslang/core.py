@@ -1,0 +1,164 @@
+"""Core types of the vectorized TVM DSL.
+
+A task body is a function
+
+    fn(env: Env, args: i32[W, A], mask: bool[W], child_slots: i32[W, K])
+        -> Effects
+
+operating on the whole active window at once (SIMT style). `mask` marks
+the lanes that hold a live task of this type in the current epoch; the
+body must produce well-defined values on masked lanes and garbage is
+tolerated (the combinator selects with `where(mask, ...)`) on the rest.
+
+`child_slots[i, k]` is the Task Vector index that lane i's k-th fork will
+occupy — the value fork() "returns" in the scalar TVM. Bodies use it to
+record children in join args (so a later join can gather the children's
+`emit` results from `res`).
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+
+@dataclass
+class Env:
+    """Read-only view of machine state available to a task body."""
+
+    res_win: jnp.ndarray  # i32[W,G] host-pre-gathered emit results: for
+    # each lane, the G result values its app-defined gather spec pulls
+    # from the host-side res array (child slots stored in join args).
+    heap_i: jnp.ndarray  # i32[Hi]  mutable app heap (ints)
+    heap_f: jnp.ndarray  # f32[Hf]  mutable app heap (floats)
+    const_i: jnp.ndarray  # i32[Ci]  read-only app data
+    const_f: jnp.ndarray  # f32[Cf]
+    cen: jnp.ndarray  # i32[]    current epoch number
+    lo: jnp.ndarray  # i32[]    window start (global TV index of lane 0)
+    active: jnp.ndarray  # i32[]    number of in-range lanes
+    next_free: jnp.ndarray  # i32[]    allocation cursor at epoch start
+    seed: jnp.ndarray  # i32[]    per-epoch seed (annealing etc.)
+    lanes: jnp.ndarray  # i32[W]   global TV index of each lane (lo + iota)
+    W: int
+    N: int
+
+
+@dataclass
+class Effects:
+    """What a window of tasks of one type did this epoch (all vectorized).
+
+    Any field may be None, meaning "none of that effect".
+    """
+
+    # forks: lane i creates fork_count[i] tasks; the k-th has type
+    # fork_type[i,k] (1-based) and args fork_args[i,k,:].
+    fork_count: Optional[jnp.ndarray] = None  # i32[W]
+    fork_type: Optional[jnp.ndarray] = None  # i32[W,K]
+    fork_args: Optional[jnp.ndarray] = None  # i32[W,K,A]
+    # join: lane i replaces its own TV entry with <join_type, join_args>,
+    # scheduled to re-run when the join stack pops back to this epoch.
+    join_mask: Optional[jnp.ndarray] = None  # bool[W]
+    join_type: Optional[jnp.ndarray] = None  # i32[W]
+    join_args: Optional[jnp.ndarray] = None  # i32[W,A]
+    # emit: lane i finishes, storing emit_val[i] in res[lanes[i]].
+    emit_mask: Optional[jnp.ndarray] = None  # bool[W]
+    emit_val: Optional[jnp.ndarray] = None  # i32[W]
+    # map: lane i enqueues map_count[i] data-parallel map descriptors.
+    map_count: Optional[jnp.ndarray] = None  # i32[W]
+    map_args: Optional[jnp.ndarray] = None  # i32[W,Km,Am]
+    # heap scatters: lists of (idx i32[W], val, mask bool[W], op) where
+    # op is "set" | "min" | "max" | "add". Bodies read the PRE-epoch heap
+    # (env.heap_*); scatters are applied at epoch end. min/max/add are
+    # commutative and safe under same-epoch conflicts; "set" requires the
+    # app to guarantee unique indices within the epoch.
+    heap_i_scatter: List[tuple] = field(default_factory=list)
+    heap_f_scatter: List[tuple] = field(default_factory=list)
+    # whole-heap updates (task bodies that loop, and map kernels)
+    heap_i: Optional[jnp.ndarray] = None  # i32[Hi]
+    heap_f: Optional[jnp.ndarray] = None  # f32[Hf]
+
+
+def no_effects() -> Effects:
+    """A task body that does nothing (useful for padding/testing)."""
+    return Effects()
+
+
+@dataclass
+class TaskType:
+    """One task function of a TREES program.
+
+    `tid` is assigned by `Program` (1-based, matching the paper's
+    `taskType` encoding). `max_forks` bounds fork_count for this type and
+    sizes the program-wide child_slots K = max over types.
+    """
+
+    name: str
+    fn: Callable  # (Env, args, mask, child_slots) -> Effects
+    max_forks: int = 0
+    max_maps: int = 0
+    tid: int = field(default=0, init=False)
+
+
+@dataclass
+class Program:
+    """A TREES application: task types + static shape configuration."""
+
+    name: str
+    task_types: Sequence[TaskType]
+    num_args: int  # A: i32 args per task
+    map_args: int = 0  # Am: i32 args per map descriptor
+    # map kernel: (env-like dict, map_args i32[Wm,Am], mask bool[Wm])
+    #   -> (heap_i', heap_f')  — lowered as a separate artifact.
+    map_fn: Optional[Callable] = None
+    # res gather width G (see Env.res_win) and the host-side gather
+    # spec: gather(tid, args_row, res) -> list of G ints. Used by the
+    # python host mirror; the Rust coordinator mirrors it natively.
+    gather_width: int = 0
+    gather: Optional[Callable] = None
+    # initial workload is provided by the Rust side; these sizes are
+    # baked per size-class at AOT time.
+
+    def __post_init__(self):
+        seen = set()
+        for i, tt in enumerate(self.task_types):
+            tt.tid = i + 1
+            if tt.name in seen:
+                raise ValueError(f"duplicate task type name {tt.name!r}")
+            seen.add(tt.name)
+
+    @property
+    def T(self) -> int:
+        return len(self.task_types)
+
+    @property
+    def K(self) -> int:
+        return max((tt.max_forks for tt in self.task_types), default=0)
+
+    @property
+    def Km(self) -> int:
+        return max((tt.max_maps for tt in self.task_types), default=0)
+
+    # gather width G: how many res values the host pre-gathers per lane
+    # (0 for apps that never join-read results). Set via constructor.
+
+    def type_named(self, name: str) -> TaskType:
+        for tt in self.task_types:
+            if tt.name == name:
+                return tt
+        raise KeyError(name)
+
+    def encode(self, epoch: int, tid: int) -> int:
+        """code = epoch * T + tid (paper footnote 2)."""
+        return epoch * self.T + tid
+
+
+def decode_code(code: jnp.ndarray, T: int):
+    """Split packed codes into (epoch, tid); invalid entries get tid 0.
+
+    code > 0:  epoch = (code - 1) // T,  tid = code - epoch * T  (1..T)
+    code == 0: invalid.
+    """
+    valid = code > 0
+    epoch = jnp.where(valid, (code - 1) // T, -1)
+    tid = jnp.where(valid, code - epoch * T, 0)
+    return epoch, tid, valid

@@ -1,0 +1,251 @@
+"""The epoch-step combinator: fuse a Program's task types into one
+bulk computation — the paper's Epoch Phase 2 kernel.
+
+The lowered function has a fixed signature (see EpochIO) per
+(window bucket W, capacity class). The Rust coordinator drives it:
+
+  inputs : win_code i32[W], win_args i32[W,A], res_win i32[W,G]
+           (host-pre-gathered emit results — the coordinator resolves
+           each lane's join-arg slots against its host-side res array,
+           so the device I/O is window-proportional, never O(N)),
+           heap_i i32[Hi], heap_f f32[Hf], const_i i32[Ci], const_f f32[Cf],
+           scalars i32[8] = [cen, lo, active, next_free, seed, 0, 0, 0]
+  outputs: win_code', win_args', emit_val i32[W], emit_msk i32[W],
+           heap_i', heap_f', fork_code i32[W*K], fork_args i32[W*K, A],
+           map_out   i32[W*Km, Am]  (only if program.Km > 0),
+           flags i32[8] = [n_forked, join_scheduled, map_scheduled,
+                           n_mapped, emit_count, n_active, 0, 0]
+
+Semantics per paper §4.3/§5.2:
+  * a lane is active iff in range, code valid, and its epoch == CEN;
+  * fork  -> new entries, epoch CEN+1, slots next_free + scan offset,
+             returned compacted in fork_code/fork_args (the Rust side
+             splices them at next_free — contiguity per §5.1.2 obs. 2);
+  * join  -> lane's own entry replaced, SAME epoch number (re-runs when
+             the join stack pops back to CEN);
+  * emit  -> result stored in res[lane], entry invalidated;
+  * map   -> descriptor enqueued, run by the coordinator after the epoch
+             (paper §5.2.4: map kernel completes before next Phase 1).
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .core import Program, Env, Effects, decode_code
+from ..kernels.scan import exclusive_scan
+
+
+@dataclass
+class EpochIO:
+    """Static shape configuration for one lowered epoch-step artifact.
+
+    `N` is the host-side TV capacity (how many slots the coordinator may
+    allocate); `R` is the on-device result buffer length. Apps that
+    `emit`/gather results need `R == N`; pure fork-forward apps (BFS,
+    SSSP) set `R = 1` so the result buffer costs nothing per launch.
+    """
+
+    W: int  # window bucket (lanes per launch)
+    N: int  # TV capacity (host-side slots)
+    Hi: int  # mutable int heap length   (>=1)
+    Hf: int  # mutable float heap length (>=1)
+    Ci: int  # const int length          (>=1)
+    Cf: int  # const float length        (>=1)
+    R: int = 1  # kept in the manifest for host res sizing; unused here
+
+    def input_specs(self, prog: Program):
+        i32, f32 = jnp.int32, jnp.float32
+        S = jax.ShapeDtypeStruct
+        G = max(prog.gather_width, 1)
+        return (
+            S((self.W,), i32),  # win_code
+            S((self.W, prog.num_args), i32),  # win_args
+            S((self.W, G), i32),  # res_win (host-pre-gathered)
+            S((self.Hi,), i32),  # heap_i
+            S((self.Hf,), f32),  # heap_f
+            S((self.Ci,), i32),  # const_i
+            S((self.Cf,), f32),  # const_f
+            S((8,), i32),  # scalars
+        )
+
+
+def _sel(mask, a, b):
+    if a is None:
+        return b
+    return jnp.where(mask, a, b)
+
+
+def make_epoch_step(prog: Program, io: EpochIO):
+    """Build the fused epoch-step function for `prog` at shapes `io`."""
+
+    W, N = io.W, io.N
+    A, T = prog.num_args, prog.T
+    K = max(prog.K, 1)
+    Km = max(prog.Km, 1)
+    Am = max(prog.map_args, 1)
+    i32 = jnp.int32
+
+    def step(win_code, win_args, res_win, heap_i, heap_f, const_i, const_f,
+             scalars):
+        cen = scalars[0]
+        lo = scalars[1]
+        active_n = scalars[2]
+        next_free = scalars[3]
+        seed = scalars[4]
+
+        iota = jnp.arange(W, dtype=i32)
+        lanes = lo + iota
+        in_range = iota < active_n
+        epoch, tid, valid = decode_code(win_code, T)
+        live = in_range & valid & (epoch == cen)
+
+        env = Env(
+            res_win=res_win, heap_i=heap_i, heap_f=heap_f,
+            const_i=const_i, const_f=const_f,
+            cen=cen, lo=lo, active=active_n, next_free=next_free,
+            seed=seed, lanes=lanes, W=W, N=N,
+        )
+
+        zero_slots = jnp.zeros((W, K), i32)
+        masks = [live & (tid == tt.tid) for tt in prog.task_types]
+
+        # ---- phase A: fork counts (bodies called with dummy child slots;
+        # XLA CSEs the recomputation against phase B) -------------------
+        fork_count = jnp.zeros((W,), i32)
+        for tt, m in zip(prog.task_types, masks):
+            if tt.max_forks == 0:
+                continue
+            eff = tt.fn(env, win_args, m, zero_slots)
+            if eff.fork_count is not None:
+                fork_count = jnp.where(m, eff.fork_count, fork_count)
+
+        base, n_forked = exclusive_scan(fork_count)
+        child_slots = next_free + base[:, None] + jnp.arange(K, dtype=i32)[None, :]
+
+        # ---- phase B: full effects with real child slots ---------------
+        new_code = win_code
+        new_args = win_args
+        emit_val_out = jnp.zeros((W,), i32)
+        emit_msk_out = jnp.zeros((W,), i32)
+        emit_count = jnp.zeros((), i32)
+        join_any = jnp.zeros((), i32)
+        fork_code_out = jnp.zeros((W * K,), i32)
+        fork_args_out = jnp.zeros((W * K, A), i32)
+        map_count = jnp.zeros((W,), i32)
+        map_args_acc = jnp.zeros((W, Km, Am), i32)
+
+        heap_scatters_i = []
+        heap_scatters_f = []
+        for tt, m in zip(prog.task_types, masks):
+            eff: Effects = tt.fn(env, win_args, m, child_slots)
+
+            # whole-heap returns (bodies that loop, e.g. the naive
+            # serial merge): threaded type-by-type; the body is
+            # responsible for merging its own lanes' writes.
+            if eff.heap_i is not None:
+                heap_i = jnp.where(m.any(), eff.heap_i, heap_i)
+                env.heap_i = heap_i
+            if eff.heap_f is not None:
+                heap_f = jnp.where(m.any(), eff.heap_f, heap_f)
+                env.heap_f = heap_f
+
+            # heap scatters: collected now (bodies saw the pre-epoch
+            # heap), applied after all types ran.
+            for (idx, val, smask, op) in eff.heap_i_scatter:
+                heap_scatters_i.append((idx, val, m & smask, op))
+            for (idx, val, smask, op) in eff.heap_f_scatter:
+                heap_scatters_f.append((idx, val, m & smask, op))
+
+            # forks -> compact output at positions base[i] + k
+            if eff.fork_count is not None:
+                # pad this type's (W, Kt) fork arrays up to program-wide K
+                ft, fa = eff.fork_type, eff.fork_args
+                kt = ft.shape[1]
+                if kt < K:
+                    ft = jnp.pad(ft, ((0, 0), (0, K - kt)))
+                    fa = jnp.pad(fa, ((0, 0), (0, K - kt), (0, 0)))
+                fc = jnp.where(m, eff.fork_count, 0)
+                k_iota = jnp.arange(K, dtype=i32)[None, :]
+                pos = base[:, None] + k_iota  # (W,K)
+                fvalid = m[:, None] & (k_iota < fc[:, None])
+                pos = jnp.where(fvalid, pos, W * K)  # drop
+                fcode = (cen + 1) * T + ft  # (W,K)
+                fork_code_out = fork_code_out.at[pos.reshape(-1)].set(
+                    fcode.reshape(-1), mode="drop")
+                fork_args_out = fork_args_out.at[pos.reshape(-1)].set(
+                    fa.reshape(W * K, A), mode="drop")
+
+            # join -> replace own entry, same epoch number
+            if eff.join_mask is not None:
+                jm = m & eff.join_mask
+                jcode = cen * T + eff.join_type
+                new_code = jnp.where(jm, jcode, new_code)
+                new_args = jnp.where(jm[:, None], eff.join_args, new_args)
+                join_any = join_any | jm.any().astype(i32)
+                # lanes of this type that did NOT join are done: invalidate
+                done = m & ~eff.join_mask
+            else:
+                done = m
+            new_code = jnp.where(done, 0, new_code)
+
+            # emit -> compact window outputs (the coordinator writes
+            # them into its host-side res array)
+            if eff.emit_mask is not None:
+                em = m & eff.emit_mask
+                emit_val_out = jnp.where(em, eff.emit_val, emit_val_out)
+                emit_msk_out = emit_msk_out | em.astype(i32)
+                emit_count = emit_count + em.sum().astype(i32)
+
+            # map descriptors
+            if eff.map_count is not None:
+                map_count = jnp.where(m, eff.map_count, map_count)
+                map_args_acc = jnp.where(
+                    m[:, None, None], eff.map_args, map_args_acc)
+
+        # apply heap scatters (epoch-end visibility, out-of-range drops)
+        def apply(arr, scatters, size):
+            for (idx, val, smask, op) in scatters:
+                safe = jnp.where(smask, idx, size)
+                upd = getattr(arr.at[safe], "set" if op == "set" else op)
+                arr = upd(val, mode="drop")
+            return arr
+
+        heap_i = apply(heap_i, heap_scatters_i, io.Hi)
+        heap_f = apply(heap_f, heap_scatters_f, io.Hf)
+
+        # compact map queue (scan over map counts)
+        mbase, n_mapped = exclusive_scan(map_count)
+        km_iota = jnp.arange(Km, dtype=i32)[None, :]
+        mpos = mbase[:, None] + km_iota
+        mvalid = km_iota < map_count[:, None]
+        mpos = jnp.where(mvalid, mpos, W * Km)
+        map_out = jnp.zeros((W * Km, Am), i32).at[mpos.reshape(-1)].set(
+            map_args_acc.reshape(W * Km, Am), mode="drop")
+
+        map_any = (n_mapped > 0).astype(i32)
+        flags = jnp.stack([
+            n_forked, join_any, map_any, n_mapped, emit_count,
+            live.sum().astype(i32),
+            jnp.zeros((), i32), jnp.zeros((), i32),
+        ])
+
+        outs = [new_code, new_args, emit_val_out, emit_msk_out,
+                heap_i, heap_f, fork_code_out, fork_args_out]
+        if prog.Km > 0:
+            outs.append(map_out)
+        outs.append(flags)
+        return tuple(outs)
+
+    return step
+
+
+def output_names(prog: Program) -> List[str]:
+    names = ["win_code", "win_args", "emit_val", "emit_msk", "heap_i",
+             "heap_f", "fork_code", "fork_args"]
+    if prog.Km > 0:
+        names.append("map_out")
+    names.append("flags")
+    return names

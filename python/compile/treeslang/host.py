@@ -1,0 +1,184 @@
+"""Python mirror of the Rust coordinator — test/debug driver.
+
+Runs a Program end-to-end through the *same* epoch-step computation that
+gets AOT-lowered, with the host-side logic (join stack, NDRange stack,
+CEN, next_free, fork splicing, reclaim) implemented exactly as
+`rust/src/coordinator` implements it. pytest uses this to validate the
+L2 semantics; the Rust integration tests then validate that the Rust
+coordinator drives the identical artifact to the identical states.
+
+Never imported at runtime by anything — build/test only.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import Program
+from .epoch import EpochIO, make_epoch_step
+
+
+@dataclass
+class HostState:
+    code: np.ndarray
+    args: np.ndarray
+    res: np.ndarray
+    heap_i: np.ndarray
+    heap_f: np.ndarray
+    const_i: np.ndarray
+    const_f: np.ndarray
+    next_free: int
+    join_stack: List[int] = field(default_factory=list)
+    ndrange_stack: List[Tuple[int, int]] = field(default_factory=list)
+    epochs: int = 0
+    launches: int = 0
+    total_active: int = 0  # sum over epochs of live lanes ~= work T1
+    map_launches: int = 0
+
+
+class PyCoordinator:
+    """Drives a Program exactly like the Rust coordinator does."""
+
+    def __init__(self, prog: Program, io: EpochIO, *, max_epochs: int = 100000):
+        self.prog = prog
+        self.io = io
+        self.max_epochs = max_epochs
+        self.step = jax.jit(make_epoch_step(prog, io))
+        self.map_step = (
+            jax.jit(self._make_map_step()) if prog.map_fn is not None else None
+        )
+
+    def _make_map_step(self):
+        prog, io = self.prog, self.io
+
+        def mstep(map_args, heap_i, heap_f, const_i, const_f, nm):
+            Wm = map_args.shape[0]
+            mask = jnp.arange(Wm, dtype=jnp.int32) < nm
+            return prog.map_fn(
+                dict(heap_i=heap_i, heap_f=heap_f,
+                     const_i=const_i, const_f=const_f),
+                map_args, mask)
+
+        return mstep
+
+    def init_state(self, initial_args, heap_i=None, heap_f=None,
+                   const_i=None, const_f=None) -> HostState:
+        io, prog = self.io, self.prog
+        code = np.zeros(io.N, np.int32)
+        args = np.zeros((io.N, prog.num_args), np.int32)
+        code[0] = prog.encode(0, 1)  # initial task: type 1, epoch 0
+        args[0, : len(initial_args)] = initial_args
+
+        def fit(x, n, dt):
+            out = np.zeros(n, dt)
+            if x is not None:
+                x = np.asarray(x, dt)
+                out[: len(x)] = x
+            return out
+
+        return HostState(
+            code=code,
+            args=args,
+            res=np.zeros(io.N, np.int32),
+            heap_i=fit(heap_i, io.Hi, np.int32),
+            heap_f=fit(heap_f, io.Hf, np.float32),
+            const_i=fit(const_i, io.Ci, np.int32),
+            const_f=fit(const_f, io.Cf, np.float32),
+            next_free=1,
+            join_stack=[0],
+            ndrange_stack=[(0, 1)],
+        )
+
+    def run(self, st: HostState, seed: int = 0) -> HostState:
+        W = self.io.W
+        while st.join_stack:
+            if st.epochs >= self.max_epochs:
+                raise RuntimeError("epoch limit exceeded")
+            cen = st.join_stack.pop()
+            lo, hi = st.ndrange_stack.pop()
+            old_next_free = st.next_free
+            join_sched = False
+            map_sched = False
+            pending_maps = []
+            # tile the NDRange across window-sized launches (same CEN)
+            tlo = lo
+            while tlo < hi:
+                active = min(hi - tlo, W)
+                wc = np.zeros(W, np.int32)
+                wa = np.zeros((W, self.prog.num_args), np.int32)
+                wc[:active] = st.code[tlo:tlo + active]
+                wa[:active] = st.args[tlo:tlo + active]
+                # host-side res pre-gather (mirrors the Rust coordinator)
+                G = max(self.prog.gather_width, 1)
+                rw = np.zeros((W, G), np.int32)
+                if self.prog.gather is not None:
+                    T = self.prog.T
+                    for i in range(active):
+                        code = int(wc[i])
+                        if code <= 0:
+                            continue
+                        tid = code - (code - 1) // T * T
+                        rw[i, :] = self.prog.gather(tid, wa[i], st.res)
+                scalars = np.array(
+                    [cen, tlo, active, st.next_free, seed + st.epochs, 0, 0, 0],
+                    np.int32)
+                outs = self.step(wc, wa, rw, st.heap_i, st.heap_f,
+                                 st.const_i, st.const_f, scalars)
+                outs = [np.asarray(o) for o in outs]
+                if self.prog.Km > 0:
+                    (wc2, wa2, ev, em, hi2, hf2, fcode, fargs, mout,
+                     flags) = outs
+                else:
+                    (wc2, wa2, ev, em, hi2, hf2, fcode, fargs, flags) = outs
+                    mout = None
+                n_forked, j_any, m_any, n_mapped, _emits, n_live = flags[:6]
+                st.code[tlo:tlo + active] = wc2[:active]
+                st.args[tlo:tlo + active] = wa2[:active]
+                emitted = np.nonzero(em[:active])[0]
+                st.res[tlo + emitted] = ev[emitted]
+                st.heap_i = hi2
+                st.heap_f = hf2
+                if n_forked > 0:
+                    nf = st.next_free
+                    st.code[nf:nf + n_forked] = fcode[:n_forked]
+                    st.args[nf:nf + n_forked] = fargs[:n_forked]
+                    st.next_free = nf + int(n_forked)
+                join_sched |= bool(j_any)
+                if m_any:
+                    map_sched = True
+                    pending_maps.append(mout[: int(n_mapped)])
+                st.launches += 1
+                st.total_active += int(n_live)
+                tlo += active
+            st.epochs += 1
+            # phase 3: stack updates (order: join first, fork on top)
+            if join_sched:
+                st.join_stack.append(cen)
+                st.ndrange_stack.append((lo, hi))
+            if st.next_free > old_next_free:
+                st.join_stack.append(cen + 1)
+                st.ndrange_stack.append((old_next_free, st.next_free))
+            if map_sched:
+                self._run_maps(st, pending_maps)
+            if (not join_sched and st.next_free == old_next_free
+                    and hi == st.next_free):
+                st.next_free = lo  # reclaim (paper §5.3 epoch-3 behaviour)
+        return st
+
+    def _run_maps(self, st: HostState, pending: List[np.ndarray]):
+        Wm = self.io.W * max(self.prog.Km, 1)
+        q = np.concatenate(pending, axis=0) if pending else np.zeros(
+            (0, max(self.prog.map_args, 1)), np.int32)
+        for off in range(0, len(q), Wm):
+            chunk = q[off:off + Wm]
+            nm = len(chunk)
+            buf = np.zeros((Wm, q.shape[1]), np.int32)
+            buf[:nm] = chunk
+            hi2, hf2 = self.map_step(buf, st.heap_i, st.heap_f,
+                                     st.const_i, st.const_f, nm)
+            st.heap_i = np.asarray(hi2)
+            st.heap_f = np.asarray(hf2)
+            st.map_launches += 1

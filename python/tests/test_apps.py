@@ -1,0 +1,214 @@
+"""L2 application correctness through the PyCoordinator host mirror —
+each evaluation app on small instances vs python references."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.aot import io_for
+from compile.treeslang.host import PyCoordinator
+
+INF = 1 << 30
+
+
+# ------------------------------------------------------------------ bfs
+def _pack_graph(sz, row_ptr, col, src, w=None):
+    VMAX, EMAX = sz["VMAX"], sz["EMAX"]
+    V = len(row_ptr) - 1
+    E = len(col)
+    ci = np.zeros(sz["Ci"], np.int32)
+    ci[0], ci[1], ci[2] = V, E, src
+    ci[4:4 + V + 1] = row_ptr
+    ci[4 + V + 1:4 + VMAX + 1] = E
+    ci[4 + VMAX + 1:4 + VMAX + 1 + E] = col
+    if w is not None:
+        ci[4 + VMAX + 1 + EMAX:4 + VMAX + 1 + EMAX + E] = w
+    heap = np.full(2 * VMAX, INF, np.int32)
+    heap[VMAX:] = 2 ** 31 - 1
+    heap[src] = 0
+    return ci, heap
+
+
+def _random_graph(rng, V, deg):
+    adj = [[] for _ in range(V)]
+    for u in range(V):
+        for _ in range(deg):
+            v = rng.randint(0, V)
+            if v != u:
+                w = rng.randint(1, 9)
+                adj[u].append((v, w))
+                adj[v].append((u, w))
+    row_ptr, col, ws = [0], [], []
+    for u in range(V):
+        for (v, w) in adj[u]:
+            col.append(v)
+            ws.append(w)
+        row_ptr.append(len(col))
+    return row_ptr, col, ws
+
+
+def _dijkstra(row_ptr, col, ws, V, src):
+    import heapq
+    dist = [INF] * V
+    dist[src] = 0
+    h = [(0, src)]
+    while h:
+        d, u = heapq.heappop(h)
+        if d > dist[u]:
+            continue
+        for e in range(row_ptr[u], row_ptr[u + 1]):
+            nd = d + ws[e]
+            if nd < dist[col[e]]:
+                dist[col[e]] = nd
+                heapq.heappush(h, (nd, col[e]))
+    return dist
+
+
+@pytest.fixture(scope="module")
+def bfs_coord():
+    from compile.apps.bfs import CLASSES, program_for_class
+    sz = CLASSES["S"]
+    return sz, PyCoordinator(program_for_class(sz), io_for(sz, 256))
+
+
+@pytest.fixture(scope="module")
+def sssp_coord():
+    from compile.apps.sssp import CLASSES, program_for_class
+    sz = CLASSES["S"]
+    return sz, PyCoordinator(program_for_class(sz), io_for(sz, 256))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 500))
+def test_bfs_random_graphs(bfs_coord, seed):
+    sz, co = bfs_coord
+    rng = np.random.RandomState(seed)
+    V = rng.randint(4, 120)
+    row_ptr, col, ws = _random_graph(rng, V, 3)
+    ci, heap = _pack_graph(sz, row_ptr, col, 0)
+    st_ = co.init_state([0, 0], heap_i=heap, const_i=ci)
+    st_ = co.run(st_)
+    want = _dijkstra(row_ptr, col, [1] * len(col), V, 0)
+    assert list(st_.heap_i[:V]) == want
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 500))
+def test_sssp_random_graphs(sssp_coord, seed):
+    sz, co = sssp_coord
+    rng = np.random.RandomState(seed + 7777)
+    V = rng.randint(4, 100)
+    row_ptr, col, ws = _random_graph(rng, V, 3)
+    ci, heap = _pack_graph(sz, row_ptr, col, 0, w=ws)
+    st_ = co.init_state([0, 0], heap_i=heap, const_i=ci)
+    st_ = co.run(st_)
+    want = _dijkstra(row_ptr, col, ws, V, 0)
+    assert list(st_.heap_i[:V]) == want
+
+
+# ----------------------------------------------------------------- sort
+@pytest.mark.parametrize("app,n", [("mergesort", 64), ("mergesort", 256),
+                                   ("msort_map", 64), ("msort_map", 1024)])
+def test_sorts(app, n):
+    mod = __import__(f"compile.apps.{app}", fromlist=["x"])
+    sz = mod.CLASSES["S"]
+    NMAX = sz["NMAX"]
+    co = PyCoordinator(mod.program_for_class(sz), io_for(sz, 256))
+    rng = np.random.RandomState(n)
+    data = np.full(2 * NMAX, np.inf, np.float32)
+    data[:n] = rng.rand(n).astype(np.float32)
+    st_ = co.init_state([0, n, 0, 0], heap_f=data)
+    st_ = co.run(st_)
+    L = int(math.log2(n // 4))
+    dst = (L % 2) * NMAX
+    np.testing.assert_allclose(st_.heap_f[dst:dst + n], np.sort(data[:n]))
+
+
+# ------------------------------------------------------------------ fft
+@pytest.mark.parametrize("n", [16, 128])
+def test_fft(n):
+    from compile.apps.fft import CLASSES, program_for_class
+    sz = CLASSES["S"]
+    NMAX = sz["NMAX"]
+    co = PyCoordinator(program_for_class(sz), io_for(sz, 256))
+    rng = np.random.RandomState(n)
+    x = rng.rand(n).astype(np.float32)
+    heap = np.zeros(2 * NMAX, np.float32)
+    heap[:n] = x
+    st_ = co.init_state([0, n, 0, 0], heap_f=heap)
+    st_ = co.run(st_)
+    bits = int(math.log2(n))
+    got = np.array([
+        st_.heap_f[int(format(k, f"0{bits}b")[::-1], 2)]
+        + 1j * st_.heap_f[NMAX + int(format(k, f"0{bits}b")[::-1], 2)]
+        for k in range(n)
+    ])
+    np.testing.assert_allclose(got, np.fft.fft(x), atol=1e-2 * math.sqrt(n))
+
+
+# -------------------------------------------------------------- nqueens
+KNOWN = {4: 2, 5: 10, 6: 4, 7: 40, 8: 92}
+
+
+@pytest.mark.parametrize("n", [4, 5, 6, 8])
+def test_nqueens(n):
+    from compile.apps.nqueens import CLASSES, program
+    co = PyCoordinator(program(), io_for(CLASSES["S"], 256))
+    st_ = co.init_state([0, 0, 0, 0], const_i=np.array([n], np.int32))
+    st_ = co.run(st_)
+    assert st_.res[0] == KNOWN[n]
+
+
+# ------------------------------------------------------------------ tsp
+def _tsp_ref(dist, n):
+    import itertools
+    best = INF
+    for perm in itertools.permutations(range(1, n)):
+        cost = dist[0][perm[0]]
+        for a, b in zip(perm, perm[1:]):
+            cost += dist[a][b]
+        cost += dist[perm[-1]][0]
+        best = min(best, cost)
+    return best
+
+
+@pytest.mark.parametrize("n,seed", [(5, 0), (7, 1)])
+def test_tsp(n, seed):
+    from compile.apps.tsp import CLASSES, program_for_class
+    sz = CLASSES["S"]
+    NC = sz["NC"]
+    co = PyCoordinator(program_for_class(sz), io_for(sz, 256))
+    rng = np.random.RandomState(seed)
+    d = rng.randint(1, 99, (n, n))
+    d = (d + d.T) // 2
+    np.fill_diagonal(d, 0)
+    ci = np.zeros(sz["Ci"], np.int32)
+    ci[0] = n
+    for i in range(n):
+        ci[4 + i * NC:4 + i * NC + n] = d[i]
+    st_ = co.init_state([0, 1, 0, 1], heap_i=np.array([1 << 28], np.int32),
+                        const_i=ci)
+    st_ = co.run(st_)
+    assert st_.res[0] == _tsp_ref(d.tolist(), n)
+
+
+# -------------------------------------------------------------- matmul
+def test_matmul():
+    from compile.apps.matmul import CLASSES, program_for_class
+    sz = CLASSES["S"]
+    NMAT = sz["NMAT"]
+    n = 8
+    co = PyCoordinator(program_for_class(sz), io_for(sz, 256))
+    rng = np.random.RandomState(0)
+    a = rng.rand(n, n).astype(np.float32)
+    b = rng.rand(n, n).astype(np.float32)
+    cf = np.zeros(2 * NMAT * NMAT, np.float32)
+    cf[:n * n] = a.reshape(-1)
+    cf[NMAT * NMAT:NMAT * NMAT + n * n] = b.reshape(-1)
+    st_ = co.init_state([0, 0, n, 0], heap_f=np.zeros(NMAT * NMAT, np.float32),
+                        const_i=np.array([n], np.int32), const_f=cf)
+    st_ = co.run(st_)
+    np.testing.assert_allclose(
+        st_.heap_f[:n * n].reshape(n, n), a @ b, rtol=1e-4)

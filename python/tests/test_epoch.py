@@ -1,0 +1,205 @@
+"""L2 semantics: the epoch-step combinator and the TVM rules, driven
+through the PyCoordinator host mirror."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.aot import io_for
+from compile.treeslang import Effects, Program, TaskType
+from compile.treeslang.core import decode_code
+from compile.treeslang.epoch import EpochIO, make_epoch_step
+from compile.treeslang.host import PyCoordinator
+
+i32 = jnp.int32
+
+
+# --------------------------------------------------------- code packing
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 7), st.integers(1, 7))
+def test_code_roundtrip(epoch, T, tid_raw):
+    tid = 1 + (tid_raw - 1) % T
+    code = jnp.array([epoch * T + tid], i32)
+    e, t, v = decode_code(code, T)
+    assert bool(v[0]) and int(e[0]) == epoch and int(t[0]) == tid
+
+
+def test_code_zero_is_invalid():
+    e, t, v = decode_code(jnp.array([0], i32), 3)
+    assert not bool(v[0]) and int(t[0]) == 0
+
+
+# ------------------------------------------------------- fib end-to-end
+def fib_ref(n):
+    a, b = 0, 1
+    for _ in range(n):
+        a, b = b, a + b
+    return a
+
+
+@pytest.fixture(scope="module")
+def fib_coord():
+    from compile.apps.fib import program
+    return PyCoordinator(program(), EpochIO(W=256, N=1 << 16, Hi=1, Hf=1,
+                                            Ci=1, Cf=1))
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 3, 8, 13])
+def test_fib_values(fib_coord, n):
+    st_ = fib_coord.init_state([n])
+    st_ = fib_coord.run(st_)
+    assert st_.res[0] == fib_ref(n)
+
+
+def test_fib_critical_path(fib_coord):
+    # T-inf = 2n - 1 epochs for n >= 2 (n fork levels, n-1 join levels)
+    for n in (2, 5, 9):
+        st_ = fib_coord.init_state([n])
+        st_ = fib_coord.run(st_)
+        assert st_.epochs == 2 * n - 1, n
+
+
+def test_fib_reclaims_all_slots(fib_coord):
+    st_ = fib_coord.init_state([10])
+    st_ = fib_coord.run(st_)
+    assert st_.next_free == 0  # TV fully unwound at halt
+
+
+# ------------------------------------------------ stack/epoch mechanics
+def _linear_program(depth_param):
+    """A chain: task forks one child `depth` times, then emits."""
+
+    def fn(env, args, mask, child_slots):
+        W = env.W
+        d = args[:, 0]
+        more = d > 0
+        fa = jnp.zeros((W, 1, 4), i32)
+        fa = fa.at[:, 0, 0].set(d - 1)
+        return Effects(
+            fork_count=jnp.where(mask & more, 1, 0).astype(i32),
+            fork_type=jnp.ones((W, 1), i32),
+            fork_args=fa,
+            emit_mask=~more,
+            emit_val=jnp.full((W,), 42, i32),
+        )
+
+    return Program(name="chain", task_types=[TaskType("chain", fn, max_forks=1)],
+                   num_args=4)
+
+
+def test_linear_chain_epochs_equal_depth():
+    prog = _linear_program(None)
+    co = PyCoordinator(prog, EpochIO(W=256, N=4096, Hi=1, Hf=1, Ci=1, Cf=1))
+    for depth in (0, 1, 7, 30):
+        st_ = co.init_state([depth])
+        st_ = co.run(st_)
+        assert st_.epochs == depth + 1
+        # Reclaim (paper §5.3) only fires when an epoch schedules
+        # nothing: every fork epoch advances nextFreeCore past the old
+        # range, so the chain's dead slots below stay allocated until
+        # the machine halts — only the last range is reclaimed.
+        assert st_.next_free == depth
+
+
+def test_fork_slots_are_contiguous_lane_major():
+    """Forked children must land at next_free + lane-major scan order
+    (paper §5.1.2 observation 2)."""
+
+    def fn(env, args, mask, child_slots):
+        W = env.W
+        k = args[:, 0]  # forks per lane (0..2)
+        fa = jnp.zeros((W, 2, 4), i32)
+        # child arg 0 = parent lane id, arg 1 = k index
+        fa = fa.at[:, 0, 0].set(env.lanes)
+        fa = fa.at[:, 1, 0].set(env.lanes)
+        fa = fa.at[:, 0, 1].set(0)
+        fa = fa.at[:, 1, 1].set(1)
+        return Effects(
+            fork_count=jnp.where(mask, k, 0).astype(i32),
+            fork_type=jnp.ones((W, 2), i32),
+            fork_args=fa,
+        )
+
+    prog = Program(name="forks", task_types=[TaskType("f", fn, max_forks=2)],
+                   num_args=4)
+    io = EpochIO(W=8, N=64, Hi=1, Hf=1, Ci=1, Cf=1)
+    step = make_epoch_step(prog, io)
+    # lane fork counts: 2,0,1,2 -> children lane-major: (0,0),(0,1),(2,0),(3,0),(3,1)
+    win_code = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], i32)
+    win_args = jnp.zeros((8, 4), i32).at[:4, 0].set(jnp.array([2, 0, 1, 2]))
+    scal = jnp.array([0, 0, 4, 4, 0, 0, 0, 0], i32)
+    outs = step(win_code, win_args, jnp.zeros((8, 1), i32),
+                jnp.zeros(1, i32), jnp.zeros(1, jnp.float32),
+                jnp.zeros(1, i32), jnp.zeros(1, jnp.float32), scal)
+    fork_code, fork_args, flags = outs[6], outs[7], outs[-1]
+    assert int(flags[0]) == 5  # n_forked
+    parents = np.asarray(fork_args)[:5, 0]
+    np.testing.assert_array_equal(parents, [0, 0, 2, 3, 3])
+    ks = np.asarray(fork_args)[:5, 1]
+    np.testing.assert_array_equal(ks, [0, 1, 0, 0, 1])
+    assert all(np.asarray(fork_code)[:5] == 1 * 1 + 1)  # epoch 1, tid 1
+
+
+def test_join_reruns_at_same_epoch():
+    """join replaces the entry with the SAME epoch number."""
+
+    def fn(env, args, mask, child_slots):
+        W = env.W
+        phase = args[:, 0]
+        fa = jnp.zeros((W, 1, 4), i32)
+        ja = jnp.zeros((W, 4), i32).at[:, 0].set(1)
+        return Effects(
+            fork_count=jnp.where(mask & (phase == 0), 1, 0).astype(i32),
+            fork_type=jnp.full((W, 1), 2, i32),
+            fork_args=fa,
+            join_mask=(phase == 0),
+            join_type=jnp.ones((W,), i32),
+            join_args=ja,
+            emit_mask=(phase == 1),
+            emit_val=jnp.full((W,), 7, i32),
+        )
+
+    def leaf(env, args, mask, child_slots):
+        return Effects(emit_mask=jnp.ones_like(mask),
+                       emit_val=jnp.full((env.W,), 1, i32))
+
+    prog = Program(name="jj", task_types=[
+        TaskType("t", fn, max_forks=1), TaskType("leaf", leaf)], num_args=4)
+    co = PyCoordinator(prog, EpochIO(W=256, N=256, Hi=1, Hf=1, Ci=1, Cf=1))
+    st_ = co.init_state([0])
+    st_ = co.run(st_)
+    assert st_.epochs == 3  # fork epoch, leaf epoch, join rerun epoch
+    assert st_.res[0] == 7
+    assert st_.res[1] == 1
+
+
+# -------------------------------------------------- heap scatter merging
+def test_heap_scatter_min_is_epoch_end_visible():
+    """Writers in one epoch do not see each other; the merge applies at
+    the epoch boundary (min of all proposals wins)."""
+
+    def fn(env, args, mask, child_slots):
+        W = env.W
+        v = args[:, 0]
+        idx = jnp.zeros((W,), i32)
+        return Effects(
+            emit_mask=jnp.ones_like(mask),
+            emit_val=env.heap_i[0] * jnp.ones((W,), i32),  # pre-epoch read
+            heap_i_scatter=[(idx, v, mask, "min")],
+        )
+
+    prog = Program(name="minh", task_types=[TaskType("t", fn)], num_args=4)
+    io = EpochIO(W=8, N=64, Hi=4, Hf=1, Ci=1, Cf=1)
+    step = make_epoch_step(prog, io)
+    win_code = jnp.array([1, 1, 1, 0, 0, 0, 0, 0], i32)
+    win_args = jnp.zeros((8, 4), i32).at[:3, 0].set(jnp.array([9, 3, 5]))
+    scal = jnp.array([0, 0, 3, 3, 0, 0, 0, 0], i32)
+    outs = step(win_code, win_args, jnp.zeros((8, 1), i32),
+                jnp.full((4,), 100, i32), jnp.zeros(1, jnp.float32),
+                jnp.zeros(1, i32), jnp.zeros(1, jnp.float32), scal)
+    emit_val, heap_i = outs[2], outs[4]
+    assert int(heap_i[0]) == 3  # min merged
+    # all lanes read the PRE-epoch heap value (100), not each other's
+    # writes (emit values came from env.heap_i[0])
+    np.testing.assert_array_equal(np.asarray(emit_val)[:3], [100, 100, 100])

@@ -1,0 +1,141 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure oracle,
+swept over shapes and values with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bitonic import bitonic_sort, bitonic_stage
+from compile.kernels.merge import merge_level
+from compile.kernels.relax import relax_proposals
+from compile.kernels.scan import exclusive_scan, CHUNK
+
+
+# ---------------------------------------------------------------- scan
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=200))
+def test_scan_small(xs):
+    x = jnp.array(xs, jnp.int32)
+    s, t = jax.jit(exclusive_scan)(x)
+    want, wt = ref.exclusive_scan_ref(xs)
+    np.testing.assert_array_equal(np.asarray(s), want)
+    assert int(t) == wt
+
+
+@pytest.mark.parametrize("n", [CHUNK, 2 * CHUNK, 8 * CHUNK])
+def test_scan_chunked(n):
+    rng = np.random.RandomState(n)
+    x = jnp.array(rng.randint(0, 5, n), jnp.int32)
+    s, t = jax.jit(exclusive_scan)(x)
+    want, wt = ref.exclusive_scan_ref(np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(s), want)
+    assert int(t) == wt
+
+
+def test_scan_rejects_ragged():
+    with pytest.raises(ValueError):
+        exclusive_scan(jnp.zeros(CHUNK + 3, jnp.int32))
+
+
+def test_scan_all_zero_and_all_max():
+    for v in (0, 2):
+        x = jnp.full((CHUNK,), v, jnp.int32)
+        s, t = jax.jit(exclusive_scan)(x)
+        assert int(t) == v * CHUNK
+        assert int(np.asarray(s)[-1]) == v * (CHUNK - 1)
+
+
+# --------------------------------------------------------------- relax
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_relax_random(data):
+    v = data.draw(st.integers(2, 40))
+    e = data.draw(st.integers(1, 120))
+    rng = np.random.RandomState(data.draw(st.integers(0, 10_000)))
+    dist = rng.randint(0, 50, v).astype(np.int32)
+    dist[rng.rand(v) < 0.3] = ref.INF
+    esrc = rng.randint(0, v, e).astype(np.int32)
+    ew = rng.randint(1, 9, e).astype(np.int32)
+    frontier = (rng.rand(v) < 0.5).astype(np.int32)
+    nd = jax.jit(relax_proposals)(
+        jnp.array(dist), jnp.array(esrc), jnp.array(ew), jnp.array(frontier))
+    np.testing.assert_array_equal(
+        np.asarray(nd), ref.relax_ref(dist, esrc, ew, frontier))
+
+
+def test_relax_tiled_path():
+    # exercise the gridded (E > TILE) code path
+    from compile.kernels.relax import TILE
+    v, e = 64, 2 * TILE
+    rng = np.random.RandomState(7)
+    dist = rng.randint(0, 50, v).astype(np.int32)
+    esrc = rng.randint(0, v, e).astype(np.int32)
+    ew = np.ones(e, np.int32)
+    frontier = np.ones(v, np.int32)
+    nd = jax.jit(relax_proposals)(
+        jnp.array(dist), jnp.array(esrc), jnp.array(ew), jnp.array(frontier))
+    np.testing.assert_array_equal(
+        np.asarray(nd), ref.relax_ref(dist, esrc, ew, frontier))
+
+
+# ------------------------------------------------------------- bitonic
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 10_000))
+def test_bitonic_random(logn, seed):
+    n = 1 << logn
+    rng = np.random.RandomState(seed)
+    x = jnp.array(rng.rand(n).astype(np.float32))
+    s = jax.jit(bitonic_sort)(x)
+    np.testing.assert_array_equal(np.asarray(s), ref.bitonic_sort_ref(x))
+
+
+def test_bitonic_with_infinities():
+    x = jnp.array([np.inf, 3.0, -1.0, np.inf, 0.0, 2.0, 1.0, -5.0],
+                  jnp.float32)
+    s = jax.jit(bitonic_sort)(x)
+    np.testing.assert_array_equal(np.asarray(s), np.sort(np.asarray(x)))
+
+
+def test_bitonic_single_stage_is_compare_exchange():
+    x = jnp.array([4.0, 1.0], jnp.float32)
+    s = bitonic_stage(x, 2, 1)
+    np.testing.assert_array_equal(np.asarray(s), [1.0, 4.0])
+
+
+# --------------------------------------------------------------- merge
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 5), st.integers(0, 9999))
+def test_merge_level_random(log_size, log_blocks, seed):
+    size = 2 << log_size  # 2R
+    nblocks = 1 << log_blocks
+    nmax = max(64, (size * nblocks))
+    nmax = 1 << int(np.ceil(np.log2(nmax)))
+    rng = np.random.RandomState(seed)
+    buf = np.full(2 * nmax, np.inf, np.float32)
+    # sorted halves per block in the src half (offset 0)
+    for b in range(nblocks):
+        lo = b * size
+        buf[lo:lo + size // 2] = np.sort(rng.rand(size // 2)).astype(np.float32)
+        buf[lo + size // 2:lo + size] = np.sort(rng.rand(size // 2)).astype(
+            np.float32)
+    total = size * nblocks
+    got = jax.jit(
+        lambda b: merge_level(b, jnp.int32(size), jnp.int32(total),
+                              jnp.int32(0), nmax=nmax))(jnp.array(buf))
+    want = ref.merge_level_ref(buf, size, total, 0, nmax)
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+def test_merge_level_with_duplicates():
+    nmax = 64
+    buf = np.full(2 * nmax, np.inf, np.float32)
+    buf[0:4] = [1, 1, 2, 2]
+    buf[4:8] = [1, 2, 2, 3]
+    got = jax.jit(
+        lambda b: merge_level(b, jnp.int32(8), jnp.int32(8), jnp.int32(0),
+                              nmax=nmax))(jnp.array(buf))
+    np.testing.assert_array_equal(
+        np.asarray(got)[:8], [1, 1, 1, 2, 2, 2, 2, 3])

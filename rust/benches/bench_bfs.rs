@@ -1,0 +1,88 @@
+//! Fig 7 — BFS: TREES vs the hand-coded native worklist baseline.
+//!
+//! Paper claim: TREES is never more than ~6% slower than the
+//! LonestarGPU-equivalent native implementation (measuring the GPU side
+//! only — the host loop is shared between both).
+
+use trees::apps::graph_sp;
+use trees::baselines::Worklist;
+use trees::benchkit::Table;
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::graph::{bfs_levels, gen, Csr};
+use trees::runtime::{load_manifest, Device};
+
+pub fn graph_set(full: bool) -> Vec<(String, Csr)> {
+    if full {
+        vec![
+            ("rmat-12".into(), gen::rmat(12, 8, 10, 1)),
+            ("grid-90".into(), gen::grid2d(90, 10, 2)),
+            ("uniform-4k".into(), gen::uniform(1 << 12, 4, 10, 3)),
+        ]
+    } else {
+        vec![
+            ("rmat-10".into(), gen::rmat(10, 8, 10, 1)),
+            ("grid-48".into(), gen::grid2d(48, 10, 2)),
+            ("uniform-2k".into(), gen::uniform(1 << 11, 4, 10, 3)),
+        ]
+    }
+}
+
+fn main() {
+    let (manifest, dir) = match load_manifest() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("SKIP bench_bfs: {e}");
+            return;
+        }
+    };
+    let full = std::env::var("TREES_BENCH_FULL").is_ok();
+    let dev = Device::cpu().expect("pjrt client");
+    let app = manifest.app("bfs").expect("bfs");
+    let napp = manifest.app("native_bfs").expect("native_bfs");
+
+    let mut table = Table::new(
+        "Fig 7 — BFS: TREES vs native worklist (GPU-side time)",
+        &["graph", "V", "E", "native ms", "trees ms", "overhead",
+          "trees epochs", "native iters"],
+    );
+
+    for (name, g) in graph_set(full) {
+        let src = 0usize;
+        // native
+        let wl = Worklist::new(&dev, &dir, napp, &g).expect("worklist");
+        let _ = wl.run(&g, src).expect("warmup");
+        let (ndist, nstats) = wl.run(&g, src).expect("native run");
+        let native_ns = nstats.exec_ns as f64;
+
+        // trees
+        let (w, _) = graph_sp::workload(app, &g, src).expect("workload");
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).expect("coordinator");
+        let _ = co.run(&w).expect("warmup");
+        let (st, stats) = co.run(&w).expect("trees run");
+        let trees_ns = stats.exec_ns as f64;
+
+        // correctness cross-check while we're here
+        assert_eq!(&st.heap_i[..g.num_vertices()], &bfs_levels(&g, src)[..]);
+        assert_eq!(&ndist[..], &bfs_levels(&g, src)[..]);
+
+        table.row(vec![
+            name,
+            format!("{}", g.num_vertices()),
+            format!("{}", g.num_edges()),
+            format!("{:.2}", native_ns / 1e6),
+            format!("{:.2}", trees_ns / 1e6),
+            format!("{:+.1}%", (trees_ns / native_ns - 1.0) * 100.0),
+            format!("{}", stats.epochs),
+            format!("{}", nstats.iterations),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper: TREES <= 6% slower than native. note: the native \
+         baseline here relaxes all frontier edges per iteration \
+         (edge-frontier kernel) while TREES does task-granular \
+         data-driven relaxation with more, smaller launches — compare \
+         the order of magnitude and who wins per family."
+    );
+}

@@ -1,0 +1,76 @@
+//! Fig 5 — Fibonacci: TREES (±initialization) vs Cilk(4) vs sequential.
+//!
+//! The paper runs fib(35-38) on an A10-7850K; this testbed's "GPU" is
+//! the XLA-CPU PJRT client, so sizes scale down (set TREES_BENCH_FULL=1
+//! for larger n). The claims being reproduced:
+//!   * TREES (excluding init) is competitive with Cilk on 4 cores;
+//!   * relative performance does not vary with problem size (runtime
+//!     balances load like Cilk);
+//!   * including one-time init (client + artifact compile), TREES is
+//!     somewhat worse — init dominates at these sizes.
+
+use trees::apps::fib;
+use trees::baselines::seq;
+use trees::benchkit::{black_box, time_once, Table};
+use trees::cilk::{self, Pool};
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+
+fn main() {
+    let (manifest, dir) = match load_manifest() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("SKIP bench_fib: {e}");
+            return;
+        }
+    };
+    let full = std::env::var("TREES_BENCH_FULL").is_ok();
+    let ns: Vec<u32> = if full { vec![20, 22, 24, 26, 27] } else { vec![18, 20, 22, 24] };
+
+    let dev = Device::cpu().expect("pjrt client");
+    let app = manifest.app("fib").expect("fib in manifest");
+    let pool = Pool::new(4); // the paper's 4 CPU cores
+
+    let mut table = Table::new(
+        "Fig 5 — Fibonacci: speedup vs Cilk(4) [>1 = TREES faster]",
+        &["fib(n)", "seq ms", "cilk4 ms", "trees ms", "+init ms",
+          "vs cilk", "vs cilk(+init)", "work", "epochs"],
+    );
+
+    for &n in &ns {
+        let (_, seq_ns) = time_once(|| black_box(seq::fib(n)));
+        let (_, cilk_ns) = time_once(|| black_box(pool.run(|| cilk::apps::fib(n, 12))));
+
+        let w = fib::workload(n);
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).expect("coordinator");
+        // warm run (first launch includes lazy XLA init inside exec)
+        let _ = co.run(&w).expect("warmup");
+        let ((_, stats), trees_ns) = {
+            let t0 = std::time::Instant::now();
+            let r = co.run(&w).expect("trees run");
+            (r, t0.elapsed().as_nanos() as f64)
+        };
+        let init_ns = co.compile_ns() as f64 + co.init_ns() as f64;
+        let with_init = trees_ns + init_ns;
+
+        table.row(vec![
+            format!("{n}"),
+            format!("{:.2}", seq_ns / 1e6),
+            format!("{:.2}", cilk_ns / 1e6),
+            format!("{:.2}", trees_ns / 1e6),
+            format!("{:.1}", with_init / 1e6),
+            format!("{:.3}x", cilk_ns / trees_ns),
+            format!("{:.3}x", cilk_ns / with_init),
+            format!("{}", stats.work),
+            format!("{}", stats.epochs),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper: TREES beats Cilk(4) w/o OpenCL init; worse with init; \
+         ratio roughly flat in n.\nnote: this testbed's GPU is an \
+         XLA-CPU simulation — compare the *shape* (flat ratio, init \
+         penalty), not absolute speedups."
+    );
+}

@@ -1,0 +1,80 @@
+//! Fig 9 — Sort: naive TREES mergesort vs TREES+map vs native bitonic.
+//!
+//! Paper claims: naive mergesort is abysmal (serial merges); the map
+//! variant recovers most of the gap; native bitonic stays ~2x ahead of
+//! TREES+map (the generality price on a regular workload).
+
+use trees::apps::msort;
+use trees::baselines::{seq, Bitonic};
+use trees::benchkit::{black_box, time_once, Table};
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::util::rng::Rng;
+
+fn main() {
+    let (manifest, dir) = match load_manifest() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("SKIP bench_sort: {e}");
+            return;
+        }
+    };
+    let full = std::env::var("TREES_BENCH_FULL").is_ok();
+    let sizes: Vec<usize> = if full {
+        vec![1 << 9, 1 << 10, 1 << 12, 1 << 14]
+    } else {
+        vec![1 << 8, 1 << 9, 1 << 10]
+    };
+    // naive runs only where its serial merges stay sane
+    let naive_cap = if full { 1 << 12 } else { 1 << 10 };
+
+    let dev = Device::cpu().expect("pjrt client");
+    let napp = manifest.app("native_bitonic").expect("native_bitonic");
+    let mapp = manifest.app("msort_map").expect("msort_map");
+    let sapp = manifest.app("mergesort").expect("mergesort");
+
+    let mut table = Table::new(
+        "Fig 9 — Sort: normalized to native bitonic [1.0 = native]",
+        &["n", "seq ms", "bitonic ms", "t+map ms", "t naive ms",
+          "map/native", "naive/native"],
+    );
+
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+
+        let (_, seq_ns) = time_once(|| black_box(seq::mergesort(&xs)));
+
+        let b = Bitonic::new(&dev, &dir, napp, n).expect("bitonic");
+        let _ = b.sort(&xs).expect("warmup");
+        let (_, native_ns) = time_once(|| black_box(b.sort(&xs).unwrap()));
+
+        let run_sort = |app: &trees::runtime::AppManifest| -> f64 {
+            let (w, _, _) = msort::workload(app, &xs).expect("workload");
+            let co = Coordinator::for_workload(&dev, &dir, app, &w,
+                CoordinatorConfig::default()).expect("coordinator");
+            let _ = co.run(&w).expect("warmup");
+            let t0 = std::time::Instant::now();
+            let _ = co.run(&w).expect("run");
+            t0.elapsed().as_nanos() as f64
+        };
+
+        let map_ns = run_sort(mapp);
+        let naive_ns = if n <= naive_cap { Some(run_sort(sapp)) } else { None };
+
+        table.row(vec![
+            format!("2^{}", n.trailing_zeros()),
+            format!("{:.2}", seq_ns / 1e6),
+            format!("{:.2}", native_ns / 1e6),
+            format!("{:.2}", map_ns / 1e6),
+            naive_ns.map_or("-".into(), |x| format!("{:.1}", x / 1e6)),
+            format!("{:.2}x", map_ns / native_ns),
+            naive_ns.map_or("-".into(), |x| format!("{:.1}x", x / native_ns)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper: naive abysmal; +map closes most of the gap; native \
+         bitonic ~2-3x ahead of TREES+map (worst-case generality cost)."
+    );
+}

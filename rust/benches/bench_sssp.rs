@@ -1,0 +1,77 @@
+//! Fig 8 — SSSP: TREES vs the hand-coded native worklist baseline
+//! (same methodology as bench_bfs, weighted relaxation).
+
+use trees::apps::graph_sp;
+use trees::baselines::Worklist;
+use trees::benchkit::Table;
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::graph::{dijkstra, gen, Csr};
+use trees::runtime::{load_manifest, Device};
+
+fn graph_set(full: bool) -> Vec<(String, Csr)> {
+    if full {
+        vec![
+            ("rmat-12".into(), gen::rmat(12, 8, 10, 11)),
+            ("grid-90".into(), gen::grid2d(90, 10, 12)),
+            ("uniform-4k".into(), gen::uniform(1 << 12, 4, 10, 13)),
+        ]
+    } else {
+        vec![
+            ("rmat-10".into(), gen::rmat(10, 8, 10, 11)),
+            ("grid-48".into(), gen::grid2d(48, 10, 12)),
+            ("uniform-2k".into(), gen::uniform(1 << 11, 4, 10, 13)),
+        ]
+    }
+}
+
+fn main() {
+    let (manifest, dir) = match load_manifest() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("SKIP bench_sssp: {e}");
+            return;
+        }
+    };
+    let full = std::env::var("TREES_BENCH_FULL").is_ok();
+    let dev = Device::cpu().expect("pjrt client");
+    let app = manifest.app("sssp").expect("sssp");
+    let napp = manifest.app("native_sssp").expect("native_sssp");
+
+    let mut table = Table::new(
+        "Fig 8 — SSSP: TREES vs native worklist (GPU-side time)",
+        &["graph", "V", "E", "native ms", "trees ms", "overhead",
+          "trees epochs", "native iters"],
+    );
+
+    for (name, g) in graph_set(full) {
+        let src = 0usize;
+        let wl = Worklist::new(&dev, &dir, napp, &g).expect("worklist");
+        let _ = wl.run(&g, src).expect("warmup");
+        let (ndist, nstats) = wl.run(&g, src).expect("native run");
+        let native_ns = nstats.exec_ns as f64;
+
+        let (w, _) = graph_sp::workload(app, &g, src).expect("workload");
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).expect("coordinator");
+        let _ = co.run(&w).expect("warmup");
+        let (st, stats) = co.run(&w).expect("trees run");
+        let trees_ns = stats.exec_ns as f64;
+
+        let want = dijkstra(&g, src);
+        assert_eq!(&st.heap_i[..g.num_vertices()], &want[..]);
+        assert_eq!(&ndist[..], &want[..]);
+
+        table.row(vec![
+            name,
+            format!("{}", g.num_vertices()),
+            format!("{}", g.num_edges()),
+            format!("{:.2}", native_ns / 1e6),
+            format!("{:.2}", trees_ns / 1e6),
+            format!("{:+.1}%", (trees_ns / native_ns - 1.0) * 100.0),
+            format!("{}", stats.epochs),
+            format!("{}", nstats.iterations),
+        ]);
+    }
+    table.print();
+    println!("\npaper: TREES within ~6% of the native implementation.");
+}

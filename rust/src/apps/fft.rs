@@ -1,0 +1,145 @@
+//! Task-parallel FFT (Fig 6) — Rust-side workload builder and scalar
+//! interpreter program. Python twin: `python/compile/apps/fft.py`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Workload;
+use crate::runtime::AppManifest;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+
+pub const T_FFT: usize = 1;
+pub const T_BFR: usize = 2;
+pub const T_NEXT: usize = 3;
+
+/// Pick the smallest class with NMAX >= n; returns (class, NMAX).
+pub fn pick_class(app: &AppManifest, n: usize) -> Result<(String, usize)> {
+    app.classes
+        .iter()
+        .filter_map(|(c, d)| d.get("NMAX").map(|&m| (c.clone(), m)))
+        .filter(|&(_, m)| m >= n)
+        .min_by_key(|&(_, m)| m)
+        .ok_or_else(|| anyhow!("no fft class fits n={n}"))
+}
+
+/// Workload: FFT of `signal` (real input, length power of two).
+pub fn workload(app: &AppManifest, signal: &[f32]) -> Result<(Workload, usize)> {
+    let n = signal.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    let (cls, nmax) = pick_class(app, n)?;
+    let mut heap_f = vec![0f32; 2 * nmax];
+    heap_f[..n].copy_from_slice(signal);
+    // capacity: ~n live per level with reclaim; generous slack
+    let w = Workload::new(&app.name, vec![0, n as i32], 0)
+        .with_heaps(vec![], heap_f)
+        .with_class(&cls);
+    Ok((w, nmax))
+}
+
+/// Extract the spectrum (applying the DIF bit-reversal permutation).
+pub fn extract(heap_f: &[f32], nmax: usize, n: usize) -> Vec<(f32, f32)> {
+    let bits = n.trailing_zeros();
+    (0..n)
+        .map(|k| {
+            let r = (k as u32).reverse_bits() >> (32 - bits.max(1)) as u32;
+            let r = if bits == 0 { 0 } else { r as usize };
+            (heap_f[r], heap_f[nmax + r])
+        })
+        .collect()
+}
+
+/// Scalar program for the reference interpreter.
+pub struct Fft {
+    pub nmax: usize,
+}
+
+impl Fft {
+    fn butterfly(&self, ctx: &mut TaskCtx, lo: i32, n: i32, k: i32) {
+        let nm = self.nmax;
+        let i0 = (lo + k) as usize;
+        let i1 = (lo + k + n / 2) as usize;
+        let (a_re, a_im) = (ctx.heap_f[i0], ctx.heap_f[nm + i0]);
+        let (b_re, b_im) = (ctx.heap_f[i1], ctx.heap_f[nm + i1]);
+        let ang = -2.0 * std::f32::consts::PI * k as f32 / n as f32;
+        let (w_re, w_im) = (ang.cos(), ang.sin());
+        let (d_re, d_im) = (a_re - b_re, a_im - b_im);
+        ctx.scatter_f(i0, a_re + b_re, ScatterOp::Set);
+        ctx.scatter_f(nm + i0, a_im + b_im, ScatterOp::Set);
+        ctx.scatter_f(i1, d_re * w_re - d_im * w_im, ScatterOp::Set);
+        ctx.scatter_f(nm + i1, d_re * w_im + d_im * w_re, ScatterOp::Set);
+    }
+}
+
+impl TvmProgram for Fft {
+    fn num_task_types(&self) -> usize {
+        3
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_FFT => {
+                let (lo, n) = (args[0], args[1]);
+                if n <= 2 {
+                    if n == 2 {
+                        self.butterfly(ctx, lo, n, 0);
+                    }
+                } else {
+                    ctx.fork(T_BFR, vec![lo, n, 0, n / 2]);
+                    ctx.join(T_NEXT, vec![lo, n]);
+                }
+            }
+            T_BFR => {
+                let (lo, n, klo, khi) = (args[0], args[1], args[2], args[3]);
+                if khi - klo <= 2 {
+                    self.butterfly(ctx, lo, n, klo);
+                    if klo + 1 < khi {
+                        self.butterfly(ctx, lo, n, klo + 1);
+                    }
+                } else {
+                    let mid = (klo + khi) / 2;
+                    ctx.fork(T_BFR, vec![lo, n, klo, mid]);
+                    ctx.fork(T_BFR, vec![lo, n, mid, khi]);
+                }
+            }
+            T_NEXT => {
+                let (lo, n) = (args[0], args[1]);
+                let h = n / 2;
+                if h >= 2 {
+                    ctx.fork(T_FFT, vec![lo, h]);
+                    ctx.fork(T_FFT, vec![lo + h, h]);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::seq;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn interp_fft_matches_dft() {
+        let n = 64usize;
+        let nmax = 64;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let prog = Fft { nmax };
+        let mut heap = vec![0f32; 2 * nmax];
+        heap[..n].copy_from_slice(&x);
+        let mut m = Interp::new(&prog, 1 << 14, vec![0, n as i32]).with_heaps(
+            vec![],
+            heap,
+            vec![],
+            vec![],
+        );
+        m.run();
+        let got = extract(&m.heap_f, nmax, n);
+        let want = seq::dft(&x);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g.0 - w.0).abs() < 1e-2 && (g.1 - w.1).abs() < 1e-2,
+                "{g:?} vs {w:?}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Naive Fibonacci — the paper's runtime-overhead stress test (Fig 5).
+//!
+//! Python twin: `python/compile/apps/fib.py`. Task types:
+//! `1 = fib(n)` (forks fib(n-1), fib(n-2), joins sum2),
+//! `2 = sum2(c0, c1)` (emits res[c0] + res[c1]).
+
+use crate::coordinator::Workload;
+use crate::tvm::{TaskCtx, TvmProgram};
+
+/// Scalar form for the reference interpreter.
+pub struct Fib;
+
+/// Task-type ids (must match the manifest's `task_types` order).
+pub const T_FIB: usize = 1;
+pub const T_SUM2: usize = 2;
+
+impl TvmProgram for Fib {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_FIB => {
+                let n = args[0];
+                if n < 2 {
+                    ctx.emit(n);
+                } else {
+                    let c0 = ctx.fork(T_FIB, vec![n - 1]) as i32;
+                    let c1 = ctx.fork(T_FIB, vec![n - 2]) as i32;
+                    ctx.join(T_SUM2, vec![c0, c1]);
+                }
+            }
+            T_SUM2 => {
+                let v = ctx.res[args[0] as usize] + ctx.res[args[1] as usize];
+                ctx.emit(v);
+            }
+            _ => unreachable!("fib has 2 task types"),
+        }
+    }
+}
+
+/// Total TV entries the fork tree of fib(n) allocates (root + 2 per
+/// non-leaf), plus slack for the window padding.
+pub fn capacity_for(n: u32) -> usize {
+    // nodes(n) = 2 * fib(n+1) - 1; compute iteratively.
+    let (mut a, mut b) = (0u64, 1u64); // fib(0), fib(1)
+    for _ in 0..(n + 1) {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    (2 * a).max(64) as usize + 64
+}
+
+/// Host res gather: sum2 reads its two children's emitted values.
+pub fn gather(tid: usize, args: &[i32], res: &[i32], out: &mut [i32]) {
+    if tid == T_SUM2 {
+        out[0] = res[args[0] as usize];
+        out[1] = res[args[1] as usize];
+    }
+}
+
+/// Workload: compute fib(n).
+pub fn workload(n: u32) -> Workload {
+    Workload::new("fib", vec![n as i32], capacity_for(n)).with_gather(gather)
+}
+
+/// Sequential reference.
+pub fn fib_ref(n: u32) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn interp_matches_reference() {
+        for n in 0..=18 {
+            let mut m = Interp::new(&Fib, capacity_for(n), vec![n as i32]);
+            m.run();
+            assert_eq!(m.root_result() as u64, fib_ref(n), "fib({n})");
+        }
+    }
+
+    #[test]
+    fn capacity_bounds_peak() {
+        for n in [5, 10, 15, 20] {
+            let mut m = Interp::new(&Fib, capacity_for(n), vec![n as i32]);
+            let st = m.run();
+            assert!(st.peak_tv <= capacity_for(n), "peak {} n {}", st.peak_tv, n);
+        }
+    }
+}

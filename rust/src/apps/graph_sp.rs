@@ -1,0 +1,223 @@
+//! BFS and SSSP as TREES apps (Fig 7/8) — data-driven relaxation.
+//!
+//! Python twin: `python/compile/apps/_graph.py` (see its header for the
+//! algorithm and the const/heap layout). This module provides:
+//! * class selection + const/heap packing for a [`Csr`] instance;
+//! * the scalar [`TvmProgram`] used for differential testing.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Workload;
+use crate::graph::{Csr, INF};
+use crate::runtime::AppManifest;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+
+pub const T_VISIT: usize = 1;
+pub const T_EXPAND: usize = 2;
+
+/// Static layout of one size class (mirrors `class_dict` in python).
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    pub vmax: usize,
+    pub emax: usize,
+    pub weighted: bool,
+}
+
+impl Layout {
+    pub const RP: usize = 4;
+
+    pub fn col_off(&self) -> usize {
+        Self::RP + self.vmax + 1
+    }
+
+    pub fn w_off(&self) -> usize {
+        self.col_off() + self.emax
+    }
+
+    pub fn ci_len(&self) -> usize {
+        self.w_off() + if self.weighted { self.emax } else { 0 }
+    }
+
+    /// Pack a graph into the const_i image.
+    pub fn pack(&self, g: &Csr, src: usize) -> Vec<i32> {
+        let v = g.num_vertices();
+        let e = g.num_edges();
+        assert!(v <= self.vmax && e <= self.emax, "graph exceeds class");
+        let mut ci = vec![0i32; self.ci_len()];
+        ci[0] = v as i32;
+        ci[1] = e as i32;
+        ci[2] = src as i32;
+        for (i, &r) in g.row_ptr.iter().enumerate() {
+            ci[Self::RP + i] = r as i32;
+        }
+        // pad the rest of row_ptr so clamp-gathers read E
+        for i in g.row_ptr.len()..=self.vmax {
+            ci[Self::RP + i] = e as i32;
+        }
+        for (i, &c) in g.col.iter().enumerate() {
+            ci[self.col_off() + i] = c as i32;
+        }
+        if self.weighted {
+            for (i, &w) in g.weight.iter().enumerate() {
+                ci[self.w_off() + i] = w as i32;
+            }
+        }
+        ci
+    }
+
+    /// Initial heap: dist[VMAX] ++ claim[VMAX] (claims start at MAX so
+    /// any packed claim value wins the min-merge).
+    pub fn dist0(&self, src: usize) -> Vec<i32> {
+        let mut d = vec![INF; 2 * self.vmax];
+        d[src] = 0;
+        for c in d[self.vmax..].iter_mut() {
+            *c = i32::MAX;
+        }
+        d
+    }
+}
+
+/// Select the smallest size class fitting the graph, from the manifest.
+pub fn pick_class(app: &AppManifest, g: &Csr) -> Result<(String, Layout)> {
+    let weighted = app.name == "sssp";
+    let mut best: Option<(String, Layout, usize)> = None;
+    for (name, dict) in &app.classes {
+        let (Some(&vmax), Some(&emax)) = (dict.get("VMAX"), dict.get("EMAX")) else {
+            continue;
+        };
+        if g.num_vertices() <= vmax && g.num_edges() <= emax {
+            let lay = Layout { vmax, emax, weighted };
+            if best.as_ref().map_or(true, |(_, _, n)| vmax * emax < *n) {
+                best = Some((name.clone(), lay, vmax * emax));
+            }
+        }
+    }
+    best.map(|(n, l, _)| (n, l)).ok_or_else(|| {
+        anyhow!(
+            "no size class fits V={} E={} for app {}",
+            g.num_vertices(),
+            g.num_edges(),
+            app.name
+        )
+    })
+}
+
+/// Build the workload for a graph + source.
+pub fn workload(app: &AppManifest, g: &Csr, src: usize) -> Result<(Workload, Layout)> {
+    let (cls, lay) = pick_class(app, g)?;
+    let w = Workload::new(&app.name, vec![src as i32, 0], 0)
+        .with_heaps(lay.dist0(src), vec![])
+        .with_consts(lay.pack(g, src), vec![])
+        .with_class(&cls);
+    Ok((w, lay))
+}
+
+/// Scalar form for the reference interpreter. Holds its own copy of the
+/// layout so decoding matches the artifact exactly.
+pub struct GraphSp {
+    pub lay: Layout,
+}
+
+impl TvmProgram for GraphSp {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        let lay = self.lay;
+        match tid {
+            T_VISIT => {
+                let (u, d) = (args[0] as usize, args[1]);
+                if ctx.heap_i[u] != d {
+                    return; // stale
+                }
+                let rp0 = ctx.const_i[Layout::RP + u];
+                let rp1 = ctx.const_i[Layout::RP + u + 1];
+                if rp1 > rp0 {
+                    ctx.fork(T_EXPAND, vec![u as i32, rp0, rp1, d]);
+                }
+            }
+            T_EXPAND => {
+                let (u, lo, hi, d) =
+                    (args[0] as usize, args[1], args[2], args[3]);
+                if ctx.heap_i[u] != d {
+                    return; // stale subtree
+                }
+                if hi - lo > 2 {
+                    let mid = (lo + hi) / 2;
+                    ctx.fork(T_EXPAND, vec![u as i32, lo, mid, d]);
+                    ctx.fork(T_EXPAND, vec![u as i32, mid, hi, d]);
+                } else {
+                    for e in lo..hi {
+                        let v = ctx.const_i[lay.col_off() + e as usize] as usize;
+                        let w = if lay.weighted {
+                            ctx.const_i[lay.w_off() + e as usize]
+                        } else {
+                            1
+                        };
+                        let nd = d + w;
+                        if nd < ctx.heap_i[v] {
+                            ctx.scatter_i(v, nd, ScatterOp::Min);
+                            ctx.fork(T_VISIT, vec![v as i32, nd]);
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bfs_levels, dijkstra, gen};
+    use crate::tvm::Interp;
+
+    fn run_interp(g: &Csr, src: usize, weighted: bool) -> Vec<i32> {
+        let lay = Layout {
+            vmax: g.num_vertices().next_power_of_two().max(4),
+            emax: g.num_edges().next_power_of_two().max(4),
+            weighted,
+        };
+        let prog = GraphSp { lay };
+        let cap = 64 * (g.num_vertices() + 4 * g.num_edges()) + 64; // interp skips dedup: generous
+        let mut m = Interp::new(&prog, cap, vec![src as i32, 0]).with_heaps(
+            lay.dist0(src),
+            vec![],
+            lay.pack(g, src),
+            vec![],
+        );
+        m.run();
+        m.heap_i[..g.num_vertices()].to_vec()
+    }
+
+    #[test]
+    fn interp_bfs_matches_reference() {
+        for (g, src) in [
+            (gen::grid2d(8, 1, 1), 0usize),
+            (gen::uniform(120, 3, 1, 2), 5),
+            (gen::rmat(6, 4, 1, 3), 1),
+        ] {
+            assert_eq!(run_interp(&g, src, false), bfs_levels(&g, src));
+        }
+    }
+
+    #[test]
+    fn interp_sssp_matches_dijkstra() {
+        for (g, src) in [
+            (gen::grid2d(8, 9, 4), 0usize),
+            (gen::uniform(100, 4, 20, 5), 3),
+            (gen::rmat(6, 4, 7, 6), 0),
+        ] {
+            assert_eq!(run_interp(&g, src, true), dijkstra(&g, src));
+        }
+    }
+
+    #[test]
+    fn disconnected_vertices_stay_inf() {
+        let g = Csr::from_edges(5, &[(0, 1, 2), (1, 2, 2)]);
+        let d = run_interp(&g, 0, true);
+        assert_eq!(d, vec![0, 2, 4, INF, INF]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Blocked task-parallel matmul (§6.5). Python twin: apps/matmul.py.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Workload;
+use crate::runtime::AppManifest;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+
+pub const B0: usize = 2;
+pub const T_MM: usize = 1;
+
+pub fn pick_class(app: &AppManifest, n: usize) -> Result<(String, usize)> {
+    app.classes
+        .iter()
+        .filter_map(|(c, d)| d.get("NMAT").map(|&m| (c.clone(), m)))
+        .filter(|&(_, m)| m >= n)
+        .min_by_key(|&(_, m)| m)
+        .ok_or_else(|| anyhow!("no matmul class fits n={n}"))
+}
+
+/// Workload for C = A x B (n x n row-major, n a power of two).
+pub fn workload(app: &AppManifest, a: &[f32], b: &[f32], n: usize) -> Result<(Workload, usize)> {
+    assert!(n.is_power_of_two() && a.len() == n * n && b.len() == n * n);
+    let (cls, nmat) = pick_class(app, n)?;
+    let mut cf = vec![0f32; 2 * nmat * nmat];
+    for r in 0..n {
+        cf[r * n..(r + 1) * n].copy_from_slice(&a[r * n..(r + 1) * n]);
+    }
+    for r in 0..n {
+        cf[nmat * nmat + r * n..nmat * nmat + (r + 1) * n]
+            .copy_from_slice(&b[r * n..(r + 1) * n]);
+    }
+    Ok((Workload::new(&app.name, vec![0, 0, n as i32], 0)
+        .with_heaps(vec![], vec![0f32; nmat * nmat])
+        .with_consts(vec![n as i32], cf)
+        .with_class(&cls), nmat))
+}
+
+/// Reference O(n^3) multiply.
+pub fn matmul_ref(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Scalar program (const_f = A ++ B at NMAT^2 offset; heap_f = C).
+pub struct MatMul {
+    pub nmat: usize,
+}
+
+impl TvmProgram for MatMul {
+    fn num_task_types(&self) -> usize {
+        1
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        assert_eq!(tid, T_MM);
+        let n = ctx.const_i[0] as usize;
+        let (ro, co, size) = (args[0] as usize, args[1] as usize, args[2] as usize);
+        if size <= B0 {
+            for dr in 0..B0 {
+                for dc in 0..B0 {
+                    if ro + dr >= n || co + dc >= n {
+                        continue;
+                    }
+                    let mut acc = 0f32;
+                    for k in 0..n {
+                        acc += ctx.const_f[(ro + dr) * n + k]
+                            * ctx.const_f[self.nmat * self.nmat + k * n + co + dc];
+                    }
+                    ctx.scatter_f((ro + dr) * n + co + dc, acc, ScatterOp::Set);
+                }
+            }
+        } else {
+            let h = size / 2;
+            for (qr, qc) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                ctx.fork(
+                    T_MM,
+                    vec![(ro + qr * h) as i32, (co + qc * h) as i32, h as i32],
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interp_matmul_matches_ref() {
+        let n = 16usize;
+        let mut rng = Rng::new(8);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.f32()).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.f32()).collect();
+        let prog = MatMul { nmat: n };
+        let mut cf = a.clone();
+        cf.extend_from_slice(&b);
+        let mut m = Interp::new(&prog, 1 << 12, vec![0, 0, n as i32])
+            .with_heaps(vec![], vec![0f32; n * n], vec![n as i32], cf);
+        m.run();
+        let want = matmul_ref(&a, &b, n);
+        for (g, w) in m.heap_f.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The evaluation applications, each in two forms:
+//!
+//! 1. a [`crate::coordinator::Workload`] builder (problem instance →
+//!    initial task, heaps, capacity) used to drive the AOT artifacts;
+//! 2. a scalar [`crate::tvm::TvmProgram`] used by the reference
+//!    interpreter for differential testing and T1/T∞ accounting.
+//!
+//! The Python twin of each app (same task types, same arg layout) lives
+//! in `python/compile/apps/` — task-type ids must match the manifest.
+
+pub mod annealing;
+pub mod fft;
+pub mod fib;
+pub mod graph_sp;
+pub mod matmul;
+pub mod msort;
+pub mod nqueens;
+pub mod tree;
+pub mod tsp;
+
+pub use annealing::Annealing;
+pub use fft::Fft;
+pub use fib::Fib;
+pub use graph_sp::GraphSp;
+pub use matmul::MatMul;
+pub use msort::MSort;
+pub use nqueens::NQueens;
+pub use tree::Tree;
+pub use tsp::Tsp;

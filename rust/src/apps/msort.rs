@@ -1,0 +1,184 @@
+//! TREES mergesort (Fig 9) — Rust-side workload builder and scalar
+//! interpreter programs for both variants (naive serial-merge task and
+//! map-based merge). Python twin: `python/compile/apps/_msort.py`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Workload;
+use crate::runtime::AppManifest;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+
+pub const G: usize = 4; // leaf run length (matches python)
+pub const T_SORT: usize = 1;
+pub const T_MERGE: usize = 2;
+
+/// Pick the smallest class with NMAX >= n (padded to a power of two).
+pub fn pick_class(app: &AppManifest, n: usize) -> Result<(String, usize)> {
+    let need = n.next_power_of_two();
+    app.classes
+        .iter()
+        .filter_map(|(c, d)| d.get("NMAX").map(|&m| (c.clone(), m)))
+        .filter(|&(_, m)| m >= need)
+        .min_by_key(|&(_, m)| m)
+        .ok_or_else(|| anyhow!("no mergesort class fits n={n}"))
+}
+
+/// Build the workload (pads to a power of two with +inf).
+pub fn workload(app: &AppManifest, data: &[f32]) -> Result<(Workload, usize, usize)> {
+    let (cls, nmax) = pick_class(app, data.len())?;
+    let n2 = data.len().next_power_of_two().max(G);
+    let mut heap_f = vec![f32::INFINITY; 2 * nmax];
+    heap_f[..data.len()].copy_from_slice(data);
+    let w = Workload::new(&app.name, vec![0, n2 as i32], 0)
+        .with_heaps(vec![], heap_f)
+        .with_class(&cls);
+    Ok((w, nmax, n2))
+}
+
+/// Which buffer half holds the final sorted data.
+pub fn final_offset(nmax: usize, n2: usize) -> usize {
+    if n2 <= G {
+        return 0; // single leaf, sorted in place in A
+    }
+    let levels = (n2 / G).trailing_zeros() as usize; // top merge level L
+    (levels % 2) * nmax
+}
+
+fn level_offsets(size: i32, nmax: usize) -> (usize, usize) {
+    let lvl = ((size as usize / G).trailing_zeros()) as usize;
+    let src = ((lvl - 1) % 2) * nmax;
+    let dst = (lvl % 2) * nmax;
+    (src, dst)
+}
+
+/// Scalar program. `use_map` selects the merge flavour.
+pub struct MSort {
+    pub nmax: usize,
+    pub use_map: bool,
+}
+
+impl TvmProgram for MSort {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_SORT => {
+                let (lo, hi) = (args[0], args[1]);
+                if (hi - lo) as usize <= G {
+                    let mut vals: Vec<f32> = (lo..hi)
+                        .map(|i| ctx.heap_f[i as usize])
+                        .collect();
+                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    for (k, v) in vals.into_iter().enumerate() {
+                        ctx.scatter_f(lo as usize + k, v, ScatterOp::Set);
+                    }
+                } else {
+                    let mid = (lo + hi) / 2;
+                    ctx.fork(T_SORT, vec![lo, mid]);
+                    ctx.fork(T_SORT, vec![mid, hi]);
+                    ctx.join(T_MERGE, vec![lo, mid, hi]);
+                }
+            }
+            T_MERGE => {
+                let (lo, mid, hi) = (args[0], args[1], args[2]);
+                if self.use_map {
+                    ctx.map(vec![lo, mid, hi, 0]);
+                } else {
+                    self.serial_merge(ctx, lo, mid, hi);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn run_map(
+        &self,
+        args: &[i32],
+        _heap_i: &mut [i32],
+        heap_f: &mut [f32],
+        _ci: &[i32],
+        _cf: &[f32],
+    ) {
+        // merge one block (the artifact's kernel merges the whole level
+        // data-parallel; element results are identical)
+        let (lo, mid, hi) = (args[0], args[1], args[2]);
+        let (src, dst) = level_offsets(hi - lo, self.nmax);
+        let (mut ia, mut ib) = (lo as usize, mid as usize);
+        for j in 0..(hi - lo) as usize {
+            let take_a = ia < mid as usize
+                && (ib >= hi as usize || heap_f[src + ia] <= heap_f[src + ib]);
+            let v = if take_a {
+                let v = heap_f[src + ia];
+                ia += 1;
+                v
+            } else {
+                let v = heap_f[src + ib];
+                ib += 1;
+                v
+            };
+            heap_f[dst + lo as usize + j] = v;
+        }
+    }
+}
+
+impl MSort {
+    fn serial_merge(&self, ctx: &mut TaskCtx, lo: i32, mid: i32, hi: i32) {
+        let (src, dst) = level_offsets(hi - lo, self.nmax);
+        let (mut ia, mut ib) = (lo as usize, mid as usize);
+        for j in 0..(hi - lo) as usize {
+            let take_a = ia < mid as usize
+                && (ib >= hi as usize || ctx.heap_f[src + ia] <= ctx.heap_f[src + ib]);
+            let v = if take_a {
+                let v = ctx.heap_f[src + ia];
+                ia += 1;
+                v
+            } else {
+                let v = ctx.heap_f[src + ib];
+                ib += 1;
+                v
+            };
+            ctx.scatter_f(dst + lo as usize + j, v, ScatterOp::Set);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+    use crate::util::rng::Rng;
+
+    fn run(n: usize, use_map: bool) {
+        let nmax = n.next_power_of_two().max(G);
+        let mut rng = Rng::new(n as u64);
+        let data: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let n2 = n.next_power_of_two().max(G);
+        let mut heap = vec![f32::INFINITY; 2 * nmax];
+        heap[..n].copy_from_slice(&data);
+        let prog = MSort { nmax, use_map };
+        let mut m = Interp::new(&prog, 16 * nmax.max(16), vec![0, n2 as i32])
+            .with_heaps(vec![], heap, vec![], vec![]);
+        m.run();
+        let off = final_offset(nmax, n2);
+        let got = &m.heap_f[off..off + n];
+        let mut want = data.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, &want[..], "n={n} map={use_map}");
+    }
+
+    #[test]
+    fn interp_naive_sorts() {
+        for n in [1usize, 4, 5, 16, 100, 256] {
+            run(n, false);
+        }
+    }
+
+    #[test]
+    fn interp_map_sorts() {
+        for n in [4usize, 32, 128, 500] {
+            run(n, true);
+        }
+    }
+}

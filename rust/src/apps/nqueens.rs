@@ -1,0 +1,104 @@
+//! N-Queens solution counting (§6.5). Python twin: apps/nqueens.py.
+
+use crate::coordinator::Workload;
+use crate::tvm::{TaskCtx, TvmProgram};
+
+pub const NQ_MAX: usize = 12;
+pub const T_NQ: usize = 1;
+pub const T_SUMK: usize = 2;
+
+/// Known solution counts for testing.
+pub const SOLUTIONS: [u64; 13] =
+    [1, 1, 0, 0, 2, 10, 4, 40, 92, 352, 724, 2680, 14200];
+
+/// Host res gather: sumk reads the contiguous child run.
+pub fn gather(tid: usize, args: &[i32], res: &[i32], out: &mut [i32]) {
+    if tid == T_SUMK {
+        let (first, count) = (args[0] as usize, args[1] as usize);
+        for k in 0..NQ_MAX.min(out.len()) {
+            out[k] = if k < count { res[first + k] } else { 0 };
+        }
+    }
+}
+
+pub fn workload(n: usize) -> Workload {
+    assert!(n <= NQ_MAX);
+    // generous: the nq tree has < 4^n relevant nodes for n <= 10
+    let cap = match n {
+        0..=8 => 1 << 16,
+        _ => 1 << 21,
+    };
+    Workload::new("nqueens", vec![0, 0, 0, 0], cap)
+        .with_consts(vec![n as i32], vec![])
+        .with_gather(gather)
+}
+
+/// Scalar program.
+pub struct NQueens;
+
+impl TvmProgram for NQueens {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_NQ => {
+                let n = ctx.const_i[0];
+                let (row, cols, d1, d2) = (args[0], args[1], args[2], args[3]);
+                if row >= n {
+                    ctx.emit(1);
+                    return;
+                }
+                let attacked = cols | d1 | d2;
+                let mut first = -1i32;
+                let mut count = 0i32;
+                for c in 0..n {
+                    let bit = 1 << c;
+                    if attacked & bit == 0 {
+                        let s = ctx.fork(
+                            T_NQ,
+                            vec![
+                                row + 1,
+                                cols | bit,
+                                ((d1 | bit) << 1) & 0xFFF,
+                                (d2 | bit) >> 1,
+                            ],
+                        );
+                        if first < 0 {
+                            first = s as i32;
+                        }
+                        count += 1;
+                    }
+                }
+                if count > 0 {
+                    ctx.join(T_SUMK, vec![first, count]);
+                } else {
+                    ctx.emit(0); // dead end
+                }
+            }
+            T_SUMK => {
+                let (first, count) = (args[0] as usize, args[1] as usize);
+                let total: i32 = (0..count).map(|k| ctx.res[first + k]).sum();
+                ctx.emit(total);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn counts_match_known() {
+        for n in [1usize, 4, 5, 6, 8] {
+            let mut m = Interp::new(&NQueens, 1 << 18, vec![0, 0, 0, 0])
+                .with_heaps(vec![], vec![], vec![n as i32], vec![]);
+            m.run();
+            assert_eq!(m.root_result() as u64, SOLUTIONS[n], "n={n}");
+        }
+    }
+}

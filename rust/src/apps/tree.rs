@@ -1,0 +1,164 @@
+//! Postorder tree traversal — the paper's Fig 2-4 walkthrough example,
+//! with a subtree-size reduction for observability.
+//! Python twin: `python/compile/apps/tree.py`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Workload;
+use crate::runtime::AppManifest;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+use crate::util::rng::Rng;
+
+pub const T_POST: usize = 1;
+pub const T_VISIT: usize = 2;
+
+/// A binary tree as left/right child index arrays (-1 = absent).
+#[derive(Debug, Clone)]
+pub struct BinTree {
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+}
+
+impl BinTree {
+    pub fn n(&self) -> usize {
+        self.left.len()
+    }
+
+    /// Random binary tree over n nodes (node 0 is the root).
+    pub fn random(n: usize, seed: u64) -> BinTree {
+        assert!(n >= 1);
+        let mut rng = Rng::new(seed);
+        let mut left = vec![-1i32; n];
+        let mut right = vec![-1i32; n];
+        // attach node i (i>0) under a random earlier node with a free slot
+        for i in 1..n {
+            loop {
+                let p = rng.below(i as u64) as usize;
+                if left[p] < 0 {
+                    left[p] = i as i32;
+                    break;
+                }
+                if right[p] < 0 {
+                    right[p] = i as i32;
+                    break;
+                }
+            }
+        }
+        BinTree { left, right }
+    }
+}
+
+/// Pick the smallest class with NMAX >= n.
+pub fn pick_class(app: &AppManifest, n: usize) -> Result<(String, usize)> {
+    app.classes
+        .iter()
+        .filter_map(|(c, d)| d.get("NMAX").map(|&m| (c.clone(), m)))
+        .filter(|&(_, m)| m >= n)
+        .min_by_key(|&(_, m)| m)
+        .ok_or_else(|| anyhow!("no tree class fits n={n}"))
+}
+
+pub fn pack(t: &BinTree, nmax: usize) -> Vec<i32> {
+    let mut ci = vec![-1i32; 4 + 2 * nmax];
+    ci[0] = t.n() as i32;
+    for i in 0..t.n() {
+        ci[4 + i] = t.left[i];
+        ci[4 + nmax + i] = t.right[i];
+    }
+    ci
+}
+
+/// Host res gather: visitAfter reads its (up to two) child slots.
+pub fn gather(tid: usize, args: &[i32], res: &[i32], out: &mut [i32]) {
+    if tid == T_VISIT {
+        out[0] = if args[1] >= 0 { res[args[1] as usize] } else { 0 };
+        out[1] = if args[2] >= 0 { res[args[2] as usize] } else { 0 };
+    }
+}
+
+pub fn workload(app: &AppManifest, t: &BinTree) -> Result<Workload> {
+    let (cls, nmax) = pick_class(app, t.n())?;
+    Ok(Workload::new(&app.name, vec![0], 0)
+        .with_heaps(vec![-1; nmax], vec![])
+        .with_consts(pack(t, nmax), vec![])
+        .with_class(&cls)
+        .with_gather(gather))
+}
+
+/// Scalar program for the reference interpreter.
+pub struct Tree {
+    pub nmax: usize,
+}
+
+impl TvmProgram for Tree {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_POST => {
+                let node = args[0] as usize;
+                let left = ctx.const_i[4 + node];
+                let right = ctx.const_i[4 + self.nmax + node];
+                let mut kids = Vec::new();
+                if left >= 0 {
+                    kids.push(ctx.fork(T_POST, vec![left]) as i32);
+                }
+                if right >= 0 {
+                    kids.push(ctx.fork(T_POST, vec![right]) as i32);
+                }
+                if kids.is_empty() {
+                    ctx.emit(1);
+                } else {
+                    let c0 = kids[0];
+                    let c1 = kids.get(1).copied().unwrap_or(-1);
+                    ctx.join(T_VISIT, vec![node as i32, c0, c1]);
+                }
+            }
+            T_VISIT => {
+                let node = args[0] as usize;
+                let (c0, c1) = (args[1], args[2]);
+                let r0 = if c0 >= 0 { ctx.res[c0 as usize] } else { 0 };
+                let r1 = if c1 >= 0 { ctx.res[c1 as usize] } else { 0 };
+                ctx.scatter_i(node, ctx.seed, ScatterOp::Set);
+                ctx.emit(1 + r0 + r1);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn postorder_counts_and_orders() {
+        let t = BinTree::random(200, 42);
+        let prog = Tree { nmax: 256 };
+        let mut m = Interp::new(&prog, 1 << 12, vec![0]).with_heaps(
+            vec![-1; 256],
+            vec![],
+            pack(&t, 256),
+            vec![],
+        );
+        m.run();
+        assert_eq!(m.root_result(), 200, "subtree size of root = n");
+        // postorder: every parent stamped after its children
+        for p in 0..t.n() {
+            for &c in [t.left[p], t.right[p]].iter() {
+                if c >= 0 && t.left[c as usize] >= 0 {
+                    // c is internal: both have stamps
+                    if m.heap_i[p] >= 0 && m.heap_i[c as usize] >= 0 {
+                        assert!(
+                            m.heap_i[p] > m.heap_i[c as usize],
+                            "parent {p} must be visited after child {c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

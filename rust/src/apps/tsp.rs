@@ -1,0 +1,159 @@
+//! Exhaustive TSP with a shared branch-and-bound heap bound (§6.5).
+//! Python twin: apps/tsp.py.
+
+use crate::coordinator::Workload;
+use crate::tvm::{ScatterOp, TaskCtx, TvmProgram};
+use crate::util::rng::Rng;
+
+pub const TSP_MAX: usize = 10;
+pub const INF: i32 = 1 << 28;
+pub const T_TOUR: usize = 1;
+pub const T_MINK: usize = 2;
+pub const NC: usize = 10; // const matrix stride (matches the S class)
+
+/// Random symmetric distance matrix (n x n, entries 1..=99).
+pub fn random_dist(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut d = vec![0i32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let w = 1 + rng.below(99) as i32;
+            d[i * n + j] = w;
+            d[j * n + i] = w;
+        }
+    }
+    d
+}
+
+/// Pack const_i: [n, 0, 0, 0, dist (NC x NC, row-major)].
+pub fn pack(dist: &[i32], n: usize) -> Vec<i32> {
+    let mut ci = vec![0i32; 4 + NC * NC];
+    ci[0] = n as i32;
+    for i in 0..n {
+        for j in 0..n {
+            ci[4 + i * NC + j] = dist[i * n + j];
+        }
+    }
+    ci
+}
+
+/// Host res gather: mink reads the contiguous child run.
+pub fn gather(tid: usize, args: &[i32], res: &[i32], out: &mut [i32]) {
+    if tid == T_MINK {
+        let (first, count) = (args[0] as usize, args[1] as usize);
+        for k in 0..TSP_MAX.min(out.len()) {
+            out[k] = if k < count { res[first + k] } else { INF };
+        }
+    } else {
+        out.fill(INF);
+    }
+}
+
+pub fn workload(dist: &[i32], n: usize) -> Workload {
+    assert!(n <= TSP_MAX);
+    Workload::new("tsp", vec![0, 1, 0, 1], 1 << 16)
+        .with_heaps(vec![INF], vec![])
+        .with_consts(pack(dist, n), vec![])
+        .with_class("S")
+        .with_gather(gather)
+}
+
+/// Brute-force reference (n <= 10).
+pub fn tsp_ref(dist: &[i32], n: usize) -> i32 {
+    fn rec(dist: &[i32], n: usize, last: usize, visited: u32, cost: i32, best: &mut i32) {
+        if visited.count_ones() as usize == n {
+            *best = (*best).min(cost + dist[last * n]);
+            return;
+        }
+        for c in 1..n {
+            if visited & (1 << c) == 0 {
+                let nc = cost + dist[last * n + c];
+                if nc < *best {
+                    rec(dist, n, c, visited | (1 << c), nc, best);
+                }
+            }
+        }
+    }
+    let mut best = INF;
+    rec(dist, n, 0, 1, 0, &mut best);
+    best
+}
+
+/// Scalar program.
+pub struct Tsp;
+
+impl TvmProgram for Tsp {
+    fn num_task_types(&self) -> usize {
+        2
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        match tid {
+            T_TOUR => {
+                let n = ctx.const_i[0];
+                let (last, visited, cost, depth) =
+                    (args[0] as usize, args[1], args[2], args[3]);
+                let best = ctx.heap_i[0];
+                if cost >= best {
+                    ctx.emit(INF);
+                    return;
+                }
+                if depth >= n {
+                    let closed = cost + ctx.const_i[4 + last * NC];
+                    ctx.scatter_i(0, closed, ScatterOp::Min);
+                    ctx.emit(closed);
+                    return;
+                }
+                let mut first = -1i32;
+                let mut count = 0i32;
+                for c in 0..n as usize {
+                    let bit = 1 << c;
+                    let step = ctx.const_i[4 + last * NC + c];
+                    let ncost = cost + step;
+                    if visited & bit == 0 && ncost < best {
+                        let s = ctx.fork(
+                            T_TOUR,
+                            vec![c as i32, visited | bit, ncost, depth + 1],
+                        );
+                        if first < 0 {
+                            first = s as i32;
+                        }
+                        count += 1;
+                    }
+                }
+                if count > 0 {
+                    ctx.join(T_MINK, vec![first, count]);
+                } else {
+                    ctx.emit(INF);
+                }
+            }
+            T_MINK => {
+                let (first, count) = (args[0] as usize, args[1] as usize);
+                let best = (0..count).map(|k| ctx.res[first + k]).min().unwrap();
+                ctx.emit(best);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tvm::Interp;
+
+    #[test]
+    fn interp_tsp_matches_bruteforce() {
+        for (n, seed) in [(5usize, 1u64), (7, 2), (8, 3)] {
+            let dist = random_dist(n, seed);
+            let mut m = Interp::new(&Tsp, 1 << 18, vec![0, 1, 0, 1]).with_heaps(
+                vec![INF],
+                vec![],
+                pack(&dist, n),
+                vec![],
+            );
+            m.run();
+            assert_eq!(m.root_result(), tsp_ref(&dist, n), "n={n}");
+        }
+    }
+}

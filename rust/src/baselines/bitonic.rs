@@ -1,0 +1,55 @@
+//! Rust driver for the native bitonic sort baseline (Fig 9).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::client::lit;
+use crate::runtime::{AppManifest, Device, Executable};
+
+/// Compiled full-network bitonic sort for one size class.
+pub struct Bitonic {
+    exe: Executable,
+    pub nmax: usize,
+}
+
+impl Bitonic {
+    /// Smallest class with NMAX >= n.
+    pub fn new(dev: &Device, dir: &PathBuf, app: &AppManifest, n: usize) -> Result<Bitonic> {
+        let mut best: Option<(usize, String)> = None;
+        for (cls, dict) in &app.classes {
+            if let Some(&nmax) = dict.get("NMAX") {
+                if nmax >= n && best.as_ref().map_or(true, |(b, _)| nmax < *b) {
+                    best = Some((nmax, cls.clone()));
+                }
+            }
+        }
+        let (nmax, cls) =
+            best.ok_or_else(|| anyhow!("no bitonic class fits n={n}"))?;
+        let info = app
+            .artifacts
+            .iter()
+            .find(|a| a.cls == cls)
+            .ok_or_else(|| anyhow!("class {cls} missing artifact"))?;
+        let exe = dev
+            .compile_hlo_file(&dir.join(&info.file))
+            .with_context(|| info.file.clone())?;
+        Ok(Bitonic { exe, nmax })
+    }
+
+    pub fn compile_ns(&self) -> u64 {
+        self.exe.compile_ns
+    }
+
+    /// Sort ascending (pads with +inf).
+    pub fn sort(&self, xs: &[f32]) -> Result<Vec<f32>> {
+        let mut data = vec![f32::INFINITY; self.nmax];
+        data[..xs.len()].copy_from_slice(xs);
+        let scalars = [xs.len() as i32, 0, 0, 0, 0, 0, 0, 0];
+        let owned = [lit::f32s(&data), lit::i32s(&scalars)];
+        let inputs = [&owned[0], &owned[1]];
+        let parts = self.exe.run(&inputs)?;
+        let out = lit::to_f32s(&parts[0])?;
+        Ok(out[..xs.len()].to_vec())
+    }
+}

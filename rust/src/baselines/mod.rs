@@ -1,0 +1,10 @@
+//! Hand-coded comparators for the evaluation figures: sequential
+//! implementations (T1 measurement), LonestarGPU-style worklist BFS/SSSP
+//! drivers (Fig 7/8), and the native bitonic sort (Fig 9).
+
+pub mod bitonic;
+pub mod seq;
+pub mod worklist;
+
+pub use bitonic::Bitonic;
+pub use worklist::Worklist;

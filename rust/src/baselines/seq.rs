@@ -1,0 +1,97 @@
+//! Sequential baselines (the paper's 1-processor T1 reference points).
+
+/// Sequential fib — the T1 yardstick for Fig 5.
+pub fn fib(n: u32) -> u64 {
+    if n < 2 { n as u64 } else { fib(n - 1) + fib(n - 2) }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fib_values() {
+        assert_eq!(super::fib(10), 55);
+        assert_eq!(super::fib(20), 6765);
+    }
+}
+
+/// O(n^2) DFT — numeric oracle for the FFT apps. Returns (re, im).
+pub fn dft(x: &[f32]) -> Vec<(f32, f32)> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut re = 0f64;
+            let mut im = 0f64;
+            for (j, &v) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                re += v as f64 * ang.cos();
+                im += v as f64 * ang.sin();
+            }
+            (re as f32, im as f32)
+        })
+        .collect()
+}
+
+/// Sequential radix-2 DIF FFT over (re, im) pairs, in place, output in
+/// bit-reversed order — the same algorithm the TREES app parallelizes
+/// (the T1 yardstick for Fig 6).
+pub fn fft_dif(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    assert!(n.is_power_of_two());
+    let mut size = n;
+    while size >= 2 {
+        let half = size / 2;
+        for blk in (0..n).step_by(size) {
+            for k in 0..half {
+                let (i0, i1) = (blk + k, blk + k + half);
+                let ang = -2.0 * std::f32::consts::PI * k as f32 / size as f32;
+                let (w_re, w_im) = (ang.cos(), ang.sin());
+                let (d_re, d_im) = (re[i0] - re[i1], im[i0] - im[i1]);
+                re[i0] += re[i1];
+                im[i0] += im[i1];
+                re[i1] = d_re * w_re - d_im * w_im;
+                im[i1] = d_re * w_im + d_im * w_re;
+            }
+        }
+        size /= 2;
+    }
+}
+
+/// Undo the bit-reversal of `fft_dif` output.
+pub fn bitrev_permute(re: &[f32], im: &[f32]) -> Vec<(f32, f32)> {
+    let n = re.len();
+    let bits = n.trailing_zeros();
+    (0..n)
+        .map(|k| {
+            let r = if bits == 0 {
+                0
+            } else {
+                ((k as u32).reverse_bits() >> (32 - bits)) as usize
+            };
+            (re[r], im[r])
+        })
+        .collect()
+}
+
+/// Sequential mergesort (T1 yardstick for Fig 9).
+pub fn mergesort(xs: &[f32]) -> Vec<f32> {
+    if xs.len() <= 1 {
+        return xs.to_vec();
+    }
+    let mid = xs.len() / 2;
+    let a = mergesort(&xs[..mid]);
+    let b = mergesort(&xs[mid..]);
+    let mut out = Vec::with_capacity(xs.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}

@@ -1,0 +1,146 @@
+//! Measurement harness behind `cargo bench` (criterion is unavailable
+//! offline). Provides warmup, repetition, robust summaries, and
+//! paper-style table printing; every `benches/bench_*.rs` target uses
+//! this with `harness = false`.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_ns, Summary};
+
+/// One measured quantity.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Benchmark runner: warms up, then times `iters` runs of `f`.
+/// `f` returns an opaque value that is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Measurement { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Time a single run (for long end-to-end workloads).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_nanos() as f64)
+}
+
+/// Optimization barrier (std::hint::black_box wrapper, kept local so the
+/// call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A paper-style results table: column headers plus rows of cells.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", c, width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by bench targets.
+pub fn ratio(a: f64, b: f64) -> String {
+    format!("{:.2}x", a / b)
+}
+
+pub fn ms(ns: f64) -> String {
+    fmt_ns(ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(m.summary.n, 5);
+        assert!(m.summary.min > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["n", "time"]);
+        t.row(vec!["1".into(), "10 ms".into()]);
+        t.row(vec!["100".into(), "1.2 s".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

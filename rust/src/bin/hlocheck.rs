@@ -1,0 +1,51 @@
+//! Dev tool: compile an HLO-text file and execute it with zero-filled
+//! inputs matching the entry parameter shapes (smoke check for artifacts).
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).expect("usage: hlocheck <file.hlo.txt>");
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    // parse entry params from the text (crude but sufficient for dev)
+    let text = std::fs::read_to_string(&path)?;
+    let entry = text.split("ENTRY ").nth(1).unwrap();
+    let mut params: Vec<(usize, String)> = Vec::new();
+    for line in entry.lines() {
+        if let Some(ix) = line.find(" parameter(") {
+            let num: usize = line[ix + 11..].split(')').next().unwrap().parse()?;
+            let shape = line.split('=').nth(1).unwrap().trim().split(' ').next().unwrap().to_string();
+            params.push((num, shape));
+        }
+    }
+    params.sort();
+    let mut inputs = Vec::new();
+    for (_, shape) in &params {
+        // shape like s32[256]{0} or f32[256,4]{1,0} or s32[]
+        let ty = &shape[..3];
+        let dims_s = shape.split('[').nth(1).unwrap().split(']').next().unwrap();
+        let dims: Vec<usize> = if dims_s.is_empty() { vec![] }
+            else { dims_s.split(',').map(|d| d.parse().unwrap()).collect() };
+        let count: usize = dims.iter().product::<usize>().max(1);
+        let lit = match ty {
+            "s32" => {
+                let l = xla::Literal::vec1(&vec![0i32; count]);
+                if dims.len() > 1 { l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())? }
+                else if dims.is_empty() { xla::Literal::scalar(0i32) } else { l }
+            }
+            "f32" => {
+                let l = xla::Literal::vec1(&vec![0f32; count]);
+                if dims.len() > 1 { l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())? }
+                else if dims.is_empty() { xla::Literal::scalar(0f32) } else { l }
+            }
+            t => anyhow::bail!("unhandled type {t}"),
+        };
+        inputs.push(lit);
+    }
+    eprintln!("compiling {} with {} params", path, inputs.len());
+    let exe = client.compile(&comp)?;
+    let out = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+    let parts = out.to_tuple()?;
+    eprintln!("OK: {} outputs", parts.len());
+    Ok(())
+}

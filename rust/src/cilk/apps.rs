@@ -1,0 +1,145 @@
+//! Cilk-style applications for the CPU baseline columns.
+
+use super::pool::join;
+
+/// Parallel naive fib with a serial cutoff (grain size), the standard
+/// Cilk formulation used in the paper's Fig 5 baseline.
+pub fn fib(n: u32, cutoff: u32) -> u64 {
+    if n < 2 {
+        return n as u64;
+    }
+    if n <= cutoff {
+        return crate::baselines::seq::fib(n);
+    }
+    let (a, b) = join(|| fib(n - 1, cutoff), || fib(n - 2, cutoff));
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cilk::Pool;
+
+    #[test]
+    fn cilk_fib_matches_seq() {
+        let pool = Pool::new(4);
+        for n in [0u32, 1, 5, 20, 26] {
+            assert_eq!(
+                pool.run(|| fib(n, 10)),
+                crate::baselines::seq::fib(n),
+                "fib({n})"
+            );
+        }
+    }
+}
+
+/// Parallel DIF FFT: parallel butterfly halves + parallel recursion
+/// (the Cilk baseline for Fig 6).
+pub fn fft(re: &mut [f32], im: &mut [f32], cutoff: usize) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    if n < 2 {
+        return;
+    }
+    if n <= cutoff {
+        crate::baselines::seq::fft_dif(re, im);
+        return;
+    }
+    let half = n / 2;
+    {
+        let (re0, re1) = re.split_at_mut(half);
+        let (im0, im1) = im.split_at_mut(half);
+        // butterfly pass (splitting the k loop in two parallel halves)
+        let w = half / 2;
+        let (re0a, re0b) = re0.split_at_mut(w);
+        let (im0a, im0b) = im0.split_at_mut(w);
+        let (re1a, re1b) = re1.split_at_mut(w);
+        let (im1a, im1b) = im1.split_at_mut(w);
+        let bfly = |koff: usize,
+                    re0: &mut [f32],
+                    im0: &mut [f32],
+                    re1: &mut [f32],
+                    im1: &mut [f32]| {
+            for k in 0..re0.len() {
+                let ang =
+                    -2.0 * std::f32::consts::PI * (koff + k) as f32 / n as f32;
+                let (w_re, w_im) = (ang.cos(), ang.sin());
+                let (d_re, d_im) = (re0[k] - re1[k], im0[k] - im1[k]);
+                re0[k] += re1[k];
+                im0[k] += im1[k];
+                re1[k] = d_re * w_re - d_im * w_im;
+                im1[k] = d_re * w_im + d_im * w_re;
+            }
+        };
+        join(
+            || bfly(0, re0a, im0a, re1a, im1a),
+            || bfly(w, re0b, im0b, re1b, im1b),
+        );
+    }
+    let (re0, re1) = re.split_at_mut(half);
+    let (im0, im1) = im.split_at_mut(half);
+    join(|| fft(re0, im0, cutoff), || fft(re1, im1, cutoff));
+}
+
+/// Parallel mergesort (Cilk baseline for Fig 9; serial merge, as in the
+/// classic cilksort without parallel merge).
+pub fn mergesort(xs: &[f32], cutoff: usize) -> Vec<f32> {
+    if xs.len() <= cutoff {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        return v;
+    }
+    let mid = xs.len() / 2;
+    let (a, b) = join(
+        || mergesort(&xs[..mid], cutoff),
+        || mergesort(&xs[mid..], cutoff),
+    );
+    let mut out = Vec::with_capacity(xs.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+#[cfg(test)]
+mod more_tests {
+    use super::*;
+    use crate::cilk::Pool;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cilk_fft_matches_seq() {
+        let pool = Pool::new(4);
+        let n = 1024;
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let (mut re1, mut im1) = (x.clone(), vec![0f32; n]);
+        crate::baselines::seq::fft_dif(&mut re1, &mut im1);
+        let (mut re2, mut im2) = (x.clone(), vec![0f32; n]);
+        pool.run(|| fft(&mut re2, &mut im2, 64));
+        for k in 0..n {
+            assert!((re1[k] - re2[k]).abs() < 1e-2, "k={k}");
+            assert!((im1[k] - im2[k]).abs() < 1e-2, "k={k}");
+        }
+    }
+
+    #[test]
+    fn cilk_mergesort_sorts() {
+        let pool = Pool::new(4);
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.f32()).collect();
+        let got = pool.run(|| mergesort(&xs, 64));
+        let mut want = xs.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want);
+    }
+}

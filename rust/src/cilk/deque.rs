@@ -1,0 +1,227 @@
+//! Chase–Lev work-stealing deque (Chase & Lev, SPAA'05), hand-rolled
+//! since no deque crate is vendored.
+//!
+//! The owner pushes/pops at the *bottom*; thieves steal from the *top* —
+//! exactly the Cilk-5 discipline the paper describes (§2.2): the owner
+//! pays no synchronization except on the size-one race, so the runtime
+//! overhead lands on thieves (the critical path), not on the work.
+//!
+//! Orderings are deliberately conservative (SeqCst on the contended
+//! transitions); this is a baseline runtime, not a memory-model stunt.
+
+use std::sync::atomic::{AtomicIsize, AtomicUsize, Ordering::*};
+use std::sync::Mutex;
+
+/// A fixed-capacity Chase–Lev deque of `usize` payloads (job handles).
+///
+/// Capacity is fixed (no growth) to keep the unsafe surface minimal; the
+/// pool sizes it for the deepest recursion it will see and `push`
+/// reports overflow so callers can fall back to inline execution.
+pub struct ChaseLev {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: Vec<AtomicUsize>,
+    mask: isize,
+}
+
+/// Result of a steal attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal {
+    Empty,
+    Retry,
+    Success(usize),
+}
+
+impl ChaseLev {
+    /// `cap` must be a power of two.
+    pub fn new(cap: usize) -> ChaseLev {
+        assert!(cap.is_power_of_two());
+        ChaseLev {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: (0..cap).map(|_| AtomicUsize::new(0)).collect(),
+            mask: cap as isize - 1,
+        }
+    }
+
+    /// Owner-side push at the bottom. Returns false when full.
+    pub fn push(&self, v: usize) -> bool {
+        let b = self.bottom.load(Relaxed);
+        let t = self.top.load(Acquire);
+        if b - t >= self.buf.len() as isize {
+            return false; // full
+        }
+        self.buf[(b & self.mask) as usize].store(v, Relaxed);
+        self.bottom.store(b + 1, SeqCst);
+        true
+    }
+
+    /// Owner-side pop from the bottom (LIFO — work-first depth-first).
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Relaxed) - 1;
+        self.bottom.store(b, SeqCst);
+        let t = self.top.load(SeqCst);
+        if t > b {
+            // empty: restore
+            self.bottom.store(b + 1, SeqCst);
+            return None;
+        }
+        let v = self.buf[(b & self.mask) as usize].load(Relaxed);
+        if t < b {
+            return Some(v); // no race possible
+        }
+        // size-one race against thieves: arbitrate through `top`
+        let won = self
+            .top
+            .compare_exchange(t, t + 1, SeqCst, SeqCst)
+            .is_ok();
+        self.bottom.store(b + 1, SeqCst);
+        if won {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Thief-side steal from the top (FIFO — steals the oldest, largest
+    /// granularity task, per Cilk).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(SeqCst);
+        let b = self.bottom.load(SeqCst);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let v = self.buf[(t & self.mask) as usize].load(Relaxed);
+        match self.top.compare_exchange(t, t + 1, SeqCst, SeqCst) {
+            Ok(_) => Steal::Success(v),
+            Err(_) => Steal::Retry,
+        }
+    }
+
+    /// Approximate occupancy (monitoring only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Relaxed);
+        let t = self.top.load(Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A simple lock-based MPMC injector queue for external submissions.
+pub struct Injector {
+    q: Mutex<std::collections::VecDeque<usize>>,
+}
+
+impl Injector {
+    pub fn new() -> Injector {
+        Injector { q: Mutex::new(std::collections::VecDeque::new()) }
+    }
+
+    pub fn push(&self, v: usize) {
+        self.q.lock().unwrap().push_back(v);
+    }
+
+    pub fn pop(&self) -> Option<usize> {
+        self.q.lock().unwrap().pop_front()
+    }
+}
+
+impl Default for Injector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_for_owner() {
+        let d = ChaseLev::new(8);
+        assert!(d.push(1));
+        assert!(d.push(2));
+        assert!(d.push(3));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let d = ChaseLev::new(8);
+        d.push(1);
+        d.push(2);
+        assert_eq!(d.steal(), Steal::Success(1));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn reports_full() {
+        let d = ChaseLev::new(4);
+        for i in 0..4 {
+            assert!(d.push(i));
+        }
+        assert!(!d.push(99));
+        assert_eq!(d.pop(), Some(3));
+        assert!(d.push(99));
+    }
+
+    #[test]
+    fn stealing_stress_no_loss_no_dup() {
+        // One owner pushes N items and pops; 3 thieves steal
+        // concurrently. Every item must be seen exactly once.
+        const N: usize = 20_000;
+        let d = Arc::new(ChaseLev::new(1 << 15));
+        let seen = Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let done = Arc::new(AtomicUsize::new(0));
+
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let d = d.clone();
+            let seen = seen.clone();
+            let done = done.clone();
+            handles.push(std::thread::spawn(move || loop {
+                match d.steal() {
+                    Steal::Success(v) => {
+                        seen[v].fetch_add(1, SeqCst);
+                    }
+                    Steal::Retry => std::hint::spin_loop(),
+                    Steal::Empty => {
+                        if done.load(SeqCst) == 1 {
+                            return;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+
+        let mut popped = 0usize;
+        for i in 0..N {
+            while !d.push(i + 1) {
+                if let Some(v) = d.pop() {
+                    seen[v - 1].fetch_add(1, SeqCst);
+                    popped += 1;
+                }
+            }
+        }
+        while let Some(v) = d.pop() {
+            seen[v - 1].fetch_add(1, SeqCst);
+            popped += 1;
+        }
+        done.store(1, SeqCst);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: usize = seen.iter().map(|c| c.load(SeqCst)).sum();
+        assert_eq!(total, N, "popped {popped} locally");
+        assert!(seen.iter().all(|c| c.load(SeqCst) == 1), "duplicate steal");
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch work-first work-stealing runtime — the paper's Cilk-5
+//! baseline for Fig 5 and Fig 6.
+//!
+//! [`deque`] implements the Chase–Lev deque; [`pool`] the worker pool
+//! and the `join` primitive; [`apps`] the cilk-style versions of the
+//! benchmark applications (fib, fft, mergesort, matmul).
+
+pub mod apps;
+pub mod deque;
+pub mod pool;
+
+pub use pool::{join, Pool};

@@ -1,0 +1,309 @@
+//! Work-first work-stealing thread pool with Cilk-style `join` —
+//! the paper's CPU baseline (Fig 5/6), built from scratch on the
+//! Chase–Lev deque.
+//!
+//! Scheduling discipline (Cilk-5, §2.2 of the paper):
+//! * a worker pushes the second half of a `join` to the *bottom* of its
+//!   own deque and dives into the first half (work-first, depth-first);
+//! * on return it pops from the bottom — synchronization-free unless a
+//!   thief took the job (the size-one race);
+//! * idle workers steal from the *top* of a random victim — the oldest,
+//!   biggest task — bounding steal count by O(P·T∞).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::*};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::deque::{ChaseLev, Injector, Steal};
+use crate::util::rng::Rng;
+
+/// Type-erased job handle: pointer to a header whose first field is the
+/// execute function. Valid until `done` is set by the executor; `join`
+/// and `run` keep the referent alive on their stack until then.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct JobRef(usize);
+
+struct JobHeader {
+    exec: unsafe fn(*mut JobHeader),
+}
+
+unsafe fn execute(j: JobRef) {
+    let hdr = j.0 as *mut JobHeader;
+    unsafe { ((*hdr).exec)(hdr) };
+}
+
+/// A stack-allocated job wrapping `FnOnce() -> R`.
+struct StackJob<F, R> {
+    header: JobHeader,
+    func: Mutex<Option<F>>,
+    result: Mutex<Option<R>>,
+    done: AtomicBool,
+}
+
+impl<F: FnOnce() -> R + Send, R: Send> StackJob<F, R> {
+    fn new(f: F) -> Self {
+        StackJob {
+            header: JobHeader { exec: Self::exec },
+            func: Mutex::new(Some(f)),
+            result: Mutex::new(None),
+            done: AtomicBool::new(false),
+        }
+    }
+
+    fn as_ref(&self) -> JobRef {
+        JobRef(&self.header as *const JobHeader as usize)
+    }
+
+    unsafe fn exec(hdr: *mut JobHeader) {
+        let this = unsafe { &*(hdr as *const StackJob<F, R>) };
+        let f = this.func.lock().unwrap().take().expect("job run twice");
+        let r = f();
+        *this.result.lock().unwrap() = Some(r);
+        this.done.store(true, Release);
+    }
+
+    fn take_result(&self) -> R {
+        self.result.lock().unwrap().take().expect("job not finished")
+    }
+}
+
+struct Shared {
+    deques: Vec<ChaseLev>,
+    injector: Injector,
+    shutdown: AtomicBool,
+    /// Count of jobs visible in injector (wakeup hint).
+    pending: AtomicUsize,
+    sleep: Mutex<()>,
+    wake: Condvar,
+}
+
+thread_local! {
+    /// Worker identity: (pool shared ptr, worker index).
+    static WORKER: std::cell::Cell<(usize, usize)> = const { std::cell::Cell::new((0, usize::MAX)) };
+}
+
+/// The work-stealing pool.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub workers: usize,
+}
+
+impl Pool {
+    /// Spawn `workers` threads (the paper's baseline uses 4).
+    pub fn new(workers: usize) -> Pool {
+        assert!(workers >= 1);
+        let shared = Arc::new(Shared {
+            deques: (0..workers).map(|_| ChaseLev::new(1 << 13)).collect(),
+            injector: Injector::new(),
+            shutdown: AtomicBool::new(false),
+            pending: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for idx in 0..workers {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("cilk-worker-{idx}"))
+                    .spawn(move || worker_loop(sh, idx))
+                    .expect("spawn worker"),
+            );
+        }
+        Pool { shared, handles, workers }
+    }
+
+    /// Run `f` on the pool and block until it completes.
+    pub fn run<F, R>(&self, f: F) -> R
+    where
+        F: FnOnce() -> R + Send,
+        R: Send,
+    {
+        let job = StackJob::new(f);
+        self.shared.injector.push(job.as_ref().0);
+        self.shared.pending.fetch_add(1, SeqCst);
+        self.shared.wake.notify_all();
+        // Block (this is the external thread; paper's CPU is idle during
+        // Phase 2 as well). Spin-then-yield keeps it simple.
+        while !job.done.load(Acquire) {
+            std::thread::yield_now();
+        }
+        job.take_result()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, SeqCst);
+        self.shared.wake.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set((Arc::as_ptr(&sh) as usize, idx)));
+    let mut rng = Rng::new(0xC11C + idx as u64);
+    let mut idle_spins = 0u32;
+    loop {
+        if sh.shutdown.load(Relaxed) {
+            return;
+        }
+        if let Some(j) = find_work(&sh, idx, &mut rng) {
+            idle_spins = 0;
+            unsafe { execute(JobRef(j)) };
+        } else {
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                let guard = sh.sleep.lock().unwrap();
+                let _g = sh
+                    .wake
+                    .wait_timeout(guard, std::time::Duration::from_micros(100))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+fn find_work(sh: &Shared, idx: usize, rng: &mut Rng) -> Option<usize> {
+    if let Some(j) = sh.deques[idx].pop() {
+        return Some(j);
+    }
+    if let Some(j) = sh.injector.pop() {
+        sh.pending.fetch_sub(1, SeqCst);
+        return Some(j);
+    }
+    // random victim order, a few rounds
+    let n = sh.deques.len();
+    for _ in 0..2 * n {
+        let v = rng.below(n as u64) as usize;
+        if v == idx {
+            continue;
+        }
+        match sh.deques[v].steal() {
+            Steal::Success(j) => return Some(j),
+            Steal::Retry | Steal::Empty => {}
+        }
+    }
+    None
+}
+
+/// Cilk-style fork/join: evaluate `a` and `b`, potentially in parallel.
+///
+/// Must run inside [`Pool::run`]; when called from a non-worker thread
+/// the two halves are simply evaluated sequentially (degenerate but
+/// correct).
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    let (pool_ptr, idx) = WORKER.with(|w| w.get());
+    if idx == usize::MAX {
+        return (a(), b());
+    }
+    let sh = unsafe { &*(pool_ptr as *const Shared) };
+
+    let job_b = StackJob::new(b);
+    if !sh.deques[idx].push(job_b.as_ref().0) {
+        // deque full: serialize
+        let ra = a();
+        let f = job_b.func.lock().unwrap().take().unwrap();
+        return (ra, f());
+    }
+
+    let ra = a();
+
+    // Fast path: our push is still at the bottom.
+    loop {
+        if let Some(j) = sh.deques[idx].pop() {
+            if JobRef(j) == job_b.as_ref() {
+                // not stolen: run inline (the common, sync-free case)
+                unsafe { execute(JobRef(j)) };
+                return (ra, job_b.take_result());
+            } else {
+                // an older sibling from an enclosing join: run it here
+                unsafe { execute(JobRef(j)) };
+                continue;
+            }
+        }
+        break;
+    }
+    // b was stolen: help out until the thief finishes it.
+    let mut rng = Rng::new(0x7EEF ^ idx as u64);
+    while !job_b.done.load(Acquire) {
+        if let Some(j) = find_work(sh, idx, &mut rng) {
+            unsafe { execute(JobRef(j)) };
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+    (ra, job_b.take_result())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fib(n: u64) -> u64 {
+        if n < 2 {
+            return n;
+        }
+        if n < 12 {
+            return fib(n - 1) + fib(n - 2); // serial cutoff in tests
+        }
+        let (a, b) = join(|| fib(n - 1), || fib(n - 2));
+        a + b
+    }
+
+    #[test]
+    fn join_outside_pool_is_sequential() {
+        let (a, b) = join(|| 1 + 1, || 2 + 2);
+        assert_eq!((a, b), (2, 4));
+    }
+
+    #[test]
+    fn pool_fib_correct() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.run(|| fib(24)), 46368);
+    }
+
+    #[test]
+    fn pool_nested_joins() {
+        let pool = Pool::new(3);
+        let total: u64 = pool.run(|| {
+            let (a, (b, c)) = join(
+                || (1..=1000u64).sum::<u64>(),
+                || join(|| (1..=100u64).sum::<u64>(), || (1..=10u64).sum::<u64>()),
+            );
+            a + b + c
+        });
+        assert_eq!(total, 500500 + 5050 + 55);
+    }
+
+    #[test]
+    fn pool_survives_many_roots() {
+        let pool = Pool::new(2);
+        for i in 0..50u64 {
+            assert_eq!(pool.run(|| fib(15 + (i % 3))), fib(15 + (i % 3)));
+        }
+    }
+
+    #[test]
+    fn parallel_speedup_is_plausible() {
+        // Not a strict perf assertion — just check all workers
+        // participate (fib(27) has plenty of parallelism).
+        let pool = Pool::new(4);
+        let t0 = std::time::Instant::now();
+        let r = pool.run(|| fib(27));
+        let t_par = t0.elapsed();
+        assert_eq!(r, 196418);
+        // loose sanity bound: should finish well under a second
+        assert!(t_par.as_secs_f64() < 1.0, "{t_par:?}");
+    }
+}

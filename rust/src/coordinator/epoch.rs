@@ -1,0 +1,453 @@
+//! The epoch loop: Phase 1 (setup) → Phase 2 (bulk launch) → Phase 3
+//! (TMS update), repeated until the join/NDRange stacks empty
+//! (paper §4.3, §5.2).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::client::lit;
+use crate::runtime::{AppManifest, ArtifactInfo, Device, Executable};
+
+use super::state::TvState;
+use super::workload::Workload;
+
+/// Tunables for the coordinator.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Safety valve on runaway programs.
+    pub max_epochs: u64,
+    /// Force a single window bucket (0 = automatic smallest-fit).
+    pub force_bucket: usize,
+    /// Record a per-epoch trace (active counts, forks) for analysis.
+    pub trace: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { max_epochs: 10_000_000, force_bucket: 0, trace: false }
+    }
+}
+
+/// Execution statistics for one run — the observable version of the
+/// paper's performance model: `epochs` ≈ T∞, `work` ≈ T1, and the
+/// launch/transfer overheads are V∞.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub epochs: u64,
+    pub launches: u64,
+    pub map_launches: u64,
+    /// Σ live lanes over all launches (work T1, in tasks).
+    pub work: u64,
+    pub forks: u64,
+    pub emits: u64,
+    pub peak_tv: usize,
+    /// Wall time inside `Executable::run` (Phase 2).
+    pub exec_ns: u64,
+    /// Wall time marshalling literals (host part of V∞).
+    pub marshal_ns: u64,
+    /// Wall time in Phase 1+3 logic.
+    pub host_ns: u64,
+    /// Whole-run wall time.
+    pub total_ns: u64,
+    /// Compile time for the artifacts used (init latency analogue).
+    pub compile_ns: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Per-epoch trace when enabled: (cen, range_len, live, forked).
+    pub trace: Vec<(i32, u32, u32, u32)>,
+}
+
+/// One compiled window bucket.
+struct Bucket {
+    info: ArtifactInfo,
+    exe: Executable,
+}
+
+/// The TREES coordinator for one (app, size-class) pair.
+pub struct Coordinator<'d> {
+    dev: &'d Device,
+    pub app: AppManifest,
+    buckets: Vec<Bucket>,
+    map_bucket: Option<Bucket>,
+    cfg: CoordinatorConfig,
+    /// Capacity N of the selected size class.
+    pub n: usize,
+    cls: String,
+}
+
+impl<'d> Coordinator<'d> {
+    /// Compile (and cache) the artifacts of the smallest size class that
+    /// fits `capacity`.
+    pub fn new(
+        dev: &'d Device,
+        artifacts_dir: &PathBuf,
+        app: &AppManifest,
+        capacity: usize,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator<'d>> {
+        let infos = app.artifacts_for_capacity(capacity)?;
+        Self::from_infos(dev, artifacts_dir, app, infos, cfg)
+    }
+
+    /// Compile the artifacts of a named size class (graph workloads pick
+    /// the class by layout, not capacity).
+    pub fn new_for_class(
+        dev: &'d Device,
+        artifacts_dir: &PathBuf,
+        app: &AppManifest,
+        cls: &str,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator<'d>> {
+        let infos = app.artifacts_for_class(cls)?;
+        Self::from_infos(dev, artifacts_dir, app, infos, cfg)
+    }
+
+    /// Pick by workload: class override if present, else capacity.
+    pub fn for_workload(
+        dev: &'d Device,
+        artifacts_dir: &PathBuf,
+        app: &AppManifest,
+        w: &Workload,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator<'d>> {
+        match &w.cls {
+            Some(cls) => Self::new_for_class(dev, artifacts_dir, app, cls, cfg),
+            None => Self::new(dev, artifacts_dir, app, w.capacity, cfg),
+        }
+    }
+
+    fn from_infos(
+        dev: &'d Device,
+        artifacts_dir: &PathBuf,
+        app: &AppManifest,
+        infos: Vec<&ArtifactInfo>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator<'d>> {
+        let cls = infos[0].cls.clone();
+        let n = infos[0].n;
+        let mut buckets = Vec::new();
+        for info in infos {
+            if cfg.force_bucket != 0 && info.w != cfg.force_bucket {
+                continue;
+            }
+            let exe = dev
+                .compile_hlo_file(&artifacts_dir.join(&info.file))
+                .with_context(|| format!("artifact {}", info.file))?;
+            buckets.push(Bucket { info: info.clone(), exe });
+        }
+        if buckets.is_empty() {
+            bail!("no artifact for bucket {} (app {})", cfg.force_bucket, app.name);
+        }
+        let map_bucket = match app.map_artifact_for_class(&cls) {
+            Some(info) => Some(Bucket {
+                info: info.clone(),
+                exe: dev
+                    .compile_hlo_file(&artifacts_dir.join(&info.file))
+                    .with_context(|| format!("map artifact {}", info.file))?,
+            }),
+            None => None,
+        };
+        Ok(Coordinator { dev, app: app.clone(), buckets, map_bucket, cfg, n, cls })
+    }
+
+    /// Size class in use.
+    pub fn class_name(&self) -> &str {
+        &self.cls
+    }
+
+    /// Total compile time of the loaded executables.
+    pub fn compile_ns(&self) -> u64 {
+        self.buckets.iter().map(|b| b.exe.compile_ns).sum::<u64>()
+            + self.map_bucket.as_ref().map_or(0, |b| b.exe.compile_ns)
+    }
+
+    /// PJRT client init time (shared across coordinators).
+    pub fn init_ns(&self) -> u64 {
+        self.dev.init_ns
+    }
+
+    /// Build the initial machine state for a workload.
+    pub fn init_state(&self, w: &Workload) -> TvState {
+        let pad = |mut v: Vec<i32>, n: usize| -> Vec<i32> {
+            v.resize(n.max(1), 0);
+            v
+        };
+        let padf = |mut v: Vec<f32>, n: usize| -> Vec<f32> {
+            v.resize(n.max(1), 0.0);
+            v
+        };
+        let info = &self.buckets[0].info;
+        TvState::new(
+            self.n,
+            self.app.a,
+            self.app.t,
+            &w.init_args,
+            pad(w.heap_i.clone(), info.hi),
+            padf(w.heap_f.clone(), info.hf),
+            pad(w.const_i.clone(), info.ci),
+            padf(w.const_f.clone(), info.cf),
+        )
+    }
+
+    /// Pick the smallest bucket covering `len` (else the largest).
+    fn bucket_for(&self, len: usize) -> &Bucket {
+        self.buckets
+            .iter()
+            .find(|b| b.info.w >= len)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    /// Run a workload to completion.
+    pub fn run(&self, w: &Workload) -> Result<(TvState, RunStats)> {
+        let mut st = self.init_state(w);
+        let stats = self.run_state(&mut st, w.gather)?;
+        Ok((st, stats))
+    }
+
+    /// Drive an existing state to halt (exposed for differential tests).
+    pub fn run_state(
+        &self,
+        st: &mut TvState,
+        gather: Option<super::workload::GatherFn>,
+    ) -> Result<RunStats> {
+        let t_run = Instant::now();
+        let mut stats = RunStats::default();
+        stats.compile_ns = self.compile_ns();
+        let mut map_queue: Vec<i32> = Vec::new();
+        // snapshot cumulative executable stats so this run reports deltas
+        let exec0: Vec<_> = self.buckets.iter().map(|b| b.exe.stats()).collect();
+        // Read-only inputs never change: build their literals once.
+        let lit_const_i = lit::i32s(&st.const_i);
+        let lit_const_f = lit::f32s(&st.const_f);
+
+        while let Some(cen) = st.join_stack.pop() {
+            let (lo, hi) = st.ndrange_stack.pop().expect("stack parity violated");
+            if stats.epochs >= self.cfg.max_epochs {
+                bail!("epoch limit {} exceeded", self.cfg.max_epochs);
+            }
+            // ---- Phase 1: epoch setup (paper §5.2.2) ----
+            let old_next_free = st.next_free;
+            let mut join_scheduled = false;
+            let mut map_scheduled = false;
+            let mut epoch_live = 0u32;
+            let mut epoch_forked = 0u32;
+
+            // Tile the NDRange across window launches (same CEN).
+            let mut tlo = lo;
+            while tlo < hi {
+                let b = self.bucket_for(hi - tlo);
+                let w = b.info.w;
+                let active = (hi - tlo).min(w);
+
+                // ---- Phase 2: marshal + bulk launch ----
+                let t0 = Instant::now();
+                let a = self.app.a;
+                let g = self.app.g.max(1);
+                let t_types = self.app.t as i32;
+                let mut win_code = vec![0i32; w];
+                win_code[..active].copy_from_slice(&st.code[tlo..tlo + active]);
+                let mut win_args = vec![0i32; w * a];
+                win_args[..active * a]
+                    .copy_from_slice(&st.args[tlo * a..(tlo + active) * a]);
+                // host-side res pre-gather (res never crosses to device)
+                let mut res_win = vec![0i32; w * g];
+                if let Some(gf) = gather {
+                    for i in 0..active {
+                        let code = win_code[i];
+                        if code <= 0 {
+                            continue;
+                        }
+                        let tid = (code - (code - 1) / t_types * t_types) as usize;
+                        gf(
+                            tid,
+                            &win_args[i * a..(i + 1) * a],
+                            &st.res,
+                            &mut res_win[i * g..(i + 1) * g],
+                        );
+                    }
+                }
+                let scalars = [
+                    cen,
+                    tlo as i32,
+                    active as i32,
+                    st.next_free as i32,
+                    (stats.epochs as i32).wrapping_mul(0x9E37),
+                    0,
+                    0,
+                    0,
+                ];
+                let owned = [
+                    lit::i32s(&win_code),
+                    lit::i32s_2d(&win_args, w, a)?,
+                    lit::i32s_2d(&res_win, w, g)?,
+                    lit::i32s(&st.heap_i),
+                    lit::f32s(&st.heap_f),
+                    lit::i32s(&scalars),
+                ];
+                let inputs = [
+                    &owned[0], &owned[1], &owned[2], &owned[3], &owned[4],
+                    &lit_const_i, &lit_const_f, &owned[5],
+                ];
+                stats.marshal_ns += t0.elapsed().as_nanos() as u64;
+
+                let parts = b.exe.run(&inputs)?;
+
+                let t1 = Instant::now();
+                let has_map = self.app.km > 0;
+                let expect = 9 + has_map as usize;
+                if parts.len() != expect {
+                    bail!(
+                        "artifact {} returned {} outputs, expected {expect}",
+                        b.info.file,
+                        parts.len()
+                    );
+                }
+                let mut it = parts.into_iter();
+                let mut wc2 = Vec::new();
+                let mut wa2 = Vec::new();
+                let mut emit_val = Vec::new();
+                let mut emit_msk = Vec::new();
+                lit::read_i32s(&it.next().unwrap(), &mut wc2)?;
+                lit::read_i32s(&it.next().unwrap(), &mut wa2)?;
+                lit::read_i32s(&it.next().unwrap(), &mut emit_val)?;
+                lit::read_i32s(&it.next().unwrap(), &mut emit_msk)?;
+                lit::read_i32s(&it.next().unwrap(), &mut st.heap_i)?;
+                lit::read_f32s(&it.next().unwrap(), &mut st.heap_f)?;
+                let mut fork_code = Vec::new();
+                let mut fork_args = Vec::new();
+                lit::read_i32s(&it.next().unwrap(), &mut fork_code)?;
+                lit::read_i32s(&it.next().unwrap(), &mut fork_args)?;
+                let map_out = if has_map {
+                    Some(lit::to_i32s(&it.next().unwrap())?)
+                } else {
+                    None
+                };
+                let flags = lit::to_i32s(&it.next().unwrap())?;
+                let (n_forked, j_any, m_any, n_mapped, n_emit, n_live) = (
+                    flags[0] as usize,
+                    flags[1] != 0,
+                    flags[2] != 0,
+                    flags[3] as usize,
+                    flags[4] as u64,
+                    flags[5] as u64,
+                );
+
+                // ---- Phase 3a: write back window + splice forks ----
+                st.code[tlo..tlo + active].copy_from_slice(&wc2[..active]);
+                st.args[tlo * a..(tlo + active) * a]
+                    .copy_from_slice(&wa2[..active * a]);
+                for i in 0..active {
+                    if emit_msk[i] != 0 {
+                        st.res[tlo + i] = emit_val[i];
+                    }
+                }
+                if n_forked > 0 {
+                    let nf = st.next_free;
+                    if nf + n_forked > st.capacity() {
+                        bail!(
+                            "task vector overflow: {} + {} > {} (app {})",
+                            nf,
+                            n_forked,
+                            st.capacity(),
+                            self.app.name
+                        );
+                    }
+                    st.code[nf..nf + n_forked].copy_from_slice(&fork_code[..n_forked]);
+                    st.args[nf * a..(nf + n_forked) * a]
+                        .copy_from_slice(&fork_args[..n_forked * a]);
+                    st.next_free = nf + n_forked;
+                    stats.forks += n_forked as u64;
+                    epoch_forked += n_forked as u32;
+                }
+                join_scheduled |= j_any;
+                if m_any {
+                    map_scheduled = true;
+                    let am = self.app.am.max(1);
+                    map_queue.extend_from_slice(&map_out.unwrap()[..n_mapped * am]);
+                }
+                stats.launches += 1;
+                stats.work += n_live;
+                stats.emits += n_emit;
+                epoch_live += n_live as u32;
+                stats.host_ns += t1.elapsed().as_nanos() as u64;
+
+                tlo += active;
+            }
+            stats.epochs += 1;
+            stats.peak_tv = stats.peak_tv.max(st.next_free);
+
+            // ---- Phase 3b: TMS update (paper §5.2.4) ----
+            // Join mask pushed first, fork mask on top (LIFO order gives
+            // children-before-join semantics, §4.3.3).
+            if join_scheduled {
+                st.join_stack.push(cen);
+                st.ndrange_stack.push((lo, hi));
+            }
+            if st.next_free > old_next_free {
+                st.join_stack.push(cen + 1);
+                st.ndrange_stack.push((old_next_free, st.next_free));
+            }
+            if map_scheduled {
+                self.run_maps(st, &mut map_queue, &mut stats)?;
+            }
+            // Reclaim dead top-of-allocation ranges (paper §5.3).
+            if !join_scheduled && st.next_free == old_next_free && hi == st.next_free {
+                st.next_free = lo;
+            }
+            if self.cfg.trace {
+                stats.trace.push((cen, (hi - lo) as u32, epoch_live, epoch_forked));
+            }
+        }
+        debug_assert!(st.ndrange_stack.is_empty(), "stacks must empty together");
+        stats.total_ns = t_run.elapsed().as_nanos() as u64;
+        let agg: Vec<_> = self.buckets.iter().map(|b| b.exe.stats()).collect();
+        stats.exec_ns = agg.iter().zip(&exec0).map(|(a, z)| a.exec_ns - z.exec_ns).sum();
+        stats.bytes_up = agg.iter().zip(&exec0).map(|(a, z)| a.bytes_up - z.bytes_up).sum();
+        stats.bytes_down = agg.iter().zip(&exec0).map(|(a, z)| a.bytes_down - z.bytes_down).sum();
+        Ok(stats)
+    }
+
+    /// Launch queued map descriptors (paper §5.2.4: the map kernel runs
+    /// to completion before the next epoch's Phase 1).
+    fn run_maps(
+        &self,
+        st: &mut TvState,
+        queue: &mut Vec<i32>,
+        stats: &mut RunStats,
+    ) -> Result<()> {
+        let Some(mb) = &self.map_bucket else {
+            bail!("app {} scheduled a map but has no map artifact", self.app.name);
+        };
+        let am = self.app.am.max(1);
+        let wm = mb.info.wm;
+        let total = queue.len() / am;
+        let mut off = 0;
+        while off < total {
+            let nm = (total - off).min(wm);
+            let mut buf = vec![0i32; wm * am];
+            buf[..nm * am].copy_from_slice(&queue[off * am..(off + nm) * am]);
+            let scalars = [nm as i32, 0, 0, 0, 0, 0, 0, 0];
+            let owned = [
+                lit::i32s_2d(&buf, wm, am)?,
+                lit::i32s(&st.heap_i),
+                lit::f32s(&st.heap_f),
+                lit::i32s(&st.const_i),
+                lit::f32s(&st.const_f),
+                lit::i32s(&scalars),
+            ];
+            let inputs: Vec<&xla::Literal> = owned.iter().collect();
+            let parts = mb.exe.run(&inputs)?;
+            if parts.len() != 2 {
+                bail!("map artifact returned {} outputs, expected 2", parts.len());
+            }
+            st.heap_i = lit::to_i32s(&parts[0])?;
+            st.heap_f = lit::to_f32s(&parts[1])?;
+            stats.map_launches += 1;
+            off += nm;
+        }
+        queue.clear();
+        Ok(())
+    }
+}

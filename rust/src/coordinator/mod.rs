@@ -1,0 +1,17 @@
+//! The TREES host runtime — the paper's §5 CPU side.
+//!
+//! Phase 1 (epoch setup) and Phase 3 (TMS update) run here; Phase 2 (the
+//! bulk task execution) is an AOT-compiled XLA computation launched via
+//! [`crate::runtime`]. The structures match §5.1.2's compressed TMS
+//! representation exactly: per-entry epoch numbers packed into `code`,
+//! a join stack, an NDRange stack, a single `next_free` cursor, and the
+//! `joinScheduled` / `mapScheduled` flags (returned in the artifact's
+//! `flags` output).
+
+mod epoch;
+mod state;
+mod workload;
+
+pub use epoch::{Coordinator, CoordinatorConfig, RunStats};
+pub use state::TvState;
+pub use workload::{GatherFn, Workload};

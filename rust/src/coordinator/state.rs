@@ -1,0 +1,102 @@
+//! Host-side machine state: the Task Vector and the compressed TMS.
+
+/// The Task Vector and bookkeeping state, host-resident.
+///
+/// The paper keeps the TV in GPU memory; on this substrate "device"
+/// memory is host memory behind PJRT, so the coordinator owns the
+/// canonical copy and ships the active window per epoch (keeping
+/// per-epoch traffic `O(window + heap)` rather than `O(capacity)`).
+#[derive(Debug, Clone)]
+pub struct TvState {
+    /// Packed task codes: `epoch * T + tid`, 0 = invalid (paper fn. 2).
+    pub code: Vec<i32>,
+    /// Flattened args, `capacity x A` row-major.
+    pub args: Vec<i32>,
+    /// Emit results by TV slot.
+    pub res: Vec<i32>,
+    /// Mutable app heaps.
+    pub heap_i: Vec<i32>,
+    pub heap_f: Vec<f32>,
+    /// Read-only app data (uploaded every launch; contents never change).
+    pub const_i: Vec<i32>,
+    pub const_f: Vec<f32>,
+    /// Allocation cursor (the paper's `nextFreeCore`).
+    pub next_free: usize,
+    /// Join stack: epoch numbers to revisit (paper §5.1.2 obs. 1).
+    pub join_stack: Vec<i32>,
+    /// NDRange stack: index ranges paired with the join stack.
+    pub ndrange_stack: Vec<(usize, usize)>,
+    /// Args per task (A).
+    pub a: usize,
+}
+
+impl TvState {
+    /// Initialize with the app's first task in slot 0 scheduled for
+    /// epoch 0 (paper §5.2.1).
+    pub fn new(
+        capacity: usize,
+        a: usize,
+        t: usize,
+        init_args: &[i32],
+        heap_i: Vec<i32>,
+        heap_f: Vec<f32>,
+        const_i: Vec<i32>,
+        const_f: Vec<f32>,
+    ) -> TvState {
+        assert!(init_args.len() <= a, "too many initial args");
+        let mut code = vec![0; capacity];
+        code[0] = 1; // epoch 0, tid 1  =>  0 * T + 1
+        let _ = t;
+        let mut args = vec![0; capacity * a];
+        args[..init_args.len()].copy_from_slice(init_args);
+        TvState {
+            code,
+            args,
+            res: vec![0; capacity],
+            heap_i,
+            heap_f,
+            const_i,
+            const_f,
+            next_free: 1,
+            join_stack: vec![0],
+            ndrange_stack: vec![(0, 1)],
+            a,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Row view of a task's args.
+    pub fn args_of(&self, slot: usize) -> &[i32] {
+        &self.args[slot * self.a..(slot + 1) * self.a]
+    }
+
+    /// The machine has halted when both stacks are empty (guaranteed to
+    /// empty together — asserted by the run loop).
+    pub fn halted(&self) -> bool {
+        self.join_stack.is_empty()
+    }
+
+    /// Result emitted by the root task.
+    pub fn root_result(&self) -> i32 {
+        self.res[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_matches_paper() {
+        let st = TvState::new(16, 4, 2, &[25], vec![], vec![], vec![], vec![]);
+        assert_eq!(st.code[0], 1); // epoch 0, tid 1
+        assert_eq!(st.args_of(0), &[25, 0, 0, 0]);
+        assert_eq!(st.next_free, 1);
+        assert_eq!(st.join_stack, vec![0]);
+        assert_eq!(st.ndrange_stack, vec![(0, 1)]);
+        assert!(!st.halted());
+    }
+}

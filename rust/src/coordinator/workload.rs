@@ -1,0 +1,63 @@
+//! Workload description: what an application instance needs from the
+//! coordinator (initial task, heaps, capacity).
+
+/// Host-side res gather: (tid, task args, res array, out[G]).
+/// Mirrors the python Program.gather spec; the coordinator uses it to
+/// assemble the `res_win` input so the device never sees the O(N)
+/// result array.
+pub type GatherFn = fn(usize, &[i32], &[i32], &mut [i32]);
+
+/// A concrete problem instance for a TREES app.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    /// App name (manifest key).
+    pub app: String,
+    /// Args of the initial task (slot 0, epoch 0, tid 1).
+    pub init_args: Vec<i32>,
+    /// Initial mutable heaps.
+    pub heap_i: Vec<i32>,
+    pub heap_f: Vec<f32>,
+    /// Read-only data (e.g. CSR arrays).
+    pub const_i: Vec<i32>,
+    pub const_f: Vec<f32>,
+    /// Peak TV entries this instance needs (selects the size class).
+    pub capacity: usize,
+    /// Force a specific size class (graph apps pick by VMAX/EMAX layout
+    /// rather than by capacity).
+    pub cls: Option<String>,
+    /// res pre-gather spec (apps whose joins read child results).
+    pub gather: Option<GatherFn>,
+}
+
+impl Workload {
+    pub fn new(app: &str, init_args: Vec<i32>, capacity: usize) -> Workload {
+        Workload {
+            app: app.to_string(),
+            init_args,
+            capacity,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_heaps(mut self, heap_i: Vec<i32>, heap_f: Vec<f32>) -> Self {
+        self.heap_i = heap_i;
+        self.heap_f = heap_f;
+        self
+    }
+
+    pub fn with_consts(mut self, const_i: Vec<i32>, const_f: Vec<f32>) -> Self {
+        self.const_i = const_i;
+        self.const_f = const_f;
+        self
+    }
+
+    pub fn with_class(mut self, cls: &str) -> Self {
+        self.cls = Some(cls.to_string());
+        self
+    }
+
+    pub fn with_gather(mut self, g: GatherFn) -> Self {
+        self.gather = Some(g);
+        self
+    }
+}

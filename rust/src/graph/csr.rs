@@ -1,0 +1,99 @@
+//! Compressed sparse row graphs with integer edge weights.
+
+/// A directed graph in CSR form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    /// `row_ptr[v]..row_ptr[v+1]` indexes `col`/`weight` for v's edges.
+    pub row_ptr: Vec<u32>,
+    pub col: Vec<u32>,
+    /// Positive edge weights (all 1 for unweighted use).
+    pub weight: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list (auto-sorted; parallel edges kept).
+    pub fn from_edges(n: usize, edges: &[(u32, u32, u32)]) -> Csr {
+        let mut deg = vec![0u32; n];
+        for &(u, _, _) in edges {
+            deg[u as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; n + 1];
+        for v in 0..n {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut col = vec![0u32; edges.len()];
+        let mut weight = vec![0u32; edges.len()];
+        let mut cursor: Vec<u32> = row_ptr[..n].to_vec();
+        for &(u, v, w) in edges {
+            let c = cursor[u as usize] as usize;
+            col[c] = v;
+            weight[c] = w;
+            cursor[u as usize] += 1;
+        }
+        Csr { row_ptr, col, weight }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Out-neighbors (with weights) of `v`.
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.row_ptr[v] as usize;
+        let hi = self.row_ptr[v + 1] as usize;
+        self.col[lo..hi].iter().copied().zip(self.weight[lo..hi].iter().copied())
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.row_ptr[v + 1] - self.row_ptr[v]) as usize
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Structural sanity (used by generator tests).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices() as u32;
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.col.len() {
+            return Err("row_ptr endpoints wrong".into());
+        }
+        if self.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr not monotone".into());
+        }
+        if self.col.iter().any(|&c| c >= n) {
+            return Err("col out of range".into());
+        }
+        if self.weight.len() != self.col.len() {
+            return Err("weight length mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_from_edges() {
+        let g = Csr::from_edges(3, &[(0, 1, 5), (0, 2, 7), (2, 0, 1)]);
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0).collect::<Vec<_>>(), vec![(1, 5), (2, 7)]);
+        assert_eq!(g.degree(1), 0);
+        assert_eq!(g.neighbors(2).collect::<Vec<_>>(), vec![(0, 1)]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(2, &[]);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+}

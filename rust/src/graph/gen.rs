@@ -1,0 +1,123 @@
+//! Synthetic graph generators — stand-ins for the Lonestar inputs.
+//!
+//! * [`rmat`] — power-law (Graph500 RMAT, a=0.57 b=c=0.19): hubs stress
+//!   duplicate-visit dedup and load balance, like Lonestar's rmat.
+//! * [`grid2d`] — 4-neighbor grid: long diameter, tiny frontiers — the
+//!   road-network regime.
+//! * [`uniform`] — Erdős–Rényi-ish random: balanced frontiers.
+
+use super::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Graph500-style RMAT generator with deduplicated self-loop-free edges
+/// and weights in `1..=max_w`.
+pub fn rmat(scale: u32, edge_factor: usize, max_w: u32, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Rng::new(seed);
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u == v {
+            continue;
+        }
+        let w = 1 + rng.below(max_w as u64) as u32;
+        edges.push((u as u32, v as u32, w));
+        edges.push((v as u32, u as u32, w)); // symmetrize
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// `side x side` 4-neighbor grid (undirected), weights in `1..=max_w`.
+pub fn grid2d(side: usize, max_w: u32, seed: u64) -> Csr {
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    let id = |r: usize, c: usize| (r * side + c) as u32;
+    for r in 0..side {
+        for c in 0..side {
+            if c + 1 < side {
+                let w = 1 + rng.below(max_w as u64) as u32;
+                edges.push((id(r, c), id(r, c + 1), w));
+                edges.push((id(r, c + 1), id(r, c), w));
+            }
+            if r + 1 < side {
+                let w = 1 + rng.below(max_w as u64) as u32;
+                edges.push((id(r, c), id(r + 1, c), w));
+                edges.push((id(r + 1, c), id(r, c), w));
+            }
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Uniform random graph: `n` vertices, ~`n*degree` directed edge pairs.
+pub fn uniform(n: usize, degree: usize, max_w: u32, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n * degree * 2);
+    for u in 0..n {
+        for _ in 0..degree {
+            let v = rng.below(n as u64) as usize;
+            if v == u {
+                continue;
+            }
+            let w = 1 + rng.below(max_w as u64) as u32;
+            edges.push((u as u32, v as u32, w));
+            edges.push((v as u32, u as u32, w));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_is_valid_and_skewed() {
+        let g = rmat(8, 8, 10, 42);
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 256);
+        // power law: max degree far above mean
+        let mean = g.num_edges() / g.num_vertices();
+        assert!(g.max_degree() > 3 * mean, "max {} mean {}", g.max_degree(), mean);
+    }
+
+    #[test]
+    fn grid_has_bounded_degree() {
+        let g = grid2d(10, 4, 1);
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 100);
+        assert!(g.max_degree() <= 4);
+        // corner has exactly 2
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn uniform_is_valid() {
+        let g = uniform(200, 4, 100, 7);
+        g.validate().unwrap();
+        assert!(g.num_edges() > 1000);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(rmat(6, 4, 5, 9), rmat(6, 4, 5, 9));
+        assert_eq!(uniform(50, 3, 5, 9), uniform(50, 3, 5, 9));
+    }
+}

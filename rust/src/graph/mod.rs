@@ -1,0 +1,15 @@
+//! Graph substrate: CSR representation, generators, and reference
+//! algorithms for the BFS/SSSP experiments (Fig 7/8).
+//!
+//! The paper evaluates against the Lonestar suite's graphs; those inputs
+//! are not available offline, so [`gen`] provides the standard synthetic
+//! stand-ins (RMAT power-law, 2-D grid ≈ road network, uniform random),
+//! exercising the same code paths: high-degree hubs (RMAT), long
+//! diameters (grid), and balanced frontiers (uniform).
+
+mod csr;
+pub mod gen;
+mod reference;
+
+pub use csr::Csr;
+pub use reference::{bfs_levels, dijkstra, INF};

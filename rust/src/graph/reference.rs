@@ -1,0 +1,72 @@
+//! Reference shortest-path algorithms (correctness oracles for Fig 7/8).
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::csr::Csr;
+
+/// "Unreached" distance (matches the artifacts' i32 INF).
+pub const INF: i32 = 1 << 30;
+
+/// BFS levels from `src` (unit weights).
+pub fn bfs_levels(g: &Csr, src: usize) -> Vec<i32> {
+    let mut dist = vec![INF; g.num_vertices()];
+    let mut q = VecDeque::new();
+    dist[src] = 0;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        for (v, _) in g.neighbors(u) {
+            if dist[v as usize] == INF {
+                dist[v as usize] = dist[u] + 1;
+                q.push_back(v as usize);
+            }
+        }
+    }
+    dist
+}
+
+/// Dijkstra from `src` over the CSR weights.
+pub fn dijkstra(g: &Csr, src: usize) -> Vec<i32> {
+    let mut dist = vec![INF; g.num_vertices()];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0;
+    heap.push(std::cmp::Reverse((0i64, src)));
+    while let Some(std::cmp::Reverse((d, u))) = heap.pop() {
+        if d > dist[u] as i64 {
+            continue;
+        }
+        for (v, w) in g.neighbors(u) {
+            let nd = d + w as i64;
+            if nd < dist[v as usize] as i64 {
+                dist[v as usize] = nd as i32;
+                heap.push(std::cmp::Reverse((nd, v as usize)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn bfs_on_path_graph() {
+        let g = Csr::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1)]);
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_levels(&g, 3), vec![INF, INF, INF, 0]);
+    }
+
+    #[test]
+    fn dijkstra_prefers_light_path() {
+        // 0 -> 1 (10), 0 -> 2 (1), 2 -> 1 (2): best 0->1 is 3
+        let g = Csr::from_edges(3, &[(0, 1, 10), (0, 2, 1), (2, 1, 2)]);
+        assert_eq!(dijkstra(&g, 0), vec![0, 3, 1]);
+    }
+
+    #[test]
+    fn unit_weights_make_dijkstra_equal_bfs() {
+        let g = gen::uniform(300, 4, 1, 3);
+        assert_eq!(bfs_levels(&g, 0), dijkstra(&g, 0));
+    }
+}

@@ -1,0 +1,42 @@
+//! # TREES — Task Runtime with Explicit Epoch Synchronization
+//!
+//! A reproduction of *“TREES: A CPU/GPU Task-Parallel Runtime with
+//! Explicit Epoch Synchronization”* (Hechtman, Hilton, Sorin, 2016) on a
+//! Rust + JAX/Pallas + XLA/PJRT stack.
+//!
+//! The paper's GPU is played by AOT-compiled XLA computations (authored
+//! in JAX with Pallas kernels, lowered to HLO text at build time) that
+//! this crate loads and executes through the PJRT CPU client. The
+//! paper's CPU-side host runtime — epoch setup, the join stack, the
+//! NDRange stack, `nextFreeCore`, and the Task-Mask-Stack compression —
+//! is [`coordinator`]. Python never runs at request time.
+//!
+//! ## Layer map
+//!
+//! * [`runtime`] — PJRT client wrapper: load HLO-text artifacts, compile
+//!   once, execute per epoch.
+//! * [`coordinator`] — the paper's §5 host runtime (Phases 1 and 3).
+//! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
+//!   interpreter: the correctness oracle and the `T_1` (work) meter.
+//! * [`apps`] — the task-parallel applications of the evaluation.
+//! * [`cilk`] — a from-scratch work-first work-stealing runtime
+//!   (Chase–Lev deques): the paper's Cilk baseline.
+//! * [`baselines`] — hand-coded comparators: sequential, worklist
+//!   BFS/SSSP (LonestarGPU-style), native bitonic sort.
+//! * [`graph`] — CSR graphs and generators (RMAT, grid, uniform).
+//! * [`simt`] — the GPU cost model used for “estimated APU” columns.
+//! * [`benchkit`] — measurement harness behind `cargo bench`.
+//! * [`util`] — hand-rolled substrates (JSON, CLI, RNG, stats,
+//!   mini-quickcheck); the offline environment has no serde/clap/
+//!   criterion/proptest, so we build them.
+
+pub mod apps;
+pub mod baselines;
+pub mod benchkit;
+pub mod cilk;
+pub mod coordinator;
+pub mod graph;
+pub mod runtime;
+pub mod simt;
+pub mod tvm;
+pub mod util;

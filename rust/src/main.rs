@@ -1,0 +1,280 @@
+//! `trees` — the launcher CLI.
+//!
+//! Subcommands:
+//!   info                         list manifest apps/artifacts
+//!   run <app> [opts]             run a workload through the coordinator
+//!   interp <app> [opts]          run on the sequential TVM interpreter
+//!   native <bfs|sssp|sort> ...   run a hand-coded native baseline
+//!
+//! Workload options (app-dependent):
+//!   --n N          problem size (fib n, fft/sort length, matmul edge,
+//!                  nqueens board, tsp cities, annealing steps)
+//!   --graph KIND   rmat | grid | uniform      (bfs / sssp)
+//!   --scale S      graph scale (rmat 2^S vertices; grid S x S side)
+//!   --seed S       workload RNG seed
+//!   --bucket W     force one window bucket
+//!   --trace        per-epoch trace dump
+//!
+//! The request path is pure Rust: artifacts were AOT-lowered by
+//! `make artifacts` and are loaded via PJRT here.
+
+use anyhow::{anyhow, bail, Result};
+
+use trees::apps;
+use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
+use trees::graph::{gen, Csr};
+use trees::runtime::{load_manifest, Device};
+use trees::util::cli::Args;
+use trees::util::rng::Rng;
+
+fn usage() -> &'static str {
+    "trees — TREES task-parallel runtime (explicit epoch synchronization)
+
+USAGE:
+  trees info
+  trees run <app> [--n N] [--graph rmat|grid|uniform] [--scale S]
+                  [--seed S] [--bucket W] [--trace]
+  trees interp <app> [--n N] [...]
+  trees native <bfs|sssp|sort> [--n N] [--graph ..] [--scale S]
+
+APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
+"
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["n", "bucket", "seed", "graph", "scale", "steps"],
+        &["trace", "verbose", "help"],
+    )
+    .map_err(|e| anyhow!("{e}\n{}", usage()))?;
+
+    if args.flag("help") || args.positionals().is_empty() {
+        print!("{}", usage());
+        return Ok(());
+    }
+
+    match args.positionals()[0].as_str() {
+        "info" => info(),
+        "run" => run(&args),
+        "interp" => interp(&args),
+        "native" => native(&args),
+        cmd => bail!("unknown command {cmd:?}\n{}", usage()),
+    }
+}
+
+fn info() -> Result<()> {
+    let (m, dir) = load_manifest()?;
+    println!("artifacts: {}", dir.display());
+    for (name, app) in &m.apps {
+        println!(
+            "  {name}: T={} A={} K={} task_types={:?} artifacts={} map={}",
+            app.t,
+            app.a,
+            app.k,
+            app.task_types,
+            app.artifacts.len(),
+            app.map_artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn pick_app(args: &Args) -> Result<String> {
+    args.positionals()
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("missing app name\n{}", usage()))
+}
+
+fn make_graph(args: &Args) -> Result<(Csr, usize)> {
+    let kind = args.str_or("graph", "uniform");
+    let scale = args.usize_or("scale", 7).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let g = match kind.as_str() {
+        "rmat" => gen::rmat(scale as u32, 8, 10, seed),
+        "grid" => gen::grid2d(scale, 10, seed),
+        "uniform" => gen::uniform(1 << scale, 4, 10, seed),
+        other => bail!("unknown graph kind {other:?}"),
+    };
+    Ok((g, 0))
+}
+
+/// Build the workload for `app` from CLI options.
+fn workload_for(
+    app_name: &str,
+    app: &trees::runtime::AppManifest,
+    args: &Args,
+) -> Result<Workload> {
+    let n = args.usize_or("n", 0).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(seed);
+    Ok(match app_name {
+        "fib" => apps::fib::workload(if n == 0 { 20 } else { n } as u32),
+        "tree" => {
+            let t = apps::tree::BinTree::random(if n == 0 { 1000 } else { n }, seed);
+            apps::tree::workload(app, &t)?
+        }
+        "bfs" | "sssp" => {
+            let (g, src) = make_graph(args)?;
+            apps::graph_sp::workload(app, &g, src)?.0
+        }
+        "fft" => {
+            let len = if n == 0 { 1 << 12 } else { n };
+            let x: Vec<f32> = (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            apps::fft::workload(app, &x)?.0
+        }
+        "mergesort" | "msort_map" => {
+            let len = if n == 0 { 1 << 10 } else { n };
+            let x: Vec<f32> = (0..len).map(|_| rng.f32() * 1000.0).collect();
+            apps::msort::workload(app, &x)?.0
+        }
+        "nqueens" => apps::nqueens::workload(if n == 0 { 8 } else { n }),
+        "matmul" => {
+            let e = if n == 0 { 16 } else { n };
+            let a: Vec<f32> = (0..e * e).map(|_| rng.f32()).collect();
+            let b: Vec<f32> = (0..e * e).map(|_| rng.f32()).collect();
+            apps::matmul::workload(app, &a, &b, e)?.0
+        }
+        "tsp" => {
+            let c = if n == 0 { 8 } else { n };
+            apps::tsp::workload(&apps::tsp::random_dist(c, seed), c)
+        }
+        "annealing" => {
+            let steps = args.usize_or("steps", 200).map_err(anyhow::Error::msg)?;
+            apps::annealing::workload(8, steps, 200)
+        }
+        other => bail!("no workload builder for app {other:?}"),
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    let app_name = pick_app(args)?;
+    let (manifest, dir) = load_manifest()?;
+    let app = manifest.app(&app_name)?;
+    let w = workload_for(&app_name, app, args)?;
+    let dev = Device::cpu()?;
+    let cfg = CoordinatorConfig {
+        force_bucket: args.usize_or("bucket", 0).map_err(anyhow::Error::msg)?,
+        trace: args.flag("trace"),
+        ..Default::default()
+    };
+    let co = Coordinator::for_workload(&dev, &dir, app, &w, cfg)?;
+    let (st, stats) = co.run(&w)?;
+    println!("result: {}", st.root_result());
+    if app_name == "tsp" || app_name == "annealing" {
+        println!("bound (heap[0]): {}", st.heap_i[0]);
+    }
+    println!(
+        "epochs={} launches={} map_launches={} work={} forks={} peak_tv={}",
+        stats.epochs,
+        stats.launches,
+        stats.map_launches,
+        stats.work,
+        stats.forks,
+        stats.peak_tv,
+    );
+    println!(
+        "total={:.1} ms (exec {:.1} ms, marshal {:.1} ms) | init: compile {:.1} ms, client {:.1} ms",
+        stats.total_ns as f64 / 1e6,
+        stats.exec_ns as f64 / 1e6,
+        stats.marshal_ns as f64 / 1e6,
+        stats.compile_ns as f64 / 1e6,
+        co.init_ns() as f64 / 1e6,
+    );
+    if args.flag("trace") {
+        for (cen, range, live, forked) in &stats.trace {
+            println!("  cen={cen} range={range} live={live} forked={forked}");
+        }
+    }
+    Ok(())
+}
+
+fn interp(args: &Args) -> Result<()> {
+    use trees::tvm::Interp;
+    let app_name = pick_app(args)?;
+    let n = args.usize_or("n", 0).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    match app_name.as_str() {
+        "fib" => {
+            let n = if n == 0 { 20 } else { n } as u32;
+            let mut m = Interp::new(
+                &apps::Fib,
+                apps::fib::capacity_for(n),
+                vec![n as i32],
+            );
+            let st = m.run();
+            println!("result: {}", m.root_result());
+            println!("{st:?}");
+        }
+        "nqueens" => {
+            let n = if n == 0 { 8 } else { n };
+            let mut m = Interp::new(&apps::NQueens, 1 << 20, vec![0, 0, 0, 0])
+                .with_heaps(vec![], vec![], vec![n as i32], vec![]);
+            let st = m.run();
+            println!("result: {}", m.root_result());
+            println!("{st:?}");
+        }
+        "tsp" => {
+            let c = if n == 0 { 8 } else { n };
+            let dist = apps::tsp::random_dist(c, seed);
+            let mut m = Interp::new(&apps::Tsp, 1 << 18, vec![0, 1, 0, 1])
+                .with_heaps(vec![apps::tsp::INF], vec![], apps::tsp::pack(&dist, c), vec![]);
+            let st = m.run();
+            println!("result: {}", m.root_result());
+            println!("{st:?}");
+        }
+        other => bail!("no interpreter driver for app {other:?} (try run)"),
+    }
+    Ok(())
+}
+
+fn native(args: &Args) -> Result<()> {
+    use trees::baselines::{Bitonic, Worklist};
+    let what = pick_app(args)?;
+    let (manifest, dir) = load_manifest()?;
+    let dev = Device::cpu()?;
+    match what.as_str() {
+        "bfs" | "sssp" => {
+            let (g, src) = make_graph(args)?;
+            let app = manifest.app(&format!("native_{what}"))?;
+            let wl = Worklist::new(&dev, &dir, app, &g)?;
+            let (dist, stats) = wl.run(&g, src)?;
+            let reached = dist.iter().filter(|&&d| d < (1 << 30)).count();
+            println!(
+                "reached {}/{} vertices; iterations={} total={:.1} ms (exec {:.1} ms)",
+                reached,
+                g.num_vertices(),
+                stats.iterations,
+                stats.total_ns as f64 / 1e6,
+                stats.exec_ns as f64 / 1e6
+            );
+        }
+        "sort" => {
+            let n = args.usize_or("n", 1 << 12).map_err(anyhow::Error::msg)?;
+            let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+            let mut rng = Rng::new(seed);
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+            let app = manifest.app("native_bitonic")?;
+            let b = Bitonic::new(&dev, &dir, app, n)?;
+            let t0 = std::time::Instant::now();
+            let out = b.sort(&xs)?;
+            println!(
+                "sorted {} elements in {:.1} ms (first={}, last={})",
+                n,
+                t0.elapsed().as_secs_f64() * 1e3,
+                out[0],
+                out[n - 1]
+            );
+        }
+        other => bail!("unknown native baseline {other:?}"),
+    }
+    Ok(())
+}

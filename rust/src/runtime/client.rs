@@ -1,0 +1,180 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! `Device` owns the `PjRtClient`; `Executable` wraps a compiled HLO
+//! module and counts launches/bytes — the paper's kernel-launch and
+//! transfer overheads (`V_inf`) made observable.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Cumulative execution statistics (per executable).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub launches: u64,
+    pub exec_ns: u64,
+    /// Host→device bytes (input literals).
+    pub bytes_up: u64,
+    /// Device→host bytes (output literal).
+    pub bytes_down: u64,
+}
+
+/// The PJRT device (CPU in this environment; the paper's GPU role).
+pub struct Device {
+    client: xla::PjRtClient,
+    /// Wall time spent creating the client — the analogue of the paper's
+    /// "OpenCL initialization" cost, reported separately in Fig 5/6.
+    pub init_ns: u64,
+}
+
+impl Device {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Device> {
+        let t0 = Instant::now();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client, init_ns: t0.elapsed().as_nanos() as u64 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact. Compile time is the per-program
+    /// part of initialization latency (cached by the coordinator).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            compile_ns: t0.elapsed().as_nanos() as u64,
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    /// Compile HLO text directly (tests).
+    pub fn compile_hlo_text(&self, name: &str, text: &str) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
+            .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling HLO")?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+            compile_ns: t0.elapsed().as_nanos() as u64,
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+}
+
+/// A compiled epoch-step (or map/baseline) program.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_ns: u64,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    /// Launch with literal inputs; returns the decomposed output tuple.
+    ///
+    /// This is the paper's Phase-2 "kernel launch": one bulk execution
+    /// over the active window, with the host blocked until completion
+    /// (explicit epoch synchronization).
+    ///
+    /// Perf note (§Perf): inputs are staged to device buffers explicitly
+    /// and launched via `execute_b` — the crate's literal-input
+    /// `execute` path costs ~280 µs extra per launch at these sizes
+    /// (measured), which dominated V∞ before this change.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let up: u64 = inputs.iter().map(|l| l.size_bytes() as u64).sum();
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()
+            .context("staging input buffers")?;
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        // NB: size_bytes() on a *tuple* literal aborts inside XLA 0.5.1
+        // (ByteSizeOf needs a pointer size for tuple index tables), so
+        // sum the element sizes after decomposition instead.
+        let parts = out.to_tuple().context("decomposing output tuple")?;
+        let down: u64 = parts.iter().map(|p| p.size_bytes() as u64).sum();
+        let mut s = self.stats.borrow_mut();
+        s.launches += 1;
+        s.exec_ns += t0.elapsed().as_nanos() as u64;
+        s.bytes_up += up;
+        s.bytes_down += down;
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+}
+
+/// Literal marshalling helpers.
+pub mod lit {
+    use anyhow::Result;
+
+    /// 1-D i32 literal.
+    pub fn i32s(xs: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(xs)
+    }
+
+    /// 2-D i32 literal of shape `[rows, cols]` from row-major data.
+    pub fn i32s_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(xs.len(), rows * cols);
+        Ok(xla::Literal::vec1(xs).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// 1-D f32 literal.
+    pub fn f32s(xs: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(xs)
+    }
+
+    /// Extract Vec<i32>.
+    pub fn to_i32s(l: &xla::Literal) -> Result<Vec<i32>> {
+        Ok(l.to_vec::<i32>()?)
+    }
+
+    /// Extract Vec<f32>.
+    pub fn to_f32s(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+
+    /// Copy a literal's contents into an existing Vec (resized to fit)
+    /// — avoids the per-epoch reallocation of `to_vec` on the hot path.
+    pub fn read_i32s(l: &xla::Literal, out: &mut Vec<i32>) -> Result<()> {
+        out.resize(l.element_count(), 0);
+        l.copy_raw_to::<i32>(out)?;
+        Ok(())
+    }
+
+    /// f32 variant of [`read_i32s`].
+    pub fn read_f32s(l: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+        out.resize(l.element_count(), 0.0);
+        l.copy_raw_to::<f32>(out)?;
+        Ok(())
+    }
+}

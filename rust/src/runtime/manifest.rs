@@ -1,0 +1,286 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered epoch-step artifact (a window bucket × size class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    /// Window bucket (lanes per launch). 0 for map artifacts.
+    pub w: usize,
+    /// Map bucket (descriptors per launch). 0 for epoch artifacts.
+    pub wm: usize,
+    pub cls: String,
+    pub n: usize,
+    /// Result buffer length (R <= N; 1 for apps that never emit).
+    pub r: usize,
+    pub hi: usize,
+    pub hf: usize,
+    pub ci: usize,
+    pub cf: usize,
+}
+
+/// Per-app manifest entry.
+#[derive(Debug, Clone)]
+pub struct AppManifest {
+    pub name: String,
+    /// Number of task types T (codes are `epoch*T + tid`, tid in 1..=T).
+    pub t: usize,
+    /// i32 args per task.
+    pub a: usize,
+    /// Max forks per task (program-wide).
+    pub k: usize,
+    /// Max map descriptors per task.
+    pub km: usize,
+    /// i32 args per map descriptor.
+    pub am: usize,
+    /// res gather width G (host pre-gather lanes per task; 0 = app
+    /// never join-reads results).
+    pub g: usize,
+    pub task_types: Vec<String>,
+    pub max_forks: Vec<usize>,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub map_artifacts: Vec<ArtifactInfo>,
+    /// Raw size-class dictionaries (app-specific keys like VMAX/EMAX
+    /// included) — workload builders use these to pick layouts.
+    pub classes: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+impl AppManifest {
+    /// Smallest size class whose capacity `N` is at least `need`,
+    /// then within it the artifacts sorted by window bucket.
+    pub fn artifacts_for_capacity(&self, need: usize) -> Result<Vec<&ArtifactInfo>> {
+        let mut classes: BTreeMap<&str, usize> = BTreeMap::new();
+        for a in &self.artifacts {
+            classes.entry(&a.cls).or_insert(a.n);
+        }
+        let cls = classes
+            .iter()
+            .filter(|(_, &n)| n >= need)
+            .min_by_key(|(_, &n)| n)
+            .map(|(c, _)| c.to_string())
+            .ok_or_else(|| {
+                anyhow!(
+                    "app {}: no size class with capacity >= {} (have {:?})",
+                    self.name,
+                    need,
+                    classes
+                )
+            })?;
+        let mut arts: Vec<&ArtifactInfo> =
+            self.artifacts.iter().filter(|a| a.cls == cls).collect();
+        arts.sort_by_key(|a| a.w);
+        Ok(arts)
+    }
+
+    /// Artifacts of a named size class, sorted by window bucket.
+    pub fn artifacts_for_class(&self, cls: &str) -> Result<Vec<&ArtifactInfo>> {
+        let mut arts: Vec<&ArtifactInfo> =
+            self.artifacts.iter().filter(|a| a.cls == cls).collect();
+        if arts.is_empty() {
+            anyhow::bail!("app {}: no size class {cls:?}", self.name);
+        }
+        arts.sort_by_key(|a| a.w);
+        Ok(arts)
+    }
+
+    /// Map artifact for a given class (largest bucket).
+    pub fn map_artifact_for_class(&self, cls: &str) -> Option<&ArtifactInfo> {
+        self.map_artifacts
+            .iter()
+            .filter(|a| a.cls == cls)
+            .max_by_key(|a| a.wm)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub apps: BTreeMap<String, AppManifest>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field {key} not a number"))
+}
+
+fn artifact(j: &Json) -> Result<ArtifactInfo> {
+    Ok(ArtifactInfo {
+        file: j
+            .req("file")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("file not a string"))?
+            .to_string(),
+        w: j.get("W").and_then(|x| x.as_usize()).unwrap_or(0),
+        wm: j.get("Wm").and_then(|x| x.as_usize()).unwrap_or(0),
+        cls: j
+            .req("cls")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .unwrap_or("")
+            .to_string(),
+        n: usize_field(j, "N")?,
+        r: j
+            .get("R")
+            .and_then(|x| x.as_usize())
+            .unwrap_or_else(|| j.get("N").and_then(|x| x.as_usize()).unwrap_or(0)),
+        hi: usize_field(j, "Hi")?,
+        hf: usize_field(j, "Hf")?,
+        ci: usize_field(j, "Ci")?,
+        cf: usize_field(j, "Cf")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let mut apps = BTreeMap::new();
+        let app_obj = j
+            .req("apps")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("apps not an object"))?;
+        for (name, aj) in app_obj {
+            let arts = aj
+                .req("artifacts")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifacts not an array"))?
+                .iter()
+                .map(artifact)
+                .collect::<Result<Vec<_>>>()?;
+            let map_arts = aj
+                .get("map_artifacts")
+                .and_then(|x| x.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(artifact)
+                .collect::<Result<Vec<_>>>()?;
+            let strs = |key: &str| -> Vec<String> {
+                aj.get(key)
+                    .and_then(|x| x.as_arr())
+                    .map(|v| {
+                        v.iter()
+                            .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let nums = |key: &str| -> Vec<usize> {
+                aj.get(key)
+                    .and_then(|x| x.as_arr())
+                    .map(|v| v.iter().filter_map(|s| s.as_usize()).collect())
+                    .unwrap_or_default()
+            };
+            let mut classes = BTreeMap::new();
+            if let Some(cobj) = aj.get("classes").and_then(|x| x.as_obj()) {
+                for (cname, cdict) in cobj {
+                    let mut m = BTreeMap::new();
+                    if let Some(d) = cdict.as_obj() {
+                        for (k, v) in d {
+                            if let Some(x) = v.as_usize() {
+                                m.insert(k.clone(), x);
+                            }
+                        }
+                    }
+                    classes.insert(cname.clone(), m);
+                }
+            }
+            apps.insert(
+                name.clone(),
+                AppManifest {
+                    name: name.clone(),
+                    classes,
+                    t: usize_field(aj, "T")?,
+                    g: aj.get("G").and_then(|x| x.as_usize()).unwrap_or(0),
+                    a: usize_field(aj, "A")?,
+                    k: usize_field(aj, "K")?,
+                    km: usize_field(aj, "Km")?,
+                    am: usize_field(aj, "Am")?,
+                    task_types: strs("task_types"),
+                    max_forks: nums("max_forks"),
+                    artifacts: arts,
+                    map_artifacts: map_arts,
+                },
+            );
+        }
+        Ok(Manifest { apps })
+    }
+
+    pub fn app(&self, name: &str) -> Result<&AppManifest> {
+        self.apps
+            .get(name)
+            .ok_or_else(|| anyhow!("app {name:?} not in manifest (run make artifacts)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "apps": {
+        "fib": {
+          "T": 2, "A": 4, "K": 2, "Km": 0, "Am": 0, "G": 2,
+          "task_types": ["fib", "sum2"],
+          "max_forks": [2, 0],
+          "classes": {"S": {"N": 65536, "Hi": 1, "Hf": 1, "Ci": 1, "Cf": 1}},
+          "artifacts": [
+            {"file": "fib__w256__S.hlo.txt", "W": 256, "cls": "S",
+             "N": 65536, "Hi": 1, "Hf": 1, "Ci": 1, "Cf": 1},
+            {"file": "fib__w4096__S.hlo.txt", "W": 4096, "cls": "S",
+             "N": 65536, "Hi": 1, "Hf": 1, "Ci": 1, "Cf": 1},
+            {"file": "fib__w256__M.hlo.txt", "W": 256, "cls": "M",
+             "N": 2097152, "Hi": 1, "Hf": 1, "Ci": 1, "Cf": 1}
+          ],
+          "map_artifacts": []
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let app = m.app("fib").unwrap();
+        assert_eq!(app.t, 2);
+        assert_eq!(app.task_types, vec!["fib", "sum2"]);
+        assert_eq!(app.artifacts.len(), 3);
+    }
+
+    #[test]
+    fn capacity_selects_smallest_class() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let app = m.app("fib").unwrap();
+        let arts = app.artifacts_for_capacity(1000).unwrap();
+        assert!(arts.iter().all(|a| a.cls == "S"));
+        assert_eq!(arts[0].w, 256); // sorted by bucket
+        let arts = app.artifacts_for_capacity(100_000).unwrap();
+        assert!(arts.iter().all(|a| a.cls == "M"));
+        assert!(app.artifacts_for_capacity(1 << 30).is_err());
+    }
+
+    #[test]
+    fn unknown_app_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.app("nope").is_err());
+    }
+}

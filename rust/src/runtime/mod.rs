@@ -1,0 +1,51 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute.
+//!
+//! The Rust hot path never touches Python: `python -m compile.aot`
+//! (invoked by `make artifacts`) has already lowered every
+//! (app × window-bucket × size-class) epoch-step to
+//! `artifacts/<app>__w<W>__<class>.hlo.txt`, described by
+//! `artifacts/manifest.json`. This module mirrors the manifest, compiles
+//! artifacts on the PJRT CPU client lazily, and caches the executables —
+//! compile time corresponds to the paper's "OpenCL initialization
+//! latency", which the benches report separately (Fig 5/6).
+
+pub mod client;
+mod manifest;
+
+pub use client::{Device, ExecStats, Executable};
+pub use manifest::{AppManifest, ArtifactInfo, Manifest};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$TREES_ARTIFACTS`, else walk up from
+/// the current dir looking for `artifacts/manifest.json`.
+pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
+    if let Ok(p) = std::env::var("TREES_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found; run `make artifacts` \
+                 or set TREES_ARTIFACTS"
+            );
+        }
+    }
+}
+
+/// Convenience: load the manifest from the default artifacts dir.
+pub fn load_manifest() -> anyhow::Result<(Manifest, PathBuf)> {
+    let dir = artifacts_dir()?;
+    let m = Manifest::load(&dir.join("manifest.json"))?;
+    Ok((m, dir))
+}
+
+/// Read an HLO text file into a compiled executable on `dev`.
+pub fn compile_artifact(dev: &Device, path: &Path) -> anyhow::Result<Executable> {
+    dev.compile_hlo_file(path)
+}

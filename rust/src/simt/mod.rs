@@ -1,0 +1,126 @@
+//! SIMT cost model — estimates what an epoch schedule would cost on the
+//! paper's class of hardware (an integrated APU GPU), used to produce
+//! the "estimated APU" columns in EXPERIMENTS.md.
+//!
+//! The substrate here executes Phase 2 on the XLA CPU backend, so
+//! absolute times say little about a GPU. This model applies the
+//! paper's own §4.4 analysis to the measured per-epoch schedule:
+//!
+//!   T_{P,W} = V1 * ceil(live / (P*W)) * t_task * penalty + V_inf
+//!
+//! per epoch, where `penalty` models divergence (log2(W) under the
+//! paper's pessimistic 50/50 branch-split assumption, 1.0 best-case)
+//! and `V_inf` is the kernel-launch + flag-transfer cost.
+
+/// Hardware description (defaults model the paper's A10-7850K iGPU).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Compute units.
+    pub cus: u32,
+    /// SIMD width per CU (work-items in lockstep).
+    pub simd_width: u32,
+    /// Cycles a typical task body costs when perfectly coherent.
+    pub task_cycles: f64,
+    /// Clock in GHz.
+    pub ghz: f64,
+    /// Kernel launch + shared-variable transfer latency (µs) — the
+    /// paper's V-inf term (HSA-era integrated GPU: ~10 µs).
+    pub launch_us: f64,
+    /// Divergence penalty factor: 1.0 best case, log2(simd_width) for
+    /// the paper's pessimistic 50/50 split.
+    pub divergence: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        // A10-7850K: 8 GCN CUs, 64-wide wavefronts, 720 MHz
+        GpuModel {
+            cus: 8,
+            simd_width: 64,
+            task_cycles: 400.0,
+            ghz: 0.72,
+            launch_us: 10.0,
+            divergence: 2.0,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Pessimistic divergence (paper §4.4.1): log2(W).
+    pub fn pessimistic(mut self) -> Self {
+        self.divergence = (self.simd_width as f64).log2();
+        self
+    }
+
+    /// Estimated wall time (µs) for one epoch with `live` active tasks
+    /// across `launches` kernel launches.
+    pub fn epoch_us(&self, live: u64, launches: u64) -> f64 {
+        let lanes = (self.cus * self.simd_width) as f64;
+        let waves = (live as f64 / lanes).ceil().max(1.0);
+        let compute_us =
+            waves * self.task_cycles * self.divergence / (self.ghz * 1e3);
+        compute_us + launches as f64 * self.launch_us
+    }
+
+    /// Estimate a whole run from a per-epoch trace of
+    /// `(cen, range, live, forked)` tuples (CoordinatorConfig::trace).
+    pub fn run_us(&self, trace: &[(i32, u32, u32, u32)], window: u32) -> f64 {
+        trace
+            .iter()
+            .map(|&(_, range, live, _)| {
+                let launches =
+                    (range as u64).div_ceil(window.max(1) as u64).max(1);
+                self.epoch_us(live as u64, launches)
+            })
+            .sum()
+    }
+
+    /// The paper's speedup bound T1 / T_P for a measured (T1, T-inf).
+    pub fn speedup_bound(&self, t1: u64, tinf: u64) -> f64 {
+        let p = (self.cus * self.simd_width) as f64;
+        let tp = t1 as f64 / p * self.divergence + tinf as f64;
+        t1 as f64 / tp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_cost_scales_with_occupancy() {
+        let m = GpuModel::default();
+        let small = m.epoch_us(10, 1);
+        let big = m.epoch_us(100_000, 1);
+        assert!(big > small * 10.0, "{small} vs {big}");
+    }
+
+    #[test]
+    fn launch_latency_dominates_tiny_epochs() {
+        let m = GpuModel::default();
+        let one = m.epoch_us(1, 1);
+        assert!(one >= m.launch_us && one < 2.0 * m.launch_us);
+    }
+
+    #[test]
+    fn pessimistic_divergence_is_log_width() {
+        let m = GpuModel::default().pessimistic();
+        assert_eq!(m.divergence, 6.0); // log2(64)
+    }
+
+    #[test]
+    fn speedup_bound_saturates_at_p_over_divergence() {
+        let m = GpuModel::default();
+        // T1 >> T-inf: bound approaches P / divergence = 512/2
+        let s = m.speedup_bound(100_000_000, 10);
+        assert!((s - 256.0).abs() < 1.0, "{s}");
+    }
+
+    #[test]
+    fn run_accumulates_trace() {
+        let m = GpuModel::default();
+        let trace = vec![(0, 256, 100, 50), (1, 512, 400, 0)];
+        let us = m.run_us(&trace, 256);
+        assert!(us > 2.0 * m.launch_us);
+    }
+}

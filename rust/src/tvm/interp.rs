@@ -1,0 +1,317 @@
+//! Sequential TVM interpreter — executes the same machine the epoch-step
+//! artifacts implement, one task at a time, with the same host-side
+//! stack discipline as the coordinator.
+
+use super::program::{ScatterOp, TaskCtx, TvmProgram, INVALID};
+
+/// Execution statistics: the paper's §4.4 quantities.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InterpStats {
+    /// Critical path T∞: number of epochs executed.
+    pub epochs: u64,
+    /// Work T1: total tasks executed (valid lanes summed over epochs).
+    pub work: u64,
+    /// Total forks performed.
+    pub forks: u64,
+    /// Total joins scheduled.
+    pub joins: u64,
+    /// Total emits.
+    pub emits: u64,
+    /// Map descriptors executed.
+    pub maps: u64,
+    /// Peak task-vector occupancy (space bound check: O(T1), Ω(T1/T∞)).
+    pub peak_tv: usize,
+}
+
+/// The machine state (mirrors `coordinator::TvState`).
+pub struct Interp<'p, P: TvmProgram> {
+    prog: &'p P,
+    pub code: Vec<i32>,
+    pub args: Vec<Vec<i32>>,
+    pub res: Vec<i32>,
+    pub heap_i: Vec<i32>,
+    pub heap_f: Vec<f32>,
+    pub const_i: Vec<i32>,
+    pub const_f: Vec<f32>,
+    pub next_free: usize,
+    pub join_stack: Vec<i32>,
+    pub ndrange_stack: Vec<(usize, usize)>,
+    pub stats: InterpStats,
+    max_epochs: u64,
+}
+
+impl<'p, P: TvmProgram> Interp<'p, P> {
+    /// New machine with capacity `n`, initial task `<tid 1, init_args>`.
+    pub fn new(prog: &'p P, n: usize, init_args: Vec<i32>) -> Self {
+        let t = prog.num_task_types() as i32;
+        let mut code = vec![INVALID; n];
+        code[0] = t * 0 + 1; // epoch 0, tid 1
+        let mut args = vec![Vec::new(); n];
+        args[0] = init_args;
+        Interp {
+            prog,
+            code,
+            args,
+            res: vec![0; n],
+            heap_i: Vec::new(),
+            heap_f: Vec::new(),
+            const_i: Vec::new(),
+            const_f: Vec::new(),
+            next_free: 1,
+            join_stack: vec![0],
+            ndrange_stack: vec![(0, 1)],
+            stats: InterpStats::default(),
+            max_epochs: 10_000_000,
+        }
+    }
+
+    pub fn with_heaps(
+        mut self,
+        heap_i: Vec<i32>,
+        heap_f: Vec<f32>,
+        const_i: Vec<i32>,
+        const_f: Vec<f32>,
+    ) -> Self {
+        self.heap_i = heap_i;
+        self.heap_f = heap_f;
+        self.const_i = const_i;
+        self.const_f = const_f;
+        self
+    }
+
+    fn encode(&self, epoch: i32, tid: usize) -> i32 {
+        epoch * self.prog.num_task_types() as i32 + tid as i32
+    }
+
+    fn decode(&self, code: i32) -> Option<(i32, usize)> {
+        if code <= 0 {
+            return None;
+        }
+        let t = self.prog.num_task_types() as i32;
+        let epoch = (code - 1) / t;
+        let tid = code - epoch * t;
+        Some((epoch, tid as usize))
+    }
+
+    /// Run to completion. Returns stats.
+    pub fn run(&mut self) -> InterpStats {
+        while let Some(cen) = self.join_stack.pop() {
+            let (lo, hi) = self.ndrange_stack.pop().expect("stack parity");
+            if self.stats.epochs >= self.max_epochs {
+                panic!("epoch limit exceeded");
+            }
+            self.run_epoch(cen, lo, hi);
+        }
+        self.stats
+    }
+
+    /// One epoch over the NDRange [lo, hi) at epoch number `cen`.
+    /// (Public so differential tests can single-step.)
+    pub fn run_epoch(&mut self, cen: i32, lo: usize, hi: usize) {
+        let old_next_free = self.next_free;
+        let mut join_scheduled = false;
+        let mut pending_maps: Vec<Vec<i32>> = Vec::new();
+        // epoch-end heap merges (tasks see the pre-epoch heap)
+        let mut scat_i: Vec<(usize, i32, ScatterOp)> = Vec::new();
+        let mut scat_f: Vec<(usize, f32, ScatterOp)> = Vec::new();
+
+        for slot in lo..hi {
+            let Some((epoch, tid)) = self.decode(self.code[slot]) else {
+                continue; // invalid entry launched but exits immediately
+            };
+            if epoch != cen {
+                continue;
+            }
+            self.stats.work += 1;
+
+            let mut ctx = TaskCtx {
+                slot,
+                cen,
+                res: &self.res,
+                heap_i: &self.heap_i,
+                heap_f: &self.heap_f,
+                const_i: &self.const_i,
+                const_f: &self.const_f,
+                seed: (self.stats.epochs as i32).wrapping_mul(0x9E37),
+                forks: Vec::new(),
+                join: None,
+                emit: None,
+                maps: Vec::new(),
+                scatters_i: Vec::new(),
+                scatters_f: Vec::new(),
+                next_child_slot: self.next_free,
+            };
+            let args = std::mem::take(&mut self.args[slot]);
+            self.prog.run_task(tid, &args, &mut ctx);
+            self.args[slot] = args;
+
+            let TaskCtx { forks, join, emit, maps, scatters_i, scatters_f, .. } = ctx;
+            scat_i.extend(scatters_i);
+            scat_f.extend(scatters_f);
+
+            // forks allocate contiguously at next_free (paper §5.1.2)
+            for (ftid, fargs) in forks {
+                let s = self.next_free;
+                assert!(s < self.code.len(), "task vector overflow");
+                self.code[s] = self.encode(cen + 1, ftid);
+                self.args[s] = fargs;
+                self.next_free += 1;
+                self.stats.forks += 1;
+            }
+            self.stats.peak_tv = self.stats.peak_tv.max(self.next_free);
+
+            // join replaces own entry, same epoch number
+            let joined = join.is_some();
+            if let Some((jtid, jargs)) = join {
+                self.code[slot] = self.encode(cen, jtid);
+                self.args[slot] = jargs;
+                join_scheduled = true;
+                self.stats.joins += 1;
+            } else {
+                self.code[slot] = INVALID;
+            }
+
+            if let Some(v) = emit {
+                assert!(!joined, "task cannot emit and join in one turn");
+                self.res[slot] = v;
+                self.stats.emits += 1;
+            }
+
+            pending_maps.extend(maps);
+        }
+
+        self.stats.epochs += 1;
+
+        // apply epoch-end heap merges (matches treeslang/epoch.py)
+        for (idx, val, op) in scat_i {
+            let c = &mut self.heap_i[idx];
+            *c = match op {
+                ScatterOp::Set => val,
+                ScatterOp::Min => (*c).min(val),
+                ScatterOp::Max => (*c).max(val),
+                ScatterOp::Add => *c + val,
+            };
+        }
+        for (idx, val, op) in scat_f {
+            let c = &mut self.heap_f[idx];
+            *c = match op {
+                ScatterOp::Set => val,
+                ScatterOp::Min => (*c).min(val),
+                ScatterOp::Max => (*c).max(val),
+                ScatterOp::Add => *c + val,
+            };
+        }
+
+        // Phase 3: stack updates — join range first, fork range on top.
+        if join_scheduled {
+            self.join_stack.push(cen);
+            self.ndrange_stack.push((lo, hi));
+        }
+        if self.next_free > old_next_free {
+            self.join_stack.push(cen + 1);
+            self.ndrange_stack.push((old_next_free, self.next_free));
+        }
+        if !pending_maps.is_empty() {
+            for m in pending_maps {
+                self.prog.run_map(
+                    &m,
+                    &mut self.heap_i,
+                    &mut self.heap_f,
+                    &self.const_i,
+                    &self.const_f,
+                );
+                self.stats.maps += 1;
+            }
+        }
+        // Reclaim (paper §5.3, epoch-3 behaviour): nothing scheduled and
+        // this range is the top of the allocation — entries are dead.
+        if !join_scheduled && self.next_free == old_next_free && hi == self.next_free {
+            self.next_free = lo;
+        }
+    }
+
+    /// The result emitted by the root task.
+    pub fn root_result(&self) -> i32 {
+        self.res[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// fib as a scalar TVM program (mirrors python apps/fib.py).
+    struct Fib;
+
+    impl TvmProgram for Fib {
+        fn num_task_types(&self) -> usize {
+            2
+        }
+
+        fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+            match tid {
+                1 => {
+                    let n = args[0];
+                    if n < 2 {
+                        ctx.emit(n);
+                    } else {
+                        let c0 = ctx.fork(1, vec![n - 1]) as i32;
+                        let c1 = ctx.fork(1, vec![n - 2]) as i32;
+                        ctx.join(2, vec![c0, c1]);
+                    }
+                }
+                2 => {
+                    let v = ctx.res[args[0] as usize] + ctx.res[args[1] as usize];
+                    ctx.emit(v);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn fib_ref(n: i32) -> i32 {
+        if n < 2 {
+            n
+        } else {
+            fib_ref(n - 1) + fib_ref(n - 2)
+        }
+    }
+
+    #[test]
+    fn fib_small() {
+        for n in 0..=15 {
+            let mut m = Interp::new(&Fib, 1 << 16, vec![n]);
+            m.run();
+            assert_eq!(m.root_result(), fib_ref(n), "fib({n})");
+        }
+    }
+
+    #[test]
+    fn fib_model_quantities() {
+        // T1 = total task-tree nodes; T∞ = 2n-1 epochs for fib(n>=2).
+        let mut m = Interp::new(&Fib, 1 << 16, vec![10]);
+        let st = m.run();
+        assert_eq!(st.epochs, 19); // 2*10 - 1
+        // work: fork-tree nodes + join reruns = 2*nodes - leaves
+        assert!(st.work > 0 && st.forks < st.work);
+        assert_eq!(st.emits, st.work - st.joins);
+    }
+
+    #[test]
+    fn reclaims_tv_space() {
+        // After completion the allocator should have unwound: the
+        // machine ends with only the root slot live.
+        let mut m = Interp::new(&Fib, 1 << 16, vec![12]);
+        let st = m.run();
+        assert!(st.peak_tv > 100);
+        assert_eq!(m.next_free, 0, "TV must be empty after halt");
+    }
+
+    #[test]
+    fn stack_parity_holds() {
+        let mut m = Interp::new(&Fib, 1 << 16, vec![8]);
+        m.run();
+        assert_eq!(m.join_stack.len(), 0);
+        assert_eq!(m.ndrange_stack.len(), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! The Task Vector Machine (paper §4) as a sequential reference
+//! interpreter.
+//!
+//! This is the *semantic oracle*: it executes a [`TvmProgram`] with the
+//! exact epoch/fork/join/emit/map rules that the AOT epoch-step
+//! artifacts implement vectorized. Integration tests drive the same
+//! program through [`crate::coordinator`] and through this interpreter
+//! and require identical results (and identical epoch/work counts).
+//!
+//! It also measures the two quantities of the paper's performance model
+//! (§4.4): work `T1` (total tasks executed) and critical path `T∞`
+//! (number of epochs), used by the `bench_tvm_model` bench (E7).
+
+mod interp;
+mod program;
+
+pub use interp::{Interp, InterpStats};
+pub use program::{ScatterOp, TaskCtx, TvmProgram, INVALID};

@@ -1,0 +1,107 @@
+//! The scalar TVM programming interface: what a task may do during its
+//! turn in an epoch (paper §4.3.2 — fork, join, emit, map, plus plain
+//! computation against the heaps).
+
+/// Invalid task-vector entry (paper: code 0).
+pub const INVALID: i32 = 0;
+
+/// Heap scatter merge operator. Tasks read the *pre-epoch* heap; their
+/// writes are merged at epoch end. `Min`/`Max`/`Add` are commutative and
+/// safe under same-epoch conflicts; `Set` requires unique indices within
+/// an epoch (app responsibility). This matches the vectorized epoch-step
+/// semantics exactly (see `treeslang/epoch.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScatterOp {
+    Set,
+    Min,
+    Max,
+    Add,
+}
+
+/// Per-task execution context handed to [`TvmProgram::run_task`].
+///
+/// `fork` returns the TV slot of the child — the scalar analogue of the
+/// vectorized `child_slots` — so the task can store it in its join args
+/// and later read the child's `emit` value from `res`.
+pub struct TaskCtx<'a> {
+    /// This task's TV slot.
+    pub slot: usize,
+    /// Current epoch number.
+    pub cen: i32,
+    /// Emit results (read-only view; writes go through `emit`).
+    pub res: &'a [i32],
+    /// App heaps, PRE-epoch state (writes go through `scatter_*`).
+    pub heap_i: &'a [i32],
+    pub heap_f: &'a [f32],
+    /// Read-only app data.
+    pub const_i: &'a [i32],
+    pub const_f: &'a [f32],
+    /// Per-epoch seed (matches the artifact's `seed` scalar).
+    pub seed: i32,
+    pub(crate) forks: Vec<(usize, Vec<i32>)>,
+    pub(crate) join: Option<(usize, Vec<i32>)>,
+    pub(crate) emit: Option<i32>,
+    pub(crate) maps: Vec<Vec<i32>>,
+    pub(crate) scatters_i: Vec<(usize, i32, ScatterOp)>,
+    pub(crate) scatters_f: Vec<(usize, f32, ScatterOp)>,
+    pub(crate) next_child_slot: usize,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// Fork `<tid, args>` to run next epoch; returns the child's TV slot.
+    pub fn fork(&mut self, tid: usize, args: Vec<i32>) -> usize {
+        let slot = self.next_child_slot;
+        self.next_child_slot += 1;
+        self.forks.push((tid, args));
+        slot
+    }
+
+    /// Replace this task with `<tid, args>`, scheduled to re-run after
+    /// all tasks forked this epoch complete (paper join semantics).
+    pub fn join(&mut self, tid: usize, args: Vec<i32>) {
+        assert!(self.join.is_none(), "double join in one task");
+        self.join = Some((tid, args));
+    }
+
+    /// Finish, storing `value` in this task's TV entry result.
+    pub fn emit(&mut self, value: i32) {
+        assert!(self.emit.is_none(), "double emit in one task");
+        self.emit = Some(value);
+    }
+
+    /// Enqueue a data-parallel map descriptor, run after this epoch.
+    pub fn map(&mut self, args: Vec<i32>) {
+        self.maps.push(args);
+    }
+
+    /// Merge `val` into `heap_i[idx]` at epoch end.
+    pub fn scatter_i(&mut self, idx: usize, val: i32, op: ScatterOp) {
+        self.scatters_i.push((idx, val, op));
+    }
+
+    /// Merge `val` into `heap_f[idx]` at epoch end.
+    pub fn scatter_f(&mut self, idx: usize, val: f32, op: ScatterOp) {
+        self.scatters_f.push((idx, val, op));
+    }
+}
+
+/// A TREES application in scalar form (mirrors the python `Program`).
+pub trait TvmProgram {
+    /// Number of task types T (tids are 1..=T, matching the artifact).
+    fn num_task_types(&self) -> usize;
+
+    /// Execute one task. `tid` is 1-based.
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx);
+
+    /// Execute one map descriptor (only for programs that `map`).
+    fn run_map(
+        &self,
+        _args: &[i32],
+        _heap_i: &mut [i32],
+        _heap_f: &mut [f32],
+        _const_i: &[i32],
+        _const_f: &[f32],
+    ) {
+        panic!("program has no map operation");
+    }
+}

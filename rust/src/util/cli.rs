@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+//! Typed getters with defaults; `usage()` text is assembled by the
+//! binary. Unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`, validating against the set of known option
+    /// names (without the `--`). Boolean flags take no value.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        known_opts: &[&str],
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        out.known = known_opts
+            .iter()
+            .chain(known_flags.iter())
+            .map(|s| s.to_string())
+            .collect();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if known_flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else if known_opts.contains(&key.as_str()) {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?,
+                    };
+                    out.opts.insert(key, v);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            argv("run --n 25 --workers=4 --verbose fib"),
+            &["n", "workers"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positionals(), &["run".to_string(), "fib".to_string()]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 25);
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(argv("--bogus 1"), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(argv("--n"), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv(""), &["n"], &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled substrates.
+//!
+//! The build environment is fully offline and only the `xla` crate's
+//! dependency closure is vendored, so the usual ecosystem crates
+//! (serde/clap/criterion/proptest/rand) are unavailable. Everything a
+//! production launcher needs is implemented here from scratch, each with
+//! its own unit tests.
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,146 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic, seeded case generation with greedy input shrinking for
+//! integer-vector-shaped cases. Used by the coordinator/TVM invariant
+//! tests (`rust/tests/`).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x5EED, max_shrink: 400 }
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure,
+/// greedily shrink (via `shrink`, which yields smaller candidates) and
+/// panic with the smallest failing input's Debug form.
+pub fn check<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Shrinker for `Vec<T>`: drop halves, drop single elements, and shrink
+/// elements toward zero via `elem`.
+pub fn shrink_vec<T: Clone>(v: &[T], elem: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n > 0 {
+        out.push(v[..n / 2].to_vec());
+        out.push(v[n / 2..].to_vec());
+        if n <= 16 {
+            for i in 0..n {
+                let mut w = v.to_vec();
+                w.remove(i);
+                out.push(w);
+            }
+            for i in 0..n {
+                for cand in elem(&v[i]) {
+                    let mut w = v.to_vec();
+                    w[i] = cand;
+                    out.push(w);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Shrinker for non-negative integers: 0, halves, decrement.
+pub fn shrink_int(x: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    if x != 0 {
+        out.push(0);
+        if x.abs() > 1 {
+            out.push(x / 2);
+        }
+        out.push(x - x.signum());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(
+            Config { cases: 50, ..Default::default() },
+            |r| r.below(100) as i64,
+            |x| shrink_int(*x),
+            |x| {
+                if *x >= 0 {
+                    Ok(())
+                } else {
+                    Err("negative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        check(
+            Config { cases: 200, ..Default::default() },
+            |r| r.below(1000) as i64,
+            |x| shrink_int(*x),
+            |x| {
+                if *x < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_reduces() {
+        let v = vec![3i64, 9, 1];
+        let cands = shrink_vec(&v, |x| shrink_int(*x));
+        assert!(cands.iter().any(|c| c.len() < 3));
+        assert!(cands.iter().any(|c| c.len() == 3 && c[1] < 9));
+    }
+}

@@ -1,0 +1,106 @@
+//! Summary statistics over timing samples (benchkit backend).
+
+/// Summary of a sample set, robust (median/MAD) and classical (mean/sd).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub sd: f64,
+    pub median: f64,
+    pub mad: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let median = percentile_sorted(&xs, 0.5);
+        let mut dev: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            min: xs[0],
+            max: xs[n - 1],
+            mean,
+            sd: var.sqrt(),
+            median,
+            mad: percentile_sorted(&dev, 0.5),
+            p05: percentile_sorted(&xs, 0.05),
+            p95: percentile_sorted(&xs, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    if xs.len() == 1 {
+        return xs[0];
+    }
+    let pos = q * (xs.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < xs.len() {
+        xs[i] * (1.0 - frac) + xs[i + 1] * frac
+    } else {
+        xs[i]
+    }
+}
+
+/// Pretty-print a nanosecond duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.sd, 0.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn summary_of_ramp() {
+        let xs: Vec<f64> = (1..=101).map(|x| x as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.median, 51.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 101.0);
+        assert!((s.mean - 51.0).abs() < 1e-9);
+        assert!((s.p05 - 6.0).abs() < 1e-9);
+        assert!((s.p95 - 96.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end tests for the §6.5 programmability apps: artifacts driven
+//! by the coordinator vs references / the scalar interpreter.
+
+use trees::apps::{annealing, matmul, nqueens, tree, tsp};
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::tvm::Interp;
+use trees::util::rng::Rng;
+
+fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
+    match load_manifest() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn tree_postorder_end_to_end() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("tree").unwrap();
+    let t = tree::BinTree::random(300, 7);
+    let w = tree::workload(app, &t).unwrap();
+    let co = Coordinator::for_workload(&dev, &dir, app, &w, Default::default()).unwrap();
+    let (st, _) = co.run(&w).unwrap();
+    assert_eq!(st.root_result(), 300, "root subtree size = n");
+    // postorder discipline on the stamps
+    for p in 0..t.n() {
+        for &c in [t.left[p], t.right[p]].iter() {
+            if c >= 0 && (t.left[c as usize] >= 0 || t.right[c as usize] >= 0) {
+                assert!(st.heap_i[p] > st.heap_i[c as usize], "p={p} c={c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn nqueens_counts_end_to_end() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("nqueens").unwrap();
+    for n in [4usize, 6, 8] {
+        let w = nqueens::workload(n);
+        let co =
+            Coordinator::for_workload(&dev, &dir, app, &w, Default::default()).unwrap();
+        let (st, stats) = co.run(&w).unwrap();
+        assert_eq!(st.root_result() as u64, nqueens::SOLUTIONS[n], "n={n}");
+        // differential: same task counts as the interpreter
+        let mut i = Interp::new(&nqueens::NQueens, 1 << 18, vec![0, 0, 0, 0])
+            .with_heaps(vec![], vec![], vec![n as i32], vec![]);
+        let istats = i.run();
+        assert_eq!(stats.epochs, istats.epochs, "n={n}");
+        assert_eq!(stats.work, istats.work, "n={n}");
+    }
+}
+
+#[test]
+fn matmul_end_to_end() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("matmul").unwrap();
+    let n = 16usize;
+    let mut rng = Rng::new(21);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32()).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32()).collect();
+    let (w, _nmat) = matmul::workload(app, &a, &b, n).unwrap();
+    let co = Coordinator::for_workload(&dev, &dir, app, &w, Default::default()).unwrap();
+    let (st, _) = co.run(&w).unwrap();
+    let want = matmul::matmul_ref(&a, &b, n);
+    for (i, (g, wv)) in st.heap_f[..n * n].iter().zip(want.iter()).enumerate() {
+        assert!((g - wv).abs() < 1e-3, "C[{i}]: {g} vs {wv}");
+    }
+}
+
+#[test]
+fn tsp_end_to_end() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("tsp").unwrap();
+    for (n, seed) in [(6usize, 4u64), (8, 5)] {
+        let dist = tsp::random_dist(n, seed);
+        let w = tsp::workload(&dist, n);
+        let co =
+            Coordinator::for_workload(&dev, &dir, app, &w, Default::default()).unwrap();
+        let (st, _) = co.run(&w).unwrap();
+        assert_eq!(st.root_result(), tsp::tsp_ref(&dist, n), "n={n}");
+        assert_eq!(st.heap_i[0], tsp::tsp_ref(&dist, n), "bound n={n}");
+    }
+}
+
+#[test]
+fn annealing_end_to_end_matches_interp() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("annealing").unwrap();
+    let w = annealing::workload(8, 150, 200);
+    let co = Coordinator::for_workload(&dev, &dir, app, &w, Default::default()).unwrap();
+    let (st, stats) = co.run(&w).unwrap();
+
+    let mut i = Interp::new(&annealing::Annealing, 1 << 14, vec![0, 0, 0, 0])
+        .with_heaps(vec![i32::MAX], vec![], vec![150, 8, 200, 0], vec![]);
+    let istats = i.run();
+    // fully deterministic: best energies identical across layers
+    assert_eq!(st.heap_i[0], i.heap_i[0]);
+    assert_eq!(stats.epochs, istats.epochs);
+    assert!(st.heap_i[0] < i32::MAX);
+}

@@ -1,0 +1,116 @@
+//! End-to-end integration: the AOT fib artifacts driven by the
+//! coordinator must agree with the sequential TVM interpreter on
+//! results AND on the machine-model quantities (epochs = T∞, work = T1,
+//! peak TV occupancy).
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are
+//! missing so plain `cargo test` works in a fresh checkout).
+
+use trees::apps::fib::{capacity_for, fib_ref, workload, Fib};
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::tvm::Interp;
+
+fn skip_if_no_artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
+    match load_manifest() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn fib_matches_interpreter_and_reference() {
+    let Some((manifest, dir)) = skip_if_no_artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app("fib").unwrap();
+
+    for n in [0u32, 1, 2, 3, 7, 12, 16] {
+        let co = Coordinator::new(
+            &dev,
+            &dir,
+            app,
+            capacity_for(n),
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let (st, stats) = co.run(&workload(n)).unwrap();
+
+        let mut interp = Interp::new(&Fib, capacity_for(n), vec![n as i32]);
+        let istats = interp.run();
+
+        assert_eq!(st.root_result() as u64, fib_ref(n), "fib({n}) result");
+        assert_eq!(interp.root_result() as u64, fib_ref(n));
+        assert_eq!(stats.epochs, istats.epochs, "T-inf for fib({n})");
+        assert_eq!(stats.work, istats.work, "T1 for fib({n})");
+        assert_eq!(stats.forks, istats.forks, "forks for fib({n})");
+        assert_eq!(stats.peak_tv, istats.peak_tv, "peak TV for fib({n})");
+    }
+}
+
+#[test]
+fn fib_buckets_agree() {
+    // Every window bucket must produce the same answer and the same
+    // epoch count (tiling may change launch counts, not semantics).
+    let Some((manifest, dir)) = skip_if_no_artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app("fib").unwrap();
+    let n = 14u32;
+
+    let mut results = Vec::new();
+    for bucket in [256usize, 4096] {
+        let cfg = CoordinatorConfig { force_bucket: bucket, ..Default::default() };
+        let co = Coordinator::new(&dev, &dir, app, capacity_for(n), cfg).unwrap();
+        let (st, stats) = co.run(&workload(n)).unwrap();
+        results.push((st.root_result(), stats.epochs, stats.work));
+    }
+    assert_eq!(results[0].0 as u64, fib_ref(n));
+    assert!(results.windows(2).all(|w| w[0] == w[1]), "{results:?}");
+}
+
+#[test]
+fn state_is_fully_reclaimed_after_halt() {
+    let Some((manifest, dir)) = skip_if_no_artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app("fib").unwrap();
+    let co = Coordinator::new(
+        &dev,
+        &dir,
+        app,
+        capacity_for(12),
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let (st, _) = co.run(&workload(12)).unwrap();
+    assert!(st.halted());
+    assert_eq!(st.next_free, 0, "TV must be empty after halt");
+}
+
+#[test]
+fn multi_tile_epochs_agree_with_single_bucket() {
+    // fib(20)'s widest epoch has ~10k live lanes: with the 256 bucket
+    // forced, every epoch tiles across ~40 sequential launches sharing
+    // one CEN. Results and machine quantities must be identical to the
+    // auto policy (tiling changes launches, never semantics).
+    let Some((manifest, dir)) = skip_if_no_artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app("fib").unwrap();
+    let n = 20u32;
+
+    let cfg_tiled = CoordinatorConfig { force_bucket: 256, ..Default::default() };
+    let co_tiled = Coordinator::new(&dev, &dir, app, capacity_for(n), cfg_tiled).unwrap();
+    let (st_a, stats_a) = co_tiled.run(&workload(n)).unwrap();
+
+    let co_auto = Coordinator::new(&dev, &dir, app, capacity_for(n),
+        CoordinatorConfig::default()).unwrap();
+    let (st_b, stats_b) = co_auto.run(&workload(n)).unwrap();
+
+    assert_eq!(st_a.root_result() as u64, fib_ref(n));
+    assert_eq!(st_a.root_result(), st_b.root_result());
+    assert_eq!(stats_a.epochs, stats_b.epochs, "T-inf is launch-invariant");
+    assert_eq!(stats_a.work, stats_b.work, "T1 is launch-invariant");
+    assert_eq!(stats_a.peak_tv, stats_b.peak_tv);
+    assert!(stats_a.launches > 2 * stats_b.launches, "tiling must have occurred");
+}

@@ -1,0 +1,86 @@
+//! End-to-end BFS/SSSP: the AOT artifacts driven by the coordinator must
+//! produce the reference distances on all three graph families, and the
+//! scalar interpreter must agree (dedup on the artifact side changes the
+//! task counts, not the distances).
+
+use trees::apps::graph_sp::{workload, GraphSp, Layout};
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::graph::{bfs_levels, dijkstra, gen, Csr};
+use trees::runtime::{load_manifest, Device};
+use trees::tvm::Interp;
+
+fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
+    match load_manifest() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn run_app(
+    dev: &Device,
+    manifest: &trees::runtime::Manifest,
+    dir: &std::path::PathBuf,
+    app_name: &str,
+    g: &Csr,
+    src: usize,
+) -> Vec<i32> {
+    let app = manifest.app(app_name).unwrap();
+    let (w, _lay) = workload(app, g, src).unwrap();
+    let co =
+        Coordinator::for_workload(dev, dir, app, &w, CoordinatorConfig::default()).unwrap();
+    let (st, stats) = co.run(&w).unwrap();
+    assert!(stats.epochs > 0);
+    st.heap_i[..g.num_vertices()].to_vec()
+}
+
+#[test]
+fn bfs_matches_reference_on_all_families() {
+    let Some((manifest, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    for (g, src) in [
+        (gen::grid2d(8, 1, 1), 0usize),
+        (gen::uniform(120, 3, 1, 2), 5),
+        (gen::rmat(6, 4, 1, 3), 1),
+    ] {
+        let dist = run_app(&dev, &manifest, &dir, "bfs", &g, src);
+        assert_eq!(dist, bfs_levels(&g, src));
+    }
+}
+
+#[test]
+fn sssp_matches_dijkstra_on_all_families() {
+    let Some((manifest, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    for (g, src) in [
+        (gen::grid2d(8, 9, 4), 0usize),
+        (gen::uniform(100, 4, 20, 5), 3),
+        (gen::rmat(6, 4, 7, 6), 0),
+    ] {
+        let dist = run_app(&dev, &manifest, &dir, "sssp", &g, src);
+        assert_eq!(dist, dijkstra(&g, src));
+    }
+}
+
+#[test]
+fn artifact_and_interpreter_agree_on_distances() {
+    let Some((manifest, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let g = gen::uniform(150, 3, 9, 11);
+    let src = 7;
+
+    let dist_artifact = run_app(&dev, &manifest, &dir, "sssp", &g, src);
+
+    let lay = Layout { vmax: 256, emax: 4096, weighted: true };
+    let prog = GraphSp { lay };
+    let mut m = Interp::new(&prog, 1 << 18, vec![src as i32, 0]).with_heaps(
+        lay.dist0(src),
+        vec![],
+        lay.pack(&g, src),
+        vec![],
+    );
+    m.run();
+    assert_eq!(dist_artifact, m.heap_i[..g.num_vertices()].to_vec());
+}

@@ -1,0 +1,62 @@
+//! Native baseline drivers vs reference algorithms.
+
+use trees::baselines::{Bitonic, Worklist};
+use trees::graph::{bfs_levels, dijkstra, gen};
+use trees::runtime::{load_manifest, Device};
+use trees::util::rng::Rng;
+
+fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
+    match load_manifest() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn native_bfs_matches_reference() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("native_bfs").unwrap();
+    for (g, src) in [
+        (gen::grid2d(8, 1, 1), 0usize),
+        (gen::uniform(150, 3, 1, 2), 5),
+        (gen::rmat(6, 4, 1, 3), 1),
+    ] {
+        let wl = Worklist::new(&dev, &dir, app, &g).unwrap();
+        let (dist, stats) = wl.run(&g, src).unwrap();
+        assert_eq!(dist, bfs_levels(&g, src));
+        assert!(stats.iterations > 1);
+    }
+}
+
+#[test]
+fn native_sssp_matches_dijkstra() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("native_sssp").unwrap();
+    for (g, src) in [
+        (gen::grid2d(8, 9, 4), 0usize),
+        (gen::uniform(120, 4, 20, 5), 3),
+    ] {
+        let wl = Worklist::new(&dev, &dir, app, &g).unwrap();
+        let (dist, _) = wl.run(&g, src).unwrap();
+        assert_eq!(dist, dijkstra(&g, src));
+    }
+}
+
+#[test]
+fn native_bitonic_sorts() {
+    let Some((m, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = m.app("native_bitonic").unwrap();
+    let b = Bitonic::new(&dev, &dir, app, 700).unwrap();
+    let mut rng = Rng::new(12);
+    let xs: Vec<f32> = (0..700).map(|_| rng.f32() * 100.0).collect();
+    let sorted = b.sort(&xs).unwrap();
+    let mut want = xs.clone();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(sorted, want);
+}

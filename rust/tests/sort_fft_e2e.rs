@@ -1,0 +1,87 @@
+//! End-to-end mergesort (both variants) and FFT through the AOT
+//! artifacts, vs references and the scalar interpreter.
+
+use trees::apps::{fft, msort};
+use trees::baselines::seq;
+use trees::coordinator::{Coordinator, CoordinatorConfig};
+use trees::runtime::{load_manifest, Device};
+use trees::util::rng::Rng;
+
+fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
+    match load_manifest() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn run_sort(app_name: &str, n: usize) {
+    let Some((manifest, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app(app_name).unwrap();
+    let mut rng = Rng::new(n as u64);
+    let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+    let (w, nmax, n2) = msort::workload(app, &data).unwrap();
+    let co =
+        Coordinator::for_workload(&dev, &dir, app, &w, CoordinatorConfig::default())
+            .unwrap();
+    let (st, stats) = co.run(&w).unwrap();
+    let off = msort::final_offset(nmax, n2);
+    let got = &st.heap_f[off..off + n];
+    let mut want = data.clone();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(got, &want[..], "{app_name} n={n}");
+    if app_name == "msort_map" {
+        assert!(stats.map_launches > 0, "map variant must launch maps");
+    }
+}
+
+#[test]
+fn naive_mergesort_sorts() {
+    for n in [16usize, 100, 512] {
+        run_sort("mergesort", n);
+    }
+}
+
+#[test]
+fn map_mergesort_sorts() {
+    for n in [16usize, 300, 1024, 5000] {
+        run_sort("msort_map", n);
+    }
+}
+
+#[test]
+fn fft_matches_seq_fft() {
+    let Some((manifest, dir)) = artifacts() else { return };
+    let dev = Device::cpu().unwrap();
+    let app = manifest.app("fft").unwrap();
+    for n in [8usize, 64, 512] {
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let (w, nmax) = fft::workload(app, &x).unwrap();
+        let co = Coordinator::for_workload(
+            &dev,
+            &dir,
+            app,
+            &w,
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let (st, _) = co.run(&w).unwrap();
+        let got = fft::extract(&st.heap_f, nmax, n);
+
+        let mut re = x.clone();
+        let mut im = vec![0f32; n];
+        seq::fft_dif(&mut re, &mut im);
+        let want = seq::bitrev_permute(&re, &im);
+        for (k, (g, wv)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g.0 - wv.0).abs() < 1e-2 * (n as f32).sqrt()
+                    && (g.1 - wv.1).abs() < 1e-2 * (n as f32).sqrt(),
+                "n={n} k={k}: {g:?} vs {wv:?}"
+            );
+        }
+    }
+}
