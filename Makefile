@@ -1,0 +1,36 @@
+# TREES — build / test entry points.
+#
+#   make check      tier-1: release build + full test suite (offline;
+#                   artifact e2e tests self-skip without artifacts)
+#   make fmt        rustfmt the workspace
+#   make fmt-check  rustfmt in --check mode (CI)
+#   make artifacts  AOT-lower the epoch-step programs to HLO text
+#                   (needs the python/compile JAX toolchain)
+#   make bench      run all paper benches (skip-aware)
+
+CARGO ?= cargo
+
+.PHONY: check build test fmt fmt-check artifacts bench pytest
+
+check: build test
+
+build:
+	cd rust && $(CARGO) build --release
+
+test:
+	cd rust && $(CARGO) test -q
+
+fmt:
+	cd rust && $(CARGO) fmt --all
+
+fmt-check:
+	cd rust && $(CARGO) fmt --all --check
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+pytest:
+	cd python && python -m pytest -q tests
+
+bench:
+	cd rust && $(CARGO) bench

@@ -1,0 +1,408 @@
+"""Deterministic twin of rust/src/sched for the EXPERIMENTS.md tables.
+
+The offline container has no Rust toolchain, so this script mirrors the
+exact counting semantics of the fused scheduler (rust/src/sched) and the
+cost model (rust/src/simt) for apps whose epoch schedules are
+RNG-independent: fib, mergesort (structure does not depend on the data
+values), nqueens, and BFS on the deterministic 4-neighbor grid. Every
+quantity printed here is a *model* quantity (epoch counts, live lanes,
+bucket-tiled launches, GpuModel microseconds) — `cargo bench --bench
+bench_fusion` computes the same numbers from the real machines.
+
+Run:  python tools/fusion_model.py
+"""
+
+import math
+
+# ------------------------------- TVM machine (mirrors tvm::Interp)
+
+
+class Ctx:
+    def __init__(self, res, heap, const, next_child):
+        self.res = res
+        self.heap = heap
+        self.const = const
+        self.forks = []
+        self.join = None
+        self.emit = None
+        self.scat_min = []
+        self.next_child = next_child
+
+    def fork(self, tid, args):
+        slot = self.next_child
+        self.next_child += 1
+        self.forks.append((tid, args))
+        return slot
+
+    def do_join(self, tid, args):
+        self.join = (tid, args)
+
+    def do_emit(self, v):
+        self.emit = v
+
+    def scatter_min(self, idx, val):
+        self.scat_min.append((idx, val))
+
+
+class Machine:
+    """The reference interpreter's counters (tvm::Interp twin)."""
+
+    def __init__(self, run_task, t_types, capacity, init_args,
+                 heap=None, const=None):
+        self.run_task = run_task
+        self.T = t_types
+        self.code = [0] * capacity
+        self.args = [None] * capacity
+        self.res = [0] * capacity
+        self.heap = heap or []
+        self.const = const or []
+        self.code[0] = 1  # epoch 0, tid 1
+        self.args[0] = list(init_args)
+        self.next_free = 1
+        self.join_stack = [0]
+        self.nd_stack = [(0, 1)]
+        self.epochs = 0
+        self.work = 0
+
+    def front(self):
+        if not self.join_stack:
+            return None
+        return (self.join_stack[-1],) + self.nd_stack[-1]
+
+    def live_in(self, cen, lo, hi):
+        n = 0
+        for s in range(lo, hi):
+            c = self.code[s]
+            if c > 0 and (c - 1) // self.T == cen:
+                n += 1
+        return n
+
+    def step(self):
+        if not self.join_stack:
+            return False
+        cen = self.join_stack.pop()
+        lo, hi = self.nd_stack.pop()
+        old_nf = self.next_free
+        join_scheduled = False
+        scat = []
+        for slot in range(lo, hi):
+            c = self.code[slot]
+            if c <= 0 or (c - 1) // self.T != cen:
+                continue
+            tid = c - ((c - 1) // self.T) * self.T
+            self.work += 1
+            ctx = Ctx(self.res, self.heap, self.const, self.next_free)
+            self.run_task(tid, self.args[slot], ctx)
+            for ftid, fargs in ctx.forks:
+                s = self.next_free
+                self.code[s] = (cen + 1) * self.T + ftid
+                self.args[s] = fargs
+                self.next_free += 1
+            if ctx.join is not None:
+                jtid, jargs = ctx.join
+                self.code[slot] = cen * self.T + jtid
+                self.args[slot] = jargs
+                join_scheduled = True
+            else:
+                self.code[slot] = 0
+            if ctx.emit is not None:
+                self.res[slot] = ctx.emit
+            scat.extend(ctx.scat_min)
+        self.epochs += 1
+        for idx, val in scat:
+            self.heap[idx] = min(self.heap[idx], val)
+        # tms_update (tvm::tms_update twin)
+        if join_scheduled:
+            self.join_stack.append(cen)
+            self.nd_stack.append((lo, hi))
+        if self.next_free > old_nf:
+            self.join_stack.append(cen + 1)
+            self.nd_stack.append((old_nf, self.next_free))
+        if not join_scheduled and self.next_free == old_nf \
+                and hi == self.next_free:
+            self.next_free = lo
+        return True
+
+
+# ------------------------------- apps (sched::job builder twins)
+
+
+def fib_cap(n):
+    a, b = 0, 1
+    for _ in range(n + 1):
+        a, b = b, a + b
+    return max(2 * a, 64) + 64
+
+
+def make_fib(n):
+    def run(tid, args, ctx):
+        if tid == 1:
+            m = args[0]
+            if m < 2:
+                ctx.do_emit(m)
+            else:
+                c0 = ctx.fork(1, [m - 1])
+                c1 = ctx.fork(1, [m - 2])
+                ctx.do_join(2, [c0, c1])
+        else:
+            ctx.do_emit(ctx.res[args[0]] + ctx.res[args[1]])
+    return Machine(run, 2, fib_cap(n), [n])
+
+
+def make_nqueens(n):
+    def run(tid, args, ctx):
+        if tid == 1:
+            row, cols, d1, d2 = args
+            if row >= n:
+                ctx.do_emit(1)
+                return
+            attacked = cols | d1 | d2
+            first, count = -1, 0
+            for c in range(n):
+                bit = 1 << c
+                if attacked & bit == 0:
+                    s = ctx.fork(1, [row + 1, cols | bit,
+                                     ((d1 | bit) << 1) & 0xFFF,
+                                     (d2 | bit) >> 1])
+                    if first < 0:
+                        first = s
+                    count += 1
+            if count > 0:
+                ctx.do_join(2, [first, count])
+            else:
+                ctx.do_emit(0)
+        else:
+            first, count = args
+            ctx.do_emit(sum(ctx.res[first + k] for k in range(count)))
+    return Machine(run, 2, 1 << 16 if n <= 8 else 1 << 21, [0, 0, 0, 0])
+
+
+G_LEAF = 4
+
+
+def make_msort(n):
+    n2 = 1
+    while n2 < max(n, G_LEAF):
+        n2 *= 2
+
+    def run(tid, args, ctx):
+        if tid == 1:
+            lo, hi = args
+            if hi - lo > G_LEAF:
+                mid = (lo + hi) // 2
+                ctx.fork(1, [lo, mid])
+                ctx.fork(1, [mid, hi])
+                ctx.do_join(2, [lo, mid, hi])
+            # leaf sort: scatters only; no effect on the schedule
+        # merge task: full-range serial merge, no forks
+    return Machine(run, 2, max(16 * n2, 64), [0, n2])
+
+
+def grid_csr(side):
+    """gen::grid2d adjacency (weights ignored: BFS is unweighted)."""
+    adj = [[] for _ in range(side * side)]
+    vid = lambda r, c: r * side + c
+    for r in range(side):
+        for c in range(side):
+            if c + 1 < side:
+                adj[vid(r, c)].append(vid(r, c + 1))
+                adj[vid(r, c + 1)].append(vid(r, c))
+            if r + 1 < side:
+                adj[vid(r, c)].append(vid(r + 1, c))
+                adj[vid(r + 1, c)].append(vid(r, c))
+    row_ptr, col = [0], []
+    for u in range(len(adj)):
+        col.extend(adj[u])
+        row_ptr.append(len(col))
+    return row_ptr, col
+
+
+def make_bfs(side):
+    row_ptr, col = grid_csr(side)
+    nv = side * side
+    ne = len(col)
+    INF = 1 << 30
+    heap = [INF] * nv
+    heap[0] = 0
+
+    def run(tid, args, ctx):
+        if tid == 1:  # visit
+            u, d = args
+            if ctx.heap[u] != d:
+                return
+            rp0, rp1 = row_ptr[u], row_ptr[u + 1]
+            if rp1 > rp0:
+                ctx.fork(2, [u, rp0, rp1, d])
+        else:  # expand
+            u, lo, hi, d = args
+            if ctx.heap[u] != d:
+                return
+            if hi - lo > 2:
+                mid = (lo + hi) // 2
+                ctx.fork(2, [u, lo, mid, d])
+                ctx.fork(2, [u, mid, hi, d])
+            else:
+                for e in range(lo, hi):
+                    v = col[e]
+                    nd = d + 1
+                    if nd < ctx.heap[v]:
+                        ctx.scatter_min(v, nd)
+                        ctx.fork(1, [v, nd])
+    return Machine(run, 2, 64 * (nv + 4 * ne) + 64, [0, 0], heap=heap)
+
+
+def build(token):
+    app, _, arg = token.partition(":")
+    n = int(arg)
+    return {"fib": make_fib, "mergesort": make_msort,
+            "nqueens": make_nqueens, "bfs": make_bfs}[app](n)
+
+
+# ------------------------------- fuser + policy + model twins
+
+BUCKETS = [256, 1024, 4096]
+CAPACITY, SLICE_CAP = 4096, 1024
+CUS, SIMD, TASK_CYCLES, GHZ, LAUNCH_US, DIVERGENCE = 8, 64, 400.0, 0.72, 10.0, 2.0
+
+
+def launches_for(length):
+    if length == 0:
+        return 0
+    n = 0
+    while length > 0:
+        w = next((b for b in BUCKETS if b >= length), BUCKETS[-1])
+        length = max(0, length - w)
+        n += 1
+    return n
+
+
+def epoch_us(live, launches):
+    waves = max(math.ceil(live / (CUS * SIMD)), 1.0)
+    return waves * TASK_CYCLES * DIVERGENCE / (GHZ * 1e3) + launches * LAUNCH_US
+
+
+def fused_epoch_us(live_per_job):
+    total = sum(live_per_job)
+    waves = max(math.ceil(total / (CUS * SIMD)), 1.0)
+    jobs_live = sum(1 for l in live_per_job if l > 0)
+    boundary = min(max(jobs_live - 1, 0), waves - 1)
+    coherent = waves - boundary
+    wave_us = TASK_CYCLES / (GHZ * 1e3)
+    split = max(math.log2(SIMD), DIVERGENCE)
+    return (coherent * DIVERGENCE + boundary * split) * wave_us + LAUNCH_US
+
+
+class RoundRobin:
+    def __init__(self):
+        self.cursor = 0
+
+    def select(self, fronts):
+        if not fronts:
+            return []
+        n = len(fronts)
+        start = self.cursor % n
+        budget = CAPACITY
+        out = []
+        for k in range(n):
+            idx, length = fronts[(start + k) % n]
+            charge = max(min(length, SLICE_CAP), 1)
+            if not out or charge <= budget:
+                out.append(idx)
+                budget = max(0, budget - charge)
+        self.cursor = (start + 1) % n
+        return out
+
+    def retire(self, pos):
+        if pos < self.cursor:
+            self.cursor -= 1
+
+
+def run_fused(tokens):
+    machines = [build(t) for t in tokens]
+    active = list(range(len(machines)))
+    policy = RoundRobin()
+    steps = launches = work = 0
+    fused_us = 0.0
+    while active:
+        fronts = []
+        for i, a in enumerate(active):
+            cen, lo, hi = machines[a].front()
+            fronts.append((i, hi - lo))
+        sel = policy.select(fronts)
+        live_per_job, window = [], 0
+        for i in sel:
+            m = machines[active[i]]
+            cen, lo, hi = m.front()
+            live_per_job.append(m.live_in(cen, lo, hi))
+            window += hi - lo
+        step_launches = launches_for(window)
+        steps += 1
+        launches += step_launches
+        work += sum(live_per_job)
+        fused_us += fused_epoch_us(live_per_job) \
+            + (step_launches - 1) * LAUNCH_US
+        for i in sel:
+            machines[active[i]].step()
+        pos = 0
+        while pos < len(active):
+            if machines[active[pos]].front() is None:
+                active.pop(pos)
+                policy.retire(pos)
+            else:
+                pos += 1
+    return dict(steps=steps, launches=launches, work=work, us=fused_us)
+
+
+def run_solo(tokens):
+    launches = syncs = work = 0
+    us = 0.0
+    for t in tokens:
+        m = build(t)
+        while m.front() is not None:
+            cen, lo, hi = m.front()
+            live = m.live_in(cen, lo, hi)
+            l = launches_for(hi - lo)
+            launches += l
+            syncs += 1
+            us += epoch_us(live, l)
+            m.step()
+        work += m.work
+    return dict(launches=launches, syncs=syncs, work=work, us=us)
+
+
+MIXES = [
+    ("4x fib:16", ["fib:16"] * 4),
+    ("8x fib:14", ["fib:14"] * 8),
+    ("trio fib+bfs+msort", ["fib:16", "bfs:5", "mergesort:256"]),
+    ("2x trio", ["fib:16", "fib:14", "bfs:5", "bfs:6",
+                 "mergesort:256", "mergesort:128"]),
+    ("8-job mixed", ["fib:18", "fib:16", "bfs:6", "bfs:7", "mergesort:512",
+                     "mergesort:256", "nqueens:6", "nqueens:5"]),
+]
+
+
+def main():
+    rows = []
+    for name, tokens in MIXES:
+        solo = run_solo(tokens)
+        fused = run_fused(tokens)
+        assert fused["work"] == solo["work"], (name, fused, solo)
+        assert fused["launches"] < solo["launches"], name
+        rows.append((name, len(tokens), solo, fused))
+
+    hdr = ("| mix | jobs | work T1 | solo launches | fused launches | "
+           "launches saved | solo syncs | fused epochs | V∞ saved (µs) | "
+           "solo APU (µs) | fused APU (µs) | speedup |")
+    print(hdr)
+    print("|" + "---|" * 12)
+    for name, k, s, f in rows:
+        saved = s["launches"] - f["launches"]
+        print(f"| {name} | {k} | {s['work']} | {s['launches']} | "
+              f"{f['launches']} | {saved} ({100 * saved / s['launches']:.0f}%) | "
+              f"{s['syncs']} | {f['steps']} | {saved * LAUNCH_US:.0f} | "
+              f"{s['us']:.0f} | {f['us']:.0f} | "
+              f"{s['us'] / f['us']:.2f}x |")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ use trees::baselines::Worklist;
 use trees::benchkit::Table;
 use trees::coordinator::{Coordinator, CoordinatorConfig};
 use trees::graph::{bfs_levels, gen, Csr};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 
 pub fn graph_set(full: bool) -> Vec<(String, Csr)> {
     if full {
@@ -28,12 +28,8 @@ pub fn graph_set(full: bool) -> Vec<(String, Csr)> {
 }
 
 fn main() {
-    let (manifest, dir) = match load_manifest() {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("SKIP bench_bfs: {e}");
-            return;
-        }
+    let Some((manifest, dir)) = artifacts_available() else {
+        return;
     };
     let full = std::env::var("TREES_BENCH_FULL").is_ok();
     let dev = Device::cpu().expect("pjrt client");

@@ -9,16 +9,12 @@ use trees::baselines::seq;
 use trees::benchkit::{black_box, time_once, Table};
 use trees::cilk::{self, Pool};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::util::rng::Rng;
 
 fn main() {
-    let (manifest, dir) = match load_manifest() {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("SKIP bench_fft: {e}");
-            return;
-        }
+    let Some((manifest, dir)) = artifacts_available() else {
+        return;
     };
     let full = std::env::var("TREES_BENCH_FULL").is_ok();
     let sizes: Vec<usize> = if full {

@@ -1,0 +1,163 @@
+//! Epoch fusion — N solo coordinator runs vs one fused run.
+//!
+//! The paper's V∞ (kernel launch + flag transfer) is paid per epoch per
+//! job when jobs run solo; the fused scheduler packs the live fronts of
+//! all co-resident jobs into one shared task vector, paying one launch
+//! and one sync per *shared* epoch. This bench reports, per mix:
+//!
+//!   * launches: solo Σ vs fused (must be strictly fewer);
+//!   * syncs (epoch flag transfers): solo Σ vs fused steps;
+//!   * modeled APU time via `simt::GpuModel` — `epoch_us` replayed on
+//!     each solo trace vs `fused_epoch_us` on the fused trace (the one
+//!     shared formula, see EXPERIMENTS.md).
+//!
+//! Runs entirely on the pure-Rust engines (no artifacts needed).
+
+use trees::benchkit::Table;
+use trees::sched::{
+    modeled_fused_us, modeled_solo_us, solo_profile, FusedScheduler, Fuser,
+    JobBuild, JobSpec, SchedConfig,
+};
+use trees::simt::GpuModel;
+
+fn builds_for(tokens: &[&str]) -> Vec<JobBuild> {
+    tokens
+        .iter()
+        .map(|t| {
+            JobSpec::parse(t)
+                .and_then(|s| s.instantiate())
+                .unwrap_or_else(|e| panic!("{t}: {e}"))
+        })
+        .collect()
+}
+
+struct MixResult {
+    solo_launches: u64,
+    solo_syncs: u64,
+    solo_us: f64,
+    fused_launches: u64,
+    fused_steps: u64,
+    fused_us: f64,
+    jobs: usize,
+}
+
+fn run_mix(tokens: &[&str]) -> MixResult {
+    let cfg = SchedConfig { trace: true, ..Default::default() };
+    let fuser = Fuser::new(cfg.buckets.clone());
+    let model = GpuModel::default();
+
+    let builds = builds_for(tokens);
+    let mut solo_launches = 0u64;
+    let mut solo_syncs = 0u64;
+    let mut solo_us = 0.0;
+    for b in &builds {
+        let p = solo_profile(b.prog.as_ref(), &b.init, &fuser);
+        solo_launches += p.launches;
+        solo_syncs += p.epochs;
+        solo_us += modeled_solo_us(&model, &p.trace);
+    }
+
+    let mut sched = FusedScheduler::new(cfg);
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion().expect("fused run");
+    let s = sched.stats();
+    MixResult {
+        solo_launches,
+        solo_syncs,
+        solo_us,
+        fused_launches: s.launches,
+        fused_steps: s.steps,
+        fused_us: modeled_fused_us(&model, &s.trace),
+        jobs: builds.len(),
+    }
+}
+
+fn main() {
+    // The first five mixes are exactly EXPERIMENTS.md E-FUSE-1 (also
+    // reproduced by python/tools/fusion_model.py — all five are
+    // RNG-independent, so the counters must agree line for line).
+    // The last mix adds the RNG-dependent apps the python twin cannot
+    // model (uniform/rmat graphs, sssp weights, tsp distances).
+    let mixes: Vec<(&str, Vec<&str>)> = vec![
+        ("4x fib:16", vec!["fib:16"; 4]),
+        ("8x fib:14", vec!["fib:14"; 8]),
+        ("trio fib+bfs+msort", vec!["fib:16", "bfs:grid:5", "mergesort:256"]),
+        (
+            "2x trio",
+            vec![
+                "fib:16",
+                "fib:14",
+                "bfs:grid:5",
+                "bfs:grid:6",
+                "mergesort:256",
+                "mergesort:128",
+            ],
+        ),
+        (
+            "8-job mixed",
+            vec![
+                "fib:18",
+                "fib:16",
+                "bfs:grid:6",
+                "bfs:grid:7",
+                "mergesort:512",
+                "mergesort:256",
+                "nqueens:6",
+                "nqueens:5",
+            ],
+        ),
+        (
+            "rng mixed",
+            vec![
+                "bfs:uniform:6",
+                "sssp:grid:5",
+                "sssp:rmat:5",
+                "tsp:7",
+                "fib:15",
+                "mergesort:200",
+            ],
+        ),
+    ];
+
+    let mut t = Table::new(
+        "Epoch fusion — launches / syncs / modeled APU vs N solo runs",
+        &[
+            "mix", "jobs", "solo launch", "fused launch", "saved",
+            "solo sync", "fused sync", "solo APU (us)", "fused APU (us)",
+            "speedup",
+        ],
+    );
+    for (name, tokens) in &mixes {
+        let r = run_mix(tokens);
+        assert!(
+            r.fused_launches < r.solo_launches,
+            "{name}: fused {} must be strictly fewer than solo {}",
+            r.fused_launches,
+            r.solo_launches
+        );
+        t.row(vec![
+            name.to_string(),
+            r.jobs.to_string(),
+            r.solo_launches.to_string(),
+            r.fused_launches.to_string(),
+            format!(
+                "{:.0}%",
+                100.0 * (r.solo_launches - r.fused_launches) as f64
+                    / r.solo_launches as f64
+            ),
+            r.solo_syncs.to_string(),
+            r.fused_steps.to_string(),
+            format!("{:.0}", r.solo_us),
+            format!("{:.0}", r.fused_us),
+            format!("{:.2}x", r.solo_us / r.fused_us.max(1e-9)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\none fused launch pays V_inf for every co-resident tenant \
+         (work-together across jobs); savings grow with tenant count and \
+         shrink as fronts widen past the window buckets."
+    );
+}

@@ -5,15 +5,11 @@
 use trees::apps::fib;
 use trees::benchkit::Table;
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 
 fn main() {
-    let (manifest, dir) = match load_manifest() {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("SKIP bench_overhead: {e}");
-            return;
-        }
+    let Some((manifest, dir)) = artifacts_available() else {
+        return;
     };
     let dev = Device::cpu().expect("pjrt client");
     let app = manifest.app("fib").unwrap();

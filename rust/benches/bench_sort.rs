@@ -8,16 +8,12 @@ use trees::apps::msort;
 use trees::baselines::{seq, Bitonic};
 use trees::benchkit::{black_box, time_once, Table};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::util::rng::Rng;
 
 fn main() {
-    let (manifest, dir) = match load_manifest() {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("SKIP bench_sort: {e}");
-            return;
-        }
+    let Some((manifest, dir)) = artifacts_available() else {
+        return;
     };
     let full = std::env::var("TREES_BENCH_FULL").is_ok();
     let sizes: Vec<usize> = if full {

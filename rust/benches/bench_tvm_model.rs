@@ -6,16 +6,12 @@
 use trees::apps::{fib, nqueens, tree};
 use trees::benchkit::Table;
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::tvm::Interp;
 
 fn main() {
-    let (manifest, dir) = match load_manifest() {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("SKIP bench_tvm_model: {e}");
-            return;
-        }
+    let Some((manifest, dir)) = artifacts_available() else {
+        return;
     };
     let dev = Device::cpu().expect("pjrt client");
 

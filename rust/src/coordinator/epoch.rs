@@ -1,6 +1,13 @@
 //! The epoch loop: Phase 1 (setup) → Phase 2 (bulk launch) → Phase 3
 //! (TMS update), repeated until the join/NDRange stacks empty
 //! (paper §4.3, §5.2).
+//!
+//! The loop is factored into [`Coordinator::begin_run`] /
+//! [`Coordinator::step`] / [`Coordinator::finish_run`] so that a single
+//! epoch can be driven externally: the solo [`Coordinator::run`] loop
+//! and the fused multi-tenant scheduler ([`crate::sched`]) share the
+//! same Phase 1–3 implementation, and the Phase-3 stack discipline is
+//! the same [`crate::tvm::tms_update`] the reference interpreter uses.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -8,10 +15,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::client::lit;
-use crate::runtime::{AppManifest, ArtifactInfo, Device, Executable};
+use crate::runtime::{AppManifest, ArtifactInfo, Device, ExecStats, Executable};
+use crate::tvm::tms_update;
 
 use super::state::TvState;
-use super::workload::Workload;
+use super::workload::{GatherFn, Workload};
 
 /// Tunables for the coordinator.
 #[derive(Debug, Clone)]
@@ -63,6 +71,26 @@ pub struct RunStats {
 struct Bucket {
     info: ArtifactInfo,
     exe: Executable,
+}
+
+/// Per-run execution context: read-only literals built once, the map
+/// queue, and the stats under accumulation. Owned by `run_state` for
+/// solo runs; owned per-tenant by the fused scheduler so several
+/// concurrent runs can interleave epochs on one coordinator set.
+pub struct RunCtx {
+    stats: RunStats,
+    map_queue: Vec<i32>,
+    lit_const_i: xla::Literal,
+    lit_const_f: xla::Literal,
+    exec0: Vec<ExecStats>,
+    t_run: Instant,
+}
+
+impl RunCtx {
+    /// The stats accumulated so far (finalized by `finish_run`).
+    pub fn stats(&self) -> &RunStats {
+        &self.stats
+    }
 }
 
 /// The TREES coordinator for one (app, size-class) pair.
@@ -157,6 +185,13 @@ impl<'d> Coordinator<'d> {
         &self.cls
     }
 
+    /// Window bucket sizes available (ascending) — the launch-tiling
+    /// granularity, exposed so the fused scheduler models launches with
+    /// the same buckets the artifacts actually have.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.info.w).collect()
+    }
+
     /// Total compile time of the loaded executables.
     pub fn compile_ns(&self) -> u64 {
         self.buckets.iter().map(|b| b.exe.compile_ns).sum::<u64>()
@@ -206,228 +241,274 @@ impl<'d> Coordinator<'d> {
         Ok((st, stats))
     }
 
+    /// Start a run over `st`: snapshot executable stats and build the
+    /// read-only literals once (their contents never change).
+    pub fn begin_run(&self, st: &TvState) -> RunCtx {
+        let mut stats = RunStats::default();
+        stats.compile_ns = self.compile_ns();
+        RunCtx {
+            stats,
+            map_queue: Vec::new(),
+            lit_const_i: lit::i32s(&st.const_i),
+            lit_const_f: lit::f32s(&st.const_f),
+            exec0: self.buckets.iter().map(|b| b.exe.stats()).collect(),
+            t_run: Instant::now(),
+        }
+    }
+
+    /// Pop and execute exactly one epoch (Phases 1–3). Returns `false`
+    /// when the machine has halted. The fused scheduler calls this per
+    /// tenant per shared epoch; `run_state` calls it in a loop.
+    pub fn step(
+        &self,
+        st: &mut TvState,
+        gather: Option<GatherFn>,
+        rc: &mut RunCtx,
+    ) -> Result<bool> {
+        let Some(cen) = st.join_stack.pop() else {
+            return Ok(false);
+        };
+        let (lo, hi) = st.ndrange_stack.pop().expect("stack parity violated");
+        if rc.stats.epochs >= self.cfg.max_epochs {
+            bail!("epoch limit {} exceeded", self.cfg.max_epochs);
+        }
+        self.run_one_epoch(st, cen, lo, hi, gather, rc)?;
+        Ok(true)
+    }
+
+    /// Finalize a run: wall time and executable-stat deltas.
+    pub fn finish_run(&self, mut rc: RunCtx) -> RunStats {
+        rc.stats.total_ns = rc.t_run.elapsed().as_nanos() as u64;
+        let agg: Vec<_> = self.buckets.iter().map(|b| b.exe.stats()).collect();
+        rc.stats.exec_ns =
+            agg.iter().zip(&rc.exec0).map(|(a, z)| a.exec_ns - z.exec_ns).sum();
+        rc.stats.bytes_up =
+            agg.iter().zip(&rc.exec0).map(|(a, z)| a.bytes_up - z.bytes_up).sum();
+        rc.stats.bytes_down = agg
+            .iter()
+            .zip(&rc.exec0)
+            .map(|(a, z)| a.bytes_down - z.bytes_down)
+            .sum();
+        rc.stats
+    }
+
     /// Drive an existing state to halt (exposed for differential tests).
     pub fn run_state(
         &self,
         st: &mut TvState,
-        gather: Option<super::workload::GatherFn>,
+        gather: Option<GatherFn>,
     ) -> Result<RunStats> {
-        let t_run = Instant::now();
-        let mut stats = RunStats::default();
-        stats.compile_ns = self.compile_ns();
-        let mut map_queue: Vec<i32> = Vec::new();
-        // snapshot cumulative executable stats so this run reports deltas
-        let exec0: Vec<_> = self.buckets.iter().map(|b| b.exe.stats()).collect();
-        // Read-only inputs never change: build their literals once.
-        let lit_const_i = lit::i32s(&st.const_i);
-        let lit_const_f = lit::f32s(&st.const_f);
+        let mut rc = self.begin_run(st);
+        while self.step(st, gather, &mut rc)? {}
+        debug_assert!(st.ndrange_stack.is_empty(), "stacks must empty together");
+        Ok(self.finish_run(rc))
+    }
 
-        while let Some(cen) = st.join_stack.pop() {
-            let (lo, hi) = st.ndrange_stack.pop().expect("stack parity violated");
-            if stats.epochs >= self.cfg.max_epochs {
-                bail!("epoch limit {} exceeded", self.cfg.max_epochs);
-            }
-            // ---- Phase 1: epoch setup (paper §5.2.2) ----
-            let old_next_free = st.next_free;
-            let mut join_scheduled = false;
-            let mut map_scheduled = false;
-            let mut epoch_live = 0u32;
-            let mut epoch_forked = 0u32;
+    /// One epoch over `[lo, hi)` at epoch number `cen`: tile the NDRange
+    /// across window launches, write back, splice forks, run maps, and
+    /// apply the shared TMS update.
+    fn run_one_epoch(
+        &self,
+        st: &mut TvState,
+        cen: i32,
+        lo: usize,
+        hi: usize,
+        gather: Option<GatherFn>,
+        rc: &mut RunCtx,
+    ) -> Result<()> {
+        // ---- Phase 1: epoch setup (paper §5.2.2) ----
+        let old_next_free = st.next_free;
+        let mut join_scheduled = false;
+        let mut map_scheduled = false;
+        let mut epoch_live = 0u32;
+        let mut epoch_forked = 0u32;
 
-            // Tile the NDRange across window launches (same CEN).
-            let mut tlo = lo;
-            while tlo < hi {
-                let b = self.bucket_for(hi - tlo);
-                let w = b.info.w;
-                let active = (hi - tlo).min(w);
+        // Tile the NDRange across window launches (same CEN).
+        let mut tlo = lo;
+        while tlo < hi {
+            let b = self.bucket_for(hi - tlo);
+            let w = b.info.w;
+            let active = (hi - tlo).min(w);
 
-                // ---- Phase 2: marshal + bulk launch ----
-                let t0 = Instant::now();
-                let a = self.app.a;
-                let g = self.app.g.max(1);
-                let t_types = self.app.t as i32;
-                let mut win_code = vec![0i32; w];
-                win_code[..active].copy_from_slice(&st.code[tlo..tlo + active]);
-                let mut win_args = vec![0i32; w * a];
-                win_args[..active * a]
-                    .copy_from_slice(&st.args[tlo * a..(tlo + active) * a]);
-                // host-side res pre-gather (res never crosses to device)
-                let mut res_win = vec![0i32; w * g];
-                if let Some(gf) = gather {
-                    for i in 0..active {
-                        let code = win_code[i];
-                        if code <= 0 {
-                            continue;
-                        }
-                        let tid = (code - (code - 1) / t_types * t_types) as usize;
-                        gf(
-                            tid,
-                            &win_args[i * a..(i + 1) * a],
-                            &st.res,
-                            &mut res_win[i * g..(i + 1) * g],
-                        );
+            // ---- Phase 2: marshal + bulk launch ----
+            let t0 = Instant::now();
+            let a = self.app.a;
+            let g = self.app.g.max(1);
+            let t_types = self.app.t as i32;
+            let mut win_code = vec![0i32; w];
+            win_code[..active].copy_from_slice(&st.code[tlo..tlo + active]);
+            let mut win_args = vec![0i32; w * a];
+            win_args[..active * a]
+                .copy_from_slice(&st.args[tlo * a..(tlo + active) * a]);
+            // host-side res pre-gather (res never crosses to device)
+            let mut res_win = vec![0i32; w * g];
+            if let Some(gf) = gather {
+                for i in 0..active {
+                    let code = win_code[i];
+                    if code <= 0 {
+                        continue;
                     }
-                }
-                let scalars = [
-                    cen,
-                    tlo as i32,
-                    active as i32,
-                    st.next_free as i32,
-                    (stats.epochs as i32).wrapping_mul(0x9E37),
-                    0,
-                    0,
-                    0,
-                ];
-                let owned = [
-                    lit::i32s(&win_code),
-                    lit::i32s_2d(&win_args, w, a)?,
-                    lit::i32s_2d(&res_win, w, g)?,
-                    lit::i32s(&st.heap_i),
-                    lit::f32s(&st.heap_f),
-                    lit::i32s(&scalars),
-                ];
-                let inputs = [
-                    &owned[0], &owned[1], &owned[2], &owned[3], &owned[4],
-                    &lit_const_i, &lit_const_f, &owned[5],
-                ];
-                stats.marshal_ns += t0.elapsed().as_nanos() as u64;
-
-                let parts = b.exe.run(&inputs)?;
-
-                let t1 = Instant::now();
-                let has_map = self.app.km > 0;
-                let expect = 9 + has_map as usize;
-                if parts.len() != expect {
-                    bail!(
-                        "artifact {} returned {} outputs, expected {expect}",
-                        b.info.file,
-                        parts.len()
+                    let tid = (code - (code - 1) / t_types * t_types) as usize;
+                    gf(
+                        tid,
+                        &win_args[i * a..(i + 1) * a],
+                        &st.res,
+                        &mut res_win[i * g..(i + 1) * g],
                     );
                 }
-                let mut it = parts.into_iter();
-                let mut wc2 = Vec::new();
-                let mut wa2 = Vec::new();
-                let mut emit_val = Vec::new();
-                let mut emit_msk = Vec::new();
-                lit::read_i32s(&it.next().unwrap(), &mut wc2)?;
-                lit::read_i32s(&it.next().unwrap(), &mut wa2)?;
-                lit::read_i32s(&it.next().unwrap(), &mut emit_val)?;
-                lit::read_i32s(&it.next().unwrap(), &mut emit_msk)?;
-                lit::read_i32s(&it.next().unwrap(), &mut st.heap_i)?;
-                lit::read_f32s(&it.next().unwrap(), &mut st.heap_f)?;
-                let mut fork_code = Vec::new();
-                let mut fork_args = Vec::new();
-                lit::read_i32s(&it.next().unwrap(), &mut fork_code)?;
-                lit::read_i32s(&it.next().unwrap(), &mut fork_args)?;
-                let map_out = if has_map {
-                    Some(lit::to_i32s(&it.next().unwrap())?)
-                } else {
-                    None
-                };
-                let flags = lit::to_i32s(&it.next().unwrap())?;
-                let (n_forked, j_any, m_any, n_mapped, n_emit, n_live) = (
-                    flags[0] as usize,
-                    flags[1] != 0,
-                    flags[2] != 0,
-                    flags[3] as usize,
-                    flags[4] as u64,
-                    flags[5] as u64,
+            }
+            let scalars = [
+                cen,
+                tlo as i32,
+                active as i32,
+                st.next_free as i32,
+                (rc.stats.epochs as i32).wrapping_mul(0x9E37),
+                0,
+                0,
+                0,
+            ];
+            let owned = [
+                lit::i32s(&win_code),
+                lit::i32s_2d(&win_args, w, a)?,
+                lit::i32s_2d(&res_win, w, g)?,
+                lit::i32s(&st.heap_i),
+                lit::f32s(&st.heap_f),
+                lit::i32s(&scalars),
+            ];
+            let inputs = [
+                &owned[0], &owned[1], &owned[2], &owned[3], &owned[4],
+                &rc.lit_const_i, &rc.lit_const_f, &owned[5],
+            ];
+            rc.stats.marshal_ns += t0.elapsed().as_nanos() as u64;
+
+            let parts = b.exe.run(&inputs)?;
+
+            let t1 = Instant::now();
+            let has_map = self.app.km > 0;
+            let expect = 9 + has_map as usize;
+            if parts.len() != expect {
+                bail!(
+                    "artifact {} returned {} outputs, expected {expect}",
+                    b.info.file,
+                    parts.len()
                 );
+            }
+            let mut it = parts.into_iter();
+            let mut wc2 = Vec::new();
+            let mut wa2 = Vec::new();
+            let mut emit_val = Vec::new();
+            let mut emit_msk = Vec::new();
+            lit::read_i32s(&it.next().unwrap(), &mut wc2)?;
+            lit::read_i32s(&it.next().unwrap(), &mut wa2)?;
+            lit::read_i32s(&it.next().unwrap(), &mut emit_val)?;
+            lit::read_i32s(&it.next().unwrap(), &mut emit_msk)?;
+            lit::read_i32s(&it.next().unwrap(), &mut st.heap_i)?;
+            lit::read_f32s(&it.next().unwrap(), &mut st.heap_f)?;
+            let mut fork_code = Vec::new();
+            let mut fork_args = Vec::new();
+            lit::read_i32s(&it.next().unwrap(), &mut fork_code)?;
+            lit::read_i32s(&it.next().unwrap(), &mut fork_args)?;
+            let map_out = if has_map {
+                Some(lit::to_i32s(&it.next().unwrap())?)
+            } else {
+                None
+            };
+            let flags = lit::to_i32s(&it.next().unwrap())?;
+            let (n_forked, j_any, m_any, n_mapped, n_emit, n_live) = (
+                flags[0] as usize,
+                flags[1] != 0,
+                flags[2] != 0,
+                flags[3] as usize,
+                flags[4] as u64,
+                flags[5] as u64,
+            );
 
-                // ---- Phase 3a: write back window + splice forks ----
-                st.code[tlo..tlo + active].copy_from_slice(&wc2[..active]);
-                st.args[tlo * a..(tlo + active) * a]
-                    .copy_from_slice(&wa2[..active * a]);
-                for i in 0..active {
-                    if emit_msk[i] != 0 {
-                        st.res[tlo + i] = emit_val[i];
-                    }
+            // ---- Phase 3a: write back window + splice forks ----
+            st.code[tlo..tlo + active].copy_from_slice(&wc2[..active]);
+            st.args[tlo * a..(tlo + active) * a]
+                .copy_from_slice(&wa2[..active * a]);
+            for i in 0..active {
+                if emit_msk[i] != 0 {
+                    st.res[tlo + i] = emit_val[i];
                 }
-                if n_forked > 0 {
-                    let nf = st.next_free;
-                    if nf + n_forked > st.capacity() {
-                        bail!(
-                            "task vector overflow: {} + {} > {} (app {})",
-                            nf,
-                            n_forked,
-                            st.capacity(),
-                            self.app.name
-                        );
-                    }
-                    st.code[nf..nf + n_forked].copy_from_slice(&fork_code[..n_forked]);
-                    st.args[nf * a..(nf + n_forked) * a]
-                        .copy_from_slice(&fork_args[..n_forked * a]);
-                    st.next_free = nf + n_forked;
-                    stats.forks += n_forked as u64;
-                    epoch_forked += n_forked as u32;
+            }
+            if n_forked > 0 {
+                let nf = st.next_free;
+                if nf + n_forked > st.capacity() {
+                    bail!(
+                        "task vector overflow: {} + {} > {} (app {})",
+                        nf,
+                        n_forked,
+                        st.capacity(),
+                        self.app.name
+                    );
                 }
-                join_scheduled |= j_any;
-                if m_any {
-                    map_scheduled = true;
-                    let am = self.app.am.max(1);
-                    map_queue.extend_from_slice(&map_out.unwrap()[..n_mapped * am]);
-                }
-                stats.launches += 1;
-                stats.work += n_live;
-                stats.emits += n_emit;
-                epoch_live += n_live as u32;
-                stats.host_ns += t1.elapsed().as_nanos() as u64;
+                st.code[nf..nf + n_forked].copy_from_slice(&fork_code[..n_forked]);
+                st.args[nf * a..(nf + n_forked) * a]
+                    .copy_from_slice(&fork_args[..n_forked * a]);
+                st.next_free = nf + n_forked;
+                rc.stats.forks += n_forked as u64;
+                epoch_forked += n_forked as u32;
+            }
+            join_scheduled |= j_any;
+            if m_any {
+                map_scheduled = true;
+                let am = self.app.am.max(1);
+                rc.map_queue
+                    .extend_from_slice(&map_out.unwrap()[..n_mapped * am]);
+            }
+            rc.stats.launches += 1;
+            rc.stats.work += n_live;
+            rc.stats.emits += n_emit;
+            epoch_live += n_live as u32;
+            rc.stats.host_ns += t1.elapsed().as_nanos() as u64;
 
-                tlo += active;
-            }
-            stats.epochs += 1;
-            stats.peak_tv = stats.peak_tv.max(st.next_free);
-
-            // ---- Phase 3b: TMS update (paper §5.2.4) ----
-            // Join mask pushed first, fork mask on top (LIFO order gives
-            // children-before-join semantics, §4.3.3).
-            if join_scheduled {
-                st.join_stack.push(cen);
-                st.ndrange_stack.push((lo, hi));
-            }
-            if st.next_free > old_next_free {
-                st.join_stack.push(cen + 1);
-                st.ndrange_stack.push((old_next_free, st.next_free));
-            }
-            if map_scheduled {
-                self.run_maps(st, &mut map_queue, &mut stats)?;
-            }
-            // Reclaim dead top-of-allocation ranges (paper §5.3).
-            if !join_scheduled && st.next_free == old_next_free && hi == st.next_free {
-                st.next_free = lo;
-            }
-            if self.cfg.trace {
-                stats.trace.push((cen, (hi - lo) as u32, epoch_live, epoch_forked));
-            }
+            tlo += active;
         }
-        debug_assert!(st.ndrange_stack.is_empty(), "stacks must empty together");
-        stats.total_ns = t_run.elapsed().as_nanos() as u64;
-        let agg: Vec<_> = self.buckets.iter().map(|b| b.exe.stats()).collect();
-        stats.exec_ns = agg.iter().zip(&exec0).map(|(a, z)| a.exec_ns - z.exec_ns).sum();
-        stats.bytes_up = agg.iter().zip(&exec0).map(|(a, z)| a.bytes_up - z.bytes_up).sum();
-        stats.bytes_down = agg.iter().zip(&exec0).map(|(a, z)| a.bytes_down - z.bytes_down).sum();
-        Ok(stats)
+        rc.stats.epochs += 1;
+        rc.stats.peak_tv = rc.stats.peak_tv.max(st.next_free);
+
+        // Maps run to completion before the next epoch's Phase 1 (paper
+        // §5.2.4); they only touch heaps, so running them ahead of the
+        // stack update is equivalent.
+        if map_scheduled {
+            self.run_maps(st, rc)?;
+        }
+
+        // ---- Phase 3b: shared TMS update (paper §5.2.4, §5.3) ----
+        tms_update(
+            &mut st.join_stack,
+            &mut st.ndrange_stack,
+            cen,
+            lo,
+            hi,
+            old_next_free,
+            &mut st.next_free,
+            join_scheduled,
+        );
+        if self.cfg.trace {
+            rc.stats
+                .trace
+                .push((cen, (hi - lo) as u32, epoch_live, epoch_forked));
+        }
+        Ok(())
     }
 
     /// Launch queued map descriptors (paper §5.2.4: the map kernel runs
     /// to completion before the next epoch's Phase 1).
-    fn run_maps(
-        &self,
-        st: &mut TvState,
-        queue: &mut Vec<i32>,
-        stats: &mut RunStats,
-    ) -> Result<()> {
+    fn run_maps(&self, st: &mut TvState, rc: &mut RunCtx) -> Result<()> {
         let Some(mb) = &self.map_bucket else {
             bail!("app {} scheduled a map but has no map artifact", self.app.name);
         };
         let am = self.app.am.max(1);
         let wm = mb.info.wm;
-        let total = queue.len() / am;
+        let total = rc.map_queue.len() / am;
         let mut off = 0;
         while off < total {
             let nm = (total - off).min(wm);
             let mut buf = vec![0i32; wm * am];
-            buf[..nm * am].copy_from_slice(&queue[off * am..(off + nm) * am]);
+            buf[..nm * am]
+                .copy_from_slice(&rc.map_queue[off * am..(off + nm) * am]);
             let scalars = [nm as i32, 0, 0, 0, 0, 0, 0, 0];
             let owned = [
                 lit::i32s_2d(&buf, wm, am)?,
@@ -444,10 +525,10 @@ impl<'d> Coordinator<'d> {
             }
             st.heap_i = lit::to_i32s(&parts[0])?;
             st.heap_f = lit::to_f32s(&parts[1])?;
-            stats.map_launches += 1;
+            rc.stats.map_launches += 1;
             off += nm;
         }
-        queue.clear();
+        rc.map_queue.clear();
         Ok(())
     }
 }

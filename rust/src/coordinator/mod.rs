@@ -12,6 +12,6 @@ mod epoch;
 mod state;
 mod workload;
 
-pub use epoch::{Coordinator, CoordinatorConfig, RunStats};
+pub use epoch::{Coordinator, CoordinatorConfig, RunCtx, RunStats};
 pub use state::TvState;
 pub use workload::{GatherFn, Workload};

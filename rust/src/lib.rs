@@ -14,10 +14,19 @@
 //! ## Layer map
 //!
 //! * [`runtime`] — PJRT client wrapper: load HLO-text artifacts, compile
-//!   once, execute per epoch.
-//! * [`coordinator`] — the paper's §5 host runtime (Phases 1 and 3).
+//!   once, execute per epoch. (The offline build links a vendored stub;
+//!   see `runtime::backend_available`.)
+//! * [`coordinator`] — the paper's §5 host runtime (Phases 1 and 3),
+//!   factored into begin/step/finish so one epoch can be driven
+//!   externally.
+//! * [`sched`] — the multi-tenant epoch-fusion scheduler: co-schedules
+//!   many concurrent jobs into shared epochs (one task vector, one
+//!   launch, one sync per step for all tenants), with round-robin
+//!   fairness, admission backpressure, and per-job V∞-savings
+//!   accounting. Surfaced as `trees serve` / `trees batch`.
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
-//!   interpreter: the correctness oracle and the `T_1` (work) meter.
+//!   interpreter: the correctness oracle and the `T_1` (work) meter;
+//!   also home of the TMS-compression update every driver shares.
 //! * [`apps`] — the task-parallel applications of the evaluation.
 //! * [`cilk`] — a from-scratch work-first work-stealing runtime
 //!   (Chase–Lev deques): the paper's Cilk baseline.
@@ -37,6 +46,7 @@ pub mod cilk;
 pub mod coordinator;
 pub mod graph;
 pub mod runtime;
+pub mod sched;
 pub mod simt;
 pub mod tvm;
 pub mod util;

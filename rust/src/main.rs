@@ -5,6 +5,8 @@
 //!   run <app> [opts]             run a workload through the coordinator
 //!   interp <app> [opts]          run on the sequential TVM interpreter
 //!   native <bfs|sssp|sort> ...   run a hand-coded native baseline
+//!   serve --jobs <spec>          co-schedule many jobs in shared epochs
+//!   batch [--jobs <spec>]        fused-vs-solo comparison for a job mix
 //!
 //! Workload options (app-dependent):
 //!   --n N          problem size (fib n, fft/sort length, matmul edge,
@@ -21,9 +23,15 @@
 use anyhow::{anyhow, bail, Result};
 
 use trees::apps;
+use trees::benchkit::Table;
 use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use trees::graph::{gen, Csr};
 use trees::runtime::{load_manifest, Device};
+use trees::sched::{
+    modeled_fused_us, modeled_solo_us, solo_profile, FusedScheduler, Fuser,
+    JobBuild, JobSpec, SchedConfig,
+};
+use trees::simt::GpuModel;
 use trees::util::cli::Args;
 use trees::util::rng::Rng;
 
@@ -36,8 +44,13 @@ USAGE:
                   [--seed S] [--bucket W] [--trace]
   trees interp <app> [--n N] [...]
   trees native <bfs|sssp|sort> [--n N] [--graph ..] [--scale S]
+  trees serve --jobs <spec> [--capacity N] [--slice-cap N] [--max-active N]
+  trees batch [--jobs <spec>] [--copies K]
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
+
+JOB SPEC (serve/batch): comma-separated app[:graph][:n][:seed] tokens,
+e.g. --jobs fib:18,mergesort:512,bfs:grid:5,sssp:rmat:6:7
 "
 }
 
@@ -51,7 +64,10 @@ fn main() {
 fn real_main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["n", "bucket", "seed", "graph", "scale", "steps"],
+        &[
+            "n", "bucket", "seed", "graph", "scale", "steps", "jobs",
+            "capacity", "slice-cap", "max-active", "copies",
+        ],
         &["trace", "verbose", "help"],
     )
     .map_err(|e| anyhow!("{e}\n{}", usage()))?;
@@ -66,6 +82,8 @@ fn real_main() -> Result<()> {
         "run" => run(&args),
         "interp" => interp(&args),
         "native" => native(&args),
+        "serve" => serve(&args),
+        "batch" => batch(&args),
         cmd => bail!("unknown command {cmd:?}\n{}", usage()),
     }
 }
@@ -233,6 +251,266 @@ fn interp(args: &Args) -> Result<()> {
         }
         other => bail!("no interpreter driver for app {other:?} (try run)"),
     }
+    Ok(())
+}
+
+fn sched_config(args: &Args) -> Result<SchedConfig> {
+    let d = SchedConfig::default();
+    Ok(SchedConfig {
+        capacity: args.usize_or("capacity", d.capacity).map_err(anyhow::Error::msg)?,
+        slice_cap: args.usize_or("slice-cap", d.slice_cap).map_err(anyhow::Error::msg)?,
+        max_active: args
+            .usize_or("max-active", d.max_active)
+            .map_err(anyhow::Error::msg)?,
+        ..d
+    })
+}
+
+fn instantiate_all(specs: &[JobSpec]) -> Result<Vec<JobBuild>> {
+    specs.iter().map(|s| s.instantiate()).collect()
+}
+
+/// `trees serve`: co-schedule many concurrent jobs into shared epochs.
+/// Uses artifact (AOT) tenants when artifacts and a real backend are
+/// available; otherwise the pure-Rust fused interpreter engine.
+fn serve(args: &Args) -> Result<()> {
+    let spec = args.str_or("jobs", "fib:16,bfs:grid:5,mergesort:256");
+    let specs = JobSpec::parse_list(&spec)?;
+    if specs.is_empty() {
+        bail!("--jobs spec is empty\n{}", usage());
+    }
+    let cfg = sched_config(args)?;
+    match trees::runtime::try_artifacts() {
+        Ok((manifest, dir)) => {
+            match serve_artifacts(&specs, &manifest, &dir, cfg.clone()) {
+                Ok(()) => return Ok(()),
+                Err(e) => eprintln!(
+                    "artifact path failed ({e:#}); falling back to the \
+                     fused interpreter engine"
+                ),
+            }
+        }
+        Err(e) => eprintln!(
+            "artifact engine unavailable ({e:#}); serving on the \
+             pure-Rust fused interpreter engine"
+        ),
+    }
+    serve_fallback(&specs, cfg)
+}
+
+fn serve_fallback(specs: &[JobSpec], cfg: SchedConfig) -> Result<()> {
+    let builds = instantiate_all(specs)?;
+    let mut sched = FusedScheduler::new(SchedConfig { fused_kernel: true, ..cfg });
+    sched.on_complete(|fj| {
+        println!(
+            "  completed {} after {} shared epochs ({} stalls)",
+            fj.label, fj.stats.steps_ridden, fj.stats.stalls
+        );
+    });
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion()?;
+    serve_report(&sched);
+    Ok(())
+}
+
+fn serve_artifacts(
+    specs: &[JobSpec],
+    manifest: &trees::runtime::Manifest,
+    dir: &std::path::PathBuf,
+    cfg: SchedConfig,
+) -> Result<()> {
+    let dev = Device::cpu()?;
+    let mut labeled: Vec<(String, Workload)> = Vec::new();
+    let mut cos: Vec<Coordinator> = Vec::new();
+    for s in specs {
+        let app = manifest.app(&canonical_app(&s.app))?;
+        let w = spec_workload(s, app)?;
+        cos.push(Coordinator::for_workload(
+            &dev,
+            dir,
+            app,
+            &w,
+            CoordinatorConfig::default(),
+        )?);
+        labeled.push((s.label(), w));
+    }
+    // launch accounting must tile over the window buckets the loaded
+    // artifacts actually have, not the model defaults
+    let mut buckets: Vec<usize> =
+        cos.iter().flat_map(|c| c.bucket_sizes()).collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    // per-app artifacts cannot merge different apps into one kernel, so
+    // launches stay per-tenant; the epoch sync is what fusion shares
+    let mut sched =
+        FusedScheduler::new(SchedConfig { fused_kernel: false, buckets, ..cfg });
+    for ((label, w), co) in labeled.iter().zip(&cos) {
+        sched.admit_artifact(label, co, w);
+    }
+    sched.run_to_completion()?;
+    serve_report(&sched);
+    Ok(())
+}
+
+fn canonical_app(app: &str) -> String {
+    if app == "msort" { "mergesort".to_string() } else { app.to_string() }
+}
+
+/// Workload for the artifact engine. Sizes, seeds, and graphs come
+/// from the same `JobSpec` helpers the interp-engine builder uses
+/// (`sched::job`), so a `--jobs` token means one problem on either.
+fn spec_workload(s: &JobSpec, app: &trees::runtime::AppManifest) -> Result<Workload> {
+    let n = s.effective_n();
+    Ok(match s.app.as_str() {
+        "fib" => apps::fib::workload(n as u32),
+        "nqueens" => apps::nqueens::workload(n),
+        "tsp" => apps::tsp::workload(&apps::tsp::random_dist(n, s.seed), n),
+        "mergesort" | "msort" => {
+            let mut rng = Rng::new(s.seed);
+            let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+            apps::msort::workload(app, &data)?.0
+        }
+        "bfs" | "sssp" => {
+            let g = s.build_graph()?;
+            apps::graph_sp::workload(app, &g, 0)?.0
+        }
+        other => bail!("no artifact workload builder for app {other:?}"),
+    })
+}
+
+fn serve_report(sched: &FusedScheduler<'_>) {
+    let model = GpuModel::default();
+    let mut t = Table::new(
+        "epoch fusion — per-job accounting",
+        &[
+            "job", "epochs", "stalls", "lanes", "solo-launch", "fused-share",
+            "V_inf saved (us)", "result",
+        ],
+    );
+    for fj in sched.finished() {
+        let result = match (&fj.kind, fj.engine.machine()) {
+            (Some(k), Some(m)) => {
+                let check = match k.verify(m) {
+                    Ok(()) => "ok",
+                    Err(_) => "MISMATCH",
+                };
+                format!("{} [{check}]", k.describe(m))
+            }
+            _ => format!("root={}", fj.engine.root_result()),
+        };
+        t.row(vec![
+            fj.label.clone(),
+            fj.stats.steps_ridden.to_string(),
+            fj.stats.stalls.to_string(),
+            fj.stats.lanes.to_string(),
+            fj.stats.solo_launches.to_string(),
+            format!("{:.1}", fj.stats.fused_launch_share),
+            format!("{:.1}", fj.stats.vinf_saved_us(&model)),
+            result,
+        ]);
+    }
+    t.print();
+    let s = sched.stats();
+    let solo_launches: u64 =
+        sched.finished().iter().map(|f| f.stats.solo_launches).sum();
+    let solo_syncs: u64 = sched.finished().iter().map(|f| f.stats.solo_syncs).sum();
+    println!(
+        "fused: {} shared epochs, {} syncs, {} launches | solo-equivalent: \
+         {} syncs, {} launches | V_inf saved ~{:.0} us",
+        s.steps,
+        s.syncs,
+        s.launches,
+        solo_syncs,
+        solo_launches,
+        solo_launches.saturating_sub(s.launches) as f64 * model.launch_us,
+    );
+}
+
+/// `trees batch`: run a job mix fused and compare against the sum of
+/// dedicated solo runs (launch counts and modeled APU time).
+fn batch(args: &Args) -> Result<()> {
+    let spec = args.str_or(
+        "jobs",
+        "fib:14,fib:12,bfs:grid:4,bfs:uniform:5,mergesort:128,mergesort:256",
+    );
+    let copies = args.usize_or("copies", 1).map_err(anyhow::Error::msg)?;
+    let base = JobSpec::parse_list(&spec)?;
+    if base.is_empty() {
+        bail!("--jobs spec is empty\n{}", usage());
+    }
+    let mut specs = Vec::new();
+    for k in 0..copies.max(1) {
+        for s in &base {
+            let mut s2 = s.clone();
+            s2.seed = s2.seed.wrapping_add(k as u64);
+            specs.push(s2);
+        }
+    }
+    let mut cfg = sched_config(args)?;
+    cfg.trace = true; // modeled-APU replay needs the per-step trace
+    let builds = instantiate_all(&specs)?;
+    let fuser = Fuser::new(cfg.buckets.clone());
+    let model = GpuModel::default();
+
+    let mut t = Table::new(
+        "solo baselines (dedicated coordinator runs)",
+        &["job", "epochs", "work", "launches", "APU (us)"],
+    );
+    let mut solo_launches = 0u64;
+    let mut solo_syncs = 0u64;
+    let mut solo_us = 0.0f64;
+    let mut solo_roots = Vec::new();
+    for b in &builds {
+        let p = solo_profile(b.prog.as_ref(), &b.init, &fuser);
+        let us = modeled_solo_us(&model, &p.trace);
+        t.row(vec![
+            b.label.clone(),
+            p.epochs.to_string(),
+            p.work.to_string(),
+            p.launches.to_string(),
+            format!("{us:.1}"),
+        ]);
+        solo_launches += p.launches;
+        solo_syncs += p.epochs;
+        solo_us += us;
+        solo_roots.push(p.root);
+    }
+    t.print();
+
+    let mut sched = FusedScheduler::new(cfg);
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion()?;
+    let mut mismatches = 0;
+    for fj in sched.finished() {
+        if fj.engine.root_result() != solo_roots[fj.id.0] {
+            mismatches += 1;
+        }
+    }
+    let s = sched.stats();
+    let fused_us = modeled_fused_us(&model, &s.trace);
+    println!(
+        "\nfused run: {} jobs | {} shared epochs (solo {}) | {} launches \
+         (solo {}) | modeled APU {:.1} us (solo {:.1}) | speedup x{:.2} | \
+         launches saved {} | results {}",
+        sched.finished().len(),
+        s.steps,
+        solo_syncs,
+        s.launches,
+        solo_launches,
+        fused_us,
+        solo_us,
+        solo_us / fused_us.max(1e-9),
+        solo_launches.saturating_sub(s.launches),
+        if mismatches == 0 {
+            "identical to solo".to_string()
+        } else {
+            format!("{mismatches} MISMATCHES")
+        },
+    );
     Ok(())
 }
 

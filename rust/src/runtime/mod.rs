@@ -45,6 +45,51 @@ pub fn load_manifest() -> anyhow::Result<(Manifest, PathBuf)> {
     Ok((m, dir))
 }
 
+/// Whether this build can actually execute artifacts: `false` when the
+/// vendored PJRT stub is linked (the default offline build), `true`
+/// when built with `--features xla-backend` against real bindings.
+pub fn backend_available() -> bool {
+    cfg!(feature = "xla-backend")
+}
+
+/// Quiet availability gate for artifact-dependent paths: Ok only when
+/// `artifacts/manifest.json` exists *and* the build links a real
+/// backend; the reason comes back as the error (for callers that fall
+/// back rather than skip, e.g. `trees serve`).
+pub fn try_artifacts() -> anyhow::Result<(Manifest, PathBuf)> {
+    if !backend_available() {
+        anyhow::bail!(
+            "built against the vendored PJRT stub (enable the `xla-backend` \
+             feature with real xla bindings)"
+        );
+    }
+    // The feature only *claims* a real backend; the linked `xla` crate
+    // could still be the vendored stub (its platform self-identifies),
+    // in which case compiles would panic mid-test instead of skipping.
+    let dev = Device::cpu()?;
+    if dev.platform() == "stub-cpu" {
+        anyhow::bail!(
+            "`xla-backend` feature is enabled but the linked `xla` crate is \
+             still the vendored stub — point the path dependency in \
+             rust/Cargo.toml at real bindings"
+        );
+    }
+    load_manifest()
+}
+
+/// The skip-with-a-message gate used by e2e tests and benches: `Some`
+/// only when [`try_artifacts`] succeeds; on `None` the reason is
+/// printed so skips are visible, never silent.
+pub fn artifacts_available() -> Option<(Manifest, PathBuf)> {
+    match try_artifacts() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP (artifact paths unavailable): {e:#}");
+            None
+        }
+    }
+}
+
 /// Read an HLO text file into a compiled executable on `dev`.
 pub fn compile_artifact(dev: &Device, path: &Path) -> anyhow::Result<Executable> {
     dev.compile_hlo_file(path)

@@ -1,0 +1,187 @@
+//! The fuser: packs the live task fronts of many tenant jobs into
+//! contiguous slices of one shared task vector, with per-job base
+//! offsets — the paper's work-together principle applied *across* jobs,
+//! so one Phase-2 launch pays V∞ for every tenant at once.
+//!
+//! The fused frame is exactly what a linked multi-tenant epoch-step
+//! kernel consumes: a code lane per task plus a `job_of` tag that
+//! routes each lane to its tenant's program and heap segment. The
+//! fallback engine executes the frame tenant-by-tenant through the
+//! reference interpreter (bit-identical semantics, see
+//! [`crate::sched`] module docs); launch accounting tiles the fused
+//! window over the same bucket sizes the AOT artifacts use.
+
+use super::job::JobId;
+
+/// One tenant's contribution to a fused epoch: the top of its TMS.
+pub struct Front<'a> {
+    pub job: JobId,
+    pub cen: i32,
+    pub lo: usize,
+    pub hi: usize,
+    /// The tenant's `code[lo..hi]` window.
+    pub code: &'a [i32],
+    /// Live lanes in the window (tasks that will actually execute).
+    pub live: u64,
+}
+
+/// Where a tenant's lanes landed in the shared vector.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    pub job: JobId,
+    /// Base offset of this job's lanes in the fused window.
+    pub base: usize,
+    pub len: usize,
+    /// The tenant-local epoch number these lanes run at.
+    pub cen: i32,
+    /// Tenant-local NDRange start (fused lane `base + k` is the
+    /// tenant's TV slot `lo + k`).
+    pub lo: usize,
+    pub live: u64,
+}
+
+/// The shared task vector of one fused epoch.
+#[derive(Debug, Clone)]
+pub struct FusedFrame {
+    /// Concatenated task codes, slice by slice.
+    pub code: Vec<i32>,
+    /// Per-lane tenant tag (JobId.0), the mega-kernel dispatch key.
+    pub job_of: Vec<i32>,
+    pub slices: Vec<Slice>,
+    /// Total live lanes across all slices.
+    pub live: u64,
+}
+
+impl FusedFrame {
+    /// Fused window length (lanes shipped in one epoch).
+    pub fn window(&self) -> usize {
+        self.code.len()
+    }
+}
+
+/// Packs fronts into frames and models launch tiling over the window
+/// buckets the compiled artifacts actually come in.
+#[derive(Debug, Clone)]
+pub struct Fuser {
+    /// Ascending window bucket sizes (lanes per launch).
+    buckets: Vec<usize>,
+}
+
+impl Fuser {
+    pub fn new(mut buckets: Vec<usize>) -> Fuser {
+        buckets.retain(|&w| w > 0);
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(!buckets.is_empty(), "fuser needs at least one bucket size");
+        Fuser { buckets }
+    }
+
+    /// Smallest bucket covering `len` (else the largest).
+    pub fn bucket_for(&self, len: usize) -> usize {
+        *self
+            .buckets
+            .iter()
+            .find(|&&w| w >= len)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    /// Launches needed to tile a window of `len` lanes (same greedy
+    /// smallest-fit tiling the coordinator uses).
+    pub fn launches_for(&self, len: usize) -> u64 {
+        if len == 0 {
+            return 0;
+        }
+        let mut rest = len;
+        let mut n = 0u64;
+        while rest > 0 {
+            rest = rest.saturating_sub(self.bucket_for(rest));
+            n += 1;
+        }
+        n
+    }
+
+    /// Pack the selected fronts into one shared task vector.
+    pub fn pack(&self, fronts: &[Front]) -> FusedFrame {
+        let total: usize = fronts.iter().map(|f| f.hi - f.lo).sum();
+        let mut code = Vec::with_capacity(total);
+        let mut job_of = Vec::with_capacity(total);
+        let mut slices = Vec::with_capacity(fronts.len());
+        let mut live = 0u64;
+        for f in fronts {
+            let len = f.hi - f.lo;
+            debug_assert_eq!(f.code.len(), len, "front window length mismatch");
+            slices.push(Slice {
+                job: f.job,
+                base: code.len(),
+                len,
+                cen: f.cen,
+                lo: f.lo,
+                live: f.live,
+            });
+            code.extend_from_slice(f.code);
+            job_of.extend(std::iter::repeat(f.job.0 as i32).take(len));
+            live += f.live;
+        }
+        FusedFrame { code, job_of, slices, live }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn front(job: usize, cen: i32, lo: usize, code: &[i32]) -> Front<'_> {
+        Front {
+            job: JobId(job),
+            cen,
+            lo,
+            hi: lo + code.len(),
+            code,
+            live: code.iter().filter(|&&c| c > 0).count() as u64,
+        }
+    }
+
+    #[test]
+    fn packs_contiguous_slices_with_bases() {
+        let f = Fuser::new(vec![256, 1024]);
+        let a = [1, 0, 1];
+        let b = [2, 2];
+        let frame = f.pack(&[front(0, 0, 10, &a), front(1, 3, 0, &b)]);
+        assert_eq!(frame.window(), 5);
+        assert_eq!(frame.code, vec![1, 0, 1, 2, 2]);
+        assert_eq!(frame.job_of, vec![0, 0, 0, 1, 1]);
+        assert_eq!(frame.slices[0].base, 0);
+        assert_eq!(frame.slices[1].base, 3);
+        assert_eq!(frame.slices[1].lo, 0);
+        assert_eq!(frame.live, 4);
+    }
+
+    #[test]
+    fn launch_tiling_matches_buckets() {
+        let f = Fuser::new(vec![256, 1024, 4096]);
+        assert_eq!(f.launches_for(0), 0);
+        assert_eq!(f.launches_for(1), 1);
+        assert_eq!(f.launches_for(256), 1);
+        assert_eq!(f.launches_for(257), 1); // fits the 1024 bucket
+        assert_eq!(f.launches_for(4096), 1);
+        assert_eq!(f.launches_for(5000), 2); // 4096 + 904
+        assert_eq!(f.launches_for(3 * 4096 + 1), 4);
+    }
+
+    #[test]
+    fn fusing_never_needs_more_launches() {
+        // subadditivity: tiles(a + b) <= tiles(a) + tiles(b) over a grid
+        // of window sizes — the property behind "fused launches <= sum
+        // of solo launches".
+        let f = Fuser::new(vec![256, 1024, 4096]);
+        let sizes = [1usize, 7, 255, 256, 300, 1024, 2000, 4096, 9000];
+        for &a in &sizes {
+            for &b in &sizes {
+                assert!(
+                    f.launches_for(a + b) <= f.launches_for(a) + f.launches_for(b),
+                    "a={a} b={b}"
+                );
+            }
+        }
+    }
+}

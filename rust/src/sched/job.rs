@@ -1,0 +1,372 @@
+//! Job admission types: what a tenant brings to the fused scheduler —
+//! a scalar TVM program, its initial machine image, and enough metadata
+//! to verify the result afterwards.
+//!
+//! A job spec is a colon-separated token (the `trees serve --jobs`
+//! grammar): `app[:graph][:n][:seed]`, e.g. `fib:18`, `mergesort:512`,
+//! `bfs:grid:5`, `sssp:rmat:6:7`, `nqueens:7`, `tsp:8`.
+
+use anyhow::{bail, Result};
+
+use crate::apps::{self, Fib, GraphSp, MSort, NQueens, Tsp};
+use crate::apps::graph_sp::Layout;
+use crate::apps::msort::G;
+use crate::graph::{bfs_levels, dijkstra, gen, Csr, INF};
+use crate::tvm::{Interp, TvmProgram};
+use crate::util::rng::Rng;
+
+/// Tenant identity, stable across the job's life (admission order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobId(pub usize);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// Parsed `--jobs` token.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub app: String,
+    /// Problem size (app-dependent; 0 = app default).
+    pub n: usize,
+    pub seed: u64,
+    /// Graph kind for bfs/sssp (`rmat` | `grid` | `uniform`).
+    pub graph: Option<String>,
+}
+
+impl JobSpec {
+    /// Parse one token of the `--jobs` spec.
+    pub fn parse(tok: &str) -> Result<JobSpec> {
+        let mut parts = tok.split(':');
+        let app = parts.next().unwrap_or("").to_string();
+        if app.is_empty() {
+            bail!("empty job spec");
+        }
+        let mut ints: Vec<u64> = Vec::new();
+        let mut graph = None;
+        for p in parts {
+            if let Ok(v) = p.parse::<u64>() {
+                if ints.len() == 2 {
+                    bail!("too many numeric fields in job spec {tok:?} (max: n, seed)");
+                }
+                ints.push(v);
+            } else if ["rmat", "grid", "uniform"].contains(&p) {
+                if graph.is_some() {
+                    bail!("duplicate graph kind in job spec {tok:?}");
+                }
+                graph = Some(p.to_string());
+            } else {
+                bail!("unrecognized job-spec field {p:?} in {tok:?}");
+            }
+        }
+        Ok(JobSpec {
+            app,
+            n: ints.first().copied().unwrap_or(0) as usize,
+            seed: ints.get(1).copied().unwrap_or(42),
+            graph,
+        })
+    }
+
+    /// Parse a whole comma-separated `--jobs` value.
+    pub fn parse_list(s: &str) -> Result<Vec<JobSpec>> {
+        s.split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| JobSpec::parse(t.trim()))
+            .collect()
+    }
+
+    /// Effective problem size after per-app defaults — the single
+    /// source of truth shared by the interp builder below and the
+    /// artifact-engine workload builder in `main.rs`.
+    pub fn effective_n(&self) -> usize {
+        if self.n != 0 {
+            return self.n;
+        }
+        match self.app.as_str() {
+            "fib" => 16,
+            "nqueens" => 6,
+            "tsp" => 7,
+            "mergesort" | "msort" => 256,
+            "bfs" | "sssp" => 5, // graph scale
+            _ => 0,
+        }
+    }
+
+    /// Build the graph instance for bfs/sssp specs (shared by both
+    /// engines so `--jobs bfs:grid:5` means the same problem on each).
+    pub fn build_graph(&self) -> Result<Csr> {
+        let scale = self.effective_n();
+        Ok(match self.graph.as_deref().unwrap_or("grid") {
+            "rmat" => gen::rmat(scale as u32, 8, 10, self.seed),
+            "grid" => gen::grid2d(scale, 10, self.seed),
+            "uniform" => gen::uniform(1 << scale, 4, 10, self.seed),
+            other => bail!("unknown graph kind {other:?}"),
+        })
+    }
+
+    /// Canonical display label.
+    pub fn label(&self) -> String {
+        let mut s = self.app.clone();
+        if let Some(g) = &self.graph {
+            s.push(':');
+            s.push_str(g);
+        }
+        if self.n != 0 {
+            s.push_str(&format!(":{}", self.n));
+        }
+        s
+    }
+
+    /// Build the tenant: program + initial machine image + verifier.
+    pub fn instantiate(&self) -> Result<JobBuild> {
+        let label = self.label();
+        Ok(match self.app.as_str() {
+            "fib" => {
+                let n = self.effective_n() as u32;
+                JobBuild {
+                    label,
+                    prog: Box::new(Fib),
+                    kind: AppKind::Fib { n },
+                    init: JobInit {
+                        capacity: apps::fib::capacity_for(n),
+                        init_args: vec![n as i32],
+                        ..Default::default()
+                    },
+                }
+            }
+            "nqueens" => {
+                let n = self.effective_n();
+                if n > apps::nqueens::NQ_MAX {
+                    bail!("nqueens: n={n} exceeds NQ_MAX");
+                }
+                JobBuild {
+                    label,
+                    prog: Box::new(NQueens),
+                    kind: AppKind::NQueens { n },
+                    init: JobInit {
+                        capacity: if n <= 8 { 1 << 16 } else { 1 << 21 },
+                        init_args: vec![0, 0, 0, 0],
+                        const_i: vec![n as i32],
+                        ..Default::default()
+                    },
+                }
+            }
+            "tsp" => {
+                let n = self.effective_n();
+                if n > apps::tsp::TSP_MAX {
+                    bail!("tsp: n={n} exceeds TSP_MAX");
+                }
+                let dist = apps::tsp::random_dist(n, self.seed);
+                let const_i = apps::tsp::pack(&dist, n);
+                JobBuild {
+                    label,
+                    prog: Box::new(Tsp),
+                    kind: AppKind::Tsp { dist, n },
+                    init: JobInit {
+                        capacity: 1 << 16,
+                        init_args: vec![0, 1, 0, 1],
+                        heap_i: vec![apps::tsp::INF],
+                        const_i,
+                        ..Default::default()
+                    },
+                }
+            }
+            "mergesort" | "msort" => {
+                let n = self.effective_n();
+                let mut rng = Rng::new(self.seed);
+                let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+                let nmax = n.next_power_of_two().max(G);
+                let n2 = nmax;
+                let mut heap_f = vec![f32::INFINITY; 2 * nmax];
+                heap_f[..n].copy_from_slice(&data);
+                JobBuild {
+                    label,
+                    prog: Box::new(MSort { nmax, use_map: false }),
+                    kind: AppKind::MergeSort { nmax, n2, n },
+                    init: JobInit {
+                        capacity: (16 * nmax).max(64),
+                        init_args: vec![0, n2 as i32],
+                        heap_f,
+                        ..Default::default()
+                    },
+                }
+            }
+            "bfs" | "sssp" => {
+                let weighted = self.app == "sssp";
+                let g = self.build_graph()?;
+                let lay = Layout {
+                    vmax: g.num_vertices().next_power_of_two().max(4),
+                    emax: g.num_edges().next_power_of_two().max(4),
+                    weighted,
+                };
+                let nv = g.num_vertices();
+                let capacity = 64 * (nv + 4 * g.num_edges()) + 64;
+                let want = if weighted { dijkstra(&g, 0) } else { bfs_levels(&g, 0) };
+                JobBuild {
+                    label,
+                    kind: AppKind::Graph { weighted, nv, want },
+                    init: JobInit {
+                        capacity,
+                        init_args: vec![0, 0],
+                        heap_i: lay.dist0(0),
+                        const_i: lay.pack(&g, 0),
+                        ..Default::default()
+                    },
+                    prog: Box::new(GraphSp { lay }),
+                }
+            }
+            other => bail!(
+                "no fused-job builder for app {other:?} \
+                 (have: fib, nqueens, tsp, mergesort, bfs, sssp)"
+            ),
+        })
+    }
+}
+
+/// Initial machine image of a tenant (its private heap segment and
+/// first task), cloneable so one build can seed several runs.
+#[derive(Debug, Clone, Default)]
+pub struct JobInit {
+    pub capacity: usize,
+    pub init_args: Vec<i32>,
+    pub heap_i: Vec<i32>,
+    pub heap_f: Vec<f32>,
+    pub const_i: Vec<i32>,
+    pub const_f: Vec<f32>,
+}
+
+impl JobInit {
+    /// Spin up a fresh interpreter machine over `prog` from this image.
+    pub fn machine<'p>(&self, prog: &'p dyn TvmProgram) -> Interp<'p, dyn TvmProgram> {
+        Interp::new(prog, self.capacity, self.init_args.clone()).with_heaps(
+            self.heap_i.clone(),
+            self.heap_f.clone(),
+            self.const_i.clone(),
+            self.const_f.clone(),
+        )
+    }
+}
+
+/// A fully-built tenant, ready to admit.
+pub struct JobBuild {
+    pub label: String,
+    pub prog: Box<dyn TvmProgram>,
+    pub init: JobInit,
+    pub kind: AppKind,
+}
+
+/// What the app computed, for post-run verification and display.
+#[derive(Debug, Clone)]
+pub enum AppKind {
+    Fib { n: u32 },
+    NQueens { n: usize },
+    Tsp { dist: Vec<i32>, n: usize },
+    MergeSort { nmax: usize, n2: usize, n: usize },
+    Graph { weighted: bool, nv: usize, want: Vec<i32> },
+}
+
+impl AppKind {
+    /// Reference value of the root result, when one is known closed-form.
+    pub fn expected_root(&self) -> Option<i64> {
+        match self {
+            AppKind::Fib { n } => Some(apps::fib::fib_ref(*n) as i64),
+            AppKind::NQueens { n } => Some(apps::nqueens::SOLUTIONS[*n] as i64),
+            AppKind::Tsp { dist, n } => Some(apps::tsp::tsp_ref(dist, *n) as i64),
+            _ => None,
+        }
+    }
+
+    /// Check a halted machine against the app's own correctness oracle.
+    pub fn verify(&self, m: &Interp<'_, dyn TvmProgram>) -> Result<(), String> {
+        match self {
+            AppKind::Fib { .. } | AppKind::NQueens { .. } | AppKind::Tsp { .. } => {
+                let want = self.expected_root().unwrap();
+                let got = m.root_result() as i64;
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("root result {got}, expected {want}"))
+                }
+            }
+            AppKind::MergeSort { nmax, n2, n } => {
+                let off = apps::msort::final_offset(*nmax, *n2);
+                let out = &m.heap_f[off..off + n];
+                if out.windows(2).all(|w| w[0] <= w[1]) {
+                    Ok(())
+                } else {
+                    Err("output not sorted".to_string())
+                }
+            }
+            AppKind::Graph { nv, want, .. } => {
+                if m.heap_i[..*nv] == want[..] {
+                    Ok(())
+                } else {
+                    Err("distances differ from the reference BFS/Dijkstra"
+                        .to_string())
+                }
+            }
+        }
+    }
+
+    /// One-line human summary of the result.
+    pub fn describe(&self, m: &Interp<'_, dyn TvmProgram>) -> String {
+        match self {
+            AppKind::Fib { n } => format!("fib({n}) = {}", m.root_result()),
+            AppKind::NQueens { n } => {
+                format!("{n}-queens solutions = {}", m.root_result())
+            }
+            AppKind::Tsp { n, .. } => {
+                format!("tsp({n}) optimal tour = {}", m.root_result())
+            }
+            AppKind::MergeSort { n, .. } => format!("sorted {n} elements"),
+            AppKind::Graph { weighted, nv, .. } => {
+                let reached =
+                    m.heap_i[..*nv].iter().filter(|&&d| d < INF).count();
+                format!(
+                    "{} reached {reached}/{nv} vertices",
+                    if *weighted { "sssp" } else { "bfs" }
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_spec_grammar() {
+        let s = JobSpec::parse("sssp:rmat:6:7").unwrap();
+        assert_eq!(s.app, "sssp");
+        assert_eq!(s.graph.as_deref(), Some("rmat"));
+        assert_eq!(s.n, 6);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.label(), "sssp:rmat:6");
+
+        let list = JobSpec::parse_list("fib:12, mergesort:100,bfs:grid:4").unwrap();
+        assert_eq!(list.len(), 3);
+        assert!(JobSpec::parse("fib:bogus").is_err());
+        assert!(JobSpec::parse("mergesort:512:3:9").is_err(), "extra field");
+        assert!(JobSpec::parse("bfs:grid:uniform").is_err(), "dup graph kind");
+        assert!(JobSpec::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn builds_run_and_verify_solo() {
+        for tok in ["fib:10", "nqueens:5", "tsp:6", "mergesort:64", "bfs:grid:4"] {
+            let b = JobSpec::parse(tok).unwrap().instantiate().unwrap();
+            let mut m = b.init.machine(b.prog.as_ref());
+            m.run();
+            b.kind.verify(&m).unwrap_or_else(|e| panic!("{tok}: {e}"));
+            assert!(!b.kind.describe(&m).is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_app_is_rejected() {
+        assert!(JobSpec::parse("fft:64").unwrap().instantiate().is_err());
+    }
+}

@@ -1,0 +1,533 @@
+//! Multi-tenant epoch-fusion scheduler.
+//!
+//! The paper's work-together principle says the critical-path overheads
+//! (kernel launch, flag transfer — V∞) should be "paid by the entire
+//! system at once". The solo [`crate::coordinator`] amortizes V∞ only
+//! *within* one job: every run pays its own per-epoch launch. This
+//! subsystem fuses the live task fronts of many concurrent jobs into
+//! one shared task vector per epoch — per-job lanes packed at base
+//! offsets ([`Fuser`]), heap segments kept private per tenant — so one
+//! Phase-2 launch and one epoch synchronization pay V∞ for every
+//! tenant simultaneously (the regime where Atos-style persistent
+//! scheduling and resident runtimes win).
+//!
+//! Two execution engines sit behind one scheduler:
+//!
+//! * **Interp** (always available): the tenant's lanes execute through
+//!   the reference TVM interpreter. Semantically this *is* the linked
+//!   multi-tenant program — the fused frame's `job_of` tag dispatches
+//!   each lane to its tenant's task table; the fallback runs tenants
+//!   slice-by-slice, which is observationally identical because
+//!   tenants share no state and the per-tenant epoch logic is the same
+//!   [`crate::tvm::tms_update`] everywhere. Launch accounting models
+//!   the single fused launch, tiled over artifact window buckets.
+//! * **Artifact**: epochs execute through the tenant's
+//!   [`Coordinator`] window buckets (real `runtime::Executable`
+//!   launches, one per window tile). Artifacts are per-app, so the
+//!   shared window cannot merge lanes of *different* apps into one
+//!   kernel; set [`SchedConfig::fused_kernel`] to `false` so launch
+//!   accounting stays per-tenant and only the epoch synchronization is
+//!   shared.
+//!
+//! Per-job results are bit-identical to solo runs by construction: the
+//! scheduler never touches tenant state, it only decides *when* each
+//! tenant's next epoch runs, and tenant machines are independent.
+
+mod fuse;
+mod job;
+mod policy;
+mod stats;
+
+pub use fuse::{Front, FusedFrame, Fuser, Slice};
+pub use job::{AppKind, JobBuild, JobId, JobInit, JobSpec};
+pub use policy::RoundRobin;
+pub use stats::{
+    modeled_fused_us, modeled_solo_us, solo_profile, FusedStats, JobStats,
+    SoloProfile, StepTrace,
+};
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, GatherFn, RunCtx, TvState, Workload};
+use crate::tvm::{Interp, TvmProgram};
+
+/// Scheduler tunables.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Shared task-vector budget per fused epoch (lanes).
+    pub capacity: usize,
+    /// Fairness unit: lanes charged to one tenant per step.
+    pub slice_cap: usize,
+    /// Concurrent-tenant limit; later admissions queue until a slot
+    /// frees (backpressure).
+    pub max_active: usize,
+    /// Safety valve on runaway fused runs.
+    pub max_steps: u64,
+    /// Window bucket sizes for launch tiling (artifact granularity).
+    pub buckets: Vec<usize>,
+    /// `true`: one launch covers all tenants (linked multi-tenant
+    /// program — the interpreter engine). `false`: launches stay
+    /// per-tenant (per-app artifacts) and only the sync is shared.
+    pub fused_kernel: bool,
+    /// Record the per-step trace (one `StepTrace` per shared epoch) —
+    /// needed for modeled-APU replay; leave off for long-running
+    /// serving so `FusedStats.trace` stays empty.
+    pub trace: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 4096,
+            slice_cap: 1024,
+            max_active: 16,
+            max_steps: 10_000_000,
+            buckets: vec![256, 1024, 4096],
+            fused_kernel: true,
+            trace: false,
+        }
+    }
+}
+
+/// A tenant's execution engine (see module docs).
+pub enum Engine<'p> {
+    /// Pure-Rust vectorized fallback over the reference interpreter.
+    Interp(Interp<'p, dyn TvmProgram>),
+    /// AOT path: epochs run through the tenant's coordinator buckets.
+    Artifact {
+        co: &'p Coordinator<'p>,
+        st: TvState,
+        gather: Option<GatherFn>,
+        rc: RunCtx,
+    },
+}
+
+impl<'p> Engine<'p> {
+    /// The tenant's next epoch `(cen, lo, hi)`, if any.
+    pub fn front(&self) -> Option<(i32, usize, usize)> {
+        match self {
+            Engine::Interp(m) => m.front(),
+            Engine::Artifact { st, .. } => {
+                match (st.join_stack.last(), st.ndrange_stack.last()) {
+                    (Some(&cen), Some(&(lo, hi))) => Some((cen, lo, hi)),
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.front().is_none()
+    }
+
+    /// The tenant's `code[lo..hi]` window.
+    pub fn codes(&self, lo: usize, hi: usize) -> &[i32] {
+        match self {
+            Engine::Interp(m) => &m.code[lo..hi],
+            Engine::Artifact { st, .. } => &st.code[lo..hi],
+        }
+    }
+
+    /// Live lanes of `[lo, hi)` at epoch `cen`.
+    pub fn live_in(&self, cen: i32, lo: usize, hi: usize) -> u64 {
+        match self {
+            Engine::Interp(m) => m.live_in(cen, lo, hi),
+            Engine::Artifact { co, st, .. } => {
+                let t = co.app.t as i32;
+                st.code[lo..hi]
+                    .iter()
+                    .filter(|&&c| c > 0 && (c - 1) / t == cen)
+                    .count() as u64
+            }
+        }
+    }
+
+    /// Execute the tenant's next epoch. `Ok(false)` if already halted.
+    pub fn step(&mut self) -> Result<bool> {
+        match self {
+            Engine::Interp(m) => Ok(m.step()),
+            Engine::Artifact { co, st, gather, rc } => co.step(st, *gather, rc),
+        }
+    }
+
+    /// Epochs this tenant has executed.
+    pub fn epochs(&self) -> u64 {
+        match self {
+            Engine::Interp(m) => m.stats.epochs,
+            Engine::Artifact { rc, .. } => rc.stats().epochs,
+        }
+    }
+
+    /// Tasks this tenant has executed (work T1).
+    pub fn work(&self) -> u64 {
+        match self {
+            Engine::Interp(m) => m.stats.work,
+            Engine::Artifact { rc, .. } => rc.stats().work,
+        }
+    }
+
+    pub fn root_result(&self) -> i32 {
+        match self {
+            Engine::Interp(m) => m.root_result(),
+            Engine::Artifact { st, .. } => st.root_result(),
+        }
+    }
+
+    pub fn res(&self) -> &[i32] {
+        match self {
+            Engine::Interp(m) => &m.res,
+            Engine::Artifact { st, .. } => &st.res,
+        }
+    }
+
+    pub fn heap_i(&self) -> &[i32] {
+        match self {
+            Engine::Interp(m) => &m.heap_i,
+            Engine::Artifact { st, .. } => &st.heap_i,
+        }
+    }
+
+    pub fn heap_f(&self) -> &[f32] {
+        match self {
+            Engine::Interp(m) => &m.heap_f,
+            Engine::Artifact { st, .. } => &st.heap_f,
+        }
+    }
+
+    /// The interpreter machine, for engines that have one (verifiers
+    /// take `&Interp`).
+    pub fn machine(&self) -> Option<&Interp<'p, dyn TvmProgram>> {
+        match self {
+            Engine::Interp(m) => Some(m),
+            Engine::Artifact { .. } => None,
+        }
+    }
+}
+
+/// An admitted, still-running job.
+pub struct Tenant<'p> {
+    pub id: JobId,
+    pub label: String,
+    pub engine: Engine<'p>,
+    pub stats: JobStats,
+    pub kind: Option<AppKind>,
+}
+
+/// A completed job: stats plus the final machine for result extraction.
+pub struct FinishedJob<'p> {
+    pub id: JobId,
+    pub label: String,
+    pub stats: JobStats,
+    pub kind: Option<AppKind>,
+    pub engine: Engine<'p>,
+}
+
+/// Co-schedules many concurrent jobs into shared epochs.
+pub struct FusedScheduler<'p> {
+    cfg: SchedConfig,
+    fuser: Fuser,
+    policy: RoundRobin,
+    active: Vec<Tenant<'p>>,
+    pending: VecDeque<Tenant<'p>>,
+    finished: Vec<FinishedJob<'p>>,
+    stats: FusedStats,
+    next_id: usize,
+    on_complete: Option<Box<dyn FnMut(&FinishedJob<'p>) + 'p>>,
+}
+
+impl<'p> FusedScheduler<'p> {
+    pub fn new(cfg: SchedConfig) -> FusedScheduler<'p> {
+        let fuser = Fuser::new(cfg.buckets.clone());
+        let policy = RoundRobin::new(cfg.capacity, cfg.slice_cap);
+        FusedScheduler {
+            cfg,
+            fuser,
+            policy,
+            active: Vec::new(),
+            pending: VecDeque::new(),
+            finished: Vec::new(),
+            stats: FusedStats::default(),
+            next_id: 0,
+            on_complete: None,
+        }
+    }
+
+    /// Completion callback, fired as each tenant halts.
+    pub fn on_complete(&mut self, f: impl FnMut(&FinishedJob<'p>) + 'p) {
+        self.on_complete = Some(Box::new(f));
+    }
+
+    /// Admit an interpreter-engine tenant.
+    pub fn admit(
+        &mut self,
+        label: &str,
+        prog: &'p dyn TvmProgram,
+        init: &JobInit,
+    ) -> JobId {
+        self.admit_engine(label, Engine::Interp(init.machine(prog)), None)
+    }
+
+    /// Admit a [`JobBuild`] (carries its verifier along).
+    pub fn admit_build(&mut self, b: &'p JobBuild) -> JobId {
+        self.admit_engine(
+            &b.label,
+            Engine::Interp(b.init.machine(b.prog.as_ref())),
+            Some(b.kind.clone()),
+        )
+    }
+
+    /// Admit an artifact-engine tenant (AOT epoch-step execution).
+    pub fn admit_artifact(
+        &mut self,
+        label: &str,
+        co: &'p Coordinator<'p>,
+        w: &Workload,
+    ) -> JobId {
+        let st = co.init_state(w);
+        let rc = co.begin_run(&st);
+        self.admit_engine(
+            label,
+            Engine::Artifact { co, st, gather: w.gather, rc },
+            None,
+        )
+    }
+
+    fn admit_engine(
+        &mut self,
+        label: &str,
+        engine: Engine<'p>,
+        kind: Option<AppKind>,
+    ) -> JobId {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        let t = Tenant {
+            id,
+            label: label.to_string(),
+            engine,
+            stats: JobStats::default(),
+            kind,
+        };
+        if self.active.len() < self.cfg.max_active {
+            self.active.push(t);
+        } else {
+            self.pending.push_back(t);
+        }
+        id
+    }
+
+    fn admit_from_queue(&mut self) {
+        while self.active.len() < self.cfg.max_active {
+            match self.pending.pop_front() {
+                Some(t) => self.active.push(t),
+                None => break,
+            }
+        }
+    }
+
+    /// Execute one shared epoch: select tenants (fairness policy), pack
+    /// their fronts into the shared task vector, launch, and let each
+    /// rider run its epoch. Returns `false` when no work remains.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit_from_queue();
+        if self.active.is_empty() {
+            return Ok(false);
+        }
+        if self.stats.steps >= self.cfg.max_steps {
+            bail!("fused scheduler exceeded {} steps", self.cfg.max_steps);
+        }
+
+        let fronts: Vec<(usize, usize)> = self
+            .active
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let (_, lo, hi) =
+                    t.engine.front().expect("active tenant has a front");
+                (i, hi - lo)
+            })
+            .collect();
+        let sel = self.policy.select(&fronts);
+
+        // ---- pack the shared task vector ----
+        let views: Vec<Front> = sel
+            .iter()
+            .map(|&i| {
+                let t = &self.active[i];
+                let (cen, lo, hi) = t.engine.front().unwrap();
+                Front {
+                    job: t.id,
+                    cen,
+                    lo,
+                    hi,
+                    code: t.engine.codes(lo, hi),
+                    live: t.engine.live_in(cen, lo, hi),
+                }
+            })
+            .collect();
+        let frame = self.fuser.pack(&views);
+
+        let launches = if self.cfg.fused_kernel {
+            self.fuser.launches_for(frame.window())
+        } else {
+            frame.slices.iter().map(|s| self.fuser.launches_for(s.len)).sum()
+        };
+
+        self.stats.steps += 1;
+        self.stats.syncs += 1;
+        self.stats.launches += launches;
+        self.stats.work += frame.live;
+        self.stats.peak_window = self.stats.peak_window.max(frame.window());
+        self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+        if self.cfg.trace {
+            self.stats.trace.push(StepTrace {
+                live_per_job: frame.slices.iter().map(|s| s.live).collect(),
+                window: frame.window(),
+                launches,
+            });
+        }
+
+        // ---- riders run their epoch; everyone else stalls ----
+        let mut selected = vec![false; self.active.len()];
+        for (&i, s) in sel.iter().zip(&frame.slices) {
+            selected[i] = true;
+            let solo_launches = self.fuser.launches_for(s.len);
+            let t = &mut self.active[i];
+            t.stats.steps_ridden += 1;
+            t.stats.consec_stalls = 0;
+            t.stats.lanes += s.live;
+            t.stats.solo_syncs += 1;
+            t.stats.solo_launches += solo_launches;
+            t.stats.fused_launch_share += if frame.live > 0 {
+                launches as f64 * s.live as f64 / frame.live as f64
+            } else {
+                launches as f64 / sel.len() as f64
+            };
+            let progressed = t.engine.step()?;
+            debug_assert!(progressed, "selected tenant must progress");
+        }
+        for (i, t) in self.active.iter_mut().enumerate() {
+            if !selected[i] {
+                t.stats.stalls += 1;
+                t.stats.consec_stalls += 1;
+                t.stats.max_consec_stalls =
+                    t.stats.max_consec_stalls.max(t.stats.consec_stalls);
+            }
+        }
+
+        // ---- completions: free slots, fire callbacks, admit queued ----
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].engine.halted() {
+                let t = self.active.remove(i);
+                self.policy.retire(i);
+                self.stats.jobs_completed += 1;
+                let fj = FinishedJob {
+                    id: t.id,
+                    label: t.label,
+                    stats: t.stats,
+                    kind: t.kind,
+                    engine: t.engine,
+                };
+                if let Some(cb) = &mut self.on_complete {
+                    cb(&fj);
+                }
+                self.finished.push(fj);
+            } else {
+                i += 1;
+            }
+        }
+        self.admit_from_queue();
+        Ok(true)
+    }
+
+    /// Drive all admitted jobs to completion.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    pub fn stats(&self) -> &FusedStats {
+        &self.stats
+    }
+
+    pub fn finished(&self) -> &[FinishedJob<'p>] {
+        &self.finished
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn builds(tokens: &[&str]) -> Vec<JobBuild> {
+        tokens
+            .iter()
+            .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn fuses_heterogeneous_jobs_and_verifies() {
+        let bs = builds(&["fib:12", "mergesort:64", "bfs:grid:4"]);
+        let mut sched = FusedScheduler::new(SchedConfig::default());
+        for b in &bs {
+            sched.admit_build(b);
+        }
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 3);
+        for fj in sched.finished() {
+            let m = fj.engine.machine().unwrap();
+            fj.kind
+                .as_ref()
+                .unwrap()
+                .verify(m)
+                .unwrap_or_else(|e| panic!("{}: {e}", fj.label));
+        }
+        let s = sched.stats();
+        assert!(s.steps > 0 && s.work > 0);
+        // one sync per step, shared by all riders
+        assert_eq!(s.syncs, s.steps);
+    }
+
+    #[test]
+    fn completion_callback_fires_per_job() {
+        let bs = builds(&["fib:8", "nqueens:5"]);
+        let done = std::cell::RefCell::new(Vec::new());
+        {
+            let mut sched = FusedScheduler::new(SchedConfig::default());
+            sched.on_complete(|fj| done.borrow_mut().push(fj.label.clone()));
+            for b in &bs {
+                sched.admit_build(b);
+            }
+            sched.run_to_completion().unwrap();
+        }
+        let done = done.into_inner();
+        assert_eq!(done.len(), 2);
+        assert!(done.contains(&"fib:8".to_string()));
+    }
+
+    #[test]
+    fn backpressure_queues_beyond_max_active() {
+        let bs = builds(&["fib:8", "fib:9", "fib:10", "fib:11"]);
+        let cfg = SchedConfig { max_active: 2, ..Default::default() };
+        let mut sched = FusedScheduler::new(cfg);
+        for b in &bs {
+            sched.admit_build(b);
+        }
+        assert_eq!(sched.active_count(), 2);
+        assert_eq!(sched.pending_count(), 2);
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 4);
+        assert_eq!(sched.stats().peak_active, 2);
+    }
+}

@@ -1,0 +1,156 @@
+//! Accounting: what each tenant paid and saved by riding shared epochs,
+//! plus the fused-run totals and the modeled-APU formulas (one source
+//! of truth shared by `bench_fusion` and EXPERIMENTS.md).
+
+use crate::simt::GpuModel;
+use crate::tvm::{Interp, TvmProgram};
+
+use super::fuse::Fuser;
+use super::job::JobInit;
+
+/// Per-job scheduler accounting.
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    /// Fused steps this job contributed lanes to (its epoch count).
+    pub steps_ridden: u64,
+    /// Steps the job sat out under window pressure.
+    pub stalls: u64,
+    /// Longest stall run — bounded by the active tenant count under
+    /// round-robin (the no-starvation property).
+    pub max_consec_stalls: u64,
+    pub(crate) consec_stalls: u64,
+    /// Live lanes contributed to fused windows (its work T1).
+    pub lanes: u64,
+    /// Flag transfers (one per epoch) a dedicated solo run would pay.
+    pub solo_syncs: u64,
+    /// Window launches a dedicated solo run would pay.
+    pub solo_launches: u64,
+    /// This job's live-lane-weighted share of the fused launches.
+    pub fused_launch_share: f64,
+}
+
+impl JobStats {
+    /// Launches this job avoided by riding shared epochs.
+    pub fn launches_saved(&self) -> f64 {
+        self.solo_launches as f64 - self.fused_launch_share
+    }
+
+    /// Modeled V∞ saved (µs): avoided launches times the launch cost.
+    pub fn vinf_saved_us(&self, m: &GpuModel) -> f64 {
+        self.launches_saved() * m.launch_us
+    }
+}
+
+/// One fused step, for the modeled-APU replay.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Live lanes per participating tenant (slice order).
+    pub live_per_job: Vec<u64>,
+    /// Fused window length (lanes shipped).
+    pub window: usize,
+    /// Launches after bucket tiling.
+    pub launches: u64,
+}
+
+/// Whole-run scheduler totals.
+#[derive(Debug, Clone, Default)]
+pub struct FusedStats {
+    /// Shared epochs executed (the fused T∞).
+    pub steps: u64,
+    /// Epoch synchronizations (flag transfers): one per step, however
+    /// many tenants rode it.
+    pub syncs: u64,
+    /// Window launches after bucket tiling.
+    pub launches: u64,
+    /// Total live lanes (Σ tenant work).
+    pub work: u64,
+    pub peak_window: usize,
+    pub peak_active: usize,
+    pub jobs_completed: u64,
+    /// Per-step trace (enabled by `SchedConfig::trace`).
+    pub trace: Vec<StepTrace>,
+}
+
+/// Modeled APU time (µs) of the fused run: each step is one fused
+/// epoch launch (plus overflow tiles at full launch cost).
+pub fn modeled_fused_us(m: &GpuModel, trace: &[StepTrace]) -> f64 {
+    trace
+        .iter()
+        .map(|s| {
+            m.fused_epoch_us(&s.live_per_job)
+                + s.launches.saturating_sub(1) as f64 * m.launch_us
+        })
+        .sum()
+}
+
+/// Modeled APU time (µs) of a solo per-epoch profile.
+pub fn modeled_solo_us(m: &GpuModel, trace: &[(u64, u64)]) -> f64 {
+    trace
+        .iter()
+        .map(|&(live, launches)| m.epoch_us(live, launches))
+        .sum()
+}
+
+/// What a dedicated (unfused) run of one job costs: its epoch schedule
+/// replayed through the same bucket tiling.
+#[derive(Debug, Clone, Default)]
+pub struct SoloProfile {
+    pub epochs: u64,
+    pub launches: u64,
+    pub work: u64,
+    pub root: i32,
+    /// Per-epoch `(live, launches)`.
+    pub trace: Vec<(u64, u64)>,
+}
+
+/// Run `prog` solo from `init`, recording the per-epoch schedule —
+/// the baseline `bench_fusion` compares the fused run against.
+pub fn solo_profile(prog: &dyn TvmProgram, init: &JobInit, fuser: &Fuser) -> SoloProfile {
+    let mut m: Interp<'_, dyn TvmProgram> = init.machine(prog);
+    let mut prof = SoloProfile::default();
+    while let Some((cen, lo, hi)) = m.front() {
+        let live = m.live_in(cen, lo, hi);
+        let launches = fuser.launches_for(hi - lo);
+        prof.epochs += 1;
+        prof.launches += launches;
+        prof.trace.push((live, launches));
+        m.step();
+    }
+    prof.work = m.stats.work;
+    prof.root = m.root_result();
+    prof
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::JobSpec;
+    use crate::simt::GpuModel;
+
+    #[test]
+    fn solo_profile_matches_interp_counters() {
+        let b = JobSpec::parse("fib:10").unwrap().instantiate().unwrap();
+        let fuser = Fuser::new(vec![256, 1024, 4096]);
+        let prof = solo_profile(b.prog.as_ref(), &b.init, &fuser);
+
+        let mut m = b.init.machine(b.prog.as_ref());
+        let st = m.run();
+        assert_eq!(prof.epochs, st.epochs);
+        assert_eq!(prof.work, st.work);
+        assert_eq!(prof.root, m.root_result());
+        // every fib(10) front fits one 256-lane bucket
+        assert_eq!(prof.launches, prof.epochs);
+    }
+
+    #[test]
+    fn savings_arithmetic() {
+        let m = GpuModel::default();
+        let js = JobStats {
+            solo_launches: 10,
+            fused_launch_share: 4.0,
+            ..Default::default()
+        };
+        assert_eq!(js.launches_saved(), 6.0);
+        assert!((js.vinf_saved_us(&m) - 60.0).abs() < 1e-9);
+    }
+}

@@ -62,6 +62,30 @@ impl GpuModel {
         compute_us + launches as f64 * self.launch_us
     }
 
+    /// Estimated wall time (µs) for one *fused* epoch: the live lanes
+    /// of several tenant jobs packed contiguously into a single launch
+    /// (one V∞ paid for everyone — the work-together principle applied
+    /// across jobs). Each job keeps its own `divergence` penalty inside
+    /// its slice; wavefronts straddling a slice boundary run two
+    /// different programs in lockstep and pay the pessimistic
+    /// `log2(W)` penalty. With one job this reduces exactly to
+    /// `epoch_us(live, 1)`.
+    ///
+    /// This is the one formula both `bench_fusion` and the
+    /// EXPERIMENTS.md "modeled APU" columns use.
+    pub fn fused_epoch_us(&self, live_per_job: &[u64]) -> f64 {
+        let total: u64 = live_per_job.iter().sum();
+        let lanes = (self.cus * self.simd_width) as f64;
+        let waves = (total as f64 / lanes).ceil().max(1.0);
+        let jobs_live = live_per_job.iter().filter(|&&l| l > 0).count();
+        let boundary = (jobs_live.saturating_sub(1) as f64).min(waves - 1.0);
+        let coherent = waves - boundary;
+        let wave_us = self.task_cycles / (self.ghz * 1e3);
+        let split_penalty = (self.simd_width as f64).log2().max(self.divergence);
+        (coherent * self.divergence + boundary * split_penalty) * wave_us
+            + self.launch_us
+    }
+
     /// Estimate a whole run from a per-epoch trace of
     /// `(cen, range, live, forked)` tuples (CoordinatorConfig::trace).
     pub fn run_us(&self, trace: &[(i32, u32, u32, u32)], window: u32) -> f64 {
@@ -114,6 +138,36 @@ mod tests {
         // T1 >> T-inf: bound approaches P / divergence = 512/2
         let s = m.speedup_bound(100_000_000, 10);
         assert!((s - 256.0).abs() < 1.0, "{s}");
+    }
+
+    #[test]
+    fn fused_single_job_matches_epoch_us() {
+        let m = GpuModel::default();
+        for live in [1u64, 100, 10_000] {
+            let a = m.fused_epoch_us(&[live]);
+            let b = m.epoch_us(live, 1);
+            assert!((a - b).abs() < 1e-9, "live={live}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_epoch_cheaper_than_solo_epochs() {
+        // 3 small tenants: one fused launch must beat three solo
+        // launches (that is the entire point of epoch fusion).
+        let m = GpuModel::default();
+        let fused = m.fused_epoch_us(&[40, 60, 30]);
+        let solo: f64 = [40u64, 60, 30].iter().map(|&l| m.epoch_us(l, 1)).sum();
+        assert!(fused < solo, "fused {fused} vs solo {solo}");
+    }
+
+    #[test]
+    fn fused_boundary_waves_pay_divergence() {
+        // same total work, more tenants => never cheaper (boundary
+        // wavefronts mix programs), bounded by the wave count.
+        let m = GpuModel::default();
+        let one = m.fused_epoch_us(&[3000]);
+        let many = m.fused_epoch_us(&[1000, 1000, 1000]);
+        assert!(many >= one, "{many} vs {one}");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! stack discipline as the coordinator.
 
 use super::program::{ScatterOp, TaskCtx, TvmProgram, INVALID};
+use super::tms::tms_update;
 
 /// Execution statistics: the paper's §4.4 quantities.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -24,7 +25,11 @@ pub struct InterpStats {
 }
 
 /// The machine state (mirrors `coordinator::TvState`).
-pub struct Interp<'p, P: TvmProgram> {
+///
+/// `P: ?Sized` so a machine can run a `dyn TvmProgram` — the fused
+/// scheduler ([`crate::sched`]) holds tenants of heterogeneous apps as
+/// `Interp<'_, dyn TvmProgram>`.
+pub struct Interp<'p, P: TvmProgram + ?Sized> {
     prog: &'p P,
     pub code: Vec<i32>,
     pub args: Vec<Vec<i32>>,
@@ -40,7 +45,7 @@ pub struct Interp<'p, P: TvmProgram> {
     max_epochs: u64,
 }
 
-impl<'p, P: TvmProgram> Interp<'p, P> {
+impl<'p, P: TvmProgram + ?Sized> Interp<'p, P> {
     /// New machine with capacity `n`, initial task `<tid 1, init_args>`.
     pub fn new(prog: &'p P, n: usize, init_args: Vec<i32>) -> Self {
         let t = prog.num_task_types() as i32;
@@ -95,14 +100,45 @@ impl<'p, P: TvmProgram> Interp<'p, P> {
 
     /// Run to completion. Returns stats.
     pub fn run(&mut self) -> InterpStats {
-        while let Some(cen) = self.join_stack.pop() {
-            let (lo, hi) = self.ndrange_stack.pop().expect("stack parity");
-            if self.stats.epochs >= self.max_epochs {
-                panic!("epoch limit exceeded");
-            }
-            self.run_epoch(cen, lo, hi);
-        }
+        while self.step() {}
         self.stats
+    }
+
+    /// The machine has halted when the TMS is empty.
+    pub fn halted(&self) -> bool {
+        self.join_stack.is_empty()
+    }
+
+    /// Peek the next epoch's `(cen, lo, hi)` without executing it —
+    /// the tenant "front" the fused scheduler packs into shared epochs.
+    pub fn front(&self) -> Option<(i32, usize, usize)> {
+        match (self.join_stack.last(), self.ndrange_stack.last()) {
+            (Some(&cen), Some(&(lo, hi))) => Some((cen, lo, hi)),
+            _ => None,
+        }
+    }
+
+    /// Count the live lanes of `[lo, hi)` at epoch `cen` — tasks that
+    /// would execute (not padding, not other-epoch entries).
+    pub fn live_in(&self, cen: i32, lo: usize, hi: usize) -> u64 {
+        self.code[lo..hi]
+            .iter()
+            .filter(|&&c| matches!(self.decode(c), Some((e, _)) if e == cen))
+            .count() as u64
+    }
+
+    /// Execute exactly one epoch (the top of the TMS). Returns `false`
+    /// when the machine has already halted.
+    pub fn step(&mut self) -> bool {
+        let Some(cen) = self.join_stack.pop() else {
+            return false;
+        };
+        let (lo, hi) = self.ndrange_stack.pop().expect("stack parity");
+        if self.stats.epochs >= self.max_epochs {
+            panic!("epoch limit exceeded");
+        }
+        self.run_epoch(cen, lo, hi);
+        true
     }
 
     /// One epoch over the NDRange [lo, hi) at epoch number `cen`.
@@ -202,32 +238,31 @@ impl<'p, P: TvmProgram> Interp<'p, P> {
             };
         }
 
-        // Phase 3: stack updates — join range first, fork range on top.
-        if join_scheduled {
-            self.join_stack.push(cen);
-            self.ndrange_stack.push((lo, hi));
+        // Maps run to completion before the next epoch's Phase 1; they
+        // only touch heaps, so running them before the stack update is
+        // equivalent and lets the update share the coordinator's code.
+        for m in pending_maps {
+            self.prog.run_map(
+                &m,
+                &mut self.heap_i,
+                &mut self.heap_f,
+                &self.const_i,
+                &self.const_f,
+            );
+            self.stats.maps += 1;
         }
-        if self.next_free > old_next_free {
-            self.join_stack.push(cen + 1);
-            self.ndrange_stack.push((old_next_free, self.next_free));
-        }
-        if !pending_maps.is_empty() {
-            for m in pending_maps {
-                self.prog.run_map(
-                    &m,
-                    &mut self.heap_i,
-                    &mut self.heap_f,
-                    &self.const_i,
-                    &self.const_f,
-                );
-                self.stats.maps += 1;
-            }
-        }
-        // Reclaim (paper §5.3, epoch-3 behaviour): nothing scheduled and
-        // this range is the top of the allocation — entries are dead.
-        if !join_scheduled && self.next_free == old_next_free && hi == self.next_free {
-            self.next_free = lo;
-        }
+
+        // Phase 3: shared TMS-compression update (+ §5.3 reclaim).
+        tms_update(
+            &mut self.join_stack,
+            &mut self.ndrange_stack,
+            cen,
+            lo,
+            hi,
+            old_next_free,
+            &mut self.next_free,
+            join_scheduled,
+        );
     }
 
     /// The result emitted by the root task.

@@ -13,6 +13,8 @@
 
 mod interp;
 mod program;
+mod tms;
 
 pub use interp::{Interp, InterpStats};
 pub use program::{ScatterOp, TaskCtx, TvmProgram, INVALID};
+pub use tms::tms_update;

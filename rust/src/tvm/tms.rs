@@ -1,0 +1,74 @@
+//! The Task-Mask-Stack compression update (paper §5.1.2, §5.2.4, §5.3)
+//! as a free function, shared by every epoch driver: the sequential
+//! interpreter, the solo coordinator, and the fused multi-tenant
+//! scheduler. Keeping one copy of this logic is what guarantees the
+//! solo and fused paths schedule identical epoch sequences.
+
+/// Post-epoch stack update for the range `[lo, hi)` that just ran at
+/// epoch number `cen`, where `old_next_free` was the allocation cursor
+/// before the epoch and `*next_free` is the cursor after forks.
+///
+/// Order matters (paper §4.3.3): the join range is pushed first and the
+/// fork range on top, so children of this epoch run before the join
+/// re-runs. Afterwards, a dead top-of-allocation range is reclaimed
+/// (§5.3): if nothing joined, nothing forked, and this range is the top
+/// of the allocation, the entries are unreachable and the cursor
+/// unwinds to `lo`.
+pub fn tms_update(
+    join_stack: &mut Vec<i32>,
+    ndrange_stack: &mut Vec<(usize, usize)>,
+    cen: i32,
+    lo: usize,
+    hi: usize,
+    old_next_free: usize,
+    next_free: &mut usize,
+    join_scheduled: bool,
+) {
+    if join_scheduled {
+        join_stack.push(cen);
+        ndrange_stack.push((lo, hi));
+    }
+    if *next_free > old_next_free {
+        join_stack.push(cen + 1);
+        ndrange_stack.push((old_next_free, *next_free));
+    }
+    if !join_scheduled && *next_free == old_next_free && hi == *next_free {
+        *next_free = lo;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_below_forks() {
+        let mut js = vec![];
+        let mut ns = vec![];
+        let mut nf = 5usize;
+        tms_update(&mut js, &mut ns, 3, 0, 1, 1, &mut nf, true);
+        assert_eq!(js, vec![3, 4]); // join pushed first, forks on top
+        assert_eq!(ns, vec![(0, 1), (1, 5)]);
+        assert_eq!(nf, 5);
+    }
+
+    #[test]
+    fn reclaims_dead_top_range() {
+        let mut js = vec![];
+        let mut ns = vec![];
+        let mut nf = 9usize;
+        tms_update(&mut js, &mut ns, 2, 4, 9, 9, &mut nf, false);
+        assert!(js.is_empty() && ns.is_empty());
+        assert_eq!(nf, 4, "cursor unwinds to the popped range's lo");
+    }
+
+    #[test]
+    fn no_reclaim_below_live_entries() {
+        let mut js = vec![];
+        let mut ns = vec![];
+        let mut nf = 9usize;
+        // range [2, 6) finished but [6, 9) is still allocated above it
+        tms_update(&mut js, &mut ns, 2, 2, 6, 9, &mut nf, false);
+        assert_eq!(nf, 9);
+    }
+}

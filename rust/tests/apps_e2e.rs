@@ -3,18 +3,12 @@
 
 use trees::apps::{annealing, matmul, nqueens, tree, tsp};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::tvm::Interp;
 use trees::util::rng::Rng;
 
 fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
-    match load_manifest() {
-        Ok(x) => Some(x),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
+    artifacts_available()
 }
 
 #[test]

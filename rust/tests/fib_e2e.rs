@@ -8,17 +8,11 @@
 
 use trees::apps::fib::{capacity_for, fib_ref, workload, Fib};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::tvm::Interp;
 
 fn skip_if_no_artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
-    match load_manifest() {
-        Ok(x) => Some(x),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
+    artifacts_available()
 }
 
 #[test]

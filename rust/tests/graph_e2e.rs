@@ -6,17 +6,11 @@
 use trees::apps::graph_sp::{workload, GraphSp, Layout};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
 use trees::graph::{bfs_levels, dijkstra, gen, Csr};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::tvm::Interp;
 
 fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
-    match load_manifest() {
-        Ok(x) => Some(x),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
+    artifacts_available()
 }
 
 fn run_app(

@@ -2,17 +2,11 @@
 
 use trees::baselines::{Bitonic, Worklist};
 use trees::graph::{bfs_levels, dijkstra, gen};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::util::rng::Rng;
 
 fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
-    match load_manifest() {
-        Ok(x) => Some(x),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
+    artifacts_available()
 }
 
 #[test]

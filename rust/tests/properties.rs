@@ -12,7 +12,7 @@
 
 use trees::apps::fib::{capacity_for, workload, Fib};
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::tvm::{Interp, TaskCtx, TvmProgram};
 use trees::util::quickcheck::{check, shrink_int, shrink_vec, Config};
 use trees::util::rng::Rng;
@@ -108,8 +108,7 @@ fn prop_interp_stack_parity_and_alloc_monotonicity() {
 
 #[test]
 fn prop_fib_artifact_matches_interpreter() {
-    let Ok((manifest, dir)) = load_manifest() else {
-        eprintln!("SKIP: artifacts missing");
+    let Some((manifest, dir)) = artifacts_available() else {
         return;
     };
     let dev = Device::cpu().unwrap();

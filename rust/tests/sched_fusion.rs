@@ -1,0 +1,199 @@
+//! Properties of the multi-tenant epoch-fusion scheduler:
+//!
+//! (a) a fused run of K jobs produces per-job results (root, res, both
+//!     heaps) and machine-model counters (`InterpStats.work`, epochs)
+//!     bit-identical to K dedicated solo interpreter runs;
+//! (b) total fused launches never exceed — and with ≥2 co-resident
+//!     jobs strictly undercut — the sum of the solo runs' launches;
+//! (c) no job starves under round-robin slice caps, even when the
+//!     fused window is far smaller than the demand.
+
+use trees::sched::{
+    solo_profile, FusedScheduler, Fuser, JobBuild, JobSpec, SchedConfig,
+};
+use trees::util::quickcheck::{check, shrink_vec, Config};
+use trees::util::rng::Rng;
+
+const POOL: &[&str] = &[
+    "fib:10",
+    "fib:12",
+    "fib:13",
+    "mergesort:64",
+    "mergesort:100",
+    "bfs:grid:4",
+    "bfs:uniform:5",
+    "sssp:grid:4",
+    "nqueens:5",
+    "nqueens:6",
+    "tsp:6",
+];
+
+fn gen_mix(rng: &mut Rng, min: usize, max: usize) -> Vec<String> {
+    let k = min + rng.below((max - min + 1) as u64) as usize;
+    (0..k)
+        .map(|_| POOL[rng.below(POOL.len() as u64) as usize].to_string())
+        .collect()
+}
+
+fn builds_for(tokens: &[String]) -> Vec<JobBuild> {
+    tokens
+        .iter()
+        .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+        .collect()
+}
+
+fn fused_matches_solo(tokens: &[String]) -> Result<(), String> {
+    let builds = builds_for(tokens);
+    let solos = builds_for(tokens); // same specs => identical builds
+
+    let mut sched = FusedScheduler::new(SchedConfig::default());
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion().map_err(|e| e.to_string())?;
+
+    let fuser = Fuser::new(vec![256, 1024, 4096]);
+    let mut solo_launches = 0u64;
+    let mut machines = Vec::new();
+    for b in &solos {
+        let prof = solo_profile(b.prog.as_ref(), &b.init, &fuser);
+        solo_launches += prof.launches;
+        let mut m = b.init.machine(b.prog.as_ref());
+        m.run();
+        machines.push(m);
+    }
+
+    if sched.finished().len() != tokens.len() {
+        return Err(format!(
+            "{} of {} jobs finished",
+            sched.finished().len(),
+            tokens.len()
+        ));
+    }
+    for fj in sched.finished() {
+        let i = fj.id.0;
+        let m = fj.engine.machine().expect("interp engine");
+        let sm = &machines[i];
+        if m.root_result() != sm.root_result() {
+            return Err(format!(
+                "{}: root {} vs solo {}",
+                fj.label,
+                m.root_result(),
+                sm.root_result()
+            ));
+        }
+        if m.res != sm.res {
+            return Err(format!("{}: res vector differs from solo", fj.label));
+        }
+        if m.heap_i != sm.heap_i || m.heap_f != sm.heap_f {
+            return Err(format!("{}: heap differs from solo", fj.label));
+        }
+        if m.stats.work != sm.stats.work || m.stats.epochs != sm.stats.epochs {
+            return Err(format!(
+                "{}: counters {:?} vs solo {:?}",
+                fj.label, m.stats, sm.stats
+            ));
+        }
+        if fj.stats.steps_ridden != sm.stats.epochs {
+            return Err(format!(
+                "{}: rode {} shared epochs but needs {}",
+                fj.label, fj.stats.steps_ridden, sm.stats.epochs
+            ));
+        }
+    }
+
+    let fused_launches = sched.stats().launches;
+    if fused_launches > solo_launches {
+        return Err(format!(
+            "fused launches {fused_launches} > solo {solo_launches}"
+        ));
+    }
+    if tokens.len() >= 2 && fused_launches >= solo_launches {
+        return Err(format!(
+            "expected strictly fewer launches: fused {fused_launches}, \
+             solo {solo_launches}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn heterogeneous_trio_is_bit_identical_and_saves_launches() {
+    // the acceptance mix: fib + bfs + mergesort in shared epochs
+    let tokens: Vec<String> = ["fib:12", "bfs:grid:4", "mergesort:100"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    fused_matches_solo(&tokens).unwrap();
+}
+
+#[test]
+fn prop_fused_equals_solo_on_random_mixes() {
+    check(
+        Config { cases: 12, ..Default::default() },
+        |rng: &mut Rng| gen_mix(rng, 2, 5),
+        |v| shrink_vec(v, |_| Vec::new()),
+        |tokens| fused_matches_solo(tokens),
+    );
+}
+
+#[test]
+fn prop_no_starvation_under_window_pressure() {
+    check(
+        Config { cases: 8, ..Default::default() },
+        |rng: &mut Rng| gen_mix(rng, 3, 7),
+        |v| shrink_vec(v, |_| Vec::new()),
+        |tokens| {
+            let builds = builds_for(tokens);
+            let cfg = SchedConfig {
+                capacity: 64,
+                slice_cap: 16,
+                max_active: 8,
+                ..Default::default()
+            };
+            let mut sched = FusedScheduler::new(cfg);
+            for b in &builds {
+                sched.admit_build(b);
+            }
+            sched.run_to_completion().map_err(|e| e.to_string())?;
+            if sched.finished().len() != tokens.len() {
+                return Err(format!(
+                    "{} of {} jobs finished",
+                    sched.finished().len(),
+                    tokens.len()
+                ));
+            }
+            for fj in sched.finished() {
+                if fj.stats.max_consec_stalls > tokens.len() as u64 {
+                    return Err(format!(
+                        "{} starved: {} consecutive stalls among {} jobs",
+                        fj.label,
+                        fj.stats.max_consec_stalls,
+                        tokens.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sync_savings_scale_with_tenant_count() {
+    // K co-resident copies share every epoch sync: fused syncs ~ the
+    // longest job's epoch count, solo syncs = the sum of all of them.
+    let tokens: Vec<String> =
+        vec!["fib:12".into(), "fib:12".into(), "fib:12".into(), "fib:12".into()];
+    let builds = builds_for(&tokens);
+    let mut sched = FusedScheduler::new(SchedConfig::default());
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion().unwrap();
+    let s = sched.stats();
+    let solo_syncs: u64 =
+        sched.finished().iter().map(|f| f.stats.solo_syncs).sum();
+    // identical jobs march in lockstep: one shared sync per epoch
+    assert_eq!(s.syncs * 4, solo_syncs, "{} vs {}", s.syncs, solo_syncs);
+    assert!(s.launches * 2 < solo_syncs, "fusion must beat solo launches");
+}

@@ -4,17 +4,11 @@
 use trees::apps::{fft, msort};
 use trees::baselines::seq;
 use trees::coordinator::{Coordinator, CoordinatorConfig};
-use trees::runtime::{load_manifest, Device};
+use trees::runtime::{artifacts_available, Device};
 use trees::util::rng::Rng;
 
 fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
-    match load_manifest() {
-        Ok(x) => Some(x),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
+    artifacts_available()
 }
 
 fn run_sort(app_name: &str, n: usize) {

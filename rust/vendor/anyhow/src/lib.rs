@@ -1,0 +1,195 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored shim
+//! provides exactly the API subset the `trees` crate uses: [`Error`]
+//! with a context chain, [`Result`], the [`Context`] extension trait,
+//! and the `anyhow!` / `bail!` macros. Semantics mirror anyhow 1.x:
+//! `Display` prints the outermost message, `{:#}` prints the whole
+//! chain colon-separated, and `Debug` (what `unwrap` shows) prints the
+//! chain as a "Caused by:" list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as
+/// the real crate, so `anyhow::Result<T>` and `Result<T, E>` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (also usable as a
+    /// function reference, e.g. `map_err(anyhow::Error::msg)`).
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap a std error, preserving its source chain as messages.
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Error {
+        Error::from_std(&e)
+    }
+
+    fn from_std<E: StdError + ?Sized>(e: &E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| Box::new(Error::from_std(s))),
+        }
+    }
+
+    /// Push a new outermost context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. The reflexive case (Error -> Error)
+// is core's `impl From<T> for T`; no conflict because Error deliberately
+// does not implement std::error::Error (same design as real anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Anything that can become an [`Error`]. The blanket impl covers
+    /// std errors; the direct impl lets context chain onto an existing
+    /// `anyhow::Error`. Disjoint because `Error: !std::error::Error`.
+    pub trait IntoError: Send + Sync + 'static {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to the error side of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg(format!("{}", $err)) };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "inner failure")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("outer step")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer step");
+        assert_eq!(format!("{e:#}"), "outer step: inner failure");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        let base: Result<()> = Err(anyhow!("base {}", 42));
+        let e = base.with_context(|| format!("wrapped {}", 1)).unwrap_err();
+        assert_eq!(e.chain(), vec!["wrapped 1", "base 42"]);
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn f(fail: bool) -> Result<i32> {
+            if fail {
+                bail!("nope: {fail}");
+            }
+            let n: i32 = "7".parse()?; // ParseIntError -> Error via From
+            Ok(n)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope: true");
+    }
+
+    #[test]
+    fn error_msg_as_fn_reference() {
+        let r: Result<(), String> = Err("bad".to_string());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(e.to_string(), "bad");
+    }
+}
