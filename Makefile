@@ -1,7 +1,9 @@
 # TREES — build / test entry points.
 #
-#   make check      tier-1: release build + full test suite (offline;
-#                   artifact e2e tests self-skip without artifacts)
+#   make check      tier-1: release build + full test suite + clippy
+#                   (offline; artifact e2e tests self-skip without
+#                   artifacts)
+#   make clippy     cargo clippy, warnings denied
 #   make fmt        rustfmt the workspace
 #   make fmt-check  rustfmt in --check mode (CI)
 #   make artifacts  AOT-lower the epoch-step programs to HLO text
@@ -10,15 +12,18 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test fmt fmt-check artifacts bench pytest
+.PHONY: check build test clippy fmt fmt-check artifacts bench pytest
 
-check: build test
+check: build test clippy
 
 build:
 	cd rust && $(CARGO) build --release
 
 test:
 	cd rust && $(CARGO) test -q
+
+clippy:
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
 
 fmt:
 	cd rust && $(CARGO) fmt --all

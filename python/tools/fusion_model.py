@@ -1,13 +1,17 @@
-"""Deterministic twin of rust/src/sched for the EXPERIMENTS.md tables.
+"""Deterministic twin of rust/src/sched + rust/src/shard for the
+EXPERIMENTS.md tables (E-FUSE-1 and E-SHARD-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
-exact counting semantics of the fused scheduler (rust/src/sched) and the
-cost model (rust/src/simt) for apps whose epoch schedules are
-RNG-independent: fib, mergesort (structure does not depend on the data
-values), nqueens, and BFS on the deterministic 4-neighbor grid. Every
-quantity printed here is a *model* quantity (epoch counts, live lanes,
-bucket-tiled launches, GpuModel microseconds) — `cargo bench --bench
-bench_fusion` computes the same numbers from the real machines.
+exact counting semantics of the fused scheduler (rust/src/sched), the
+shard device group (rust/src/shard: per-device round-robin fusion,
+lock-step group steps with a barrier, epoch-boundary rebalancing), and
+the cost models (rust/src/simt GpuModel + DeviceGroup) for apps whose
+epoch schedules are RNG-independent: fib, mergesort (structure does not
+depend on the data values), nqueens, and BFS on the deterministic
+4-neighbor grid. Every quantity printed here is a *model* quantity
+(epoch counts, live lanes, bucket-tiled launches, modeled
+microseconds) — `cargo bench --bench bench_fusion` and `cargo bench
+--bench bench_shard` compute the same numbers from the real machines.
 
 Run:  python tools/fusion_model.py
 """
@@ -318,39 +322,21 @@ class RoundRobin:
 
 
 def run_fused(tokens):
-    machines = [build(t) for t in tokens]
-    active = list(range(len(machines)))
-    policy = RoundRobin()
-    steps = launches = work = 0
+    """One fused scheduler = a 1-device shard group with no barrier;
+    expressed through ShardDevice so the E-FUSE and E-SHARD twins share
+    one fused-step implementation and cannot drift."""
+    dev = ShardDevice()
+    for t in tokens:
+        dev.admit(build(t))
+    steps = 0
     fused_us = 0.0
-    while active:
-        fronts = []
-        for i, a in enumerate(active):
-            cen, lo, hi = machines[a].front()
-            fronts.append((i, hi - lo))
-        sel = policy.select(fronts)
-        live_per_job, window = [], 0
-        for i in sel:
-            m = machines[active[i]]
-            cen, lo, hi = m.front()
-            live_per_job.append(m.live_in(cen, lo, hi))
-            window += hi - lo
-        step_launches = launches_for(window)
+    while dev.has_work():
+        live_per_job, step_launches = dev.step()
         steps += 1
-        launches += step_launches
-        work += sum(live_per_job)
         fused_us += fused_epoch_us(live_per_job) \
             + (step_launches - 1) * LAUNCH_US
-        for i in sel:
-            machines[active[i]].step()
-        pos = 0
-        while pos < len(active):
-            if machines[active[pos]].front() is None:
-                active.pop(pos)
-                policy.retire(pos)
-            else:
-                pos += 1
-    return dict(steps=steps, launches=launches, work=work, us=fused_us)
+    return dict(steps=steps, launches=dev.launches, work=dev.work,
+                us=fused_us)
 
 
 def run_solo(tokens):
@@ -370,6 +356,191 @@ def run_solo(tokens):
     return dict(launches=launches, syncs=syncs, work=work, us=us)
 
 
+# ------------------------------- shard twins (rust/src/shard)
+
+BARRIER_HOP_US = 2.0
+SKEW_THRESHOLD, COOLDOWN = 1.5, 2
+MAX_ACTIVE = 16  # SchedConfig::default().max_active
+
+
+def barrier_us(devices):
+    """simt::DeviceGroup::barrier_us twin (log2-depth signal tree)."""
+    if devices <= 1:
+        return 0.0
+    return BARRIER_HOP_US * math.ceil(math.log2(devices))
+
+
+class ShardDevice:
+    """One device: its own machines, fairness cursor, backpressure
+    queue, and counters (sched::FusedScheduler twin, as driven by
+    shard::ShardGroup)."""
+
+    def __init__(self):
+        self.active = []
+        self.pending = []
+        self.policy = RoundRobin()
+        self.steps = 0
+        self.launches = 0
+        self.work = 0
+
+    def has_work(self):
+        return bool(self.active) or bool(self.pending)
+
+    def has_active_slot(self):
+        return len(self.active) < MAX_ACTIVE
+
+    def admit(self, m):
+        if self.has_active_slot():
+            self.active.append(m)
+        else:
+            self.pending.append(m)
+
+    def admit_from_queue(self):
+        while self.has_active_slot() and self.pending:
+            self.active.append(self.pending.pop(0))
+
+    def live_lanes(self):
+        total = 0
+        for m in self.active:
+            cen, lo, hi = m.front()
+            total += m.live_in(cen, lo, hi)
+        return total
+
+    def tenant_loads(self):
+        out = []
+        for m in self.active:
+            cen, lo, hi = m.front()
+            out.append((m, m.live_in(cen, lo, hi)))
+        return out
+
+    def step(self):
+        """One fused step; returns this step's (live_per_job, launches)
+        — the device's StepTrace entry."""
+        self.admit_from_queue()
+        fronts = []
+        for i, m in enumerate(self.active):
+            cen, lo, hi = m.front()
+            fronts.append((i, hi - lo))
+        sel = self.policy.select(fronts)
+        live_per_job, window = [], 0
+        for i in sel:
+            m = self.active[i]
+            cen, lo, hi = m.front()
+            live_per_job.append(m.live_in(cen, lo, hi))
+            window += hi - lo
+        step_launches = launches_for(window)
+        self.steps += 1
+        self.launches += step_launches
+        self.work += sum(live_per_job)
+        for i in sel:
+            self.active[i].step()
+        pos = 0
+        while pos < len(self.active):
+            if self.active[pos].front() is None:
+                self.active.pop(pos)
+                self.policy.retire(pos)
+            else:
+                pos += 1
+        self.admit_from_queue()
+        return live_per_job, step_launches
+
+
+class Rebalancer:
+    """shard::balance::Rebalancer twin: at most one migration per
+    boundary; trigger max > mean * skew; strict gap improvement."""
+
+    def __init__(self, enabled=True, skew=SKEW_THRESHOLD, cooldown=COOLDOWN):
+        self.enabled = enabled
+        self.skew = skew
+        self.cooldown = cooldown
+        self.steps_since = cooldown
+
+    def plan(self, loads, devs):
+        if not self.enabled or len(loads) < 2:
+            return None
+        if self.steps_since < self.cooldown:
+            self.steps_since += 1
+            return None
+        total = sum(loads)
+        if total == 0:
+            return None
+        src = max(range(len(loads)), key=lambda d: loads[d])
+        dst = min(range(len(loads)), key=lambda d: loads[d])
+        mean = total / len(loads)
+        if loads[src] <= mean * max(self.skew, 1.0):
+            return None
+        if not devs[dst].has_active_slot():
+            return None
+        tenants = devs[src].tenant_loads()
+        if len(tenants) < 2:
+            return None
+        gap0 = loads[src] - loads[dst]
+        best = None
+        for m, load in tenants:
+            if load == 0 or load >= gap0:
+                continue
+            new_gap = abs((loads[src] - load) - (loads[dst] + load))
+            if new_gap < (gap0 if best is None else best[1]):
+                best = (m, new_gap)
+        if best is None:
+            return None
+        self.steps_since = 0
+        return best[0], src, dst
+
+
+def run_sharded(tokens, devices, placement="rr", pins=None, rebalance=True):
+    """shard::ShardGroup twin: lock-step group epochs over per-device
+    fused schedulers, modeled via DeviceGroup (max-over-devices +
+    barrier per step)."""
+    machines = [build(t) for t in tokens]
+    devs = [ShardDevice() for _ in range(devices)]
+    pins = dict(pins) if pins else {}
+    rr_next = 0
+    for tok, m in zip(tokens, machines):
+        app = tok.split(":")[0]
+        if placement == "affinity":
+            if app not in pins:
+                pins[app] = rr_next % devices
+                rr_next += 1
+            d = pins[app]
+        else:
+            d = rr_next % devices
+            rr_next += 1
+        devs[d].admit(m)
+    bal = Rebalancer(enabled=rebalance)
+    steps = migrations = 0
+    us = peak_imb = 0.0
+    while any(d.has_work() for d in devs):
+        dev_us = []
+        for d in devs:
+            if d.has_work():
+                live_per_job, launches = d.step()
+                dev_us.append(fused_epoch_us(live_per_job)
+                              + (launches - 1) * LAUNCH_US)
+            else:
+                dev_us.append(0.0)
+        steps += 1
+        us += max(dev_us) + barrier_us(devices)
+        if devices > 1:  # nothing to balance (or measure) solo
+            loads = [d.live_lanes() for d in devs]
+            if sum(loads) > 0:
+                peak_imb = max(peak_imb,
+                               max(loads) / (sum(loads) / len(loads)))
+            plan = bal.plan(loads, devs)
+            if plan is not None:
+                m, src, dst = plan
+                pos = devs[src].active.index(m)
+                devs[src].active.pop(pos)
+                devs[src].policy.retire(pos)
+                devs[dst].admit(m)
+                migrations += 1
+    return dict(steps=steps,
+                launches=sum(d.launches for d in devs),
+                max_dev=max(d.launches for d in devs),
+                work=sum(d.work for d in devs),
+                migrations=migrations, us=us, imb=peak_imb)
+
+
 MIXES = [
     ("4x fib:16", ["fib:16"] * 4),
     ("8x fib:14", ["fib:14"] * 8),
@@ -381,7 +552,17 @@ MIXES = [
 ]
 
 
-def main():
+SHARD_MIXES = [
+    ("16x fib:16", ["fib:16"] * 16),
+    ("16-job mixed",
+     ["fib:16", "fib:16", "fib:14", "fib:14",
+      "mergesort:256", "mergesort:256", "mergesort:128", "mergesort:128",
+      "bfs:5", "bfs:5", "bfs:6", "bfs:6",
+      "nqueens:6", "nqueens:6", "nqueens:5", "nqueens:5"]),
+]
+
+
+def fuse_table():
     rows = []
     for name, tokens in MIXES:
         solo = run_solo(tokens)
@@ -390,6 +571,7 @@ def main():
         assert fused["launches"] < solo["launches"], name
         rows.append((name, len(tokens), solo, fused))
 
+    print("E-FUSE-1 — fused vs N solo runs")
     hdr = ("| mix | jobs | work T1 | solo launches | fused launches | "
            "launches saved | solo syncs | fused epochs | V∞ saved (µs) | "
            "solo APU (µs) | fused APU (µs) | speedup |")
@@ -402,6 +584,52 @@ def main():
               f"{s['syncs']} | {f['steps']} | {saved * LAUNCH_US:.0f} | "
               f"{s['us']:.0f} | {f['us']:.0f} | "
               f"{s['us'] / f['us']:.2f}x |")
+
+
+def shard_table():
+    print("\nE-SHARD-1 — sharded 1..8 devices (round-robin placement, "
+          "rebalance on)")
+    hdr = ("| mix | devices | group epochs | launches | max dev launches | "
+           "migrations | peak imbalance | group APU (µs) | vs solo | "
+           "vs 1 device |")
+    print(hdr)
+    print("|" + "---|" * 10)
+    for name, tokens in SHARD_MIXES:
+        solo = run_solo(tokens)
+        one = run_sharded(tokens, 1)
+        assert one["work"] == solo["work"], (name, one, solo)
+        for devices in (1, 2, 4, 8):
+            r = one if devices == 1 else run_sharded(tokens, devices)
+            assert r["work"] == solo["work"], (name, devices, r, solo)
+            imb = max(r["imb"], 1.0)  # solo groups are balanced by definition
+            print(f"| {name} | {devices} | {r['steps']} | {r['launches']} | "
+                  f"{r['max_dev']} | {r['migrations']} | {imb:.2f}x | "
+                  f"{r['us']:.0f} | {solo['us'] / r['us']:.2f}x | "
+                  f"{one['us'] / r['us']:.2f}x |")
+
+    # forced skew: app-affinity pins six long fibs opposite one quick
+    # sort; once the sort drains, the loaded device is still
+    # turn-taking under its window budget while the other idles — the
+    # rebalancer must migrate fibs over.
+    tokens = ["fib:16"] * 6 + ["mergesort:16"]
+    pinned = run_sharded(tokens, 2, placement="affinity",
+                         pins={"fib": 0, "mergesort": 1})
+    frozen = run_sharded(tokens, 2, placement="affinity",
+                         pins={"fib": 0, "mergesort": 1}, rebalance=False)
+    assert pinned["migrations"] >= 1, pinned
+    assert frozen["migrations"] == 0
+    assert pinned["work"] == frozen["work"]
+    print(f"\nskew demo (6x fib:16 pinned to d0, mergesort:16 to d1, "
+          f"2 devices): rebalance on -> {pinned['migrations']} migrations, "
+          f"{pinned['steps']} group epochs, {pinned['us']:.0f} µs | "
+          f"rebalance off -> {frozen['steps']} epochs, {frozen['us']:.0f} µs "
+          f"(x{frozen['us'] / pinned['us']:.2f} slower, peak imbalance "
+          f"{frozen['imb']:.2f}x vs {pinned['imb']:.2f}x)")
+
+
+def main():
+    fuse_table()
+    shard_table()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,148 @@
+//! Multi-device sharding — solo vs fused (1 device) vs sharded (2–8
+//! devices) on one job mix.
+//!
+//! The fused scheduler already collapses V∞ across tenants; sharding
+//! adds the capacity axis: a single device's window budget forces
+//! tenants to take turns once their fronts outgrow it, while a group
+//! runs the partitions concurrently, each group step costing the
+//! slowest device's fused epoch plus a cross-device barrier
+//! (`simt::DeviceGroup`). This bench sweeps the device count and
+//! reports, per row: lock-step group epochs, total and max-per-device
+//! launches, migrations, modeled group APU time, and speedup over the
+//! 1-device fused run. Pure-Rust engines, no artifacts needed.
+
+use trees::benchkit::Table;
+use trees::sched::{
+    modeled_solo_us, solo_profile, Fuser, JobBuild, JobSpec, SchedConfig,
+};
+use trees::shard::{
+    modeled_group_us, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup,
+};
+use trees::simt::{DeviceGroup, GpuModel};
+
+fn builds_for(tokens: &[&str]) -> Vec<JobBuild> {
+    tokens
+        .iter()
+        .map(|t| {
+            JobSpec::parse(t)
+                .and_then(|s| s.instantiate())
+                .unwrap_or_else(|e| panic!("{t}: {e}"))
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy)]
+struct ShardPoint {
+    devices: usize,
+    group_steps: u64,
+    launches: u64,
+    max_dev_launches: u64,
+    migrations: u64,
+    us: f64,
+}
+
+fn run_sharded(tokens: &[&str], devices: usize) -> ShardPoint {
+    let builds = builds_for(tokens);
+    let mut group = ShardGroup::new(ShardConfig {
+        devices,
+        placement: PlacementKind::RoundRobin,
+        rebalance: RebalanceCfg::default(),
+        sched: SchedConfig { trace: true, ..Default::default() },
+    });
+    for b in &builds {
+        group.admit_build(b);
+    }
+    group.run_to_completion().expect("sharded run");
+    let model = DeviceGroup::new(GpuModel::default(), devices);
+    let s = group.stats();
+    ShardPoint {
+        devices,
+        group_steps: s.group_steps,
+        launches: group.total_launches(),
+        max_dev_launches: group
+            .device_stats()
+            .iter()
+            .map(|d| d.launches)
+            .max()
+            .unwrap_or(0),
+        migrations: s.migrations,
+        us: modeled_group_us(&model, &s.trace),
+    }
+}
+
+fn main() {
+    // 16 tenants: enough live-lane demand that one device's 4096-lane
+    // window forces turn-taking — the regime sharding opens up. The
+    // first mix is EXPERIMENTS.md E-SHARD-1 (fusion_model.py twin).
+    let mixes: Vec<(&str, Vec<&str>)> = vec![
+        ("16x fib:16", vec!["fib:16"; 16]),
+        (
+            "16-job mixed",
+            vec![
+                "fib:16",
+                "fib:16",
+                "fib:14",
+                "fib:14",
+                "mergesort:256",
+                "mergesort:256",
+                "mergesort:128",
+                "mergesort:128",
+                "bfs:grid:5",
+                "bfs:grid:5",
+                "bfs:grid:6",
+                "bfs:grid:6",
+                "nqueens:6",
+                "nqueens:6",
+                "nqueens:5",
+                "nqueens:5",
+            ],
+        ),
+    ];
+
+    let model = GpuModel::default();
+    for (name, tokens) in &mixes {
+        let builds = builds_for(tokens);
+        let fuser = Fuser::new(SchedConfig::default().buckets);
+        let solo_us: f64 = builds
+            .iter()
+            .map(|b| {
+                let p = solo_profile(b.prog.as_ref(), &b.init, &fuser);
+                modeled_solo_us(&model, &p.trace)
+            })
+            .sum();
+
+        let mut t = Table::new(
+            &format!("{name} — solo {solo_us:.0} us, sharded 1..8 devices"),
+            &[
+                "devices", "group epochs", "launches", "max dev launch",
+                "migrations", "APU (us)", "vs solo", "vs 1 dev",
+            ],
+        );
+        let one = run_sharded(tokens, 1);
+        for devices in [1usize, 2, 4, 8] {
+            let r = if devices == 1 { one } else { run_sharded(tokens, devices) };
+            assert!(
+                r.max_dev_launches <= r.launches,
+                "per-device launches cannot exceed the group total"
+            );
+            t.row(vec![
+                r.devices.to_string(),
+                r.group_steps.to_string(),
+                r.launches.to_string(),
+                r.max_dev_launches.to_string(),
+                r.migrations.to_string(),
+                format!("{:.0}", r.us),
+                format!("{:.2}x", solo_us / r.us.max(1e-9)),
+                format!("{:.2}x", one.us / r.us.max(1e-9)),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\nsharding wins once tenant demand exceeds one device's window \
+         budget (turn-taking ends) and compute parallelizes across the \
+         group; the barrier term and boundary divergence are what it pays. \
+         Rebalancing keeps the lock-step group from idling on its slowest \
+         device as tenants drain."
+    );
+}

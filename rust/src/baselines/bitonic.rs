@@ -1,6 +1,6 @@
 //! Rust driver for the native bitonic sort baseline (Fig 9).
 
-use std::path::PathBuf;
+use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -15,7 +15,7 @@ pub struct Bitonic {
 
 impl Bitonic {
     /// Smallest class with NMAX >= n.
-    pub fn new(dev: &Device, dir: &PathBuf, app: &AppManifest, n: usize) -> Result<Bitonic> {
+    pub fn new(dev: &Device, dir: &Path, app: &AppManifest, n: usize) -> Result<Bitonic> {
         let mut best: Option<(usize, String)> = None;
         for (cls, dict) in &app.classes {
             if let Some(&nmax) = dict.get("NMAX") {

@@ -5,7 +5,7 @@
 //! until no vertex improves. No task vector, no epoch bookkeeping —
 //! this is the hand-coded comparator TREES is measured against.
 
-use std::path::PathBuf;
+use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -34,7 +34,7 @@ impl Worklist {
     /// Pick the smallest class fitting `g` and compile its artifact.
     pub fn new(
         dev: &Device,
-        dir: &PathBuf,
+        dir: &Path,
         app: &AppManifest,
         g: &Csr,
     ) -> Result<Worklist> {

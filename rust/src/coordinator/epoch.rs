@@ -9,7 +9,7 @@
 //! same Phase 1–3 implementation, and the Phase-3 stack discipline is
 //! the same [`crate::tvm::tms_update`] the reference interpreter uses.
 
-use std::path::PathBuf;
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -110,7 +110,7 @@ impl<'d> Coordinator<'d> {
     /// fits `capacity`.
     pub fn new(
         dev: &'d Device,
-        artifacts_dir: &PathBuf,
+        artifacts_dir: &Path,
         app: &AppManifest,
         capacity: usize,
         cfg: CoordinatorConfig,
@@ -123,7 +123,7 @@ impl<'d> Coordinator<'d> {
     /// the class by layout, not capacity).
     pub fn new_for_class(
         dev: &'d Device,
-        artifacts_dir: &PathBuf,
+        artifacts_dir: &Path,
         app: &AppManifest,
         cls: &str,
         cfg: CoordinatorConfig,
@@ -135,7 +135,7 @@ impl<'d> Coordinator<'d> {
     /// Pick by workload: class override if present, else capacity.
     pub fn for_workload(
         dev: &'d Device,
-        artifacts_dir: &PathBuf,
+        artifacts_dir: &Path,
         app: &AppManifest,
         w: &Workload,
         cfg: CoordinatorConfig,
@@ -148,7 +148,7 @@ impl<'d> Coordinator<'d> {
 
     fn from_infos(
         dev: &'d Device,
-        artifacts_dir: &PathBuf,
+        artifacts_dir: &Path,
         app: &AppManifest,
         infos: Vec<&ArtifactInfo>,
         cfg: CoordinatorConfig,
@@ -244,8 +244,8 @@ impl<'d> Coordinator<'d> {
     /// Start a run over `st`: snapshot executable stats and build the
     /// read-only literals once (their contents never change).
     pub fn begin_run(&self, st: &TvState) -> RunCtx {
-        let mut stats = RunStats::default();
-        stats.compile_ns = self.compile_ns();
+        let stats =
+            RunStats { compile_ns: self.compile_ns(), ..Default::default() };
         RunCtx {
             stats,
             map_queue: Vec::new(),

@@ -21,9 +21,15 @@
 //!   externally.
 //! * [`sched`] — the multi-tenant epoch-fusion scheduler: co-schedules
 //!   many concurrent jobs into shared epochs (one task vector, one
-//!   launch, one sync per step for all tenants), with round-robin
-//!   fairness, admission backpressure, and per-job V∞-savings
-//!   accounting. Surfaced as `trees serve` / `trees batch`.
+//!   launch, one sync per step for all tenants), with round-robin or
+//!   weighted fairness, admission backpressure, and per-job
+//!   V∞-savings accounting. Surfaced as `trees serve` / `trees batch`.
+//! * [`shard`] — the multi-device layer above `sched`: one fused
+//!   scheduler per simulated device, pluggable placement (round-robin
+//!   / least-live-lanes / app affinity), a lock-step group epoch loop
+//!   with a cross-device completion barrier, and epoch-boundary tenant
+//!   migration when live-lane load skews. Surfaced as
+//!   `trees serve --devices N` / `trees batch --devices N`.
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
 //!   interpreter: the correctness oracle and the `T_1` (work) meter;
 //!   also home of the TMS-compression update every driver shares.
@@ -47,6 +53,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod simt;
 pub mod tvm;
 pub mod util;

@@ -20,7 +20,7 @@
 //! The request path is pure Rust: artifacts were AOT-lowered by
 //! `make artifacts` and are loaded via PJRT here.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use trees::apps;
 use trees::benchkit::Table;
@@ -28,10 +28,13 @@ use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use trees::graph::{gen, Csr};
 use trees::runtime::{load_manifest, Device};
 use trees::sched::{
-    modeled_fused_us, modeled_solo_us, solo_profile, FusedScheduler, Fuser,
-    JobBuild, JobSpec, SchedConfig,
+    modeled_fused_us, modeled_solo_us, solo_profile, Fairness, FusedScheduler,
+    Fuser, JobBuild, JobSpec, SchedConfig,
 };
-use trees::simt::GpuModel;
+use trees::shard::{
+    modeled_group_us, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup,
+};
+use trees::simt::{DeviceGroup, GpuModel};
 use trees::util::cli::Args;
 use trees::util::rng::Rng;
 
@@ -45,12 +48,21 @@ USAGE:
   trees interp <app> [--n N] [...]
   trees native <bfs|sssp|sort> [--n N] [--graph ..] [--scale S]
   trees serve --jobs <spec> [--capacity N] [--slice-cap N] [--max-active N]
-  trees batch [--jobs <spec>] [--copies K]
+              [--fairness round-robin|weighted] [--devices N]
+              [--placement round-robin|least-loaded|affinity]
+              [--skew T] [--no-rebalance]
+  trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
 
-JOB SPEC (serve/batch): comma-separated app[:graph][:n][:seed] tokens,
-e.g. --jobs fib:18,mergesort:512,bfs:grid:5,sssp:rmat:6:7
+JOB SPEC (serve/batch): comma-separated app[:graph][:n][:seed][:wW]
+tokens, e.g. --jobs fib:18:w4,mergesort:512,bfs:grid:5,sssp:rmat:6:7
+(wW = fairness weight under --fairness weighted)
+
+--devices N > 1 shards the job mix across a simulated device group:
+per-device epoch fusion, a lock-step group loop with a cross-device
+barrier, and epoch-boundary tenant migration when live-lane load skews
+past --skew (default 1.5; --no-rebalance pins placement).
 "
 }
 
@@ -66,9 +78,10 @@ fn real_main() -> Result<()> {
         std::env::args().skip(1),
         &[
             "n", "bucket", "seed", "graph", "scale", "steps", "jobs",
-            "capacity", "slice-cap", "max-active", "copies",
+            "capacity", "slice-cap", "max-active", "copies", "fairness",
+            "devices", "placement", "skew",
         ],
-        &["trace", "verbose", "help"],
+        &["trace", "verbose", "help", "no-rebalance"],
     )
     .map_err(|e| anyhow!("{e}\n{}", usage()))?;
 
@@ -256,14 +269,35 @@ fn interp(args: &Args) -> Result<()> {
 
 fn sched_config(args: &Args) -> Result<SchedConfig> {
     let d = SchedConfig::default();
+    let fairness = match args.str_or("fairness", "round-robin").as_str() {
+        "round-robin" | "rr" => Fairness::RoundRobin,
+        "weighted" | "w" => Fairness::Weighted,
+        other => bail!("unknown fairness policy {other:?} (round-robin | weighted)"),
+    };
     Ok(SchedConfig {
         capacity: args.usize_or("capacity", d.capacity).map_err(anyhow::Error::msg)?,
         slice_cap: args.usize_or("slice-cap", d.slice_cap).map_err(anyhow::Error::msg)?,
         max_active: args
             .usize_or("max-active", d.max_active)
             .map_err(anyhow::Error::msg)?,
+        fairness,
         ..d
     })
+}
+
+/// Shard-group options (`serve`/`batch` with `--devices N`).
+fn shard_config(args: &Args, devices: usize, trace: bool) -> Result<ShardConfig> {
+    let placement = PlacementKind::parse(&args.str_or("placement", "round-robin"))?;
+    let rb = RebalanceCfg::default();
+    let rebalance = RebalanceCfg {
+        enabled: !args.flag("no-rebalance"),
+        skew_threshold: args
+            .f64_or("skew", rb.skew_threshold)
+            .map_err(anyhow::Error::msg)?,
+        ..rb
+    };
+    let sched = SchedConfig { trace, ..sched_config(args)? };
+    Ok(ShardConfig { devices, placement, rebalance, sched })
 }
 
 fn instantiate_all(specs: &[JobSpec]) -> Result<Vec<JobBuild>> {
@@ -278,6 +312,13 @@ fn serve(args: &Args) -> Result<()> {
     let specs = JobSpec::parse_list(&spec)?;
     if specs.is_empty() {
         bail!("--jobs spec is empty\n{}", usage());
+    }
+    let devices = args.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
+    if devices > 1 {
+        // sharded serving runs per-device interpreter engines (per-app
+        // artifacts stay single-device; the group model is what's
+        // under study here)
+        return serve_sharded(&specs, shard_config(args, devices, false)?);
     }
     let cfg = sched_config(args)?;
     match trees::runtime::try_artifacts() {
@@ -318,11 +359,11 @@ fn serve_fallback(specs: &[JobSpec], cfg: SchedConfig) -> Result<()> {
 fn serve_artifacts(
     specs: &[JobSpec],
     manifest: &trees::runtime::Manifest,
-    dir: &std::path::PathBuf,
+    dir: &std::path::Path,
     cfg: SchedConfig,
 ) -> Result<()> {
     let dev = Device::cpu()?;
-    let mut labeled: Vec<(String, Workload)> = Vec::new();
+    let mut labeled: Vec<(String, Workload, u64)> = Vec::new();
     let mut cos: Vec<Coordinator> = Vec::new();
     for s in specs {
         let app = manifest.app(&canonical_app(&s.app))?;
@@ -334,23 +375,94 @@ fn serve_artifacts(
             &w,
             CoordinatorConfig::default(),
         )?);
-        labeled.push((s.label(), w));
+        labeled.push((s.label(), w, s.weight));
     }
     // launch accounting must tile over the window buckets the loaded
-    // artifacts actually have, not the model defaults
+    // artifacts actually have, not the model defaults — an artifact set
+    // with no usable window sizes is a configuration error, surfaced
+    // here (the scheduler's own constructor would silently guard with a
+    // fallback bucket)
     let mut buckets: Vec<usize> =
         cos.iter().flat_map(|c| c.bucket_sizes()).collect();
     buckets.sort_unstable();
     buckets.dedup();
+    Fuser::try_new(buckets.clone())
+        .context("loaded artifacts expose no usable window buckets")?;
     // per-app artifacts cannot merge different apps into one kernel, so
     // launches stay per-tenant; the epoch sync is what fusion shares
     let mut sched =
         FusedScheduler::new(SchedConfig { fused_kernel: false, buckets, ..cfg });
-    for ((label, w), co) in labeled.iter().zip(&cos) {
-        sched.admit_artifact(label, co, w);
+    for ((label, w, weight), co) in labeled.iter().zip(&cos) {
+        sched.admit_artifact(label, co, w, *weight);
     }
     sched.run_to_completion()?;
     serve_report(&sched);
+    Ok(())
+}
+
+/// `trees serve --devices N`: shard the tenants across a simulated
+/// device group (one fused scheduler per device, lock-step epochs,
+/// epoch-boundary rebalancing).
+fn serve_sharded(specs: &[JobSpec], cfg: ShardConfig) -> Result<()> {
+    let devices = cfg.devices.max(1);
+    let builds = instantiate_all(specs)?;
+    let mut group = ShardGroup::new(cfg);
+    for b in &builds {
+        group.admit_build(b);
+    }
+    group.run_to_completion()?;
+
+    let mut t = Table::new(
+        "sharded epoch fusion — per-job accounting",
+        &["dev", "job", "epochs", "stalls", "lanes", "result"],
+    );
+    let mut rows: Vec<_> = group.finished().collect();
+    rows.sort_by_key(|(_, fj)| fj.id.0);
+    for (dev, fj) in rows {
+        let result = match (&fj.kind, fj.engine.machine()) {
+            (Some(k), Some(m)) => {
+                let check = match k.verify(m) {
+                    Ok(()) => "ok",
+                    Err(_) => "MISMATCH",
+                };
+                format!("{} [{check}]", k.describe(m))
+            }
+            _ => format!("root={}", fj.engine.root_result()),
+        };
+        let migrated = group
+            .stats()
+            .migration_log
+            .iter()
+            .any(|e| e.job == fj.id);
+        t.row(vec![
+            format!("{dev}{}", if migrated { "*" } else { "" }),
+            fj.label.clone(),
+            fj.stats.steps_ridden.to_string(),
+            fj.stats.stalls.to_string(),
+            fj.stats.lanes.to_string(),
+            result,
+        ]);
+    }
+    t.print();
+
+    let s = group.stats();
+    for (d, ds) in group.device_stats().iter().enumerate() {
+        println!(
+            "  d{d}: {} steps, {} launches, {} lanes, {} jobs ({} placed)",
+            ds.steps, ds.launches, ds.work, ds.jobs_completed, s.placed[d],
+        );
+    }
+    println!(
+        "group: {} lock-step epochs / {} barrier syncs over {} devices | \
+         {} total launches | {} migrations (* = migrated) | peak live-lane \
+         imbalance {:.2}x",
+        s.group_steps,
+        s.group_syncs,
+        devices,
+        group.total_launches(),
+        s.migrations,
+        s.peak_imbalance,
+    );
     Ok(())
 }
 
@@ -509,6 +621,96 @@ fn batch(args: &Args) -> Result<()> {
             "identical to solo".to_string()
         } else {
             format!("{mismatches} MISMATCHES")
+        },
+    );
+
+    let devices = args.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
+    if devices > 1 {
+        // the fused run above IS the 1-device group (no barrier, same
+        // scheduler): reuse its counters instead of re-simulating
+        let one = ShardRun {
+            group_steps: s.steps,
+            launches: s.launches,
+            migrations: 0,
+            peak_imbalance: 1.0,
+            modeled_us: fused_us,
+            mismatches: mismatches as usize,
+        };
+        batch_sharded(args, &specs, devices, &solo_roots, one)?;
+    }
+    Ok(())
+}
+
+/// Run one sharded pass of the mix and return the group summary.
+struct ShardRun {
+    group_steps: u64,
+    launches: u64,
+    migrations: u64,
+    peak_imbalance: f64,
+    modeled_us: f64,
+    mismatches: usize,
+}
+
+fn run_sharded(
+    specs: &[JobSpec],
+    cfg: ShardConfig,
+    solo_roots: &[i32],
+) -> Result<ShardRun> {
+    let devices = cfg.devices.max(1);
+    let builds = instantiate_all(specs)?;
+    let mut group = ShardGroup::new(cfg);
+    for b in &builds {
+        group.admit_build(b);
+    }
+    group.run_to_completion()?;
+    let mismatches = group
+        .finished()
+        .filter(|(_, fj)| fj.engine.root_result() != solo_roots[fj.id.0])
+        .count();
+    let model = DeviceGroup::new(GpuModel::default(), devices);
+    let s = group.stats();
+    Ok(ShardRun {
+        group_steps: s.group_steps,
+        launches: group.total_launches(),
+        migrations: s.migrations,
+        peak_imbalance: s.peak_imbalance,
+        modeled_us: modeled_group_us(&model, &s.trace),
+        mismatches,
+    })
+}
+
+/// `trees batch --devices N`: the same mix sharded over N devices vs
+/// a single device, both under the `simt::DeviceGroup` model (group
+/// step = slowest device's fused epoch + cross-device barrier). `one`
+/// is the single-device baseline, reused from the fused run `batch`
+/// already executed (a 1-device group is that run, barrier-free).
+fn batch_sharded(
+    args: &Args,
+    specs: &[JobSpec],
+    devices: usize,
+    solo_roots: &[i32],
+    one: ShardRun,
+) -> Result<()> {
+    let many = run_sharded(specs, shard_config(args, devices, true)?, solo_roots)?;
+    println!(
+        "\nsharded run: {} devices | {} group epochs (1-device {}) | {} \
+         launches (1-device {}) | {} migrations | peak imbalance {:.2}x | \
+         modeled group APU {:.1} us (1-device {:.1}) | group speedup x{:.2} \
+         | results {}",
+        devices,
+        many.group_steps,
+        one.group_steps,
+        many.launches,
+        one.launches,
+        many.migrations,
+        many.peak_imbalance,
+        many.modeled_us,
+        one.modeled_us,
+        one.modeled_us / many.modeled_us.max(1e-9),
+        if many.mismatches + one.mismatches == 0 {
+            "identical to solo".to_string()
+        } else {
+            format!("{} MISMATCHES", many.mismatches + one.mismatches)
         },
     );
     Ok(())

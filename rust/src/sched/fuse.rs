@@ -11,6 +11,8 @@
 //! [`crate::sched`] module docs); launch accounting tiles the fused
 //! window over the same bucket sizes the AOT artifacts use.
 
+use anyhow::{bail, Result};
+
 use super::job::JobId;
 
 /// One tenant's contribution to a fused epoch: the top of its TMS.
@@ -67,22 +69,39 @@ pub struct Fuser {
     buckets: Vec<usize>,
 }
 
+/// Bucket used when a caller supplies no usable window sizes (e.g. an
+/// artifact set with an empty bucket list) — [`Fuser::new`]'s guard.
+pub const FALLBACK_BUCKET: usize = 4096;
+
 impl Fuser {
-    pub fn new(mut buckets: Vec<usize>) -> Fuser {
+    /// Build a fuser, rejecting a bucket list with no positive sizes as
+    /// a structured error (the caller may be forwarding artifact
+    /// metadata it does not control).
+    pub fn try_new(mut buckets: Vec<usize>) -> Result<Fuser> {
         buckets.retain(|&w| w > 0);
         buckets.sort_unstable();
         buckets.dedup();
-        assert!(!buckets.is_empty(), "fuser needs at least one bucket size");
-        Fuser { buckets }
+        if buckets.is_empty() {
+            bail!("fuser needs at least one positive window bucket size");
+        }
+        Ok(Fuser { buckets })
     }
 
-    /// Smallest bucket covering `len` (else the largest).
+    /// Infallible constructor: an unusable bucket list falls back to
+    /// one [`FALLBACK_BUCKET`]-lane bucket instead of panicking.
+    pub fn new(buckets: Vec<usize>) -> Fuser {
+        Fuser::try_new(buckets)
+            .unwrap_or_else(|_| Fuser { buckets: vec![FALLBACK_BUCKET] })
+    }
+
+    /// Smallest bucket covering `len` (else the largest). Guarded: an
+    /// empty bucket list (impossible via the constructors) would yield
+    /// the fallback bucket, never a panic.
     pub fn bucket_for(&self, len: usize) -> usize {
-        *self
-            .buckets
-            .iter()
-            .find(|&&w| w >= len)
-            .unwrap_or_else(|| self.buckets.last().unwrap())
+        match self.buckets.iter().find(|&&w| w >= len) {
+            Some(&w) => w,
+            None => self.buckets.last().copied().unwrap_or(FALLBACK_BUCKET),
+        }
     }
 
     /// Launches needed to tile a window of `len` lanes (same greedy
@@ -154,6 +173,24 @@ mod tests {
         assert_eq!(frame.slices[1].base, 3);
         assert_eq!(frame.slices[1].lo, 0);
         assert_eq!(frame.live, 4);
+    }
+
+    #[test]
+    fn empty_bucket_list_is_an_error_not_a_panic() {
+        // regression: Fuser::new used to assert (and bucket_for to
+        // unwrap) on an empty bucket list — e.g. an artifact set whose
+        // manifests carry no window sizes.
+        assert!(Fuser::try_new(Vec::new()).is_err());
+        assert!(Fuser::try_new(vec![0, 0]).is_err(), "zero-width buckets");
+        let err = Fuser::try_new(vec![0]).unwrap_err();
+        assert!(err.to_string().contains("bucket"), "{err}");
+
+        // the infallible constructor guards with the fallback bucket
+        let f = Fuser::new(Vec::new());
+        assert_eq!(f.bucket_for(1), FALLBACK_BUCKET);
+        assert_eq!(f.launches_for(FALLBACK_BUCKET + 1), 2);
+        let g = Fuser::new(vec![0]);
+        assert_eq!(g.launches_for(1), 1);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! to verify the result afterwards.
 //!
 //! A job spec is a colon-separated token (the `trees serve --jobs`
-//! grammar): `app[:graph][:n][:seed]`, e.g. `fib:18`, `mergesort:512`,
-//! `bfs:grid:5`, `sssp:rmat:6:7`, `nqueens:7`, `tsp:8`.
+//! grammar): `app[:graph][:n][:seed][:wW]`, e.g. `fib:18`,
+//! `mergesort:512`, `bfs:grid:5`, `sssp:rmat:6:7`, `nqueens:7`,
+//! `tsp:8`, `fib:18:w4` (fairness weight 4 — a latency tier under the
+//! `Weighted` policy).
 
 use anyhow::{bail, Result};
 
@@ -34,6 +36,9 @@ pub struct JobSpec {
     pub seed: u64,
     /// Graph kind for bfs/sssp (`rmat` | `grid` | `uniform`).
     pub graph: Option<String>,
+    /// Fairness weight (`wW` field): multiplies the slice cap under the
+    /// `Weighted` policy. 1 = default batch tier.
+    pub weight: u64,
 }
 
 impl JobSpec {
@@ -46,6 +51,7 @@ impl JobSpec {
         }
         let mut ints: Vec<u64> = Vec::new();
         let mut graph = None;
+        let mut weight = None;
         for p in parts {
             if let Ok(v) = p.parse::<u64>() {
                 if ints.len() == 2 {
@@ -57,6 +63,14 @@ impl JobSpec {
                     bail!("duplicate graph kind in job spec {tok:?}");
                 }
                 graph = Some(p.to_string());
+            } else if let Some(w) = p.strip_prefix('w').and_then(|s| s.parse::<u64>().ok()) {
+                if weight.is_some() {
+                    bail!("duplicate weight field in job spec {tok:?}");
+                }
+                if w == 0 {
+                    bail!("weight must be >= 1 in job spec {tok:?}");
+                }
+                weight = Some(w);
             } else {
                 bail!("unrecognized job-spec field {p:?} in {tok:?}");
             }
@@ -66,6 +80,7 @@ impl JobSpec {
             n: ints.first().copied().unwrap_or(0) as usize,
             seed: ints.get(1).copied().unwrap_or(42),
             graph,
+            weight: weight.unwrap_or(1),
         })
     }
 
@@ -116,6 +131,9 @@ impl JobSpec {
         if self.n != 0 {
             s.push_str(&format!(":{}", self.n));
         }
+        if self.weight > 1 {
+            s.push_str(&format!(":w{}", self.weight));
+        }
         s
     }
 
@@ -127,6 +145,7 @@ impl JobSpec {
                 let n = self.effective_n() as u32;
                 JobBuild {
                     label,
+                    weight: self.weight.max(1),
                     prog: Box::new(Fib),
                     kind: AppKind::Fib { n },
                     init: JobInit {
@@ -143,6 +162,7 @@ impl JobSpec {
                 }
                 JobBuild {
                     label,
+                    weight: self.weight.max(1),
                     prog: Box::new(NQueens),
                     kind: AppKind::NQueens { n },
                     init: JobInit {
@@ -162,6 +182,7 @@ impl JobSpec {
                 let const_i = apps::tsp::pack(&dist, n);
                 JobBuild {
                     label,
+                    weight: self.weight.max(1),
                     prog: Box::new(Tsp),
                     kind: AppKind::Tsp { dist, n },
                     init: JobInit {
@@ -183,6 +204,7 @@ impl JobSpec {
                 heap_f[..n].copy_from_slice(&data);
                 JobBuild {
                     label,
+                    weight: self.weight.max(1),
                     prog: Box::new(MSort { nmax, use_map: false }),
                     kind: AppKind::MergeSort { nmax, n2, n },
                     init: JobInit {
@@ -206,6 +228,7 @@ impl JobSpec {
                 let want = if weighted { dijkstra(&g, 0) } else { bfs_levels(&g, 0) };
                 JobBuild {
                     label,
+                    weight: self.weight.max(1),
                     kind: AppKind::Graph { weighted, nv, want },
                     init: JobInit {
                         capacity,
@@ -255,6 +278,8 @@ pub struct JobBuild {
     pub prog: Box<dyn TvmProgram>,
     pub init: JobInit,
     pub kind: AppKind,
+    /// Fairness weight under the `Weighted` policy (1 = batch tier).
+    pub weight: u64,
 }
 
 /// What the app computed, for post-run verification and display.
@@ -349,6 +374,13 @@ mod tests {
         let list = JobSpec::parse_list("fib:12, mergesort:100,bfs:grid:4").unwrap();
         assert_eq!(list.len(), 3);
         assert!(JobSpec::parse("fib:bogus").is_err());
+
+        let w = JobSpec::parse("fib:18:w4").unwrap();
+        assert_eq!((w.n, w.weight), (18, 4));
+        assert_eq!(w.label(), "fib:18:w4");
+        assert_eq!(JobSpec::parse("fib:18").unwrap().weight, 1);
+        assert!(JobSpec::parse("fib:w0").is_err(), "weight must be >= 1");
+        assert!(JobSpec::parse("fib:w2:w3").is_err(), "dup weight");
         assert!(JobSpec::parse("mergesort:512:3:9").is_err(), "extra field");
         assert!(JobSpec::parse("bfs:grid:uniform").is_err(), "dup graph kind");
         assert!(JobSpec::parse_list("").unwrap().is_empty());

@@ -31,20 +31,31 @@
 //!
 //! Per-job results are bit-identical to solo runs by construction: the
 //! scheduler never touches tenant state, it only decides *when* each
-//! tenant's next epoch runs, and tenant machines are independent.
+//! tenant's next epoch runs, and tenant machines are independent. The
+//! same argument covers migration: [`FusedScheduler::evict`] returns
+//! the whole [`Tenant`] (machine state included) and
+//! [`FusedScheduler::admit_tenant`] re-admits it elsewhere — the
+//! [`crate::shard`] device group uses this seam to move tenants
+//! between devices at epoch boundaries.
+//!
+//! Fairness is round-robin by default; [`Fairness::Weighted`] lets a
+//! per-tenant weight multiply the slice cap (latency tiers — see
+//! [`Weighted`]).
 
 mod fuse;
 mod job;
 mod policy;
 mod stats;
 
-pub use fuse::{Front, FusedFrame, Fuser, Slice};
+pub use fuse::{Front, FusedFrame, Fuser, Slice, FALLBACK_BUCKET};
 pub use job::{AppKind, JobBuild, JobId, JobInit, JobSpec};
-pub use policy::RoundRobin;
+pub use policy::{Fairness, RoundRobin, Weighted};
 pub use stats::{
     modeled_fused_us, modeled_solo_us, solo_profile, FusedStats, JobStats,
     SoloProfile, StepTrace,
 };
+
+use policy::Policy;
 
 use std::collections::VecDeque;
 
@@ -75,6 +86,10 @@ pub struct SchedConfig {
     /// needed for modeled-APU replay; leave off for long-running
     /// serving so `FusedStats.trace` stays empty.
     pub trace: bool,
+    /// Fairness policy: `RoundRobin` (default, all tenants equal) or
+    /// `Weighted` (per-tenant weight multiplies the slice cap —
+    /// latency tiers, see [`Weighted`]).
+    pub fairness: Fairness,
 }
 
 impl Default for SchedConfig {
@@ -87,6 +102,7 @@ impl Default for SchedConfig {
             buckets: vec![256, 1024, 4096],
             fused_kernel: true,
             trace: false,
+            fairness: Fairness::RoundRobin,
         }
     }
 }
@@ -206,13 +222,66 @@ impl<'p> Engine<'p> {
     }
 }
 
-/// An admitted, still-running job.
+/// An admitted, still-running job. A `Tenant` is self-contained (its
+/// engine owns the tenant's entire machine state), so eviction and
+/// re-admission — possibly into a *different* scheduler, as the
+/// `shard` device group does when migrating tenants between devices —
+/// moves the job wholesale without touching its state.
 pub struct Tenant<'p> {
     pub id: JobId,
     pub label: String,
     pub engine: Engine<'p>,
     pub stats: JobStats,
     pub kind: Option<AppKind>,
+    /// Fairness weight under [`Fairness::Weighted`] (1 = batch tier).
+    pub weight: u64,
+}
+
+impl<'p> Tenant<'p> {
+    /// Build an interpreter-engine tenant with an externally assigned
+    /// id — the seam the `shard` device group uses to keep one global
+    /// id space across many per-device schedulers.
+    pub fn from_build(id: JobId, b: &'p JobBuild) -> Tenant<'p> {
+        Tenant {
+            id,
+            label: b.label.clone(),
+            engine: Engine::Interp(b.init.machine(b.prog.as_ref())),
+            stats: JobStats::default(),
+            kind: Some(b.kind.clone()),
+            weight: b.weight.max(1),
+        }
+    }
+
+    /// Build an artifact-engine tenant with an externally assigned id:
+    /// the tenant's `TvState` is initialized through the coordinator's
+    /// begin-run seam and travels with the tenant on migration.
+    pub fn from_artifact(
+        id: JobId,
+        label: &str,
+        co: &'p Coordinator<'p>,
+        w: &Workload,
+        weight: u64,
+    ) -> Tenant<'p> {
+        let st = co.init_state(w);
+        let rc = co.begin_run(&st);
+        Tenant {
+            id,
+            label: label.to_string(),
+            engine: Engine::Artifact { co, st, gather: w.gather, rc },
+            stats: JobStats::default(),
+            kind: None,
+            weight: weight.max(1),
+        }
+    }
+
+    /// Live lanes of the tenant's current front (its instantaneous
+    /// load, the quantity the shard rebalancer evens out).
+    pub fn live_load(&self) -> u64 {
+        match self.engine.front() {
+            Some((cen, lo, hi)) => self.engine.live_in(cen, lo, hi),
+            None => 0,
+        }
+    }
 }
 
 /// A completed job: stats plus the final machine for result extraction.
@@ -228,7 +297,7 @@ pub struct FinishedJob<'p> {
 pub struct FusedScheduler<'p> {
     cfg: SchedConfig,
     fuser: Fuser,
-    policy: RoundRobin,
+    policy: Policy,
     active: Vec<Tenant<'p>>,
     pending: VecDeque<Tenant<'p>>,
     finished: Vec<FinishedJob<'p>>,
@@ -239,8 +308,12 @@ pub struct FusedScheduler<'p> {
 
 impl<'p> FusedScheduler<'p> {
     pub fn new(cfg: SchedConfig) -> FusedScheduler<'p> {
+        // max_active 0 would strand every admission in the pending
+        // queue (step() would never run anything while has_work() stays
+        // true) — clamp like the policies clamp capacity/slice_cap
+        let cfg = SchedConfig { max_active: cfg.max_active.max(1), ..cfg };
         let fuser = Fuser::new(cfg.buckets.clone());
-        let policy = RoundRobin::new(cfg.capacity, cfg.slice_cap);
+        let policy = Policy::new(cfg.fairness, cfg.capacity, cfg.slice_cap);
         FusedScheduler {
             cfg,
             fuser,
@@ -266,24 +339,28 @@ impl<'p> FusedScheduler<'p> {
         prog: &'p dyn TvmProgram,
         init: &JobInit,
     ) -> JobId {
-        self.admit_engine(label, Engine::Interp(init.machine(prog)), None)
+        self.admit_engine(label, Engine::Interp(init.machine(prog)), None, 1)
     }
 
-    /// Admit a [`JobBuild`] (carries its verifier along).
+    /// Admit a [`JobBuild`] (carries its verifier and weight along).
     pub fn admit_build(&mut self, b: &'p JobBuild) -> JobId {
         self.admit_engine(
             &b.label,
             Engine::Interp(b.init.machine(b.prog.as_ref())),
             Some(b.kind.clone()),
+            b.weight,
         )
     }
 
     /// Admit an artifact-engine tenant (AOT epoch-step execution).
+    /// `weight` is the fairness weight (`JobSpec::weight`, 1 = batch
+    /// tier) — same meaning as on the interpreter engine.
     pub fn admit_artifact(
         &mut self,
         label: &str,
         co: &'p Coordinator<'p>,
         w: &Workload,
+        weight: u64,
     ) -> JobId {
         let st = co.init_state(w);
         let rc = co.begin_run(&st);
@@ -291,6 +368,7 @@ impl<'p> FusedScheduler<'p> {
             label,
             Engine::Artifact { co, st, gather: w.gather, rc },
             None,
+            weight,
         )
     }
 
@@ -299,22 +377,47 @@ impl<'p> FusedScheduler<'p> {
         label: &str,
         engine: Engine<'p>,
         kind: Option<AppKind>,
+        weight: u64,
     ) -> JobId {
         let id = JobId(self.next_id);
         self.next_id += 1;
-        let t = Tenant {
+        self.admit_tenant(Tenant {
             id,
             label: label.to_string(),
             engine,
             stats: JobStats::default(),
             kind,
-        };
+            weight: weight.max(1),
+        });
+        id
+    }
+
+    /// Admit a pre-built tenant carrying its own (externally assigned)
+    /// id and accumulated stats — the re-admission half of migration.
+    /// Callers that mix this with the `admit_*` constructors own the
+    /// id-collision problem; the shard group assigns all ids itself.
+    pub fn admit_tenant(&mut self, t: Tenant<'p>) {
         if self.active.len() < self.cfg.max_active {
             self.active.push(t);
         } else {
             self.pending.push_back(t);
         }
-        id
+    }
+
+    /// Remove a job from this scheduler, returning the live tenant with
+    /// its machine state intact (the eviction half of migration). The
+    /// fairness cursor keeps pointing at the same successor. `None` if
+    /// the id is not resident here.
+    pub fn evict(&mut self, id: JobId) -> Option<Tenant<'p>> {
+        if let Some(pos) = self.active.iter().position(|t| t.id == id) {
+            let t = self.active.remove(pos);
+            self.policy.retire(pos);
+            return Some(t);
+        }
+        if let Some(pos) = self.pending.iter().position(|t| t.id == id) {
+            return self.pending.remove(pos);
+        }
+        None
     }
 
     fn admit_from_queue(&mut self) {
@@ -338,14 +441,14 @@ impl<'p> FusedScheduler<'p> {
             bail!("fused scheduler exceeded {} steps", self.cfg.max_steps);
         }
 
-        let fronts: Vec<(usize, usize)> = self
+        let fronts: Vec<(usize, usize, u64)> = self
             .active
             .iter()
             .enumerate()
             .map(|(i, t)| {
                 let (_, lo, hi) =
                     t.engine.front().expect("active tenant has a front");
-                (i, hi - lo)
+                (i, hi - lo, t.weight)
             })
             .collect();
         let sel = self.policy.select(&fronts);
@@ -463,6 +566,33 @@ impl<'p> FusedScheduler<'p> {
     pub fn pending_count(&self) -> usize {
         self.pending.len()
     }
+
+    /// Whether any admitted job still has epochs to run.
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    /// Whether an [`admit_tenant`](Self::admit_tenant) right now would
+    /// land in the active set (vs. the pending queue). The shard
+    /// rebalancer refuses to migrate onto a full device: a tenant
+    /// parked in pending runs nothing and its load disappears from the
+    /// group's live-lane accounting.
+    pub fn has_active_slot(&self) -> bool {
+        self.active.len() < self.cfg.max_active
+    }
+
+    /// Sum of live lanes across the active tenants' current fronts —
+    /// this device's instantaneous load in the shard group's
+    /// least-live-lanes placement and skew detection.
+    pub fn live_lanes(&self) -> u64 {
+        self.active.iter().map(|t| t.live_load()).sum()
+    }
+
+    /// `(id, live lanes)` per active tenant, in active-list order —
+    /// what the shard rebalancer picks migration candidates from.
+    pub fn tenant_loads(&self) -> Vec<(JobId, u64)> {
+        self.active.iter().map(|t| (t.id, t.live_load())).collect()
+    }
 }
 
 #[cfg(test)]
@@ -514,6 +644,82 @@ mod tests {
         let done = done.into_inner();
         assert_eq!(done.len(), 2);
         assert!(done.contains(&"fib:8".to_string()));
+    }
+
+    #[test]
+    fn weighted_fairness_completes_and_verifies() {
+        // weights change *when* epochs run, never what they compute:
+        // a weighted run still verifies every tenant against its
+        // oracle, under window pressure tight enough to force skips.
+        let bs = builds(&["fib:12:w8", "fib:12", "mergesort:64", "nqueens:5:w2"]);
+        let cfg = SchedConfig {
+            capacity: 64,
+            slice_cap: 16,
+            fairness: Fairness::Weighted,
+            ..Default::default()
+        };
+        let mut sched = FusedScheduler::new(cfg);
+        for b in &bs {
+            sched.admit_build(b);
+        }
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 4);
+        for fj in sched.finished() {
+            let m = fj.engine.machine().unwrap();
+            fj.kind
+                .as_ref()
+                .unwrap()
+                .verify(m)
+                .unwrap_or_else(|e| panic!("{}: {e}", fj.label));
+        }
+    }
+
+    #[test]
+    fn evict_and_readmit_preserves_state_and_result() {
+        // mini-migration: run a tenant for a few shared epochs on one
+        // scheduler, evict it (machine state travels with the tenant),
+        // re-admit it into a *different* scheduler, finish there — the
+        // result must match a dedicated solo run.
+        let bs = builds(&["fib:12", "fib:10"]);
+        let mut a = FusedScheduler::new(SchedConfig::default());
+        let ids: Vec<JobId> = bs.iter().map(|b| a.admit_build(b)).collect();
+        for _ in 0..5 {
+            a.step().unwrap();
+        }
+        let moved = a.evict(ids[0]).expect("tenant is resident");
+        assert!(moved.stats.steps_ridden > 0, "carried stats travel too");
+        assert!(a.evict(ids[0]).is_none(), "double-evict finds nothing");
+
+        let mut b2 = FusedScheduler::new(SchedConfig::default());
+        b2.admit_tenant(moved);
+        b2.run_to_completion().unwrap();
+        a.run_to_completion().unwrap();
+
+        let fj = &b2.finished()[0];
+        assert_eq!(fj.id, ids[0]);
+        let solo = builds(&["fib:12"]);
+        let mut sm = solo[0].init.machine(solo[0].prog.as_ref());
+        sm.run();
+        let m = fj.engine.machine().unwrap();
+        assert_eq!(m.root_result(), sm.root_result());
+        assert_eq!(m.stats.epochs, sm.stats.epochs);
+        assert_eq!(
+            fj.stats.steps_ridden, sm.stats.epochs,
+            "epochs ridden across both schedulers add up"
+        );
+        assert_eq!(a.finished().len(), 1, "the stayer finishes at home");
+    }
+
+    #[test]
+    fn max_active_zero_is_clamped_not_stranded() {
+        // regression: max_active 0 used to park every admission in the
+        // pending queue forever (has_work() true, step() a no-op)
+        let bs = builds(&["fib:8"]);
+        let cfg = SchedConfig { max_active: 0, ..Default::default() };
+        let mut sched = FusedScheduler::new(cfg);
+        sched.admit_build(&bs[0]);
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 1);
     }
 
     #[test]

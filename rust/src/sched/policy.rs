@@ -1,13 +1,22 @@
 //! Fairness and backpressure: which tenants ride the next fused epoch.
 //!
-//! The policy is rotating round-robin with slice caps: every step the
-//! start cursor advances one tenant, the tenant at the cursor is always
-//! selected (so no tenant waits more than `active_count` steps — the
-//! no-starvation guarantee the property tests check), and further
+//! The base policy is rotating round-robin with slice caps: every step
+//! the start cursor advances one tenant, the tenant at the cursor is
+//! always selected (so no tenant waits more than `active_count` steps —
+//! the no-starvation guarantee the property tests check), and further
 //! tenants join while the window budget lasts. A tenant is charged
 //! `min(front_len, slice_cap)` lanes: oversized tenants still run whole
 //! epochs (epochs are atomic per tenant) but only occupy one fairness
 //! unit, since their overflow tiles into extra launches anyway.
+//!
+//! [`Weighted`] keeps the same rotation (so the no-starvation property
+//! is inherited) but a per-tenant weight multiplies the slice cap: a
+//! weight-`w` tenant's fairness unit covers `w × slice_cap` lanes, so
+//! its lanes are charged against the window budget at rate `1/w`. A
+//! latency tier is expressed by giving its tenants a high weight — they
+//! fit the budget almost every step, while weight-1 batch tenants are
+//! the ones skipped under pressure. Weight 1 everywhere reproduces
+//! [`RoundRobin`] decisions exactly.
 
 /// Round-robin selector over the active tenant list.
 #[derive(Debug, Clone)]
@@ -62,6 +71,110 @@ impl RoundRobin {
     }
 }
 
+/// Weighted round-robin: same rotation as [`RoundRobin`], but each
+/// tenant's weight multiplies its slice cap (see module docs). Fronts
+/// arrive as `(tenant_index, front_len, weight)` triples.
+#[derive(Debug, Clone)]
+pub struct Weighted {
+    /// Fused window budget per step (lanes).
+    pub capacity: usize,
+    /// Fairness unit for a weight-1 tenant: lanes per step.
+    pub slice_cap: usize,
+    cursor: usize,
+}
+
+impl Weighted {
+    pub fn new(capacity: usize, slice_cap: usize) -> Weighted {
+        Weighted {
+            capacity: capacity.max(1),
+            slice_cap: slice_cap.max(1),
+            cursor: 0,
+        }
+    }
+
+    /// Lanes charged to a `weight`-weighted tenant with a `len`-lane
+    /// front: `min(len, weight * slice_cap) / weight` (ceiling), i.e.
+    /// the weight multiplies the slice cap. Weight 1 reduces to the
+    /// round-robin charge `min(len, slice_cap)`.
+    pub fn charge(&self, len: usize, weight: u64) -> usize {
+        let w = weight.max(1) as usize;
+        len.min(w.saturating_mul(self.slice_cap)).div_ceil(w).max(1)
+    }
+
+    /// Pick which tenants run this step; same contract as
+    /// [`RoundRobin::select`] with a weight per front.
+    pub fn select(&mut self, fronts: &[(usize, usize, u64)]) -> Vec<usize> {
+        if fronts.is_empty() {
+            return Vec::new();
+        }
+        let n = fronts.len();
+        let start = self.cursor % n;
+        let mut budget = self.capacity;
+        let mut out = Vec::new();
+        for k in 0..n {
+            let (idx, len, weight) = fronts[(start + k) % n];
+            let charge = self.charge(len, weight);
+            if out.is_empty() || charge <= budget {
+                out.push(idx);
+                budget = budget.saturating_sub(charge);
+            }
+        }
+        self.cursor = (start + 1) % n;
+        out
+    }
+
+    /// Same cursor bookkeeping as [`RoundRobin::retire`].
+    pub fn retire(&mut self, pos: usize) {
+        if pos < self.cursor {
+            self.cursor -= 1;
+        }
+    }
+}
+
+/// Which fairness policy a [`crate::sched::FusedScheduler`] runs
+/// (config-level knob; `RoundRobin` is the default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fairness {
+    RoundRobin,
+    Weighted,
+}
+
+/// The scheduler's policy instance: one enum so the hot path has no
+/// dyn dispatch. Both variants take `(idx, len, weight)` fronts; the
+/// round-robin arm ignores weights.
+#[derive(Debug, Clone)]
+pub(crate) enum Policy {
+    Rr(RoundRobin),
+    Weighted(Weighted),
+}
+
+impl Policy {
+    pub(crate) fn new(fairness: Fairness, capacity: usize, slice_cap: usize) -> Policy {
+        match fairness {
+            Fairness::RoundRobin => Policy::Rr(RoundRobin::new(capacity, slice_cap)),
+            Fairness::Weighted => Policy::Weighted(Weighted::new(capacity, slice_cap)),
+        }
+    }
+
+    pub(crate) fn select(&mut self, fronts: &[(usize, usize, u64)]) -> Vec<usize> {
+        match self {
+            Policy::Rr(p) => {
+                let pairs: Vec<(usize, usize)> =
+                    fronts.iter().map(|&(i, len, _)| (i, len)).collect();
+                p.select(&pairs)
+            }
+            Policy::Weighted(p) => p.select(fronts),
+        }
+    }
+
+    pub(crate) fn retire(&mut self, pos: usize) {
+        match self {
+            Policy::Rr(p) => p.retire(pos),
+            Policy::Weighted(p) => p.retire(pos),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +220,132 @@ mod tests {
         p.retire(0); // tenant 0 finished; cursor should now be 0 (old 1)
         let sel = p.select(&fronts(&[10, 10]));
         assert_eq!(sel[0], 0);
+    }
+
+    #[test]
+    fn retire_at_cursor_keeps_successor() {
+        // cursor points at position 1; retiring position 1 itself must
+        // leave the cursor on the element that slid into position 1.
+        let mut p = RoundRobin::new(1, 1);
+        let _ = p.select(&fronts(&[10, 10, 10, 10])); // cursor -> 1
+        p.retire(1); // old tenant 2 now sits at position 1
+        let sel = p.select(&fronts(&[10, 10, 10]));
+        assert_eq!(sel[0], 1, "head must be the old tenant 2");
+    }
+
+    #[test]
+    fn retire_after_cursor_leaves_cursor_alone() {
+        let mut p = RoundRobin::new(1, 1);
+        let _ = p.select(&fronts(&[10, 10, 10, 10])); // cursor -> 1
+        p.retire(3); // removal past the cursor: order below is unchanged
+        let sel = p.select(&fronts(&[10, 10, 10]));
+        assert_eq!(sel[0], 1);
+    }
+
+    #[test]
+    fn retire_before_cursor_shifts_it_back() {
+        let mut p = RoundRobin::new(1, 1);
+        let f = fronts(&[10, 10, 10, 10]);
+        let _ = p.select(&f); // cursor -> 1
+        let _ = p.select(&f); // cursor -> 2
+        p.retire(0); // everything below the cursor slides down one
+        let sel = p.select(&fronts(&[10, 10, 10]));
+        // cursor followed its tenant: old position 2 is now position 1
+        assert_eq!(sel[0], 1);
+    }
+
+    #[test]
+    fn retire_last_tenant_then_empty_and_refill() {
+        let mut p = RoundRobin::new(1, 1);
+        let _ = p.select(&fronts(&[10])); // cursor -> 0 (wraps: 1 % 1)
+        p.retire(0);
+        assert!(p.select(&fronts(&[])).is_empty());
+        // refilled list starts cleanly at position 0
+        let sel = p.select(&fronts(&[10, 10]));
+        assert_eq!(sel[0], 0);
+    }
+
+    #[test]
+    fn retire_wraparound_cursor_stays_in_range() {
+        // drive the cursor to the last position, then retire that
+        // position: the next select must wrap to a valid head without
+        // skipping anyone.
+        let mut p = RoundRobin::new(1, 1);
+        let f = fronts(&[10, 10, 10]);
+        let _ = p.select(&f); // cursor -> 1
+        let _ = p.select(&f); // cursor -> 2
+        p.retire(2); // retire exactly at the (last) cursor position
+        let mut seen = [false; 2];
+        let g = fronts(&[10, 10]);
+        for _ in 0..2 {
+            for idx in p.select(&g) {
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    fn wfronts(lens_weights: &[(usize, u64)]) -> Vec<(usize, usize, u64)> {
+        lens_weights
+            .iter()
+            .enumerate()
+            .map(|(i, &(len, w))| (i, len, w))
+            .collect()
+    }
+
+    #[test]
+    fn weight_one_matches_round_robin() {
+        let mut rr = RoundRobin::new(100, 16);
+        let mut wp = Weighted::new(100, 16);
+        let lens = [5usize, 40, 7, 1000, 16, 3];
+        for _ in 0..lens.len() * 2 {
+            let a = rr.select(&fronts(&lens));
+            let b = wp.select(&wfronts(
+                &lens.iter().map(|&l| (l, 1)).collect::<Vec<_>>(),
+            ));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn weight_multiplies_slice_cap() {
+        let p = Weighted::new(4096, 16);
+        assert_eq!(p.charge(64, 1), 16); // capped at slice_cap
+        assert_eq!(p.charge(64, 4), 16); // 64 fits 4x16, charged at 1/4
+        assert_eq!(p.charge(64, 8), 8); // 64 < 8x16: 64/8
+        assert_eq!(p.charge(3, 4), 1); // floor at one lane
+        assert_eq!(p.charge(1000, 4), 16); // cap scales: min(1000,64)/4
+    }
+
+    #[test]
+    fn high_weight_tenant_rides_under_pressure() {
+        // budget (24) fits the head (≤16) plus the weight-8 tenant (8),
+        // but never two weight-1 tenants (16+16): the weighted tenant
+        // is never skipped, the batch tenants take turns.
+        let mut p = Weighted::new(24, 16);
+        let f = wfronts(&[(64, 1), (64, 8), (64, 1)]);
+        let mut rode = [0u32; 3];
+        for _ in 0..12 {
+            for idx in p.select(&f) {
+                rode[idx] += 1;
+            }
+        }
+        assert_eq!(rode[1], 12, "{rode:?}");
+        assert!(rode[0] < 12 && rode[2] < 12, "{rode:?}");
+    }
+
+    #[test]
+    fn weighted_rotation_prevents_starvation() {
+        // same guarantee as round-robin: the head always runs, so even
+        // weight-1 tenants under a hostile mix ride within n steps.
+        let mut p = Weighted::new(1, 1);
+        let f = wfronts(&[(100, 1), (100, 9), (100, 1), (100, 9)]);
+        let mut seen = [false; 4];
+        for _ in 0..4 {
+            for idx in p.select(&f) {
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
     }
 }

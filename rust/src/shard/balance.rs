@@ -1,0 +1,234 @@
+//! Epoch-boundary rebalancing: migrate whole tenants between devices
+//! when live-lane load skews.
+//!
+//! Epochs make migration cheap: between two group steps no tenant has
+//! in-flight tasks — its entire state is the machine image the
+//! [`crate::sched::Tenant`] already owns — so "migration" is evict on
+//! one device, re-admit on another, nothing else. (Work-stealing
+//! runtimes must interrupt or partition a running deque; TREES gets
+//! the quiescent point for free from explicit epoch synchronization.)
+//!
+//! The policy is deliberately conservative — the group step costs
+//! max-over-devices, so only *persistent* skew is worth a move:
+//!
+//! * trigger: max device load > mean load × `skew_threshold`;
+//! * candidate: a tenant on the most loaded device whose move to the
+//!   least loaded device *strictly* shrinks the load gap (this rules
+//!   out ping-pong: every migration monotonically improves the pair);
+//! * damping: at least `cooldown` group steps between migrations.
+
+use crate::sched::{FusedScheduler, JobId};
+
+use super::DeviceId;
+
+/// Rebalancer tunables.
+#[derive(Debug, Clone)]
+pub struct RebalanceCfg {
+    /// Master switch (CLI `--no-rebalance` clears it).
+    pub enabled: bool,
+    /// Migrate when `max_load > mean_load * skew_threshold`.
+    /// Clamped to ≥ 1 (below 1 the trigger would always fire).
+    pub skew_threshold: f64,
+    /// Minimum group steps between two migrations.
+    pub cooldown: u64,
+}
+
+impl Default for RebalanceCfg {
+    fn default() -> Self {
+        RebalanceCfg { enabled: true, skew_threshold: 1.5, cooldown: 2 }
+    }
+}
+
+/// A planned tenant move, executed by the shard group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Migration {
+    pub job: JobId,
+    pub from: DeviceId,
+    pub to: DeviceId,
+}
+
+/// Plans at most one migration per epoch boundary.
+#[derive(Debug)]
+pub struct Rebalancer {
+    cfg: RebalanceCfg,
+    steps_since: u64,
+}
+
+impl Rebalancer {
+    pub fn new(cfg: RebalanceCfg) -> Rebalancer {
+        // start eligible: the first boundary may already be skewed
+        let steps_since = cfg.cooldown;
+        Rebalancer { cfg, steps_since }
+    }
+
+    /// Decide whether to migrate at this epoch boundary. `loads[d]` is
+    /// device `d`'s live-lane load *after* the group step; `devs` are
+    /// the per-device schedulers (read-only: candidate listing).
+    pub fn plan(
+        &mut self,
+        loads: &[u64],
+        devs: &[FusedScheduler<'_>],
+    ) -> Option<Migration> {
+        if !self.cfg.enabled || loads.len() < 2 {
+            return None;
+        }
+        if self.steps_since < self.cfg.cooldown {
+            self.steps_since += 1;
+            return None;
+        }
+        let total: u64 = loads.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let mut src = 0;
+        let mut dst = 0;
+        for (d, &l) in loads.iter().enumerate() {
+            if l > loads[src] {
+                src = d;
+            }
+            if l < loads[dst] {
+                dst = d;
+            }
+        }
+        let mean = total as f64 / loads.len() as f64;
+        if (loads[src] as f64) <= mean * self.cfg.skew_threshold.max(1.0) {
+            return None;
+        }
+        if !devs[dst].has_active_slot() {
+            // a migrant would land in dst's pending queue, run nothing,
+            // and vanish from the live-lane loads — wait for a slot
+            return None;
+        }
+        let tenants = devs[src].tenant_loads();
+        if tenants.len() < 2 {
+            // moving a device's only tenant just relocates the skew
+            return None;
+        }
+        // move the tenant that best evens the (src, dst) pair, and only
+        // if the gap strictly shrinks — overshooting a big tenant onto
+        // the idle device would invert the skew and oscillate.
+        let gap0 = loads[src] - loads[dst];
+        let mut best: Option<(JobId, u64)> = None;
+        for &(id, l) in &tenants {
+            if l == 0 || l >= gap0 {
+                continue;
+            }
+            let new_gap = (loads[src] - l).abs_diff(loads[dst] + l);
+            let better = match best {
+                Some((_, g)) => new_gap < g,
+                None => new_gap < gap0,
+            };
+            if better {
+                best = Some((id, new_gap));
+            }
+        }
+        let (job, _) = best?;
+        self.steps_since = 0;
+        Some(Migration { job, from: DeviceId(src), to: DeviceId(dst) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, SchedConfig, Tenant};
+
+    fn dev_with<'p>(
+        builds: &'p [crate::sched::JobBuild],
+        base_id: usize,
+    ) -> FusedScheduler<'p> {
+        let mut s = FusedScheduler::new(SchedConfig::default());
+        for (k, b) in builds.iter().enumerate() {
+            s.admit_tenant(Tenant::from_build(JobId(base_id + k), b));
+        }
+        s
+    }
+
+    fn builds(tokens: &[&str]) -> Vec<crate::sched::JobBuild> {
+        tokens
+            .iter()
+            .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn balanced_loads_plan_nothing() {
+        let bs = builds(&["fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs[..1], 0), dev_with(&bs[1..], 1)];
+        let mut r = Rebalancer::new(RebalanceCfg::default());
+        assert_eq!(r.plan(&[100, 100], &devs), None);
+        assert_eq!(r.plan(&[100, 90], &devs), None, "below threshold");
+    }
+
+    #[test]
+    fn skew_plans_a_gap_shrinking_move() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        // fresh machines: 1 live lane per tenant => loads (3, 0)
+        let m = r.plan(&[3, 0], &devs).expect("skew must trigger");
+        assert_eq!(m.from, DeviceId(0));
+        assert_eq!(m.to, DeviceId(1));
+    }
+
+    #[test]
+    fn single_tenant_device_is_never_drained() {
+        let bs = builds(&["fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 1)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        assert_eq!(r.plan(&[500, 0], &devs), None);
+    }
+
+    #[test]
+    fn full_destination_blocks_migration() {
+        // dst has no active slot: a migrant would park in pending,
+        // invisible to load accounting — the planner must wait.
+        let bs = builds(&["fib:10", "fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs[..3], 0), {
+            let mut s = FusedScheduler::new(SchedConfig {
+                max_active: 1,
+                ..Default::default()
+            });
+            s.admit_tenant(Tenant::from_build(JobId(3), &bs[3]));
+            s
+        }];
+        assert!(!devs[1].has_active_slot());
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        assert_eq!(r.plan(&[30, 1], &devs), None);
+    }
+
+    #[test]
+    fn cooldown_spaces_migrations() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 2,
+            ..Default::default()
+        });
+        assert!(r.plan(&[3, 0], &devs).is_some(), "starts eligible");
+        assert_eq!(r.plan(&[3, 0], &devs), None, "cooldown 1/2");
+        assert_eq!(r.plan(&[3, 0], &devs), None, "cooldown 2/2");
+        assert!(r.plan(&[3, 0], &devs).is_some(), "eligible again");
+    }
+
+    #[test]
+    fn disabled_plans_nothing() {
+        let bs = builds(&["fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 2)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            enabled: false,
+            cooldown: 0,
+            ..Default::default()
+        });
+        assert_eq!(r.plan(&[1000, 0], &devs), None);
+    }
+}

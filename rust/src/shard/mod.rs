@@ -1,0 +1,360 @@
+//! Multi-device sharding: partition fused tenants across a device
+//! group with epoch-boundary rebalancing.
+//!
+//! PR 2's [`crate::sched`] applied the paper's work-together principle
+//! *across tenants* on one device: one fused launch + one epoch sync
+//! pays V∞ for every co-resident job. This subsystem applies it across
+//! *devices*: a [`ShardGroup`] owns one [`FusedScheduler`] — its own
+//! `Fuser` lane-space, fairness cursor, and window budget — per
+//! simulated device, places admitted jobs via pluggable policies
+//! ([`PlacementKind`]: round-robin, least-live-lanes, app affinity),
+//! and drives a lock-step epoch loop: every global step each device
+//! with work issues one fused launch, then the whole group meets at a
+//! cross-device completion barrier (one group-wide epoch sync). Under
+//! the [`crate::simt::DeviceGroup`] model a group step costs
+//! max-over-devices plus the barrier, so imbalance is directly
+//! measurable as idle time.
+//!
+//! Epochs are the migration points distributed task runtimes lack:
+//! between group steps no tenant has in-flight work, so the
+//! [`balance`] rebalancer can move a whole tenant — machine state and
+//! accumulated stats riding along through the scheduler's
+//! evict/re-admit seam — whenever live-lane load skews past a
+//! threshold. Results stay bit-identical to solo runs by the same
+//! argument as fusion itself: scheduling (and now placement and
+//! migration) decides *when and where* a tenant's next epoch runs,
+//! never what it computes.
+//!
+//! Accounting extends the V∞ story one level up: each device keeps its
+//! own [`crate::sched::FusedStats`]; [`ShardStats`] adds group steps,
+//! barrier syncs, migrations, the placement histogram, and peak
+//! live-lane imbalance, and [`modeled_group_us`] replays the group
+//! trace through the `DeviceGroup` cost model (`bench_shard`,
+//! `trees batch --devices N`, E-SHARD-1).
+
+mod balance;
+mod place;
+mod stats;
+
+pub use balance::{Migration, RebalanceCfg, Rebalancer};
+pub use place::{Placement, PlacementKind};
+pub use stats::{modeled_group_us, GroupStepTrace, MigrationEvent, ShardStats};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, Workload};
+use crate::sched::{
+    FinishedJob, FusedScheduler, FusedStats, JobBuild, JobId, SchedConfig,
+    Tenant,
+};
+
+/// A device's index within its group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceId(pub usize);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+/// Shard-group tunables.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Simulated devices in the group (≥ 1; 1 degenerates to plain
+    /// fusion with no barrier).
+    pub devices: usize,
+    /// Initial placement policy for admitted tenants.
+    pub placement: PlacementKind,
+    /// Epoch-boundary rebalancing knobs.
+    pub rebalance: RebalanceCfg,
+    /// Per-device scheduler tunables (each device gets its own window
+    /// budget, fairness cursor, and bucket tiling from a clone).
+    pub sched: SchedConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            devices: 2,
+            placement: PlacementKind::RoundRobin,
+            rebalance: RebalanceCfg::default(),
+            sched: SchedConfig::default(),
+        }
+    }
+}
+
+/// Co-schedules many jobs across a group of devices: per-device epoch
+/// fusion, lock-step group steps with a cross-device barrier, and
+/// epoch-boundary tenant migration.
+pub struct ShardGroup<'p> {
+    devs: Vec<FusedScheduler<'p>>,
+    placer: Placement,
+    balancer: Rebalancer,
+    stats: ShardStats,
+    trace: bool,
+    next_id: usize,
+    /// Current device of each admitted job, indexed by `JobId.0`.
+    homes: Vec<DeviceId>,
+}
+
+impl<'p> ShardGroup<'p> {
+    pub fn new(cfg: ShardConfig) -> ShardGroup<'p> {
+        let n = cfg.devices.max(1);
+        let devs: Vec<FusedScheduler<'p>> =
+            (0..n).map(|_| FusedScheduler::new(cfg.sched.clone())).collect();
+        ShardGroup {
+            devs,
+            placer: Placement::new(cfg.placement, n),
+            balancer: Rebalancer::new(cfg.rebalance),
+            stats: ShardStats::new(n),
+            trace: cfg.sched.trace,
+            next_id: 0,
+            homes: Vec::new(),
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devs.len()
+    }
+
+    /// Pre-pin an app to a device (effective under
+    /// [`PlacementKind::Affinity`]).
+    pub fn pin(&mut self, app: &str, dev: usize) {
+        self.placer.pin(app, dev);
+    }
+
+    /// Where a job currently lives (follows migrations).
+    pub fn home_of(&self, id: JobId) -> Option<DeviceId> {
+        self.homes.get(id.0).copied()
+    }
+
+    fn place(&mut self, app: &str) -> usize {
+        let (loads, counts): (Vec<u64>, Vec<usize>) = if self.placer.needs_loads() {
+            (
+                self.devs.iter().map(|d| d.live_lanes()).collect(),
+                self.devs
+                    .iter()
+                    .map(|d| d.active_count() + d.pending_count())
+                    .collect(),
+            )
+        } else {
+            // round-robin / affinity place by arrival order and pins —
+            // skip the per-device tenant scans entirely
+            (Vec::new(), Vec::new())
+        };
+        self.placer.place(app, &loads, &counts)
+    }
+
+    fn admit(&mut self, app: &str, make: impl FnOnce(JobId) -> Tenant<'p>) -> (JobId, DeviceId) {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        let d = self.place(app);
+        self.devs[d].admit_tenant(make(id));
+        self.homes.push(DeviceId(d));
+        if let Some(slot) = self.stats.placed.get_mut(d) {
+            *slot += 1;
+        }
+        (id, DeviceId(d))
+    }
+
+    /// Admit an interpreter-engine tenant (ids are group-global —
+    /// admission order across all devices).
+    pub fn admit_build(&mut self, b: &'p JobBuild) -> (JobId, DeviceId) {
+        let app = b.label.split(':').next().unwrap_or("").to_string();
+        self.admit(&app, |id| Tenant::from_build(id, b))
+    }
+
+    /// Admit an artifact-engine tenant: its `TvState` is built through
+    /// the coordinator's begin-run seam and migrates with the tenant.
+    /// `weight` is the fairness weight (1 = batch tier).
+    pub fn admit_artifact(
+        &mut self,
+        label: &str,
+        co: &'p Coordinator<'p>,
+        w: &Workload,
+        weight: u64,
+    ) -> (JobId, DeviceId) {
+        let app = label.split(':').next().unwrap_or("").to_string();
+        self.admit(&app, |id| Tenant::from_artifact(id, label, co, w, weight))
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.devs.iter().any(|d| d.has_work())
+    }
+
+    /// One lock-step group epoch: every device with resident work runs
+    /// one fused step (one launch set + its tenants' epochs), then the
+    /// group synchronizes at the cross-device barrier; at that epoch
+    /// boundary the rebalancer may migrate one tenant.
+    pub fn step(&mut self) -> Result<bool> {
+        if !self.has_work() {
+            return Ok(false);
+        }
+        let mut stepped = vec![false; self.devs.len()];
+        for (d, dev) in self.devs.iter_mut().enumerate() {
+            if dev.has_work() {
+                dev.step()?;
+                stepped[d] = true;
+            }
+        }
+        self.stats.group_steps += 1;
+        self.stats.group_syncs += 1;
+        if self.trace {
+            let per_dev = self
+                .devs
+                .iter()
+                .zip(&stepped)
+                .map(|(dev, &s)| {
+                    if s {
+                        dev.stats().trace.last().cloned()
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            self.stats.trace.push(GroupStepTrace { per_dev });
+        }
+
+        // ---- epoch boundary: measure skew, maybe migrate ----
+        // (single-device groups have nothing to balance — skip the
+        // per-tenant front scans entirely)
+        if self.devs.len() > 1 {
+            let loads: Vec<u64> =
+                self.devs.iter().map(|d| d.live_lanes()).collect();
+            self.stats.note_imbalance(&loads);
+            if let Some(m) = self.balancer.plan(&loads, &self.devs) {
+                self.migrate(m)?;
+            }
+        }
+        Ok(true)
+    }
+
+    fn migrate(&mut self, m: Migration) -> Result<()> {
+        let Some(t) = self.devs[m.from.0].evict(m.job) else {
+            bail!("rebalancer planned a move for non-resident job {}", m.job);
+        };
+        self.devs[m.to.0].admit_tenant(t);
+        self.homes[m.job.0] = m.to;
+        self.stats.migrations += 1;
+        self.stats.migration_log.push(MigrationEvent {
+            step: self.stats.group_steps,
+            job: m.job,
+            from: m.from,
+            to: m.to,
+        });
+        Ok(())
+    }
+
+    /// Drive every admitted job on every device to completion.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
+    /// Per-device fused-scheduler totals (launches, steps, work …).
+    pub fn device_stats(&self) -> Vec<&FusedStats> {
+        self.devs.iter().map(|d| d.stats()).collect()
+    }
+
+    /// Completed jobs with the device they finished on.
+    pub fn finished(&self) -> impl Iterator<Item = (DeviceId, &FinishedJob<'p>)> {
+        self.devs.iter().enumerate().flat_map(|(d, dev)| {
+            dev.finished().iter().map(move |fj| (DeviceId(d), fj))
+        })
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.devs.iter().map(|d| d.finished().len()).sum()
+    }
+
+    /// Sum of per-device window launches.
+    pub fn total_launches(&self) -> u64 {
+        self.devs.iter().map(|d| d.stats().launches).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::JobSpec;
+
+    fn builds(tokens: &[&str]) -> Vec<JobBuild> {
+        tokens
+            .iter()
+            .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_placement_spreads_and_completes() {
+        let bs = builds(&["fib:10", "fib:11", "fib:12", "fib:13"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            ..Default::default()
+        });
+        let homes: Vec<usize> =
+            bs.iter().map(|b| g.admit_build(b).1 .0).collect();
+        assert_eq!(homes, vec![0, 1, 0, 1]);
+        g.run_to_completion().unwrap();
+        assert_eq!(g.finished_count(), 4);
+        assert!(g.stats().group_steps > 0);
+        assert_eq!(g.stats().group_syncs, g.stats().group_steps);
+        assert_eq!(g.stats().placed, vec![2, 2]);
+    }
+
+    #[test]
+    fn one_device_group_degenerates_to_plain_fusion() {
+        let bs = builds(&["fib:12", "mergesort:64"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 1,
+            ..Default::default()
+        });
+        for b in &bs {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+
+        let mut solo = FusedScheduler::new(SchedConfig::default());
+        for b in &bs {
+            solo.admit_build(b);
+        }
+        solo.run_to_completion().unwrap();
+
+        let d = g.device_stats()[0];
+        assert_eq!(d.steps, solo.stats().steps);
+        assert_eq!(d.launches, solo.stats().launches);
+        assert_eq!(g.stats().migrations, 0);
+    }
+
+    #[test]
+    fn home_of_follows_migration() {
+        // three fibs pinned to d0, a quick mergesort on d1: when the
+        // sort drains, skew pulls a fib over to d1.
+        let bs = builds(&["fib:14", "fib:14", "fib:14", "mergesort:16"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            placement: PlacementKind::Affinity,
+            ..Default::default()
+        });
+        g.pin("fib", 0);
+        g.pin("mergesort", 1);
+        let ids: Vec<JobId> = bs.iter().map(|b| g.admit_build(b).0).collect();
+        for id in &ids[..3] {
+            assert_eq!(g.home_of(*id), Some(DeviceId(0)));
+        }
+        g.run_to_completion().unwrap();
+        assert!(g.stats().migrations >= 1, "skew must trigger a migration");
+        let moved = g
+            .stats()
+            .migration_log
+            .iter()
+            .any(|e| g.home_of(e.job) == Some(e.to));
+        assert!(moved, "home_of must track the executed migrations");
+        assert_eq!(g.finished_count(), 4);
+    }
+}

@@ -1,0 +1,155 @@
+//! Placement: which device a newly admitted tenant lands on.
+//!
+//! Placement only decides the *initial* home; epoch-boundary
+//! rebalancing (see [`super::balance`]) may move the tenant later.
+//! Three policies, selectable from the CLI (`--placement`):
+//!
+//! * `round-robin` — spread admissions evenly by arrival order; the
+//!   right default when jobs look alike.
+//! * `least-loaded` — place on the device with the fewest live lanes
+//!   (ties: fewest resident tenants, then lowest index); adapts to
+//!   heterogeneous mixes and online admission mid-run.
+//! * `affinity` — pin by app: all tenants of one app share a device
+//!   (first-seen apps spread round-robin, explicit pins override).
+//!   Models locality — per-app artifacts, warm caches, resident heap
+//!   segments — the lever NUMA-aware runtimes pull (PAPERS.md).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Which placement policy a shard group runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    RoundRobin,
+    LeastLoaded,
+    Affinity,
+}
+
+impl PlacementKind {
+    /// Parse the `--placement` CLI value.
+    pub fn parse(s: &str) -> Result<PlacementKind> {
+        Ok(match s {
+            "round-robin" | "rr" => PlacementKind::RoundRobin,
+            "least-loaded" | "least-lanes" | "ll" => PlacementKind::LeastLoaded,
+            "affinity" | "pin" => PlacementKind::Affinity,
+            other => bail!(
+                "unknown placement policy {other:?} \
+                 (round-robin | least-loaded | affinity)"
+            ),
+        })
+    }
+}
+
+/// Placement policy instance (per shard group).
+#[derive(Debug)]
+pub struct Placement {
+    kind: PlacementKind,
+    devices: usize,
+    next: usize,
+    pins: HashMap<String, usize>,
+}
+
+impl Placement {
+    pub fn new(kind: PlacementKind, devices: usize) -> Placement {
+        Placement { kind, devices: devices.max(1), next: 0, pins: HashMap::new() }
+    }
+
+    /// Pre-pin an app to a device (affinity policy; no-op for others
+    /// until the kind is `Affinity`).
+    pub fn pin(&mut self, app: &str, dev: usize) {
+        self.pins.insert(app.to_string(), dev % self.devices);
+    }
+
+    /// Whether [`place`](Self::place) will read the load/count slices —
+    /// lets the caller skip scanning every device's tenants for the
+    /// policies that decide by arrival order alone.
+    pub fn needs_loads(&self) -> bool {
+        self.kind == PlacementKind::LeastLoaded
+    }
+
+    /// Choose a device for a tenant of `app`. `loads[d]` is device
+    /// `d`'s live-lane load, `counts[d]` its resident tenant count
+    /// (active + queued); both slices have one entry per device.
+    pub fn place(&mut self, app: &str, loads: &[u64], counts: &[usize]) -> usize {
+        let n = self.devices;
+        match self.kind {
+            PlacementKind::RoundRobin => {
+                let d = self.next % n;
+                self.next += 1;
+                d
+            }
+            PlacementKind::LeastLoaded => {
+                let mut best = 0;
+                for d in 1..n {
+                    let cand = (loads[d], counts[d], d);
+                    if cand < (loads[best], counts[best], best) {
+                        best = d;
+                    }
+                }
+                best
+            }
+            PlacementKind::Affinity => {
+                if let Some(&d) = self.pins.get(app) {
+                    return d;
+                }
+                let d = self.next % n;
+                self.next += 1;
+                self.pins.insert(app.to_string(), d);
+                d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_policy_names() {
+        assert_eq!(PlacementKind::parse("rr").unwrap(), PlacementKind::RoundRobin);
+        assert_eq!(
+            PlacementKind::parse("least-loaded").unwrap(),
+            PlacementKind::LeastLoaded
+        );
+        assert_eq!(
+            PlacementKind::parse("affinity").unwrap(),
+            PlacementKind::Affinity
+        );
+        assert!(PlacementKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_by_arrival() {
+        let mut p = Placement::new(PlacementKind::RoundRobin, 3);
+        let loads = [0u64; 3];
+        let counts = [0usize; 3];
+        let got: Vec<usize> =
+            (0..6).map(|_| p.place("fib", &loads, &counts)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_lanes_then_min_tenants() {
+        let mut p = Placement::new(PlacementKind::LeastLoaded, 3);
+        assert_eq!(p.place("a", &[50, 10, 30], &[1, 1, 1]), 1);
+        // tie on lanes: fewer resident tenants wins
+        assert_eq!(p.place("a", &[10, 10, 30], &[2, 1, 1]), 1);
+        // full tie: lowest index
+        assert_eq!(p.place("a", &[10, 10, 10], &[1, 1, 1]), 0);
+    }
+
+    #[test]
+    fn affinity_keeps_an_app_together_and_honors_pins() {
+        let mut p = Placement::new(PlacementKind::Affinity, 4);
+        p.pin("mergesort", 3);
+        let loads = [0u64; 4];
+        let counts = [0usize; 4];
+        let f1 = p.place("fib", &loads, &counts);
+        let b1 = p.place("bfs", &loads, &counts);
+        assert_ne!(f1, b1, "first-seen apps spread out");
+        assert_eq!(p.place("fib", &loads, &counts), f1, "fib stays home");
+        assert_eq!(p.place("mergesort", &loads, &counts), 3, "pin wins");
+    }
+}

@@ -1,0 +1,133 @@
+//! Group accounting: what the device group paid per global step, how
+//! skewed it ran, and the modeled wall time under
+//! [`crate::simt::DeviceGroup`] — the V∞ bookkeeping of the `sched`
+//! layer extended with the cross-device barrier dimension.
+
+use crate::sched::{JobId, StepTrace};
+use crate::simt::DeviceGroup;
+
+use super::DeviceId;
+
+/// One lock-step group step: each device's fused-epoch trace entry, or
+/// `None` for a device that idled (no resident work this step).
+#[derive(Debug, Clone)]
+pub struct GroupStepTrace {
+    pub per_dev: Vec<Option<StepTrace>>,
+}
+
+/// One executed migration, for tests and the CLI report.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationEvent {
+    /// Group step at whose boundary the move happened (1-based).
+    pub step: u64,
+    pub job: JobId,
+    pub from: DeviceId,
+    pub to: DeviceId,
+}
+
+/// Whole-run device-group totals.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Lock-step group epochs executed.
+    pub group_steps: u64,
+    /// Group-wide epoch synchronizations (one barrier per step).
+    pub group_syncs: u64,
+    /// Tenants moved between devices at epoch boundaries.
+    pub migrations: u64,
+    pub migration_log: Vec<MigrationEvent>,
+    /// Admissions per device (placement histogram).
+    pub placed: Vec<u64>,
+    /// Peak of `max_load / mean_load` observed at epoch boundaries
+    /// (1.0 = perfectly balanced the whole run).
+    pub peak_imbalance: f64,
+    /// Per-group-step trace (needs `SchedConfig::trace` on the
+    /// per-device schedulers) — the modeled-APU replay input.
+    pub trace: Vec<GroupStepTrace>,
+}
+
+impl ShardStats {
+    pub fn new(devices: usize) -> ShardStats {
+        ShardStats { placed: vec![0; devices], ..Default::default() }
+    }
+
+    /// Record the live-lane skew seen at an epoch boundary.
+    pub(crate) fn note_imbalance(&mut self, loads: &[u64]) {
+        let total: u64 = loads.iter().sum();
+        if loads.is_empty() || total == 0 {
+            return;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        let max = loads.iter().copied().max().unwrap_or(0) as f64;
+        let ratio = max / mean;
+        if ratio > self.peak_imbalance {
+            self.peak_imbalance = ratio;
+        }
+    }
+}
+
+/// Modeled wall time (µs) of the sharded run: every group step costs
+/// the slowest device's fused epoch (its packed live lanes through
+/// [`crate::simt::GpuModel::fused_epoch_us`], overflow tiles at full
+/// launch cost — the same per-device formula `modeled_fused_us` uses)
+/// plus the group barrier. The single shared formula behind
+/// `bench_shard`, `trees batch --devices`, and E-SHARD-1.
+pub fn modeled_group_us(g: &DeviceGroup, trace: &[GroupStepTrace]) -> f64 {
+    trace
+        .iter()
+        .map(|gs| {
+            let dev_us: Vec<f64> = gs
+                .per_dev
+                .iter()
+                .map(|d| match d {
+                    Some(t) => {
+                        g.dev.fused_epoch_us(&t.live_per_job)
+                            + t.launches.saturating_sub(1) as f64
+                                * g.dev.launch_us
+                    }
+                    None => 0.0,
+                })
+                .collect();
+            g.group_step_us(&dev_us)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simt::GpuModel;
+
+    #[test]
+    fn imbalance_tracks_peak_ratio() {
+        let mut s = ShardStats::new(2);
+        s.note_imbalance(&[10, 10]); // ratio 1.0
+        s.note_imbalance(&[30, 10]); // ratio 1.5
+        s.note_imbalance(&[12, 8]); // ratio 1.2 — peak unchanged
+        assert!((s.peak_imbalance - 1.5).abs() < 1e-9, "{}", s.peak_imbalance);
+        s.note_imbalance(&[0, 0]); // all-idle boundary is ignored
+        assert!((s.peak_imbalance - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn group_time_is_max_over_devices_plus_barrier() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        let t = |live: u64| StepTrace {
+            live_per_job: vec![live],
+            window: live as usize,
+            launches: 1,
+        };
+        let trace = vec![GroupStepTrace { per_dev: vec![Some(t(40)), Some(t(4000))] }];
+        let want = g.dev.fused_epoch_us(&[4000]) + g.barrier_us();
+        let got = modeled_group_us(&g, &trace);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn idle_devices_cost_nothing_but_the_barrier_stands() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        let t = StepTrace { live_per_job: vec![10], window: 10, launches: 1 };
+        let trace = vec![GroupStepTrace { per_dev: vec![Some(t), None] }];
+        let want = g.dev.fused_epoch_us(&[10]) + g.barrier_us();
+        assert!((modeled_group_us(&g, &trace) - want).abs() < 1e-9);
+    }
+}

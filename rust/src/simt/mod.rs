@@ -107,6 +107,59 @@ impl GpuModel {
     }
 }
 
+/// A group of identical devices driven in lock-step by the
+/// [`crate::shard`] subsystem: every global step each device issues one
+/// fused epoch launch, then the whole group meets at a cross-device
+/// completion barrier. The group step therefore costs the *slowest*
+/// device's epoch plus the barrier — load imbalance across devices is
+/// directly visible as idle time, which is what the shard rebalancer
+/// minimizes.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceGroup {
+    /// The per-device model (all devices identical).
+    pub dev: GpuModel,
+    /// Devices in the group.
+    pub devices: usize,
+    /// Per-hop cost of the cross-device completion barrier (µs). The
+    /// barrier is modeled as a log2-depth reduction tree over the
+    /// group (HSA-era device-to-device signal latency per hop).
+    pub barrier_hop_us: f64,
+}
+
+impl DeviceGroup {
+    pub fn new(dev: GpuModel, devices: usize) -> DeviceGroup {
+        DeviceGroup { dev, devices: devices.max(1), barrier_hop_us: 2.0 }
+    }
+
+    /// Whole-group barrier cost: a log2-depth signal tree; free for a
+    /// single device (no cross-device completion to wait for).
+    pub fn barrier_us(&self) -> f64 {
+        if self.devices <= 1 {
+            0.0
+        } else {
+            self.barrier_hop_us * (self.devices as f64).log2().ceil()
+        }
+    }
+
+    /// One lock-step group epoch given each device's own epoch cost
+    /// (µs): the group waits for its slowest device, then pays the
+    /// barrier. Idle devices contribute 0.
+    pub fn group_step_us(&self, dev_us: &[f64]) -> f64 {
+        dev_us.iter().copied().fold(0.0, f64::max) + self.barrier_us()
+    }
+
+    /// Fraction of group device-time idled waiting at the barrier
+    /// (0 = perfectly balanced, →1 = one device does everything).
+    pub fn imbalance_waste(&self, dev_us: &[f64]) -> f64 {
+        let max = dev_us.iter().copied().fold(0.0, f64::max);
+        if max <= 0.0 || dev_us.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = dev_us.iter().sum();
+        1.0 - sum / (max * dev_us.len() as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +221,40 @@ mod tests {
         let one = m.fused_epoch_us(&[3000]);
         let many = m.fused_epoch_us(&[1000, 1000, 1000]);
         assert!(many >= one, "{many} vs {one}");
+    }
+
+    #[test]
+    fn single_device_group_has_no_barrier() {
+        let g = DeviceGroup::new(GpuModel::default(), 1);
+        assert_eq!(g.barrier_us(), 0.0);
+        assert_eq!(g.group_step_us(&[37.0]), 37.0);
+    }
+
+    #[test]
+    fn barrier_grows_log2_with_group_size() {
+        let m = GpuModel::default();
+        let b2 = DeviceGroup::new(m, 2).barrier_us();
+        let b4 = DeviceGroup::new(m, 4).barrier_us();
+        let b8 = DeviceGroup::new(m, 8).barrier_us();
+        assert!(b2 > 0.0);
+        assert!((b4 - 2.0 * b2).abs() < 1e-9, "{b4} vs {b2}");
+        assert!((b8 - 3.0 * b2).abs() < 1e-9, "{b8} vs {b2}");
+    }
+
+    #[test]
+    fn group_step_costs_slowest_device() {
+        let g = DeviceGroup::new(GpuModel::default(), 4);
+        let us = g.group_step_us(&[10.0, 40.0, 0.0, 25.0]);
+        assert!((us - (40.0 + g.barrier_us())).abs() < 1e-9, "{us}");
+    }
+
+    #[test]
+    fn imbalance_waste_measures_skew() {
+        let g = DeviceGroup::new(GpuModel::default(), 4);
+        assert!(g.imbalance_waste(&[10.0, 10.0, 10.0, 10.0]).abs() < 1e-9);
+        let skewed = g.imbalance_waste(&[40.0, 0.0, 0.0, 0.0]);
+        assert!((skewed - 0.75).abs() < 1e-9, "{skewed}");
+        assert_eq!(g.imbalance_waste(&[]), 0.0);
     }
 
     #[test]

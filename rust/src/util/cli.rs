@@ -23,12 +23,14 @@ impl Args {
         known_opts: &[&str],
         known_flags: &[&str],
     ) -> Result<Args, String> {
-        let mut out = Args::default();
-        out.known = known_opts
-            .iter()
-            .chain(known_flags.iter())
-            .map(|s| s.to_string())
-            .collect();
+        let mut out = Args {
+            known: known_opts
+                .iter()
+                .chain(known_flags.iter())
+                .map(|s| s.to_string())
+                .collect(),
+            ..Default::default()
+        };
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {

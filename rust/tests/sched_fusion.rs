@@ -9,7 +9,8 @@
 //!     fused window is far smaller than the demand.
 
 use trees::sched::{
-    solo_profile, FusedScheduler, Fuser, JobBuild, JobSpec, SchedConfig,
+    solo_profile, Fairness, FusedScheduler, Fuser, JobBuild, JobSpec,
+    SchedConfig,
 };
 use trees::util::quickcheck::{check, shrink_vec, Config};
 use trees::util::rng::Rng;
@@ -137,44 +138,72 @@ fn prop_fused_equals_solo_on_random_mixes() {
     );
 }
 
+fn no_starvation(tokens: &[String], fairness: Fairness) -> Result<(), String> {
+    let builds = builds_for(tokens);
+    let cfg = SchedConfig {
+        capacity: 64,
+        slice_cap: 16,
+        max_active: 8,
+        fairness,
+        ..Default::default()
+    };
+    let mut sched = FusedScheduler::new(cfg);
+    for b in &builds {
+        sched.admit_build(b);
+    }
+    sched.run_to_completion().map_err(|e| e.to_string())?;
+    if sched.finished().len() != tokens.len() {
+        return Err(format!(
+            "{} of {} jobs finished",
+            sched.finished().len(),
+            tokens.len()
+        ));
+    }
+    for fj in sched.finished() {
+        if fj.stats.max_consec_stalls > tokens.len() as u64 {
+            return Err(format!(
+                "{} starved: {} consecutive stalls among {} jobs",
+                fj.label,
+                fj.stats.max_consec_stalls,
+                tokens.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_no_starvation_under_window_pressure() {
     check(
         Config { cases: 8, ..Default::default() },
         |rng: &mut Rng| gen_mix(rng, 3, 7),
         |v| shrink_vec(v, |_| Vec::new()),
-        |tokens| {
-            let builds = builds_for(tokens);
-            let cfg = SchedConfig {
-                capacity: 64,
-                slice_cap: 16,
-                max_active: 8,
-                ..Default::default()
-            };
-            let mut sched = FusedScheduler::new(cfg);
-            for b in &builds {
-                sched.admit_build(b);
-            }
-            sched.run_to_completion().map_err(|e| e.to_string())?;
-            if sched.finished().len() != tokens.len() {
-                return Err(format!(
-                    "{} of {} jobs finished",
-                    sched.finished().len(),
-                    tokens.len()
-                ));
-            }
-            for fj in sched.finished() {
-                if fj.stats.max_consec_stalls > tokens.len() as u64 {
-                    return Err(format!(
-                        "{} starved: {} consecutive stalls among {} jobs",
-                        fj.label,
-                        fj.stats.max_consec_stalls,
-                        tokens.len()
-                    ));
-                }
-            }
-            Ok(())
+        |tokens| no_starvation(tokens, Fairness::RoundRobin),
+    );
+}
+
+#[test]
+fn prop_no_starvation_weighted_with_random_weights() {
+    // the Weighted policy keeps the rotating head, so the round-robin
+    // no-starvation bound holds for any weight assignment — even a
+    // weight-1 batch tenant among w8 latency tenants rides within n
+    // steps (same property test, weighted variant).
+    check(
+        Config { cases: 8, ..Default::default() },
+        |rng: &mut Rng| {
+            gen_mix(rng, 3, 7)
+                .into_iter()
+                .map(|mut t| {
+                    let w = 1 + rng.below(8);
+                    if w > 1 {
+                        t.push_str(&format!(":w{w}"));
+                    }
+                    t
+                })
+                .collect::<Vec<String>>()
         },
+        |v| shrink_vec(v, |_| Vec::new()),
+        |tokens| no_starvation(tokens, Fairness::Weighted),
     );
 }
 
