@@ -1,9 +1,10 @@
 # TREES — build / test entry points.
 #
-#   make check      tier-1: release build + full test suite + clippy
-#                   (offline; artifact e2e tests self-skip without
-#                   artifacts)
+#   make check      tier-1: release build + full test suite + clippy +
+#                   rustdoc (offline; artifact e2e tests self-skip
+#                   without artifacts)
 #   make clippy     cargo clippy, warnings denied
+#   make doc        cargo doc --no-deps, rustdoc warnings denied
 #   make fmt        rustfmt the workspace
 #   make fmt-check  rustfmt in --check mode (CI)
 #   make artifacts  AOT-lower the epoch-step programs to HLO text
@@ -12,9 +13,9 @@
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy fmt fmt-check artifacts bench pytest
+.PHONY: check build test clippy doc fmt fmt-check artifacts bench pytest
 
-check: build test clippy
+check: build test clippy doc
 
 build:
 	cd rust && $(CARGO) build --release
@@ -24,6 +25,9 @@ test:
 
 clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib
 
 fmt:
 	cd rust && $(CARGO) fmt --all

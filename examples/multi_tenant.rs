@@ -1,53 +1,51 @@
-//! Multi-tenant epoch fusion: serve several concurrent jobs from one
-//! shared epoch loop.
+//! Multi-tenant epoch fusion behind the `Session` facade: serve
+//! several concurrent jobs from one shared epoch loop, with one of
+//! them arriving online, mid-run.
 //!
 //!     cargo run --release --example multi_tenant
 //!
-//! Three heterogeneous tenants (fib, BFS, mergesort) are admitted to
-//! the fused scheduler. Each shared epoch packs their live task fronts
-//! into one task vector at per-job base offsets, so a single launch and
-//! a single epoch synchronization pay V∞ for everyone — then each
-//! result is cross-checked against a dedicated solo run. No artifacts
-//! needed: this drives the pure-Rust fused engine.
+//! Two heterogeneous tenants (fib, BFS) are submitted up front; a
+//! mergesort arrives at epoch 6 — the session instantiates it at
+//! submit time and it joins the fused task vector at the next epoch
+//! boundary. Each shared epoch packs the live task fronts into one
+//! task vector at per-job base offsets, so a single launch and a
+//! single epoch synchronization pay V∞ for everyone — then each result
+//! is cross-checked against its app oracle. No artifacts needed: this
+//! drives the pure-Rust fused engine.
 
-use trees::sched::{FusedScheduler, JobSpec, SchedConfig};
+use trees::session::{Arrival, Session};
 use trees::simt::GpuModel;
 
 fn main() -> anyhow::Result<()> {
-    let specs = JobSpec::parse_list("fib:18,bfs:grid:5,mergesort:256")?;
-    let builds: Vec<_> = specs
-        .iter()
-        .map(|s| s.instantiate())
-        .collect::<anyhow::Result<_>>()?;
+    let arrivals =
+        Arrival::parse_feed("fib:18,bfs:grid:5,mergesort:256@6")?;
 
-    let mut sched = FusedScheduler::new(SchedConfig::default());
-    sched.on_complete(|fj| {
-        println!(
-            "  tenant {} finished after riding {} shared epochs",
-            fj.label, fj.stats.steps_ridden
-        );
-    });
-    for b in &builds {
-        sched.admit_build(b);
-    }
-    sched.run_to_completion()?;
+    let mut session = Session::builder().build()?;
+    session.run_feed(
+        &arrivals,
+        |id, a| println!("  @{:<3} admitted {id} {}", a.at_step, a.spec.label()),
+        |r| {
+            println!(
+                "  @{:<3} tenant {} finished after riding {} shared epochs",
+                r.at_step, r.job.label, r.job.stats.steps_ridden
+            )
+        },
+    )?;
 
     let model = GpuModel::default();
     println!("\nper-tenant results (verified against app oracles):");
-    for fj in sched.finished() {
-        let m = fj.engine.machine().expect("interp engine");
-        let kind = fj.kind.as_ref().unwrap();
-        kind.verify(m).map_err(anyhow::Error::msg)?;
+    for r in session.results() {
+        assert_eq!(r.verified(), Some(true), "{}", r.job.label);
         println!(
             "  {:<18} {:<28} V_inf saved ~{:.0} us",
-            fj.label,
-            kind.describe(m),
-            fj.stats.vinf_saved_us(&model)
+            r.job.label,
+            r.summary(),
+            r.job.stats.vinf_saved_us(&model)
         );
     }
-    let s = sched.stats();
+    let s = session.stats();
     let solo_launches: u64 =
-        sched.finished().iter().map(|f| f.stats.solo_launches).sum();
+        session.results().iter().map(|r| r.job.stats.solo_launches).sum();
     println!(
         "\n{} shared epochs, {} fused launches vs {} solo launches \
          ({} saved): one launch pays V_inf for every tenant.",

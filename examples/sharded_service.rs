@@ -1,76 +1,79 @@
-//! Multi-device sharding: partition a multi-tenant job mix across a
-//! simulated device group, then watch the rebalancer move tenants at
-//! epoch boundaries.
+//! Multi-device sharding behind the `Session` facade: partition a
+//! multi-tenant job mix across a simulated device group, admit late
+//! arrivals online, and watch the rebalancer move tenants at epoch
+//! boundaries.
 //!
 //!     cargo run --release --example sharded_service
 //!
-//! Eight tenants are placed over two devices with app affinity (fibs
-//! together, sorts together — the locality policy). The sorts drain
-//! first, the sort device idles, live-lane skew crosses the threshold,
-//! and the group migrates fib tenants over — whole machine state moves
-//! at the epoch boundary, so every result still verifies against its
-//! solo oracle. No artifacts needed: pure-Rust engines.
+//! Eight tenants are served over two devices with least-loaded
+//! placement; two of them arrive mid-run (`@epoch` in the feed) and
+//! land on whichever device has drained — online admission and
+//! placement working together. When live-lane skew crosses the
+//! threshold the group migrates tenants over — whole machine state
+//! moves at the epoch boundary, so every result still verifies against
+//! its solo oracle. No artifacts needed: pure-Rust engines.
 
-use trees::sched::{JobSpec, SchedConfig};
-use trees::shard::{
-    modeled_group_us, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup,
-};
+use trees::session::Session;
+use trees::shard::PlacementKind;
 use trees::simt::{DeviceGroup, GpuModel};
 
 fn main() -> anyhow::Result<()> {
-    let specs = JobSpec::parse_list(
-        "fib:16,fib:15,fib:14,fib:14,mergesort:64,mergesort:32,\
-         mergesort:16,nqueens:5",
-    )?;
-    let builds: Vec<_> = specs
-        .iter()
-        .map(|s| s.instantiate())
-        .collect::<anyhow::Result<_>>()?;
+    let mut session = Session::builder()
+        .devices(2)
+        .placement(PlacementKind::LeastLoaded)
+        .trace(true)
+        .build()?;
 
-    let mut group = ShardGroup::new(ShardConfig {
-        devices: 2,
-        placement: PlacementKind::Affinity,
-        rebalance: RebalanceCfg::default(),
-        sched: SchedConfig { trace: true, ..Default::default() },
-    });
-    group.pin("fib", 0);
-    group.pin("mergesort", 1);
-    group.pin("nqueens", 1);
-    for b in &builds {
-        group.admit_build(b);
+    // six tenants up front…
+    for tok in [
+        "fib:16",
+        "fib:15",
+        "fib:14",
+        "mergesort:64",
+        "mergesort:32",
+        "nqueens:5",
+    ] {
+        session.submit_spec(tok)?;
     }
-    group.run_to_completion()?;
+    // …run a while, then two more arrive online (built at submit time)
+    for _ in 0..8 {
+        session.step()?;
+    }
+    for tok in ["fib:14", "mergesort:16"] {
+        let id = session.submit_spec(tok)?;
+        println!("@{} admitted {id} {tok} (online)", session.steps());
+    }
+    session.drain()?;
 
-    println!("per-tenant results (verified against app oracles):");
-    let mut rows: Vec<_> = group.finished().collect();
-    rows.sort_by_key(|(_, fj)| fj.id.0);
-    for (dev, fj) in rows {
-        let m = fj.engine.machine().expect("interp engine");
-        let kind = fj.kind.as_ref().unwrap();
-        kind.verify(m).map_err(anyhow::Error::msg)?;
+    println!("\nper-tenant results (verified against app oracles):");
+    let mut rows: Vec<_> = session.results().iter().collect();
+    rows.sort_by_key(|r| r.job.id.0);
+    for r in rows {
+        assert_eq!(r.verified(), Some(true), "{}", r.job.label);
         println!(
-            "  {dev}  {:<16} {:<28} rode {} epochs, stalled {}",
-            fj.label,
-            kind.describe(m),
-            fj.stats.steps_ridden,
-            fj.stats.stalls
+            "  {}  {:<16} {:<28} rode {} epochs, stalled {}",
+            r.device,
+            r.job.label,
+            r.summary(),
+            r.job.stats.steps_ridden,
+            r.job.stats.stalls
         );
     }
 
-    let s = group.stats();
+    let s = session.shard_stats().expect("two devices");
     println!("\nmigrations (epoch-boundary, whole-tenant):");
     for e in &s.migration_log {
         println!("  step {:>3}: {} moved {} -> {}", e.step, e.job, e.from, e.to);
     }
-    let model = DeviceGroup::new(GpuModel::default(), group.devices());
+    let model = DeviceGroup::new(GpuModel::default(), session.devices());
     println!(
         "\n{} group epochs over {} devices | {} launches | peak live-lane \
          imbalance {:.2}x | modeled group APU {:.0} us (barrier {:.0} us/step)",
         s.group_steps,
-        group.devices(),
-        group.total_launches(),
+        session.devices(),
+        session.stats().launches,
         s.peak_imbalance,
-        modeled_group_us(&model, &s.trace),
+        trees::shard::modeled_group_us(&model, &s.trace),
         model.barrier_us(),
     );
     Ok(())

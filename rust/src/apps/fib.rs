@@ -2,7 +2,7 @@
 //!
 //! Python twin: `python/compile/apps/fib.py`. Task types:
 //! `1 = fib(n)` (forks fib(n-1), fib(n-2), joins sum2),
-//! `2 = sum2(c0, c1)` (emits res[c0] + res[c1]).
+//! `2 = sum2(c0, c1)` (emits `res[c0] + res[c1]`).
 
 use crate::coordinator::Workload;
 use crate::tvm::{TaskCtx, TvmProgram};

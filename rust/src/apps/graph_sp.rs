@@ -65,7 +65,7 @@ impl Layout {
         ci
     }
 
-    /// Initial heap: dist[VMAX] ++ claim[VMAX] (claims start at MAX so
+    /// Initial heap: `dist[VMAX] ++ claim[VMAX]` (claims start at MAX so
     /// any packed claim value wins the min-merge).
     pub fn dist0(&self, src: usize) -> Vec<i32> {
         let mut d = vec![INF; 2 * self.vmax];

@@ -10,6 +10,7 @@
 //! the same [`crate::tvm::tms_update`] the reference interpreter uses.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -93,9 +94,12 @@ impl RunCtx {
     }
 }
 
-/// The TREES coordinator for one (app, size-class) pair.
-pub struct Coordinator<'d> {
-    dev: &'d Device,
+/// The TREES coordinator for one (app, size-class) pair. Co-owns its
+/// [`Device`], so a coordinator (and any scheduler tenant holding one)
+/// carries no borrow lifetime — the seam that lets `trees serve` build
+/// artifact tenants lazily at submit time.
+pub struct Coordinator {
+    dev: Arc<Device>,
     pub app: AppManifest,
     buckets: Vec<Bucket>,
     map_bucket: Option<Bucket>,
@@ -105,16 +109,16 @@ pub struct Coordinator<'d> {
     cls: String,
 }
 
-impl<'d> Coordinator<'d> {
+impl Coordinator {
     /// Compile (and cache) the artifacts of the smallest size class that
     /// fits `capacity`.
     pub fn new(
-        dev: &'d Device,
+        dev: &Arc<Device>,
         artifacts_dir: &Path,
         app: &AppManifest,
         capacity: usize,
         cfg: CoordinatorConfig,
-    ) -> Result<Coordinator<'d>> {
+    ) -> Result<Coordinator> {
         let infos = app.artifacts_for_capacity(capacity)?;
         Self::from_infos(dev, artifacts_dir, app, infos, cfg)
     }
@@ -122,24 +126,24 @@ impl<'d> Coordinator<'d> {
     /// Compile the artifacts of a named size class (graph workloads pick
     /// the class by layout, not capacity).
     pub fn new_for_class(
-        dev: &'d Device,
+        dev: &Arc<Device>,
         artifacts_dir: &Path,
         app: &AppManifest,
         cls: &str,
         cfg: CoordinatorConfig,
-    ) -> Result<Coordinator<'d>> {
+    ) -> Result<Coordinator> {
         let infos = app.artifacts_for_class(cls)?;
         Self::from_infos(dev, artifacts_dir, app, infos, cfg)
     }
 
     /// Pick by workload: class override if present, else capacity.
     pub fn for_workload(
-        dev: &'d Device,
+        dev: &Arc<Device>,
         artifacts_dir: &Path,
         app: &AppManifest,
         w: &Workload,
         cfg: CoordinatorConfig,
-    ) -> Result<Coordinator<'d>> {
+    ) -> Result<Coordinator> {
         match &w.cls {
             Some(cls) => Self::new_for_class(dev, artifacts_dir, app, cls, cfg),
             None => Self::new(dev, artifacts_dir, app, w.capacity, cfg),
@@ -147,12 +151,12 @@ impl<'d> Coordinator<'d> {
     }
 
     fn from_infos(
-        dev: &'d Device,
+        dev: &Arc<Device>,
         artifacts_dir: &Path,
         app: &AppManifest,
         infos: Vec<&ArtifactInfo>,
         cfg: CoordinatorConfig,
-    ) -> Result<Coordinator<'d>> {
+    ) -> Result<Coordinator> {
         let cls = infos[0].cls.clone();
         let n = infos[0].n;
         let mut buckets = Vec::new();
@@ -177,7 +181,15 @@ impl<'d> Coordinator<'d> {
             }),
             None => None,
         };
-        Ok(Coordinator { dev, app: app.clone(), buckets, map_bucket, cfg, n, cls })
+        Ok(Coordinator {
+            dev: dev.clone(),
+            app: app.clone(),
+            buckets,
+            map_bucket,
+            cfg,
+            n,
+            cls,
+        })
     }
 
     /// Size class in use.

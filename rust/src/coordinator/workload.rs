@@ -1,7 +1,7 @@
 //! Workload description: what an application instance needs from the
 //! coordinator (initial task, heaps, capacity).
 
-/// Host-side res gather: (tid, task args, res array, out[G]).
+/// Host-side res gather: `(tid, task args, res array, out[G])`.
 /// Mirrors the python Program.gather spec; the coordinator uses it to
 /// assemble the `res_win` input so the device never sees the O(N)
 /// result array.

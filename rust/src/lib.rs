@@ -22,14 +22,22 @@
 //! * [`sched`] — the multi-tenant epoch-fusion scheduler: co-schedules
 //!   many concurrent jobs into shared epochs (one task vector, one
 //!   launch, one sync per step for all tenants), with round-robin or
-//!   weighted fairness, admission backpressure, and per-job
-//!   V∞-savings accounting. Surfaced as `trees serve` / `trees batch`.
+//!   weighted fairness, and admission backpressure on both tenant
+//!   count and live-lane demand. Tenants own their machines
+//!   (`Arc`-held programs and coordinators), so they can be built at
+//!   any time and moved between schedulers.
 //! * [`shard`] — the multi-device layer above `sched`: one fused
 //!   scheduler per simulated device, pluggable placement (round-robin
 //!   / least-live-lanes / app affinity), a lock-step group epoch loop
 //!   with a cross-device completion barrier, and epoch-boundary tenant
-//!   migration when live-lane load skews. Surfaced as
-//!   `trees serve --devices N` / `trees batch --devices N`.
+//!   migration when live-lane load skews.
+//! * [`session`] — the serving facade over all of the above:
+//!   [`session::Session`] hides the solo / fused / sharded split
+//!   behind one builder + `submit()/step()/poll()/drain()` API, with
+//!   *online admission* — jobs are instantiated lazily at submit time
+//!   and may join mid-run at any epoch boundary. `trees serve` /
+//!   `trees batch` are thin loops over it; see the module docs for the
+//!   "which entry point do I use" table.
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
 //!   interpreter: the correctness oracle and the `T_1` (work) meter;
 //!   also home of the TMS-compression update every driver shares.
@@ -53,6 +61,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod shard;
 pub mod simt;
 pub mod tvm;

@@ -5,7 +5,9 @@
 //!   run <app> [opts]             run a workload through the coordinator
 //!   interp <app> [opts]          run on the sequential TVM interpreter
 //!   native <bfs|sssp|sort> ...   run a hand-coded native baseline
-//!   serve --jobs <spec>          co-schedule many jobs in shared epochs
+//!   serve [--jobs <feed>]        online-admission service loop over a
+//!                                `Session` (arrival schedule `spec@epoch`,
+//!                                fed from --jobs, --spec-file, or stdin)
 //!   batch [--jobs <spec>]        fused-vs-solo comparison for a job mix
 //!
 //! Workload options (app-dependent):
@@ -28,12 +30,11 @@ use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use trees::graph::{gen, Csr};
 use trees::runtime::{load_manifest, Device};
 use trees::sched::{
-    modeled_fused_us, modeled_solo_us, solo_profile, Fairness, FusedScheduler,
-    Fuser, JobBuild, JobSpec, SchedConfig,
+    modeled_fused_us, modeled_solo_us, solo_profile, Fairness, Fuser, JobSpec,
+    SchedConfig,
 };
-use trees::shard::{
-    modeled_group_us, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup,
-};
+use trees::session::{Arrival, Session, SessionBuilder};
+use trees::shard::{modeled_group_us, PlacementKind, RebalanceCfg};
 use trees::simt::{DeviceGroup, GpuModel};
 use trees::util::cli::Args;
 use trees::util::rng::Rng;
@@ -47,19 +48,29 @@ USAGE:
                   [--seed S] [--bucket W] [--trace]
   trees interp <app> [--n N] [...]
   trees native <bfs|sssp|sort> [--n N] [--graph ..] [--scale S]
-  trees serve --jobs <spec> [--capacity N] [--slice-cap N] [--max-active N]
-              [--fairness round-robin|weighted] [--devices N]
-              [--placement round-robin|least-loaded|affinity]
+  trees serve [--jobs <feed> | --spec-file PATH|-]
+              [--capacity N] [--slice-cap N] [--max-active N]
+              [--max-live-lanes N] [--fairness round-robin|weighted]
+              [--devices N] [--placement round-robin|least-loaded|affinity]
               [--skew T] [--no-rebalance]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
 
-JOB SPEC (serve/batch): comma-separated app[:graph][:n][:seed][:wW]
-tokens, e.g. --jobs fib:18:w4,mergesort:512,bfs:grid:5,sssp:rmat:6:7
-(wW = fairness weight under --fairness weighted)
+JOB FEED (serve): comma/newline-separated app[:graph][:n][:seed][:wW][@E]
+tokens, e.g. --jobs fib:18:w4,mergesort:512@3,bfs:grid:5@10. `@E` is the
+arrival epoch: the job is submitted online once E shared epochs have
+run, exercising mid-run admission (no @ = epoch 0). `--spec-file -`
+reads the feed from stdin; `#` starts a comment. Jobs are instantiated
+lazily at submit time through a `trees::session::Session`. batch takes
+the same tokens without `@E`. (wW = fairness weight under --fairness
+weighted.)
 
---devices N > 1 shards the job mix across a simulated device group:
+Admission backpressure: --max-active caps co-resident tenants,
+--max-live-lanes caps their summed live-lane demand (0 = uncapped) —
+later submissions queue until resident demand drains.
+
+--devices N > 1 shards the jobs across a simulated device group:
 per-device epoch fusion, a lock-step group loop with a cross-device
 barrier, and epoch-boundary tenant migration when live-lane load skews
 past --skew (default 1.5; --no-rebalance pins placement).
@@ -78,8 +89,9 @@ fn real_main() -> Result<()> {
         std::env::args().skip(1),
         &[
             "n", "bucket", "seed", "graph", "scale", "steps", "jobs",
-            "capacity", "slice-cap", "max-active", "copies", "fairness",
-            "devices", "placement", "skew",
+            "capacity", "slice-cap", "max-active", "max-live-lanes",
+            "copies", "fairness", "devices", "placement", "skew",
+            "spec-file",
         ],
         &["trace", "verbose", "help", "no-rebalance"],
     )
@@ -280,13 +292,19 @@ fn sched_config(args: &Args) -> Result<SchedConfig> {
         max_active: args
             .usize_or("max-active", d.max_active)
             .map_err(anyhow::Error::msg)?,
+        max_live_lanes: args
+            .usize_or("max-live-lanes", d.max_live_lanes)
+            .map_err(anyhow::Error::msg)?,
         fairness,
         ..d
     })
 }
 
-/// Shard-group options (`serve`/`batch` with `--devices N`).
-fn shard_config(args: &Args, devices: usize, trace: bool) -> Result<ShardConfig> {
+/// Assemble a [`SessionBuilder`] from the serve/batch CLI options
+/// (window budget, fairness, backpressure, device group, placement,
+/// rebalancing).
+fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
+    let devices = args.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
     let placement = PlacementKind::parse(&args.str_or("placement", "round-robin"))?;
     let rb = RebalanceCfg::default();
     let rebalance = RebalanceCfg {
@@ -296,223 +314,113 @@ fn shard_config(args: &Args, devices: usize, trace: bool) -> Result<ShardConfig>
             .map_err(anyhow::Error::msg)?,
         ..rb
     };
-    let sched = SchedConfig { trace, ..sched_config(args)? };
-    Ok(ShardConfig { devices, placement, rebalance, sched })
+    Ok(Session::builder()
+        .sched(SchedConfig { trace, ..sched_config(args)? })
+        .devices(devices)
+        .placement(placement)
+        .rebalance(rebalance))
 }
 
-fn instantiate_all(specs: &[JobSpec]) -> Result<Vec<JobBuild>> {
-    specs.iter().map(|s| s.instantiate()).collect()
+/// The serve feed: `--spec-file PATH` (`-` = stdin), else `--jobs`.
+/// Giving both is an error, not a silent preference — a dropped feed
+/// source is a batch of jobs the operator thinks were submitted.
+fn serve_feed(args: &Args) -> Result<String> {
+    if args.get("spec-file").is_some() && args.get("jobs").is_some() {
+        bail!("--spec-file and --jobs both given; pick one feed source");
+    }
+    match args.get("spec-file") {
+        Some("-") => {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin()
+                .read_to_string(&mut buf)
+                .context("reading job feed from stdin")?;
+            Ok(buf)
+        }
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading job feed {path}")),
+        None => Ok(args.str_or("jobs", "fib:16,bfs:grid:5,mergesort:256")),
+    }
 }
 
-/// `trees serve`: co-schedule many concurrent jobs into shared epochs.
-/// Uses artifact (AOT) tenants when artifacts and a real backend are
-/// available; otherwise the pure-Rust fused interpreter engine.
+/// `trees serve`: an online-admission service loop. Arrivals from the
+/// feed are submitted to a [`Session`] as the epoch clock reaches their
+/// `@epoch`, interleaved with running shared epochs — jobs join the
+/// fused task vector mid-run, exercising epoch-boundary admission for
+/// real. Uses artifact (AOT) tenants when artifacts and a real backend
+/// are available; otherwise the pure-Rust fused interpreter engine.
 fn serve(args: &Args) -> Result<()> {
-    let spec = args.str_or("jobs", "fib:16,bfs:grid:5,mergesort:256");
-    let specs = JobSpec::parse_list(&spec)?;
-    if specs.is_empty() {
-        bail!("--jobs spec is empty\n{}", usage());
+    let arrivals = Arrival::parse_feed(&serve_feed(args)?)?;
+    if arrivals.is_empty() {
+        bail!("job feed is empty\n{}", usage());
     }
-    let devices = args.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
-    if devices > 1 {
-        // sharded serving runs per-device interpreter engines (per-app
-        // artifacts stay single-device; the group model is what's
-        // under study here)
-        return serve_sharded(&specs, shard_config(args, devices, false)?);
-    }
-    let cfg = sched_config(args)?;
-    match trees::runtime::try_artifacts() {
-        Ok((manifest, dir)) => {
-            match serve_artifacts(&specs, &manifest, &dir, cfg.clone()) {
-                Ok(()) => return Ok(()),
-                Err(e) => eprintln!(
-                    "artifact path failed ({e:#}); falling back to the \
-                     fused interpreter engine"
-                ),
+    // clamp like SessionBuilder::devices does, so the artifact gate and
+    // the banner agree with the session actually built
+    let devices =
+        args.usize_or("devices", 1).map_err(anyhow::Error::msg)?.max(1);
+    let mut builder = session_builder(args, false)?;
+    if devices == 1 {
+        // sharded serving stays on per-device interpreter engines
+        // (per-app artifacts are single-device; the group model is
+        // what's under study there)
+        let art = trees::runtime::try_artifacts()
+            .and_then(|(manifest, dir)| Ok((Device::cpu()?, manifest, dir)));
+        match art {
+            Ok((dev, manifest, dir)) => {
+                builder = builder.artifacts(dev, manifest, dir)
             }
+            Err(e) => eprintln!(
+                "artifact engine unavailable ({e:#}); serving on the \
+                 pure-Rust fused interpreter engine"
+            ),
         }
-        Err(e) => eprintln!(
-            "artifact engine unavailable ({e:#}); serving on the \
-             pure-Rust fused interpreter engine"
-        ),
     }
-    serve_fallback(&specs, cfg)
-}
-
-fn serve_fallback(specs: &[JobSpec], cfg: SchedConfig) -> Result<()> {
-    let builds = instantiate_all(specs)?;
-    let mut sched = FusedScheduler::new(SchedConfig { fused_kernel: true, ..cfg });
-    sched.on_complete(|fj| {
-        println!(
-            "  completed {} after {} shared epochs ({} stalls)",
-            fj.label, fj.stats.steps_ridden, fj.stats.stalls
-        );
-    });
-    for b in &builds {
-        sched.admit_build(b);
-    }
-    sched.run_to_completion()?;
-    serve_report(&sched);
-    Ok(())
-}
-
-fn serve_artifacts(
-    specs: &[JobSpec],
-    manifest: &trees::runtime::Manifest,
-    dir: &std::path::Path,
-    cfg: SchedConfig,
-) -> Result<()> {
-    let dev = Device::cpu()?;
-    let mut labeled: Vec<(String, Workload, u64)> = Vec::new();
-    let mut cos: Vec<Coordinator> = Vec::new();
-    for s in specs {
-        let app = manifest.app(&canonical_app(&s.app))?;
-        let w = spec_workload(s, app)?;
-        cos.push(Coordinator::for_workload(
-            &dev,
-            dir,
-            app,
-            &w,
-            CoordinatorConfig::default(),
-        )?);
-        labeled.push((s.label(), w, s.weight));
-    }
-    // launch accounting must tile over the window buckets the loaded
-    // artifacts actually have, not the model defaults — an artifact set
-    // with no usable window sizes is a configuration error, surfaced
-    // here (the scheduler's own constructor would silently guard with a
-    // fallback bucket)
-    let mut buckets: Vec<usize> =
-        cos.iter().flat_map(|c| c.bucket_sizes()).collect();
-    buckets.sort_unstable();
-    buckets.dedup();
-    Fuser::try_new(buckets.clone())
-        .context("loaded artifacts expose no usable window buckets")?;
-    // per-app artifacts cannot merge different apps into one kernel, so
-    // launches stay per-tenant; the epoch sync is what fusion shares
-    let mut sched =
-        FusedScheduler::new(SchedConfig { fused_kernel: false, buckets, ..cfg });
-    for ((label, w, weight), co) in labeled.iter().zip(&cos) {
-        sched.admit_artifact(label, co, w, *weight);
-    }
-    sched.run_to_completion()?;
-    serve_report(&sched);
-    Ok(())
-}
-
-/// `trees serve --devices N`: shard the tenants across a simulated
-/// device group (one fused scheduler per device, lock-step epochs,
-/// epoch-boundary rebalancing).
-fn serve_sharded(specs: &[JobSpec], cfg: ShardConfig) -> Result<()> {
-    let devices = cfg.devices.max(1);
-    let builds = instantiate_all(specs)?;
-    let mut group = ShardGroup::new(cfg);
-    for b in &builds {
-        group.admit_build(b);
-    }
-    group.run_to_completion()?;
-
-    let mut t = Table::new(
-        "sharded epoch fusion — per-job accounting",
-        &["dev", "job", "epochs", "stalls", "lanes", "result"],
-    );
-    let mut rows: Vec<_> = group.finished().collect();
-    rows.sort_by_key(|(_, fj)| fj.id.0);
-    for (dev, fj) in rows {
-        let result = match (&fj.kind, fj.engine.machine()) {
-            (Some(k), Some(m)) => {
-                let check = match k.verify(m) {
-                    Ok(()) => "ok",
-                    Err(_) => "MISMATCH",
-                };
-                format!("{} [{check}]", k.describe(m))
-            }
-            _ => format!("root={}", fj.engine.root_result()),
-        };
-        let migrated = group
-            .stats()
-            .migration_log
-            .iter()
-            .any(|e| e.job == fj.id);
-        t.row(vec![
-            format!("{dev}{}", if migrated { "*" } else { "" }),
-            fj.label.clone(),
-            fj.stats.steps_ridden.to_string(),
-            fj.stats.stalls.to_string(),
-            fj.stats.lanes.to_string(),
-            result,
-        ]);
-    }
-    t.print();
-
-    let s = group.stats();
-    for (d, ds) in group.device_stats().iter().enumerate() {
-        println!(
-            "  d{d}: {} steps, {} launches, {} lanes, {} jobs ({} placed)",
-            ds.steps, ds.launches, ds.work, ds.jobs_completed, s.placed[d],
-        );
-    }
+    let mut session = builder.build()?;
     println!(
-        "group: {} lock-step epochs / {} barrier syncs over {} devices | \
-         {} total launches | {} migrations (* = migrated) | peak live-lane \
-         imbalance {:.2}x",
-        s.group_steps,
-        s.group_syncs,
-        devices,
-        group.total_launches(),
-        s.migrations,
-        s.peak_imbalance,
+        "serving {} arrival(s) over {} device(s):",
+        arrivals.len(),
+        devices
     );
+    session.run_feed(
+        &arrivals,
+        |id, a| {
+            println!("  @{:<4} admit {id}  {}", a.at_step, a.spec.label())
+        },
+        |r| {
+            println!(
+                "  @{:<4} done  {}  {} after {} epochs ({} stalls)",
+                r.at_step,
+                r.job.id,
+                r.job.label,
+                r.job.stats.steps_ridden,
+                r.job.stats.stalls
+            )
+        },
+    )?;
+    serve_report(&session);
     Ok(())
 }
 
-fn canonical_app(app: &str) -> String {
-    if app == "msort" { "mergesort".to_string() } else { app.to_string() }
-}
-
-/// Workload for the artifact engine. Sizes, seeds, and graphs come
-/// from the same `JobSpec` helpers the interp-engine builder uses
-/// (`sched::job`), so a `--jobs` token means one problem on either.
-fn spec_workload(s: &JobSpec, app: &trees::runtime::AppManifest) -> Result<Workload> {
-    let n = s.effective_n();
-    Ok(match s.app.as_str() {
-        "fib" => apps::fib::workload(n as u32),
-        "nqueens" => apps::nqueens::workload(n),
-        "tsp" => apps::tsp::workload(&apps::tsp::random_dist(n, s.seed), n),
-        "mergesort" | "msort" => {
-            let mut rng = Rng::new(s.seed);
-            let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
-            apps::msort::workload(app, &data)?.0
-        }
-        "bfs" | "sssp" => {
-            let g = s.build_graph()?;
-            apps::graph_sp::workload(app, &g, 0)?.0
-        }
-        other => bail!("no artifact workload builder for app {other:?}"),
-    })
-}
-
-fn serve_report(sched: &FusedScheduler<'_>) {
+fn serve_report(session: &Session) {
     let model = GpuModel::default();
     let mut t = Table::new(
         "epoch fusion — per-job accounting",
         &[
-            "job", "epochs", "stalls", "lanes", "solo-launch", "fused-share",
-            "V_inf saved (us)", "result",
+            "dev", "job", "epochs", "stalls", "lanes", "solo-launch",
+            "fused-share", "V_inf saved (us)", "result",
         ],
     );
-    for fj in sched.finished() {
-        let result = match (&fj.kind, fj.engine.machine()) {
-            (Some(k), Some(m)) => {
-                let check = match k.verify(m) {
-                    Ok(()) => "ok",
-                    Err(_) => "MISMATCH",
-                };
-                format!("{} [{check}]", k.describe(m))
-            }
-            _ => format!("root={}", fj.engine.root_result()),
-        };
+    let migration_log = session
+        .shard_stats()
+        .map(|s| s.migration_log.as_slice())
+        .unwrap_or_default();
+    let mut rows: Vec<_> = session.results().iter().collect();
+    rows.sort_by_key(|r| r.job.id.0);
+    for r in rows {
+        let fj = &r.job;
+        let migrated = migration_log.iter().any(|e| e.job == fj.id);
         t.row(vec![
+            format!("{}{}", r.device, if migrated { "*" } else { "" }),
             fj.label.clone(),
             fj.stats.steps_ridden.to_string(),
             fj.stats.stalls.to_string(),
@@ -520,24 +428,43 @@ fn serve_report(sched: &FusedScheduler<'_>) {
             fj.stats.solo_launches.to_string(),
             format!("{:.1}", fj.stats.fused_launch_share),
             format!("{:.1}", fj.stats.vinf_saved_us(&model)),
-            result,
+            r.summary(),
         ]);
     }
     t.print();
-    let s = sched.stats();
+    let st = session.stats();
     let solo_launches: u64 =
-        sched.finished().iter().map(|f| f.stats.solo_launches).sum();
-    let solo_syncs: u64 = sched.finished().iter().map(|f| f.stats.solo_syncs).sum();
+        session.results().iter().map(|r| r.job.stats.solo_launches).sum();
+    let solo_syncs: u64 =
+        session.results().iter().map(|r| r.job.stats.solo_syncs).sum();
     println!(
         "fused: {} shared epochs, {} syncs, {} launches | solo-equivalent: \
          {} syncs, {} launches | V_inf saved ~{:.0} us",
-        s.steps,
-        s.syncs,
-        s.launches,
+        st.steps,
+        st.syncs,
+        st.launches,
         solo_syncs,
         solo_launches,
-        solo_launches.saturating_sub(s.launches) as f64 * model.launch_us,
+        solo_launches.saturating_sub(st.launches) as f64 * model.launch_us,
     );
+    if let Some(s) = session.shard_stats() {
+        for (d, ds) in session.device_stats().iter().enumerate() {
+            println!(
+                "  d{d}: {} steps, {} launches, {} lanes, {} jobs ({} placed)",
+                ds.steps, ds.launches, ds.work, ds.jobs_completed, s.placed[d],
+            );
+        }
+        println!(
+            "group: {} lock-step epochs / {} barrier syncs over {} devices \
+             | {} migrations (* = migrated) | peak live-lane imbalance \
+             {:.2}x",
+            s.group_steps,
+            s.group_syncs,
+            session.devices(),
+            s.migrations,
+            s.peak_imbalance,
+        );
+    }
 }
 
 /// `trees batch`: run a job mix fused and compare against the sum of
@@ -560,9 +487,7 @@ fn batch(args: &Args) -> Result<()> {
             specs.push(s2);
         }
     }
-    let mut cfg = sched_config(args)?;
-    cfg.trace = true; // modeled-APU replay needs the per-step trace
-    let builds = instantiate_all(&specs)?;
+    let cfg = SchedConfig { trace: true, ..sched_config(args)? };
     let fuser = Fuser::new(cfg.buckets.clone());
     let model = GpuModel::default();
 
@@ -574,7 +499,10 @@ fn batch(args: &Args) -> Result<()> {
     let mut solo_syncs = 0u64;
     let mut solo_us = 0.0f64;
     let mut solo_roots = Vec::new();
-    for b in &builds {
+    for s in &specs {
+        // each solo build exists only long enough to profile it — the
+        // fused run below re-instantiates at submit time
+        let b = s.instantiate()?;
         let p = solo_profile(b.prog.as_ref(), &b.init, &fuser);
         let us = modeled_solo_us(&model, &p.trace);
         t.row(vec![
@@ -591,32 +519,31 @@ fn batch(args: &Args) -> Result<()> {
     }
     t.print();
 
-    let mut sched = FusedScheduler::new(cfg);
-    for b in &builds {
-        sched.admit_build(b);
+    let mut session = Session::builder().sched(cfg).build()?;
+    for s in &specs {
+        session.submit(s)?;
     }
-    sched.run_to_completion()?;
-    let mut mismatches = 0;
-    for fj in sched.finished() {
-        if fj.engine.root_result() != solo_roots[fj.id.0] {
-            mismatches += 1;
-        }
-    }
-    let s = sched.stats();
-    let fused_us = modeled_fused_us(&model, &s.trace);
+    session.drain()?;
+    let mismatches = session
+        .results()
+        .iter()
+        .filter(|r| r.job.engine.root_result() != solo_roots[r.job.id.0])
+        .count();
+    let st = session.stats();
+    let fused_us = modeled_fused_us(&model, &session.device_stats()[0].trace);
     println!(
         "\nfused run: {} jobs | {} shared epochs (solo {}) | {} launches \
          (solo {}) | modeled APU {:.1} us (solo {:.1}) | speedup x{:.2} | \
          launches saved {} | results {}",
-        sched.finished().len(),
-        s.steps,
+        session.results().len(),
+        st.steps,
         solo_syncs,
-        s.launches,
+        st.launches,
         solo_launches,
         fused_us,
         solo_us,
         solo_us / fused_us.max(1e-9),
-        solo_launches.saturating_sub(s.launches),
+        solo_launches.saturating_sub(st.launches),
         if mismatches == 0 {
             "identical to solo".to_string()
         } else {
@@ -629,12 +556,12 @@ fn batch(args: &Args) -> Result<()> {
         // the fused run above IS the 1-device group (no barrier, same
         // scheduler): reuse its counters instead of re-simulating
         let one = ShardRun {
-            group_steps: s.steps,
-            launches: s.launches,
+            group_steps: st.steps,
+            launches: st.launches,
             migrations: 0,
             peak_imbalance: 1.0,
             modeled_us: fused_us,
-            mismatches: mismatches as usize,
+            mismatches,
         };
         batch_sharded(args, &specs, devices, &solo_roots, one)?;
     }
@@ -652,26 +579,26 @@ struct ShardRun {
 }
 
 fn run_sharded(
+    args: &Args,
     specs: &[JobSpec],
-    cfg: ShardConfig,
+    devices: usize,
     solo_roots: &[i32],
 ) -> Result<ShardRun> {
-    let devices = cfg.devices.max(1);
-    let builds = instantiate_all(specs)?;
-    let mut group = ShardGroup::new(cfg);
-    for b in &builds {
-        group.admit_build(b);
+    let mut session = session_builder(args, true)?.devices(devices).build()?;
+    for s in specs {
+        session.submit(s)?;
     }
-    group.run_to_completion()?;
-    let mismatches = group
-        .finished()
-        .filter(|(_, fj)| fj.engine.root_result() != solo_roots[fj.id.0])
+    session.drain()?;
+    let mismatches = session
+        .results()
+        .iter()
+        .filter(|r| r.job.engine.root_result() != solo_roots[r.job.id.0])
         .count();
     let model = DeviceGroup::new(GpuModel::default(), devices);
-    let s = group.stats();
+    let s = session.shard_stats().expect("devices > 1");
     Ok(ShardRun {
         group_steps: s.group_steps,
-        launches: group.total_launches(),
+        launches: session.stats().launches,
         migrations: s.migrations,
         peak_imbalance: s.peak_imbalance,
         modeled_us: modeled_group_us(&model, &s.trace),
@@ -691,7 +618,7 @@ fn batch_sharded(
     solo_roots: &[i32],
     one: ShardRun,
 ) -> Result<()> {
-    let many = run_sharded(specs, shard_config(args, devices, true)?, solo_roots)?;
+    let many = run_sharded(args, specs, devices, solo_roots)?;
     println!(
         "\nsharded run: {} devices | {} group epochs (1-device {}) | {} \
          launches (1-device {}) | {} migrations | peak imbalance {:.2}x | \

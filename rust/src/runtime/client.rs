@@ -6,6 +6,7 @@
 
 use std::cell::RefCell;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -30,11 +31,14 @@ pub struct Device {
 }
 
 impl Device {
-    /// Create the PJRT CPU client.
-    pub fn cpu() -> Result<Device> {
+    /// Create the PJRT CPU client. Returned shared (`Arc`): every
+    /// [`crate::coordinator::Coordinator`] compiled on a device co-owns
+    /// it, so coordinators — and the scheduler tenants holding them —
+    /// carry no borrow lifetime.
+    pub fn cpu() -> Result<Arc<Device>> {
         let t0 = Instant::now();
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Device { client, init_ns: t0.elapsed().as_nanos() as u64 })
+        Ok(Arc::new(Device { client, init_ns: t0.elapsed().as_nanos() as u64 }))
     }
 
     pub fn platform(&self) -> String {

@@ -8,13 +8,15 @@
 //! `tsp:8`, `fib:18:w4` (fairness weight 4 — a latency tier under the
 //! `Weighted` policy).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::apps::{self, Fib, GraphSp, MSort, NQueens, Tsp};
 use crate::apps::graph_sp::Layout;
 use crate::apps::msort::G;
 use crate::graph::{bfs_levels, dijkstra, gen, Csr, INF};
-use crate::tvm::{Interp, TvmProgram};
+use crate::tvm::{Interp, Machine, TvmProgram};
 use crate::util::rng::Rng;
 
 /// Tenant identity, stable across the job's life (admission order).
@@ -84,12 +86,16 @@ impl JobSpec {
         })
     }
 
-    /// Parse a whole comma-separated `--jobs` value.
+    /// Parse a whole comma-separated `--jobs` value. A blank value is an
+    /// empty list, but an empty *token* — a double or trailing comma —
+    /// is a structured error, not silently dropped: in a served job feed
+    /// a swallowed token means a job the operator thinks was submitted
+    /// never runs.
     pub fn parse_list(s: &str) -> Result<Vec<JobSpec>> {
-        s.split(',')
-            .filter(|t| !t.trim().is_empty())
-            .map(|t| JobSpec::parse(t.trim()))
-            .collect()
+        if s.trim().is_empty() {
+            return Ok(Vec::new());
+        }
+        split_tokens(s)?.into_iter().map(JobSpec::parse).collect()
     }
 
     /// Effective problem size after per-app defaults — the single
@@ -146,7 +152,7 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
-                    prog: Box::new(Fib),
+                    prog: Arc::new(Fib),
                     kind: AppKind::Fib { n },
                     init: JobInit {
                         capacity: apps::fib::capacity_for(n),
@@ -163,7 +169,7 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
-                    prog: Box::new(NQueens),
+                    prog: Arc::new(NQueens),
                     kind: AppKind::NQueens { n },
                     init: JobInit {
                         capacity: if n <= 8 { 1 << 16 } else { 1 << 21 },
@@ -183,7 +189,7 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
-                    prog: Box::new(Tsp),
+                    prog: Arc::new(Tsp),
                     kind: AppKind::Tsp { dist, n },
                     init: JobInit {
                         capacity: 1 << 16,
@@ -205,7 +211,7 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
-                    prog: Box::new(MSort { nmax, use_map: false }),
+                    prog: Arc::new(MSort { nmax, use_map: false }),
                     kind: AppKind::MergeSort { nmax, n2, n },
                     init: JobInit {
                         capacity: (16 * nmax).max(64),
@@ -237,7 +243,7 @@ impl JobSpec {
                         const_i: lay.pack(&g, 0),
                         ..Default::default()
                     },
-                    prog: Box::new(GraphSp { lay }),
+                    prog: Arc::new(GraphSp { lay }),
                 }
             }
             other => bail!(
@@ -246,6 +252,23 @@ impl JobSpec {
             ),
         })
     }
+}
+
+/// Split one comma-separated job-token list, rejecting empty tokens
+/// (double/trailing commas) with a structured error — the one splitting
+/// rule shared by [`JobSpec::parse_list`] and the serve feed parser
+/// (`session::Arrival::parse_feed`), so the two CLI grammars cannot
+/// drift.
+pub(crate) fn split_tokens(s: &str) -> Result<Vec<&str>> {
+    s.split(',')
+        .map(|t| {
+            let t = t.trim();
+            if t.is_empty() {
+                bail!("empty job token in {s:?} (double or trailing comma?)");
+            }
+            Ok(t)
+        })
+        .collect()
 }
 
 /// Initial machine image of a tenant (its private heap segment and
@@ -262,7 +285,9 @@ pub struct JobInit {
 
 impl JobInit {
     /// Spin up a fresh interpreter machine over `prog` from this image.
-    pub fn machine<'p>(&self, prog: &'p dyn TvmProgram) -> Interp<'p, dyn TvmProgram> {
+    /// `prog` can be borrowed (`&App`, solo drivers) or owned
+    /// (`Arc<dyn TvmProgram>`, scheduler tenants).
+    pub fn machine<P: TvmProgram>(&self, prog: P) -> Interp<P> {
         Interp::new(prog, self.capacity, self.init_args.clone()).with_heaps(
             self.heap_i.clone(),
             self.heap_f.clone(),
@@ -272,14 +297,25 @@ impl JobInit {
     }
 }
 
-/// A fully-built tenant, ready to admit.
+/// A fully-built tenant, ready to admit. The program is shared
+/// (`Arc`), so admitting a build *moves nothing and borrows nothing*:
+/// the scheduler's tenant co-owns the program and the build can be
+/// dropped (or admitted again for another run) immediately.
 pub struct JobBuild {
     pub label: String,
-    pub prog: Box<dyn TvmProgram>,
+    pub prog: Arc<dyn TvmProgram>,
     pub init: JobInit,
     pub kind: AppKind,
     /// Fairness weight under the `Weighted` policy (1 = batch tier).
     pub weight: u64,
+}
+
+impl JobBuild {
+    /// A fresh owned machine over this build's program — what a solo
+    /// run or a scheduler tenant executes.
+    pub fn machine(&self) -> Machine {
+        self.init.machine(self.prog.clone())
+    }
 }
 
 /// What the app computed, for post-run verification and display.
@@ -304,7 +340,7 @@ impl AppKind {
     }
 
     /// Check a halted machine against the app's own correctness oracle.
-    pub fn verify(&self, m: &Interp<'_, dyn TvmProgram>) -> Result<(), String> {
+    pub fn verify<P: TvmProgram>(&self, m: &Interp<P>) -> Result<(), String> {
         match self {
             AppKind::Fib { .. } | AppKind::NQueens { .. } | AppKind::Tsp { .. } => {
                 let want = self.expected_root().unwrap();
@@ -336,7 +372,7 @@ impl AppKind {
     }
 
     /// One-line human summary of the result.
-    pub fn describe(&self, m: &Interp<'_, dyn TvmProgram>) -> String {
+    pub fn describe<P: TvmProgram>(&self, m: &Interp<P>) -> String {
         match self {
             AppKind::Fib { n } => format!("fib({n}) = {}", m.root_result()),
             AppKind::NQueens { n } => {
@@ -387,10 +423,43 @@ mod tests {
     }
 
     #[test]
+    fn parse_list_rejects_empty_tokens() {
+        // regression: "fib:18,,bfs" used to silently drop the empty
+        // token — in a served feed that is a vanished job
+        for bad in ["fib:18,,bfs", "fib:18,", ",fib:18", "fib:18, ,bfs"] {
+            let err = JobSpec::parse_list(bad).unwrap_err();
+            assert!(err.to_string().contains("empty job token"), "{bad}: {err}");
+        }
+        assert!(JobSpec::parse_list("   ").unwrap().is_empty());
+        assert_eq!(JobSpec::parse_list("fib:18, bfs:grid:4").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn label_round_trips_with_and_without_weight() {
+        for tok in [
+            "fib:18",
+            "fib:18:w4",
+            "sssp:rmat:6",
+            "mergesort:512",
+            "nqueens:7:w2",
+            "bfs:grid:5",
+            "tsp",
+        ] {
+            let s = JobSpec::parse(tok).unwrap();
+            let rt = JobSpec::parse(&s.label()).unwrap();
+            assert_eq!(rt.app, s.app, "{tok}");
+            assert_eq!(rt.n, s.n, "{tok}");
+            assert_eq!(rt.graph, s.graph, "{tok}");
+            assert_eq!(rt.weight, s.weight, "{tok}");
+            assert_eq!(rt.label(), s.label(), "{tok}: label is a fixpoint");
+        }
+    }
+
+    #[test]
     fn builds_run_and_verify_solo() {
         for tok in ["fib:10", "nqueens:5", "tsp:6", "mergesort:64", "bfs:grid:4"] {
             let b = JobSpec::parse(tok).unwrap().instantiate().unwrap();
-            let mut m = b.init.machine(b.prog.as_ref());
+            let mut m = b.machine();
             m.run();
             b.kind.verify(&m).unwrap_or_else(|e| panic!("{tok}: {e}"));
             assert!(!b.kind.describe(&m).is_empty());

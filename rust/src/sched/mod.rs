@@ -49,6 +49,7 @@ mod stats;
 
 pub use fuse::{Front, FusedFrame, Fuser, Slice, FALLBACK_BUCKET};
 pub use job::{AppKind, JobBuild, JobId, JobInit, JobSpec};
+pub(crate) use job::split_tokens;
 pub use policy::{Fairness, RoundRobin, Weighted};
 pub use stats::{
     modeled_fused_us, modeled_solo_us, solo_profile, FusedStats, JobStats,
@@ -58,11 +59,12 @@ pub use stats::{
 use policy::Policy;
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, GatherFn, RunCtx, TvState, Workload};
-use crate::tvm::{Interp, TvmProgram};
+use crate::tvm::{Machine, TvmProgram};
 
 /// Scheduler tunables.
 #[derive(Debug, Clone)]
@@ -74,6 +76,14 @@ pub struct SchedConfig {
     /// Concurrent-tenant limit; later admissions queue until a slot
     /// frees (backpressure).
     pub max_active: usize,
+    /// Live-lane demand cap for admission (0 = uncapped). Where
+    /// `max_active` counts tenants, this gates on what they actually
+    /// ship: a queued tenant is only activated while the active set's
+    /// live lanes (plus its own) fit the cap, so one wide tenant delays
+    /// admission the same way several narrow ones do. An empty active
+    /// set always admits (progress guarantee, like the `max_active >= 1`
+    /// clamp).
+    pub max_live_lanes: usize,
     /// Safety valve on runaway fused runs.
     pub max_steps: u64,
     /// Window bucket sizes for launch tiling (artifact granularity).
@@ -98,6 +108,7 @@ impl Default for SchedConfig {
             capacity: 4096,
             slice_cap: 1024,
             max_active: 16,
+            max_live_lanes: 0,
             max_steps: 10_000_000,
             buckets: vec![256, 1024, 4096],
             fused_kernel: true,
@@ -107,20 +118,26 @@ impl Default for SchedConfig {
     }
 }
 
-/// A tenant's execution engine (see module docs).
-pub enum Engine<'p> {
+/// A tenant's execution engine (see module docs). Fully owned: the
+/// interpreter machine co-owns its program (`Arc<dyn TvmProgram>`) and
+/// the artifact engine co-owns its coordinator (`Arc<Coordinator>`),
+/// so an engine — and the tenant around it — has no borrow lifetime
+/// and can outlive whatever built it (the seam online admission
+/// needs: builds happen at `submit()` time, not before the scheduler
+/// exists).
+pub enum Engine {
     /// Pure-Rust vectorized fallback over the reference interpreter.
-    Interp(Interp<'p, dyn TvmProgram>),
+    Interp(Machine),
     /// AOT path: epochs run through the tenant's coordinator buckets.
     Artifact {
-        co: &'p Coordinator<'p>,
+        co: Arc<Coordinator>,
         st: TvState,
         gather: Option<GatherFn>,
         rc: RunCtx,
     },
 }
 
-impl<'p> Engine<'p> {
+impl Engine {
     /// The tenant's next epoch `(cen, lo, hi)`, if any.
     pub fn front(&self) -> Option<(i32, usize, usize)> {
         match self {
@@ -213,8 +230,8 @@ impl<'p> Engine<'p> {
     }
 
     /// The interpreter machine, for engines that have one (verifiers
-    /// take `&Interp`).
-    pub fn machine(&self) -> Option<&Interp<'p, dyn TvmProgram>> {
+    /// take `&Machine`).
+    pub fn machine(&self) -> Option<&Machine> {
         match self {
             Engine::Interp(m) => Some(m),
             Engine::Artifact { .. } => None,
@@ -227,25 +244,27 @@ impl<'p> Engine<'p> {
 /// re-admission — possibly into a *different* scheduler, as the
 /// `shard` device group does when migrating tenants between devices —
 /// moves the job wholesale without touching its state.
-pub struct Tenant<'p> {
+pub struct Tenant {
     pub id: JobId,
     pub label: String,
-    pub engine: Engine<'p>,
+    pub engine: Engine,
     pub stats: JobStats,
     pub kind: Option<AppKind>,
     /// Fairness weight under [`Fairness::Weighted`] (1 = batch tier).
     pub weight: u64,
 }
 
-impl<'p> Tenant<'p> {
+impl Tenant {
     /// Build an interpreter-engine tenant with an externally assigned
     /// id — the seam the `shard` device group uses to keep one global
-    /// id space across many per-device schedulers.
-    pub fn from_build(id: JobId, b: &'p JobBuild) -> Tenant<'p> {
+    /// id space across many per-device schedulers. The build is only
+    /// read (its program `Arc` is shared into the machine): the caller
+    /// may drop it right after, or admit it again for another run.
+    pub fn from_build(id: JobId, b: &JobBuild) -> Tenant {
         Tenant {
             id,
             label: b.label.clone(),
-            engine: Engine::Interp(b.init.machine(b.prog.as_ref())),
+            engine: Engine::Interp(b.machine()),
             stats: JobStats::default(),
             kind: Some(b.kind.clone()),
             weight: b.weight.max(1),
@@ -254,20 +273,21 @@ impl<'p> Tenant<'p> {
 
     /// Build an artifact-engine tenant with an externally assigned id:
     /// the tenant's `TvState` is initialized through the coordinator's
-    /// begin-run seam and travels with the tenant on migration.
+    /// begin-run seam, and the tenant co-owns the coordinator — state
+    /// and executables travel with the tenant on migration.
     pub fn from_artifact(
         id: JobId,
         label: &str,
-        co: &'p Coordinator<'p>,
+        co: &Arc<Coordinator>,
         w: &Workload,
         weight: u64,
-    ) -> Tenant<'p> {
+    ) -> Tenant {
         let st = co.init_state(w);
         let rc = co.begin_run(&st);
         Tenant {
             id,
             label: label.to_string(),
-            engine: Engine::Artifact { co, st, gather: w.gather, rc },
+            engine: Engine::Artifact { co: co.clone(), st, gather: w.gather, rc },
             stats: JobStats::default(),
             kind: None,
             weight: weight.max(1),
@@ -285,29 +305,32 @@ impl<'p> Tenant<'p> {
 }
 
 /// A completed job: stats plus the final machine for result extraction.
-pub struct FinishedJob<'p> {
+/// Owned (no borrow lifetime), so completions can be handed to callers
+/// — [`crate::session::Session`] drains them via
+/// [`FusedScheduler::take_finished`].
+pub struct FinishedJob {
     pub id: JobId,
     pub label: String,
     pub stats: JobStats,
     pub kind: Option<AppKind>,
-    pub engine: Engine<'p>,
+    pub engine: Engine,
 }
 
 /// Co-schedules many concurrent jobs into shared epochs.
-pub struct FusedScheduler<'p> {
+pub struct FusedScheduler {
     cfg: SchedConfig,
     fuser: Fuser,
     policy: Policy,
-    active: Vec<Tenant<'p>>,
-    pending: VecDeque<Tenant<'p>>,
-    finished: Vec<FinishedJob<'p>>,
+    active: Vec<Tenant>,
+    pending: VecDeque<Tenant>,
+    finished: Vec<FinishedJob>,
     stats: FusedStats,
     next_id: usize,
-    on_complete: Option<Box<dyn FnMut(&FinishedJob<'p>) + 'p>>,
+    on_complete: Option<Box<dyn FnMut(&FinishedJob)>>,
 }
 
-impl<'p> FusedScheduler<'p> {
-    pub fn new(cfg: SchedConfig) -> FusedScheduler<'p> {
+impl FusedScheduler {
+    pub fn new(cfg: SchedConfig) -> FusedScheduler {
         // max_active 0 would strand every admission in the pending
         // queue (step() would never run anything while has_work() stays
         // true) — clamp like the policies clamp capacity/slice_cap
@@ -328,25 +351,27 @@ impl<'p> FusedScheduler<'p> {
     }
 
     /// Completion callback, fired as each tenant halts.
-    pub fn on_complete(&mut self, f: impl FnMut(&FinishedJob<'p>) + 'p) {
+    pub fn on_complete(&mut self, f: impl FnMut(&FinishedJob) + 'static) {
         self.on_complete = Some(Box::new(f));
     }
 
-    /// Admit an interpreter-engine tenant.
+    /// Admit an interpreter-engine tenant over an owned program.
     pub fn admit(
         &mut self,
         label: &str,
-        prog: &'p dyn TvmProgram,
+        prog: Arc<dyn TvmProgram>,
         init: &JobInit,
     ) -> JobId {
         self.admit_engine(label, Engine::Interp(init.machine(prog)), None, 1)
     }
 
     /// Admit a [`JobBuild`] (carries its verifier and weight along).
-    pub fn admit_build(&mut self, b: &'p JobBuild) -> JobId {
+    /// Only reads the build — its program `Arc` is shared into the
+    /// tenant's machine, so the build need not outlive the scheduler.
+    pub fn admit_build(&mut self, b: &JobBuild) -> JobId {
         self.admit_engine(
             &b.label,
-            Engine::Interp(b.init.machine(b.prog.as_ref())),
+            Engine::Interp(b.machine()),
             Some(b.kind.clone()),
             b.weight,
         )
@@ -358,7 +383,7 @@ impl<'p> FusedScheduler<'p> {
     pub fn admit_artifact(
         &mut self,
         label: &str,
-        co: &'p Coordinator<'p>,
+        co: &Arc<Coordinator>,
         w: &Workload,
         weight: u64,
     ) -> JobId {
@@ -366,7 +391,7 @@ impl<'p> FusedScheduler<'p> {
         let rc = co.begin_run(&st);
         self.admit_engine(
             label,
-            Engine::Artifact { co, st, gather: w.gather, rc },
+            Engine::Artifact { co: co.clone(), st, gather: w.gather, rc },
             None,
             weight,
         )
@@ -375,7 +400,7 @@ impl<'p> FusedScheduler<'p> {
     fn admit_engine(
         &mut self,
         label: &str,
-        engine: Engine<'p>,
+        engine: Engine,
         kind: Option<AppKind>,
         weight: u64,
     ) -> JobId {
@@ -392,12 +417,38 @@ impl<'p> FusedScheduler<'p> {
         id
     }
 
+    /// Whether a tenant shipping `load` live lanes would be activated
+    /// right now (vs. parked in the pending queue): a tenant-count slot
+    /// must be free (`max_active`) *and*, under a `max_live_lanes` cap,
+    /// the active set's live-lane demand plus `load` must fit. An empty
+    /// active set always admits, so a tenant wider than the cap still
+    /// runs (alone) rather than stranding.
+    pub fn can_admit(&self, load: u64) -> bool {
+        self.admit_headroom().is_some_and(|h| load <= h)
+    }
+
+    /// Admission headroom in live lanes: `None` when no tenant-count
+    /// slot is free; otherwise the largest load [`can_admit`]
+    /// (Self::can_admit) would accept (`u64::MAX` when uncapped or the
+    /// active set is empty). One call scans the active fronts once —
+    /// callers screening many candidates (the shard rebalancer) compare
+    /// against this instead of calling `can_admit` per candidate.
+    pub fn admit_headroom(&self) -> Option<u64> {
+        if self.active.len() >= self.cfg.max_active {
+            return None;
+        }
+        if self.active.is_empty() || self.cfg.max_live_lanes == 0 {
+            return Some(u64::MAX);
+        }
+        Some((self.cfg.max_live_lanes as u64).saturating_sub(self.live_lanes()))
+    }
+
     /// Admit a pre-built tenant carrying its own (externally assigned)
     /// id and accumulated stats — the re-admission half of migration.
     /// Callers that mix this with the `admit_*` constructors own the
     /// id-collision problem; the shard group assigns all ids itself.
-    pub fn admit_tenant(&mut self, t: Tenant<'p>) {
-        if self.active.len() < self.cfg.max_active {
+    pub fn admit_tenant(&mut self, t: Tenant) {
+        if self.can_admit(t.live_load()) {
             self.active.push(t);
         } else {
             self.pending.push_back(t);
@@ -408,7 +459,7 @@ impl<'p> FusedScheduler<'p> {
     /// its machine state intact (the eviction half of migration). The
     /// fairness cursor keeps pointing at the same successor. `None` if
     /// the id is not resident here.
-    pub fn evict(&mut self, id: JobId) -> Option<Tenant<'p>> {
+    pub fn evict(&mut self, id: JobId) -> Option<Tenant> {
         if let Some(pos) = self.active.iter().position(|t| t.id == id) {
             let t = self.active.remove(pos);
             self.policy.retire(pos);
@@ -420,12 +471,16 @@ impl<'p> FusedScheduler<'p> {
         None
     }
 
+    /// Activate queued tenants in FIFO order while both admission gates
+    /// (tenant count, live-lane demand) allow — never reordering past a
+    /// blocked head, which would starve wide tenants behind narrow ones.
     fn admit_from_queue(&mut self) {
-        while self.active.len() < self.cfg.max_active {
-            match self.pending.pop_front() {
-                Some(t) => self.active.push(t),
-                None => break,
+        while let Some(t) = self.pending.front() {
+            if !self.can_admit(t.live_load()) {
+                break;
             }
+            let t = self.pending.pop_front().expect("front exists");
+            self.active.push(t);
         }
     }
 
@@ -555,8 +610,15 @@ impl<'p> FusedScheduler<'p> {
         &self.stats
     }
 
-    pub fn finished(&self) -> &[FinishedJob<'p>] {
+    pub fn finished(&self) -> &[FinishedJob] {
         &self.finished
+    }
+
+    /// Move out every job completed since the last take — how a
+    /// [`crate::session::Session`] drains completions into its own
+    /// result store without borrowing the scheduler.
+    pub fn take_finished(&mut self) -> Vec<FinishedJob> {
+        std::mem::take(&mut self.finished)
     }
 
     pub fn active_count(&self) -> usize {
@@ -572,13 +634,14 @@ impl<'p> FusedScheduler<'p> {
         !self.active.is_empty() || !self.pending.is_empty()
     }
 
-    /// Whether an [`admit_tenant`](Self::admit_tenant) right now would
-    /// land in the active set (vs. the pending queue). The shard
-    /// rebalancer refuses to migrate onto a full device: a tenant
-    /// parked in pending runs nothing and its load disappears from the
-    /// group's live-lane accounting.
+    /// Whether an [`admit_tenant`](Self::admit_tenant) of a (narrow)
+    /// tenant right now would land in the active set (vs. the pending
+    /// queue). The shard rebalancer refuses to migrate onto a full
+    /// device — a tenant parked in pending runs nothing and its load
+    /// disappears from the group's live-lane accounting; for a tenant
+    /// of known width use [`can_admit`](Self::can_admit).
     pub fn has_active_slot(&self) -> bool {
-        self.active.len() < self.cfg.max_active
+        self.can_admit(0)
     }
 
     /// Sum of live lanes across the active tenants' current fronts —
@@ -631,17 +694,18 @@ mod tests {
 
     #[test]
     fn completion_callback_fires_per_job() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
         let bs = builds(&["fib:8", "nqueens:5"]);
-        let done = std::cell::RefCell::new(Vec::new());
-        {
-            let mut sched = FusedScheduler::new(SchedConfig::default());
-            sched.on_complete(|fj| done.borrow_mut().push(fj.label.clone()));
-            for b in &bs {
-                sched.admit_build(b);
-            }
-            sched.run_to_completion().unwrap();
+        let done: Rc<RefCell<Vec<String>>> = Rc::default();
+        let mut sched = FusedScheduler::new(SchedConfig::default());
+        let sink = done.clone();
+        sched.on_complete(move |fj| sink.borrow_mut().push(fj.label.clone()));
+        for b in &bs {
+            sched.admit_build(b);
         }
-        let done = done.into_inner();
+        sched.run_to_completion().unwrap();
+        let done = done.borrow();
         assert_eq!(done.len(), 2);
         assert!(done.contains(&"fib:8".to_string()));
     }
@@ -720,6 +784,46 @@ mod tests {
         sched.admit_build(&bs[0]);
         sched.run_to_completion().unwrap();
         assert_eq!(sched.finished().len(), 1);
+    }
+
+    #[test]
+    fn live_lane_backpressure_gates_on_demand_not_count() {
+        // one wide tenant must delay admission the same way several
+        // narrow ones do: with max_live_lanes tight, a second job stays
+        // pending while the first's front is wide, even though the
+        // tenant-count gate (max_active) has room for both.
+        let bs = builds(&["fib:12", "fib:8"]);
+        let cfg = SchedConfig {
+            max_active: 16,
+            max_live_lanes: 4,
+            ..Default::default()
+        };
+        let mut sched = FusedScheduler::new(cfg);
+        sched.admit_build(&bs[0]);
+        // grow fib:12's live front past the cap (fronts double early on)
+        while sched.live_lanes() <= 4 {
+            sched.step().unwrap();
+        }
+        sched.admit_build(&bs[1]);
+        assert_eq!(
+            (sched.active_count(), sched.pending_count()),
+            (1, 1),
+            "wide resident tenant must hold the narrow arrival in pending"
+        );
+        assert!(!sched.can_admit(1), "lane gate reports no headroom");
+        // both still finish: the gate delays, never strands
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 2);
+
+        // a tenant wider than the cap still runs once the set is empty
+        let wide = builds(&["fib:12"]);
+        let mut solo = FusedScheduler::new(SchedConfig {
+            max_live_lanes: 1,
+            ..Default::default()
+        });
+        solo.admit_build(&wide[0]);
+        solo.run_to_completion().unwrap();
+        assert_eq!(solo.finished().len(), 1);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! of truth shared by `bench_fusion` and EXPERIMENTS.md).
 
 use crate::simt::GpuModel;
-use crate::tvm::{Interp, TvmProgram};
+use crate::tvm::TvmProgram;
 
 use super::fuse::Fuser;
 use super::job::JobInit;
@@ -104,9 +104,15 @@ pub struct SoloProfile {
 }
 
 /// Run `prog` solo from `init`, recording the per-epoch schedule —
-/// the baseline `bench_fusion` compares the fused run against.
-pub fn solo_profile(prog: &dyn TvmProgram, init: &JobInit, fuser: &Fuser) -> SoloProfile {
-    let mut m: Interp<'_, dyn TvmProgram> = init.machine(prog);
+/// the baseline `bench_fusion` compares the fused run against. `prog`
+/// is any program handle (`&dyn TvmProgram` borrows a build's program
+/// without cloning the `Arc`).
+pub fn solo_profile<P: TvmProgram>(
+    prog: P,
+    init: &JobInit,
+    fuser: &Fuser,
+) -> SoloProfile {
+    let mut m = init.machine(prog);
     let mut prof = SoloProfile::default();
     while let Some((cen, lo, hi)) = m.front() {
         let live = m.live_in(cen, lo, hi);

@@ -1,0 +1,666 @@
+//! The `Session` facade: one entry point for online multi-job serving.
+//!
+//! The paper's epoch boundary is a natural *admission* point — a new
+//! tenant can join the fused task vector at any step — and the
+//! ownership model makes it practical: tenants own their machines
+//! (`Arc<dyn TvmProgram>` / `Arc<Coordinator>`), so a job can be built
+//! lazily at [`Session::submit`] time, long after the scheduler
+//! exists. A `Session` hides the solo-coordinator / fused / sharded
+//! split behind one type:
+//!
+//! * [`Session::builder`] configures capacity, fairness, backpressure
+//!   ([`SchedConfig::max_live_lanes`]), device count, placement, and
+//!   rebalancing;
+//! * [`Session::submit`] instantiates a [`JobSpec`] into a tenant
+//!   *now* — interpreter engine by default, AOT artifact engine when
+//!   the builder was given one — and admits it mid-run;
+//! * [`Session::step`] runs one shared epoch (one lock-step group
+//!   epoch with `devices > 1`); [`Session::poll`] yields jobs
+//!   completed since the last poll; [`Session::drain`] runs every
+//!   admitted job to completion; [`Session::results`] is the full
+//!   completion log.
+//!
+//! ## Which entry point do I use?
+//!
+//! | entry point | jobs | devices | engine | admission |
+//! |---|---|---|---|---|
+//! | [`crate::coordinator::Coordinator`] | one | one | AOT artifacts | n/a (one run) |
+//! | [`crate::sched::FusedScheduler`] | many, fused epochs | one | interp or AOT | up-front or `admit_tenant` |
+//! | [`crate::shard::ShardGroup`] | many | group, lock-step | interp or AOT | up-front or migration |
+//! | `Session` (here) | many | 1..N (picks the backend) | picks per submit | **online** — `submit()` any time |
+//!
+//! `trees serve` is a thin loop over this API: an [`Arrival`] feed
+//! (`app[:…]@epoch` tokens from `--jobs`, a `--spec-file`, or stdin)
+//! is replayed against the session clock by [`Session::run_feed`],
+//! submitting jobs between epochs exactly when their arrival step
+//! comes up.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps;
+use crate::coordinator::{Coordinator, CoordinatorConfig, Workload};
+use crate::runtime::{AppManifest, Device, Manifest};
+use crate::sched::{
+    Fairness, FinishedJob, FusedScheduler, FusedStats, Fuser, JobBuild, JobId,
+    JobSpec, SchedConfig,
+};
+use crate::shard::{
+    DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup, ShardStats,
+};
+use crate::util::rng::Rng;
+
+/// One parsed feed token: a job spec plus the session step at which it
+/// arrives (`fib:18:w2@5` → submit once 5 shared epochs have run;
+/// no `@` means epoch 0).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub spec: JobSpec,
+    /// Session epoch clock value at (or after) which the job is
+    /// submitted.
+    pub at_step: u64,
+}
+
+impl Arrival {
+    /// Parse one `spec[@epoch]` token.
+    pub fn parse(tok: &str) -> Result<Arrival> {
+        let (spec_tok, at_step) = match tok.rsplit_once('@') {
+            Some((s, e)) => {
+                let at = e.trim().parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad arrival epoch {e:?} in {tok:?} (want spec@N)"
+                    )
+                })?;
+                (s, at)
+            }
+            None => (tok, 0),
+        };
+        Ok(Arrival { spec: JobSpec::parse(spec_tok.trim())?, at_step })
+    }
+
+    /// Parse a whole feed: comma- and newline-separated `spec[@epoch]`
+    /// tokens, `#` starting a comment. Like [`JobSpec::parse_list`], an
+    /// empty token between commas is a structured error (a swallowed
+    /// token is a job the operator thinks was submitted). The result is
+    /// stably sorted by arrival step, ready for [`Session::run_feed`].
+    pub fn parse_feed(s: &str) -> Result<Vec<Arrival>> {
+        let mut out = Vec::new();
+        for line in s.lines() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            for tok in crate::sched::split_tokens(line)? {
+                out.push(Arrival::parse(tok)?);
+            }
+        }
+        out.sort_by_key(|a| a.at_step);
+        Ok(out)
+    }
+}
+
+/// AOT execution configuration: artifacts to serve from, and the
+/// device to compile them on.
+struct ArtifactEngine {
+    dev: Arc<Device>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+/// Builder for a [`Session`] (see module docs).
+pub struct SessionBuilder {
+    sched: SchedConfig,
+    devices: usize,
+    placement: PlacementKind,
+    rebalance: RebalanceCfg,
+    artifacts: Option<ArtifactEngine>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            sched: SchedConfig::default(),
+            devices: 1,
+            placement: PlacementKind::RoundRobin,
+            rebalance: RebalanceCfg::default(),
+            artifacts: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Shared task-vector budget per fused epoch (lanes).
+    pub fn capacity(mut self, lanes: usize) -> Self {
+        self.sched.capacity = lanes;
+        self
+    }
+
+    /// Fairness unit: lanes charged to one tenant per step.
+    pub fn slice_cap(mut self, lanes: usize) -> Self {
+        self.sched.slice_cap = lanes;
+        self
+    }
+
+    /// Concurrent-tenant limit per device (admission backpressure).
+    pub fn max_active(mut self, tenants: usize) -> Self {
+        self.sched.max_active = tenants;
+        self
+    }
+
+    /// Live-lane demand cap per device (0 = uncapped): admission gates
+    /// on what tenants actually ship, not just how many there are.
+    pub fn max_live_lanes(mut self, lanes: usize) -> Self {
+        self.sched.max_live_lanes = lanes;
+        self
+    }
+
+    /// Fairness policy (`RoundRobin` default, `Weighted` for tiers).
+    pub fn fairness(mut self, f: Fairness) -> Self {
+        self.sched.fairness = f;
+        self
+    }
+
+    /// Record per-step traces (modeled-APU replay; off for serving).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.sched.trace = on;
+        self
+    }
+
+    /// Replace the whole per-device scheduler config (the knobs above
+    /// are conveniences over this).
+    pub fn sched(mut self, cfg: SchedConfig) -> Self {
+        self.sched = cfg;
+        self
+    }
+
+    /// Device-group size: 1 serves from one fused scheduler, N > 1
+    /// shards tenants across a lock-step group.
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n.max(1);
+        self
+    }
+
+    /// Initial placement policy (`devices > 1`).
+    pub fn placement(mut self, p: PlacementKind) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Epoch-boundary rebalancing knobs (`devices > 1`).
+    pub fn rebalance(mut self, cfg: RebalanceCfg) -> Self {
+        self.rebalance = cfg;
+        self
+    }
+
+    /// Serve submits through AOT artifact coordinators compiled on
+    /// `dev` (built lazily, one per submit). A submit whose app has no
+    /// artifact falls back to the interpreter engine for that job —
+    /// results are identical either way; only launch accounting
+    /// differs.
+    pub fn artifacts(
+        mut self,
+        dev: Arc<Device>,
+        manifest: Manifest,
+        dir: PathBuf,
+    ) -> Self {
+        self.artifacts = Some(ArtifactEngine { dev, manifest, dir });
+        self
+    }
+
+    /// Build the session. With an artifact engine, launch accounting
+    /// tiles over the window buckets the manifest actually exposes
+    /// (validated here), and launches stay per-tenant (per-app
+    /// artifacts cannot merge different apps into one kernel).
+    ///
+    /// The bucket set is the union over every app and size class in
+    /// the manifest: with lazy, online admission the coordinators (and
+    /// their size classes) don't exist yet at build time, so the
+    /// scheduler-level *modeled* launch counts may tile a front with a
+    /// bucket its eventual size class doesn't carry. Exact launch
+    /// counts are still recorded per tenant by its coordinator's
+    /// `RunCtx` as the artifacts actually execute.
+    pub fn build(self) -> Result<Session> {
+        let mut sched = self.sched;
+        if let Some(art) = &self.artifacts {
+            sched.fused_kernel = false;
+            let mut buckets: Vec<usize> = art
+                .manifest
+                .apps
+                .values()
+                .flat_map(|a| a.artifacts.iter().map(|i| i.w))
+                .filter(|&w| w > 0)
+                .collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            Fuser::try_new(buckets.clone())
+                .context("artifact manifest exposes no usable window buckets")?;
+            sched.buckets = buckets;
+        }
+        let backend = if self.devices > 1 {
+            Backend::Sharded(ShardGroup::new(ShardConfig {
+                devices: self.devices,
+                placement: self.placement,
+                rebalance: self.rebalance,
+                sched,
+            }))
+        } else {
+            Backend::Fused(FusedScheduler::new(sched))
+        };
+        Ok(Session {
+            backend,
+            art: self.artifacts,
+            results: Vec::new(),
+            polled: 0,
+            steps: 0,
+        })
+    }
+}
+
+/// The scheduler a session serves from: one fused epoch loop, or a
+/// lock-step device group of them.
+enum Backend {
+    Fused(FusedScheduler),
+    Sharded(ShardGroup),
+}
+
+/// A completed job with the device it finished on (`d0` for
+/// single-device sessions) and the session step it completed at.
+pub struct SessionResult {
+    pub device: DeviceId,
+    /// Session epoch clock value when the job completed.
+    pub at_step: u64,
+    pub job: FinishedJob,
+}
+
+impl SessionResult {
+    /// One-line result summary, verified against the app's oracle when
+    /// the job ran on the interpreter engine: `"fib(18) = 2584 [ok]"`,
+    /// or the raw root result for artifact tenants.
+    pub fn summary(&self) -> String {
+        match (&self.job.kind, self.job.engine.machine()) {
+            (Some(k), Some(m)) => {
+                let check = match k.verify(m) {
+                    Ok(()) => "ok",
+                    Err(_) => "MISMATCH",
+                };
+                format!("{} [{check}]", k.describe(m))
+            }
+            _ => format!("root={}", self.job.engine.root_result()),
+        }
+    }
+
+    /// `Some(true)` verified, `Some(false)` mismatched, `None` when the
+    /// job has no oracle to check (artifact engine).
+    pub fn verified(&self) -> Option<bool> {
+        match (&self.job.kind, self.job.engine.machine()) {
+            (Some(k), Some(m)) => Some(k.verify(m).is_ok()),
+            _ => None,
+        }
+    }
+}
+
+/// Whole-session totals, uniform across backends.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    /// Shared epochs executed (group epochs when sharded).
+    pub steps: u64,
+    /// Epoch synchronizations (group barriers when sharded).
+    pub syncs: u64,
+    /// Window launches, summed over devices.
+    pub launches: u64,
+    /// Total live lanes executed (Σ tenant work).
+    pub work: u64,
+    /// Tenants moved between devices (0 for single-device sessions).
+    pub migrations: u64,
+}
+
+/// An online multi-job serving session (see module docs).
+pub struct Session {
+    backend: Backend,
+    art: Option<ArtifactEngine>,
+    results: Vec<SessionResult>,
+    polled: usize,
+    steps: u64,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Instantiate `spec` and admit it *now* — the online-admission
+    /// entry point. The build happens at submit time: nothing about the
+    /// job existed before this call, and nothing borrowed survives it.
+    /// With an artifact engine, the job's coordinator is compiled here
+    /// and travels with the tenant; apps without artifacts fall back to
+    /// the interpreter engine (identical results, per-tenant launch
+    /// accounting either way).
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
+        if self.art.is_some() {
+            match self.build_artifact_job(spec) {
+                Ok((label, co, w, weight)) => {
+                    return Ok(self.submit_artifact(&label, &co, &w, weight));
+                }
+                Err(e) => {
+                    // fall through to the interp engine, but never
+                    // silently: a corrupt artifact set would otherwise
+                    // masquerade as AOT-path numbers (matches the
+                    // visible-skip convention of runtime::artifacts_available)
+                    eprintln!(
+                        "artifact path unavailable for {} ({e:#}); \
+                         serving it on the interpreter engine",
+                        spec.label()
+                    );
+                }
+            }
+        }
+        let b = spec.instantiate()?;
+        Ok(self.submit_build(&b))
+    }
+
+    /// Parse and submit one `--jobs`-grammar token.
+    pub fn submit_spec(&mut self, tok: &str) -> Result<JobId> {
+        self.submit(&JobSpec::parse(tok)?)
+    }
+
+    /// Admit a pre-instantiated build (the build is only read; its
+    /// program is shared into the tenant).
+    pub fn submit_build(&mut self, b: &JobBuild) -> JobId {
+        match &mut self.backend {
+            Backend::Fused(s) => s.admit_build(b),
+            Backend::Sharded(g) => g.admit_build(b).0,
+        }
+    }
+
+    /// Admit an artifact-engine tenant over an owned coordinator.
+    pub fn submit_artifact(
+        &mut self,
+        label: &str,
+        co: &Arc<Coordinator>,
+        w: &Workload,
+        weight: u64,
+    ) -> JobId {
+        match &mut self.backend {
+            Backend::Fused(s) => s.admit_artifact(label, co, w, weight),
+            Backend::Sharded(g) => g.admit_artifact(label, co, w, weight).0,
+        }
+    }
+
+    fn build_artifact_job(
+        &self,
+        spec: &JobSpec,
+    ) -> Result<(String, Arc<Coordinator>, Workload, u64)> {
+        let art = self.art.as_ref().expect("checked by submit");
+        let app = art.manifest.app(&canonical_app(&spec.app))?;
+        let w = spec_workload(spec, app)?;
+        let co = Arc::new(Coordinator::for_workload(
+            &art.dev,
+            &art.dir,
+            app,
+            &w,
+            CoordinatorConfig::default(),
+        )?);
+        Ok((spec.label(), co, w, spec.weight))
+    }
+
+    /// Run one shared epoch (one lock-step group epoch when sharded).
+    /// `Ok(false)` when no admitted job has work left.
+    pub fn step(&mut self) -> Result<bool> {
+        let progressed = match &mut self.backend {
+            Backend::Fused(s) => s.step()?,
+            Backend::Sharded(g) => g.step()?,
+        };
+        if progressed {
+            self.steps += 1;
+        }
+        self.collect();
+        Ok(progressed)
+    }
+
+    fn collect(&mut self) {
+        let at_step = self.steps;
+        match &mut self.backend {
+            Backend::Fused(s) => {
+                self.results.extend(s.take_finished().into_iter().map(|job| {
+                    SessionResult { device: DeviceId(0), at_step, job }
+                }))
+            }
+            Backend::Sharded(g) => self.results.extend(
+                g.take_finished().into_iter().map(|(device, job)| {
+                    SessionResult { device, at_step, job }
+                }),
+            ),
+        }
+    }
+
+    /// Jobs completed since the last `poll` (arrival order preserved).
+    pub fn poll(&mut self) -> &[SessionResult] {
+        let from = self.polled;
+        self.polled = self.results.len();
+        &self.results[from..]
+    }
+
+    /// Run every admitted job to completion (new submits may still
+    /// follow — the session stays usable).
+    pub fn drain(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Every job completed so far, in completion order.
+    pub fn results(&self) -> &[SessionResult] {
+        &self.results
+    }
+
+    /// The session epoch clock: shared epochs executed, which is what
+    /// [`Arrival::at_step`] is measured against. Fast-forwarded over
+    /// idle gaps by [`Session::run_feed`].
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Whether any admitted job still has epochs to run.
+    pub fn has_work(&self) -> bool {
+        match &self.backend {
+            Backend::Fused(s) => s.has_work(),
+            Backend::Sharded(g) => g.has_work(),
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        match &self.backend {
+            Backend::Fused(_) => 1,
+            Backend::Sharded(g) => g.devices(),
+        }
+    }
+
+    /// Per-device fused-scheduler totals (one entry for single-device
+    /// sessions) — the modeled-APU replay inputs live in their traces.
+    pub fn device_stats(&self) -> Vec<&FusedStats> {
+        match &self.backend {
+            Backend::Fused(s) => vec![s.stats()],
+            Backend::Sharded(g) => g.device_stats(),
+        }
+    }
+
+    /// Group-level stats when sharded (`None` for one device).
+    pub fn shard_stats(&self) -> Option<&ShardStats> {
+        match &self.backend {
+            Backend::Fused(_) => None,
+            Backend::Sharded(g) => Some(g.stats()),
+        }
+    }
+
+    /// Uniform totals across both backends.
+    pub fn stats(&self) -> SessionStats {
+        match &self.backend {
+            Backend::Fused(s) => {
+                let st = s.stats();
+                SessionStats {
+                    steps: st.steps,
+                    syncs: st.syncs,
+                    launches: st.launches,
+                    work: st.work,
+                    migrations: 0,
+                }
+            }
+            Backend::Sharded(g) => {
+                let st = g.stats();
+                SessionStats {
+                    steps: st.group_steps,
+                    syncs: st.group_syncs,
+                    launches: g.total_launches(),
+                    work: g.device_stats().iter().map(|d| d.work).sum(),
+                    migrations: st.migrations,
+                }
+            }
+        }
+    }
+
+    /// The service loop: replay a feed (sorted by [`Arrival::at_step`],
+    /// as [`Arrival::parse_feed`] returns it) against the session
+    /// clock. Each iteration submits every arrival whose step has come
+    /// up, then runs one shared epoch; when the session idles with
+    /// arrivals still pending, the clock fast-forwards to the next one
+    /// (an idle service loop burns no epochs). `on_admit` fires per
+    /// submission, `on_complete` per completion, in order.
+    pub fn run_feed(
+        &mut self,
+        arrivals: &[Arrival],
+        mut on_admit: impl FnMut(JobId, &Arrival),
+        mut on_complete: impl FnMut(&SessionResult),
+    ) -> Result<()> {
+        let mut next = 0;
+        loop {
+            while next < arrivals.len() && arrivals[next].at_step <= self.steps {
+                let id = self.submit(&arrivals[next].spec)?;
+                on_admit(id, &arrivals[next]);
+                next += 1;
+            }
+            if !self.step()? {
+                match arrivals.get(next) {
+                    Some(a) => self.steps = self.steps.max(a.at_step),
+                    None => return Ok(()),
+                }
+            }
+            while self.polled < self.results.len() {
+                on_complete(&self.results[self.polled]);
+                self.polled += 1;
+            }
+        }
+    }
+}
+
+/// `msort` is the CLI alias for the mergesort artifact set.
+fn canonical_app(app: &str) -> String {
+    if app == "msort" { "mergesort".to_string() } else { app.to_string() }
+}
+
+/// Workload for the artifact engine. Sizes, seeds, and graphs come from
+/// the same `JobSpec` helpers the interp-engine builder uses
+/// (`sched::job`), so a feed token means one problem on either engine.
+fn spec_workload(s: &JobSpec, app: &AppManifest) -> Result<Workload> {
+    let n = s.effective_n();
+    Ok(match s.app.as_str() {
+        "fib" => apps::fib::workload(n as u32),
+        "nqueens" => apps::nqueens::workload(n),
+        "tsp" => apps::tsp::workload(&apps::tsp::random_dist(n, s.seed), n),
+        "mergesort" | "msort" => {
+            let mut rng = Rng::new(s.seed);
+            let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
+            apps::msort::workload(app, &data)?.0
+        }
+        "bfs" | "sssp" => {
+            let g = s.build_graph()?;
+            apps::graph_sp::workload(app, &g, 0)?.0
+        }
+        other => bail!("no artifact workload builder for app {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_grammar_parses_and_sorts() {
+        let a = Arrival::parse("fib:18:w4@5").unwrap();
+        assert_eq!(a.at_step, 5);
+        assert_eq!(a.spec.label(), "fib:18:w4");
+        assert_eq!(Arrival::parse("fib:18").unwrap().at_step, 0);
+        assert!(Arrival::parse("fib:18@").is_err());
+        assert!(Arrival::parse("fib:18@x").is_err());
+        assert!(Arrival::parse("@3").is_err(), "empty spec");
+
+        let feed = "mergesort:64@4, fib:12\n# comment line\nbfs:grid:4@2 # tail\n";
+        let v = Arrival::parse_feed(feed).unwrap();
+        let steps: Vec<u64> = v.iter().map(|a| a.at_step).collect();
+        assert_eq!(steps, vec![0, 2, 4], "sorted by arrival step");
+        assert!(Arrival::parse_feed("fib:12,,bfs").is_err(), "empty token");
+        assert!(Arrival::parse_feed("\n  \n# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn session_submits_mid_run_and_matches_batch() {
+        // the online-admission acceptance shape in miniature: one job
+        // submitted after epoch 0 must complete bit-identical to a solo
+        // run of the same spec.
+        let mut s = Session::builder().build().unwrap();
+        s.submit_spec("fib:12").unwrap();
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.steps(), 4);
+        s.submit_spec("mergesort:64").unwrap();
+        s.drain().unwrap();
+        assert_eq!(s.results().len(), 2);
+        for r in s.results() {
+            assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+        }
+        let st = s.stats();
+        assert!(st.steps > 4 && st.launches > 0);
+    }
+
+    #[test]
+    fn run_feed_fast_forwards_idle_gaps() {
+        // fib:8 drains in 15 epochs; the second arrival at step 40
+        // must still be admitted (clock jumps) and complete.
+        let arrivals = Arrival::parse_feed("fib:8,fib:8@40").unwrap();
+        let mut s = Session::builder().build().unwrap();
+        let mut admitted_at = Vec::new();
+        let mut completed = Vec::new();
+        s.run_feed(
+            &arrivals,
+            |id, a| admitted_at.push((id, a.at_step)),
+            |r| completed.push(r.job.label.clone()),
+        )
+        .unwrap();
+        assert_eq!(admitted_at.len(), 2);
+        assert_eq!(completed.len(), 2);
+        assert!(s.steps() >= 40, "clock reached the late arrival");
+        assert_eq!(s.results().len(), 2);
+    }
+
+    #[test]
+    fn sharded_session_serves_across_devices() {
+        let mut s = Session::builder()
+            .devices(3)
+            .placement(PlacementKind::RoundRobin)
+            .build()
+            .unwrap();
+        for tok in ["fib:10", "fib:11", "mergesort:64", "nqueens:5"] {
+            s.submit_spec(tok).unwrap();
+        }
+        s.drain().unwrap();
+        assert_eq!(s.results().len(), 4);
+        assert_eq!(s.devices(), 3);
+        for r in s.results() {
+            assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+        }
+        let st = s.stats();
+        assert_eq!(st.syncs, st.steps, "one barrier per group epoch");
+        assert!(s.shard_stats().is_some());
+    }
+}

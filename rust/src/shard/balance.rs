@@ -67,7 +67,7 @@ impl Rebalancer {
     pub fn plan(
         &mut self,
         loads: &[u64],
-        devs: &[FusedScheduler<'_>],
+        devs: &[FusedScheduler],
     ) -> Option<Migration> {
         if !self.cfg.enabled || loads.len() < 2 {
             return None;
@@ -94,11 +94,11 @@ impl Rebalancer {
         if (loads[src] as f64) <= mean * self.cfg.skew_threshold.max(1.0) {
             return None;
         }
-        if !devs[dst].has_active_slot() {
-            // a migrant would land in dst's pending queue, run nothing,
-            // and vanish from the live-lane loads — wait for a slot
-            return None;
-        }
+        // the destination must be able to *activate* a migrant (a
+        // tenant parked in dst's pending queue runs nothing and
+        // vanishes from the live-lane loads) — one headroom scan here,
+        // then O(1) per candidate below
+        let headroom = devs[dst].admit_headroom()?;
         let tenants = devs[src].tenant_loads();
         if tenants.len() < 2 {
             // moving a device's only tenant just relocates the skew
@@ -106,11 +106,11 @@ impl Rebalancer {
         }
         // move the tenant that best evens the (src, dst) pair, and only
         // if the gap strictly shrinks — overshooting a big tenant onto
-        // the idle device would invert the skew and oscillate.
+        // the idle device would invert the skew and oscillate
         let gap0 = loads[src] - loads[dst];
         let mut best: Option<(JobId, u64)> = None;
         for &(id, l) in &tenants {
-            if l == 0 || l >= gap0 {
+            if l == 0 || l >= gap0 || l > headroom {
                 continue;
             }
             let new_gap = (loads[src] - l).abs_diff(loads[dst] + l);
@@ -133,10 +133,10 @@ mod tests {
     use super::*;
     use crate::sched::{JobSpec, SchedConfig, Tenant};
 
-    fn dev_with<'p>(
-        builds: &'p [crate::sched::JobBuild],
+    fn dev_with(
+        builds: &[crate::sched::JobBuild],
         base_id: usize,
-    ) -> FusedScheduler<'p> {
+    ) -> FusedScheduler {
         let mut s = FusedScheduler::new(SchedConfig::default());
         for (k, b) in builds.iter().enumerate() {
             s.admit_tenant(Tenant::from_build(JobId(base_id + k), b));

@@ -87,8 +87,8 @@ impl Default for ShardConfig {
 /// Co-schedules many jobs across a group of devices: per-device epoch
 /// fusion, lock-step group steps with a cross-device barrier, and
 /// epoch-boundary tenant migration.
-pub struct ShardGroup<'p> {
-    devs: Vec<FusedScheduler<'p>>,
+pub struct ShardGroup {
+    devs: Vec<FusedScheduler>,
     placer: Placement,
     balancer: Rebalancer,
     stats: ShardStats,
@@ -98,10 +98,10 @@ pub struct ShardGroup<'p> {
     homes: Vec<DeviceId>,
 }
 
-impl<'p> ShardGroup<'p> {
-    pub fn new(cfg: ShardConfig) -> ShardGroup<'p> {
+impl ShardGroup {
+    pub fn new(cfg: ShardConfig) -> ShardGroup {
         let n = cfg.devices.max(1);
-        let devs: Vec<FusedScheduler<'p>> =
+        let devs: Vec<FusedScheduler> =
             (0..n).map(|_| FusedScheduler::new(cfg.sched.clone())).collect();
         ShardGroup {
             devs,
@@ -146,7 +146,7 @@ impl<'p> ShardGroup<'p> {
         self.placer.place(app, &loads, &counts)
     }
 
-    fn admit(&mut self, app: &str, make: impl FnOnce(JobId) -> Tenant<'p>) -> (JobId, DeviceId) {
+    fn admit(&mut self, app: &str, make: impl FnOnce(JobId) -> Tenant) -> (JobId, DeviceId) {
         let id = JobId(self.next_id);
         self.next_id += 1;
         let d = self.place(app);
@@ -159,8 +159,10 @@ impl<'p> ShardGroup<'p> {
     }
 
     /// Admit an interpreter-engine tenant (ids are group-global —
-    /// admission order across all devices).
-    pub fn admit_build(&mut self, b: &'p JobBuild) -> (JobId, DeviceId) {
+    /// admission order across all devices). Only reads the build — the
+    /// tenant co-owns the program, so builds can be made at submit time
+    /// and dropped immediately (online admission).
+    pub fn admit_build(&mut self, b: &JobBuild) -> (JobId, DeviceId) {
         let app = b.label.split(':').next().unwrap_or("").to_string();
         self.admit(&app, |id| Tenant::from_build(id, b))
     }
@@ -171,7 +173,7 @@ impl<'p> ShardGroup<'p> {
     pub fn admit_artifact(
         &mut self,
         label: &str,
-        co: &'p Coordinator<'p>,
+        co: &std::sync::Arc<Coordinator>,
         w: &Workload,
         weight: u64,
     ) -> (JobId, DeviceId) {
@@ -262,7 +264,7 @@ impl<'p> ShardGroup<'p> {
     }
 
     /// Completed jobs with the device they finished on.
-    pub fn finished(&self) -> impl Iterator<Item = (DeviceId, &FinishedJob<'p>)> {
+    pub fn finished(&self) -> impl Iterator<Item = (DeviceId, &FinishedJob)> {
         self.devs.iter().enumerate().flat_map(|(d, dev)| {
             dev.finished().iter().map(move |fj| (DeviceId(d), fj))
         })
@@ -270,6 +272,19 @@ impl<'p> ShardGroup<'p> {
 
     pub fn finished_count(&self) -> usize {
         self.devs.iter().map(|d| d.finished().len()).sum()
+    }
+
+    /// Move out every job completed since the last take, tagged with
+    /// the device it finished on — the drain seam
+    /// [`crate::session::Session`] polls.
+    pub fn take_finished(&mut self) -> Vec<(DeviceId, FinishedJob)> {
+        let mut out = Vec::new();
+        for (d, dev) in self.devs.iter_mut().enumerate() {
+            out.extend(
+                dev.take_finished().into_iter().map(|fj| (DeviceId(d), fj)),
+            );
+        }
+        out
     }
 
     /// Sum of per-device window launches.

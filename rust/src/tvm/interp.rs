@@ -26,11 +26,14 @@ pub struct InterpStats {
 
 /// The machine state (mirrors `coordinator::TvState`).
 ///
-/// `P: ?Sized` so a machine can run a `dyn TvmProgram` — the fused
-/// scheduler ([`crate::sched`]) holds tenants of heterogeneous apps as
-/// `Interp<'_, dyn TvmProgram>`.
-pub struct Interp<'p, P: TvmProgram + ?Sized> {
-    prog: &'p P,
+/// The machine *owns* its program handle: `P` can be a borrowed `&App`
+/// (solo drivers running a stack-allocated program), or an owned
+/// `Arc<dyn TvmProgram>` — the [`crate::tvm::Machine`] alias the fused
+/// scheduler ([`crate::sched`]) uses, so heterogeneous tenants are
+/// self-contained and travel between schedulers without a borrow
+/// lifetime.
+pub struct Interp<P: TvmProgram> {
+    prog: P,
     pub code: Vec<i32>,
     pub args: Vec<Vec<i32>>,
     pub res: Vec<i32>,
@@ -45,9 +48,13 @@ pub struct Interp<'p, P: TvmProgram + ?Sized> {
     max_epochs: u64,
 }
 
-impl<'p, P: TvmProgram + ?Sized> Interp<'p, P> {
+/// An interpreter machine over an owned, type-erased program — how the
+/// fused scheduler holds tenants of heterogeneous apps.
+pub type Machine = Interp<std::sync::Arc<dyn TvmProgram>>;
+
+impl<P: TvmProgram> Interp<P> {
     /// New machine with capacity `n`, initial task `<tid 1, init_args>`.
-    pub fn new(prog: &'p P, n: usize, init_args: Vec<i32>) -> Self {
+    pub fn new(prog: P, n: usize, init_args: Vec<i32>) -> Self {
         let t = prog.num_task_types() as i32;
         let mut code = vec![INVALID; n];
         code[0] = t * 0 + 1; // epoch 0, tid 1

@@ -105,3 +105,74 @@ pub trait TvmProgram {
         panic!("program has no map operation");
     }
 }
+
+// Pointer-shaped program holders are programs themselves, so an
+// [`crate::tvm::Interp`] can own its program (`Arc<dyn TvmProgram>` —
+// how the fused scheduler's tenants travel between schedulers without
+// a borrow lifetime) or borrow it (`&P` — how solo drivers run a
+// stack-allocated app). All three forward `run_map` explicitly: the
+// trait default panics, and an impl that fell back to it would break
+// every mapping app behind a pointer.
+
+impl<T: TvmProgram + ?Sized> TvmProgram for &T {
+    fn num_task_types(&self) -> usize {
+        (**self).num_task_types()
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        (**self).run_task(tid, args, ctx)
+    }
+
+    fn run_map(
+        &self,
+        args: &[i32],
+        heap_i: &mut [i32],
+        heap_f: &mut [f32],
+        const_i: &[i32],
+        const_f: &[f32],
+    ) {
+        (**self).run_map(args, heap_i, heap_f, const_i, const_f)
+    }
+}
+
+impl<T: TvmProgram + ?Sized> TvmProgram for Box<T> {
+    fn num_task_types(&self) -> usize {
+        (**self).num_task_types()
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        (**self).run_task(tid, args, ctx)
+    }
+
+    fn run_map(
+        &self,
+        args: &[i32],
+        heap_i: &mut [i32],
+        heap_f: &mut [f32],
+        const_i: &[i32],
+        const_f: &[f32],
+    ) {
+        (**self).run_map(args, heap_i, heap_f, const_i, const_f)
+    }
+}
+
+impl<T: TvmProgram + ?Sized> TvmProgram for std::sync::Arc<T> {
+    fn num_task_types(&self) -> usize {
+        (**self).num_task_types()
+    }
+
+    fn run_task(&self, tid: usize, args: &[i32], ctx: &mut TaskCtx) {
+        (**self).run_task(tid, args, ctx)
+    }
+
+    fn run_map(
+        &self,
+        args: &[i32],
+        heap_i: &mut [i32],
+        heap_f: &mut [f32],
+        const_i: &[i32],
+        const_f: &[f32],
+    ) {
+        (**self).run_map(args, heap_i, heap_f, const_i, const_f)
+    }
+}

@@ -14,7 +14,7 @@ fn artifacts() -> Option<(trees::runtime::Manifest, std::path::PathBuf)> {
 }
 
 fn run_app(
-    dev: &Device,
+    dev: &std::sync::Arc<Device>,
     manifest: &trees::runtime::Manifest,
     dir: &std::path::PathBuf,
     app_name: &str,

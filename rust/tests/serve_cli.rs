@@ -1,0 +1,90 @@
+//! End-to-end `trees serve`: drive the real binary with an arrival
+//! schedule where jobs are submitted *after* epoch 0 and check they
+//! complete correctly (ISSUE 4 acceptance). Runs on the pure-Rust
+//! fused interpreter engine — no artifacts needed — so it executes in
+//! every environment, including the offline stub build.
+
+use std::process::Command;
+
+fn run_serve(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_trees"))
+        .args(args)
+        .output()
+        .expect("spawn trees binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn serve_admits_after_epoch_zero_and_completes() {
+    let (stdout, stderr, ok) = run_serve(&[
+        "serve",
+        "--jobs",
+        "fib:12,mergesort:64@5,nqueens:5@11",
+    ]);
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+
+    // the late arrivals were admitted at their scheduled epochs…
+    assert!(
+        stdout.contains("@5    admit") && stdout.contains("mergesort:64"),
+        "missing @5 admission:\n{stdout}"
+    );
+    assert!(stdout.contains("@11   admit"), "missing @11 admission:\n{stdout}");
+    // …every job completed and verified against its oracle
+    for needle in ["fib(12) = 144", "sorted 64 elements", "5-queens solutions = 10"]
+    {
+        assert!(stdout.contains(needle), "missing {needle:?}:\n{stdout}");
+    }
+    assert!(stdout.contains("[ok]"), "no verified results:\n{stdout}");
+    assert!(!stdout.contains("MISMATCH"), "mismatched result:\n{stdout}");
+}
+
+#[test]
+fn serve_reads_a_spec_file_feed() {
+    let dir = std::env::temp_dir();
+    let path =
+        dir.join(format!("trees_serve_feed_test_{}.jobs", std::process::id()));
+    std::fs::write(
+        &path,
+        "# service feed: two up-front, one late\nfib:10, nqueens:5\nmergesort:32@4\n",
+    )
+    .unwrap();
+    let (stdout, stderr, ok) =
+        run_serve(&["serve", "--spec-file", path.to_str().unwrap()]);
+    std::fs::remove_file(&path).ok();
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(
+        stdout.contains("serving 3 arrival(s)"),
+        "feed not parsed:\n{stdout}"
+    );
+    assert!(stdout.contains("@4    admit"), "late arrival missing:\n{stdout}");
+    assert!(!stdout.contains("MISMATCH"), "mismatched result:\n{stdout}");
+}
+
+#[test]
+fn serve_sharded_online_admission_completes() {
+    let (stdout, stderr, ok) = run_serve(&[
+        "serve",
+        "--jobs",
+        "fib:12,fib:10@3,mergesort:64@6",
+        "--devices",
+        "2",
+    ]);
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("group:"), "no group summary:\n{stdout}");
+    assert!(!stdout.contains("MISMATCH"), "mismatched result:\n{stdout}");
+}
+
+#[test]
+fn serve_rejects_malformed_feeds() {
+    let (_, stderr, ok) = run_serve(&["serve", "--jobs", "fib:12,,bfs"]);
+    assert!(!ok, "double comma must be rejected");
+    assert!(stderr.contains("empty job token"), "unhelpful error:\n{stderr}");
+
+    let (_, stderr, ok) = run_serve(&["serve", "--jobs", "fib:12@oops"]);
+    assert!(!ok, "bad arrival epoch must be rejected");
+    assert!(stderr.contains("arrival epoch"), "unhelpful error:\n{stderr}");
+}

@@ -1,0 +1,217 @@
+//! Properties of the `Session` facade (ISSUE 4 acceptance):
+//!
+//! (a) **online admission is invisible to results**: a serve loop with
+//!     jobs submitted at arbitrary epoch offsets finishes bit-identical
+//!     (per-job root result, res vector, both heaps, machine counters)
+//!     to the same jobs batch-admitted up front — for both fairness
+//!     policies and 1..4 devices;
+//! (b) a job submitted strictly after epoch 0 completes correctly
+//!     (the acceptance shape, deterministic);
+//! (c) the arrival feed grammar round-trips through `JobSpec::label`.
+
+use trees::sched::{Fairness, JobSpec};
+use trees::session::{Arrival, Session};
+use trees::shard::PlacementKind;
+use trees::util::quickcheck::{check, shrink_vec, Config};
+use trees::util::rng::Rng;
+
+const POOL: &[&str] = &[
+    "fib:10",
+    "fib:12",
+    "mergesort:64",
+    "mergesort:100",
+    "bfs:grid:4",
+    "sssp:grid:4",
+    "nqueens:5",
+    "tsp:6",
+];
+
+/// A random serve scenario: jobs with arrival offsets, fairness,
+/// device count.
+#[derive(Debug, Clone)]
+struct Scenario {
+    /// `(spec token, arrival step)` per job.
+    jobs: Vec<(String, u64)>,
+    weighted: bool,
+    devices: usize,
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let k = 2 + rng.below(4) as usize;
+    let jobs = (0..k)
+        .map(|_| {
+            let tok = POOL[rng.below(POOL.len() as u64) as usize].to_string();
+            (tok, rng.below(25))
+        })
+        .collect();
+    Scenario {
+        jobs,
+        weighted: rng.below(2) == 0,
+        devices: 1 + rng.below(4) as usize,
+    }
+}
+
+fn session_for(sc: &Scenario) -> Session {
+    Session::builder()
+        .fairness(if sc.weighted {
+            Fairness::Weighted
+        } else {
+            Fairness::RoundRobin
+        })
+        .devices(sc.devices)
+        .placement(PlacementKind::RoundRobin)
+        .build()
+        .expect("interp sessions build infallibly")
+}
+
+/// Submission order must be deterministic and shared by both runs so
+/// JobIds line up: sort by arrival step (stable), like `parse_feed`.
+fn sorted_arrivals(sc: &Scenario) -> Vec<Arrival> {
+    let mut v: Vec<Arrival> = sc
+        .jobs
+        .iter()
+        .map(|(tok, at)| Arrival {
+            spec: JobSpec::parse(tok).unwrap(),
+            at_step: *at,
+        })
+        .collect();
+    v.sort_by_key(|a| a.at_step);
+    v
+}
+
+fn online_matches_batch(sc: &Scenario) -> Result<(), String> {
+    let arrivals = sorted_arrivals(sc);
+
+    // batch: everything admitted up front (all at_step = 0), drained
+    let mut batch = session_for(sc);
+    for a in &arrivals {
+        batch.submit(&a.spec).map_err(|e| e.to_string())?;
+    }
+    batch.drain().map_err(|e| e.to_string())?;
+
+    // online: the same specs in the same order, but submitted only as
+    // the epoch clock reaches each arrival step
+    let mut online = session_for(sc);
+    online
+        .run_feed(&arrivals, |_, _| {}, |_| {})
+        .map_err(|e| e.to_string())?;
+
+    for (name, s) in [("batch", &batch), ("online", &online)] {
+        if s.results().len() != arrivals.len() {
+            return Err(format!(
+                "{name}: {} of {} jobs finished",
+                s.results().len(),
+                arrivals.len()
+            ));
+        }
+    }
+
+    // compare job i to job i: ids are assigned in submission order,
+    // which both runs share
+    for a in batch.results() {
+        let b = online
+            .results()
+            .iter()
+            .find(|r| r.job.id == a.job.id)
+            .ok_or_else(|| format!("{}: missing online twin", a.job.label))?;
+        let (ma, mb) = (
+            a.job.engine.machine().expect("interp engine"),
+            b.job.engine.machine().expect("interp engine"),
+        );
+        if ma.root_result() != mb.root_result() {
+            return Err(format!(
+                "{}: root {} (batch) vs {} (online)",
+                a.job.label,
+                ma.root_result(),
+                mb.root_result()
+            ));
+        }
+        if ma.res != mb.res {
+            return Err(format!("{}: res vector differs", a.job.label));
+        }
+        if ma.heap_i != mb.heap_i || ma.heap_f != mb.heap_f {
+            return Err(format!("{}: heaps differ", a.job.label));
+        }
+        if ma.stats.work != mb.stats.work || ma.stats.epochs != mb.stats.epochs
+        {
+            return Err(format!(
+                "{}: counters {:?} vs {:?}",
+                a.job.label, ma.stats, mb.stats
+            ));
+        }
+        if b.verified() != Some(true) {
+            return Err(format!("{}: online result fails its oracle", a.job.label));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_online_admission_equals_batch_any_offsets_fairness_devices() {
+    check(
+        Config { cases: 12, ..Default::default() },
+        gen_scenario,
+        |sc| {
+            // shrink toward fewer jobs, earlier arrivals, fewer devices
+            let mut out: Vec<Scenario> = shrink_vec(&sc.jobs, |_| Vec::new())
+                .into_iter()
+                .filter(|j| !j.is_empty())
+                .map(|jobs| Scenario { jobs, ..sc.clone() })
+                .collect();
+            if sc.devices > 1 {
+                out.push(Scenario { devices: sc.devices - 1, ..sc.clone() });
+            }
+            if sc.jobs.iter().any(|(_, at)| *at > 0) {
+                out.push(Scenario {
+                    jobs: sc.jobs.iter().map(|(t, _)| (t.clone(), 0)).collect(),
+                    ..sc.clone()
+                });
+            }
+            out
+        },
+        online_matches_batch,
+    );
+}
+
+#[test]
+fn late_arrival_joins_mid_run_and_completes() {
+    // deterministic acceptance shape: one tenant is already several
+    // epochs in when the second is submitted; both verify, and the
+    // late one's admission step is visibly after epoch 0.
+    let sc = Scenario {
+        jobs: vec![("fib:12".into(), 0), ("mergesort:64".into(), 7)],
+        weighted: false,
+        devices: 1,
+    };
+    let arrivals = sorted_arrivals(&sc);
+    let mut s = session_for(&sc);
+    let mut admitted = Vec::new();
+    s.run_feed(
+        &arrivals,
+        |id, a| admitted.push((id, a.at_step)),
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(admitted.len(), 2);
+    assert_eq!(admitted[1].1, 7, "second job arrived at epoch 7");
+    assert_eq!(s.results().len(), 2);
+    for r in s.results() {
+        assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+    }
+    online_matches_batch(&sc).unwrap();
+}
+
+#[test]
+fn weighted_and_sharded_late_arrivals_verify() {
+    let sc = Scenario {
+        jobs: vec![
+            ("fib:12".into(), 0),
+            ("nqueens:5".into(), 3),
+            ("mergesort:100".into(), 9),
+            ("bfs:grid:4".into(), 15),
+        ],
+        weighted: true,
+        devices: 3,
+    };
+    online_matches_batch(&sc).unwrap();
+}

@@ -223,14 +223,16 @@ fn sharded_artifact_tenants_migrate_and_match_solo() {
     let cos: Vec<_> = ns
         .iter()
         .map(|&n| {
-            Coordinator::new(
-                &dev,
-                &dir,
-                app,
-                capacity_for(n),
-                CoordinatorConfig::default(),
+            std::sync::Arc::new(
+                Coordinator::new(
+                    &dev,
+                    &dir,
+                    app,
+                    capacity_for(n),
+                    CoordinatorConfig::default(),
+                )
+                .unwrap(),
             )
-            .unwrap()
         })
         .collect();
 
