@@ -21,7 +21,7 @@ build:
 	cd rust && $(CARGO) build --release
 
 test:
-	cd rust && $(CARGO) test -q
+	cd rust && TREES_FAULT_SEEDS=0..4 $(CARGO) test -q
 
 clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings

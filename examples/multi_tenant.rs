@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let mut session = Session::builder().build()?;
     session.run_feed(
         &arrivals,
-        |id, a| println!("  @{:<3} admitted {id} {}", a.at_step, a.spec.label()),
+        |id, a| println!("  @{:<3} admitted {id} {}", a.at_step, a.label()),
         |r| {
             println!(
                 "  @{:<3} tenant {} finished after riding {} shared epochs",

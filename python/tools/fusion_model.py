@@ -1,22 +1,27 @@
-"""Deterministic twin of rust/src/sched + rust/src/shard for the
-EXPERIMENTS.md tables (E-FUSE-1 and E-SHARD-1).
+"""Deterministic twin of rust/src/sched + rust/src/shard + rust/src/fault
+for the EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1 and E-FAULT-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
 exact counting semantics of the fused scheduler (rust/src/sched), the
 shard device group (rust/src/shard: per-device round-robin fusion,
-lock-step group steps with a barrier, epoch-boundary rebalancing), and
-the cost models (rust/src/simt GpuModel + DeviceGroup) for apps whose
-epoch schedules are RNG-independent: fib, mergesort (structure does not
-depend on the data values), nqueens, and BFS on the deterministic
-4-neighbor grid. Every quantity printed here is a *model* quantity
-(epoch counts, live lanes, bucket-tiled launches, modeled
-microseconds) — `cargo bench --bench bench_fusion` and `cargo bench
---bench bench_shard` compute the same numbers from the real machines.
+lock-step group steps with a barrier, epoch-boundary rebalancing,
+injected device faults with evacuation and an elastically shrinking
+barrier), and the cost models (rust/src/simt GpuModel + DeviceGroup)
+for apps whose epoch schedules are RNG-independent: fib, mergesort
+(structure does not depend on the data values), nqueens, and BFS on the
+deterministic 4-neighbor grid. Every quantity printed here is a *model*
+quantity (epoch counts, live lanes, bucket-tiled launches, modeled
+microseconds) — `cargo bench --bench bench_fusion`, `--bench
+bench_shard` and `--bench bench_serve` compute the same numbers from
+the real machines. The E-FAULT-1 twin also snapshots the repo-root
+BENCH_serve.json.
 
 Run:  python tools/fusion_model.py
 """
 
+import json
 import math
+import os
 
 # ------------------------------- TVM machine (mirrors tvm::Interp)
 
@@ -382,6 +387,7 @@ class ShardDevice:
         self.steps = 0
         self.launches = 0
         self.work = 0
+        self.finished = []  # machines retired since last drain
 
     def has_work(self):
         return bool(self.active) or bool(self.pending)
@@ -437,7 +443,7 @@ class ShardDevice:
         pos = 0
         while pos < len(self.active):
             if self.active[pos].front() is None:
-                self.active.pop(pos)
+                self.finished.append(self.active.pop(pos))
                 self.policy.retire(pos)
             else:
                 pos += 1
@@ -455,18 +461,20 @@ class Rebalancer:
         self.cooldown = cooldown
         self.steps_since = cooldown
 
-    def plan(self, loads, devs):
-        if not self.enabled or len(loads) < 2:
+    def plan(self, loads, devs, alive=None):
+        live = [d for d in range(len(loads))
+                if alive is None or alive[d]]
+        if not self.enabled or len(live) < 2:
             return None
         if self.steps_since < self.cooldown:
             self.steps_since += 1
             return None
-        total = sum(loads)
+        total = sum(loads[d] for d in live)
         if total == 0:
             return None
-        src = max(range(len(loads)), key=lambda d: loads[d])
-        dst = min(range(len(loads)), key=lambda d: loads[d])
-        mean = total / len(loads)
+        src = max(live, key=lambda d: loads[d])
+        dst = min(live, key=lambda d: loads[d])
+        mean = total / len(live)
         if loads[src] <= mean * max(self.skew, 1.0):
             return None
         if not devs[dst].has_active_slot():
@@ -541,6 +549,137 @@ def run_sharded(tokens, devices, placement="rr", pins=None, rebalance=True):
                 migrations=migrations, us=us, imb=peak_imb)
 
 
+# ------------------------------- fault twins (rust/src/fault + seams)
+
+MAX_RETRIES, BASE_BACKOFF_US = 3, 5.0  # fault::RetryCfg::default()
+
+
+class FaultyGroup:
+    """shard::ShardGroup twin with the fault seams of ISSUE 6: events
+    fire at group-epoch boundaries (`at_step <= group_steps`, i.e.
+    before the group's at_step'th epoch), deaths evacuate every
+    resident tenant to the least-loaded live device, transients pay a
+    bounded exponential backoff (and escalate to a death past the retry
+    budget), and each step is priced with the *shrunk* barrier —
+    `shard::stats::group_step_cost_us`."""
+
+    def __init__(self, devices, events=()):
+        self.devs = [ShardDevice() for _ in range(devices)]
+        self.alive = [True] * devices
+        # (at_step, device, kind, failures) with kind in {die, flaky}
+        self.events = sorted(events, key=lambda e: e[0])
+        self.cursor = 0
+        self.place_next = 0  # Placement::RoundRobin twin
+        self.bal = Rebalancer()
+        self.steps = 0
+        self.us = 0.0
+        self.at_us = [0.0]  # modeled time after k group epochs
+        self.deaths = self.evacuations = self.retries = 0
+        self.backoff_total = 0.0
+        self.dead_ended = []
+
+    def alive_count(self):
+        return sum(self.alive)
+
+    def first_alive_from(self, want):
+        n = len(self.devs)
+        for d in list(range(want, n)) + list(range(want)):
+            if self.alive[d]:
+                return d
+        return None
+
+    def submit(self, m):
+        want = self.place_next % len(self.devs)
+        self.place_next += 1
+        d = self.first_alive_from(want)
+        if d is None:  # fully dead group: the job dead-ends, no hang
+            self.evacuations += 1
+            self.dead_ended.append(m)
+            return
+        self.devs[d].admit(m)
+
+    def least_loaded_alive(self):
+        best = None
+        for d, dev in enumerate(self.devs):
+            if not self.alive[d]:
+                continue
+            key = (dev.live_lanes(), len(dev.active) + len(dev.pending), d)
+            if best is None or key < best[0]:
+                best = (key, d)
+        return None if best is None else best[1]
+
+    def kill(self, d):
+        if not self.alive[d]:
+            return
+        self.alive[d] = False
+        self.deaths += 1
+        dev = self.devs[d]
+        tenants = dev.active + dev.pending
+        dev.active, dev.pending = [], []
+        dev.policy = RoundRobin()
+        for m in tenants:
+            to = self.least_loaded_alive()
+            self.evacuations += 1
+            if to is None:
+                self.dead_ended.append(m)
+            else:
+                self.devs[to].admit(m)
+
+    def inject(self):
+        """Fire due events; returns this boundary's backoff µs."""
+        paid_us = 0.0
+        while self.cursor < len(self.events) \
+                and self.events[self.cursor][0] <= self.steps:
+            _, d, kind, failures = self.events[self.cursor]
+            self.cursor += 1
+            if d >= len(self.devs) or not self.alive[d]:
+                continue
+            if kind == "die":
+                self.kill(d)
+            else:  # flaky: bounded retry, then escalation
+                paid = min(failures, MAX_RETRIES)
+                self.retries += paid
+                b = BASE_BACKOFF_US * ((1 << paid) - 1)
+                self.backoff_total += b
+                paid_us += b
+                if failures > MAX_RETRIES:
+                    self.kill(d)
+        return paid_us
+
+    def has_work(self):
+        return any(d.has_work() for d in self.devs)
+
+    def step(self):
+        """One lock-step group epoch (ShardGroup::step twin). Returns
+        (progressed, machines that finished this epoch)."""
+        backoff = self.inject()
+        if not self.has_work():
+            return False, []
+        dev_us, finished = [], []
+        for dev in self.devs:
+            if dev.has_work():
+                live_per_job, launches = dev.step()
+                dev_us.append(fused_epoch_us(live_per_job)
+                              + (launches - 1) * LAUNCH_US)
+                finished.extend(dev.finished)
+                dev.finished = []
+            else:
+                dev_us.append(0.0)
+        self.steps += 1
+        self.us += max(dev_us) + barrier_us(self.alive_count()) + backoff
+        self.at_us.append(self.us)
+        if self.alive_count() > 1:
+            loads = [d.live_lanes() for d in self.devs]
+            plan = self.bal.plan(loads, self.devs, self.alive)
+            if plan is not None:
+                m, src, dst = plan
+                pos = self.devs[src].active.index(m)
+                self.devs[src].active.pop(pos)
+                self.devs[src].policy.retire(pos)
+                self.devs[dst].admit(m)
+        return True, finished
+
+
 MIXES = [
     ("4x fib:16", ["fib:16"] * 4),
     ("8x fib:14", ["fib:14"] * 8),
@@ -560,6 +699,122 @@ SHARD_MIXES = [
       "bfs:5", "bfs:5", "bfs:6", "bfs:6",
       "nqueens:6", "nqueens:6", "nqueens:5", "nqueens:5"]),
 ]
+
+
+# rust/benches/bench_serve.rs twin: the same 12-arrival online feed on
+# 4 devices ("bfs:5" here is "bfs:grid:5" in the Rust spec grammar).
+# fib:18 runs far past the last arrival, so the group never idles and
+# session epochs stay aligned with the group trace.
+SERVE_DEVICES = 4
+SERVE_FEED = [
+    ("fib:18", 0), ("fib:16", 2), ("mergesort:256", 4), ("bfs:5", 6),
+    ("nqueens:6", 8), ("fib:14", 10), ("mergesort:128", 12), ("fib:15", 14),
+    ("fib:16", 16), ("bfs:6", 18), ("nqueens:5", 20), ("mergesort:256", 22),
+]
+SERVE_PLANS = [
+    ("fault-free", "", []),
+    ("1 death", "die:3@6", [(6, 3, "die", 0)]),
+    ("2 deaths", "die:3@6,die:2@12", [(6, 3, "die", 0), (12, 2, "die", 0)]),
+]
+
+
+def percentile(sorted_vals, p):
+    """Nearest-rank, round-half-away like Rust f64::round."""
+    if not sorted_vals:
+        return 0.0
+    idx = int(math.floor((len(sorted_vals) - 1) * p / 100.0 + 0.5))
+    return sorted_vals[min(idx, len(sorted_vals) - 1)]
+
+
+def run_serve(events=()):
+    """Session::run_feed twin on a FaultyGroup: arrivals are admitted
+    once the epoch clock reaches their step; completions are stamped
+    with the epoch count *after* the step that retired them."""
+    g = FaultyGroup(SERVE_DEVICES, events)
+    admits, dones = {}, {}
+    nxt = 0
+    while True:
+        while nxt < len(SERVE_FEED) and SERVE_FEED[nxt][1] <= g.steps:
+            m = build(SERVE_FEED[nxt][0])
+            m.job = nxt
+            admits[nxt] = g.steps
+            g.submit(m)
+            nxt += 1
+        progressed, finished = g.step()
+        for m in finished:
+            dones[m.job] = g.steps
+        if not progressed:
+            assert nxt >= len(SERVE_FEED), "feed must keep the group busy"
+            break
+    lat = sorted(g.at_us[dones[j]] - g.at_us[admits[j]] for j in dones)
+    return dict(jobs=len(dones), steps=g.steps, us=g.us,
+                p50=percentile(lat, 50.0), p99=percentile(lat, 99.0),
+                jps=len(dones) / (g.us / 1e6),
+                deaths=g.deaths, evac=g.evacuations, retries=g.retries,
+                backoff=g.backoff_total,
+                work=sum(d.work for d in g.devs))
+
+
+def fault_table():
+    print("\nE-FAULT-1 — 12-job online feed, 4 devices, injected faults "
+          "(bench_serve twin)")
+    hdr = ("| plan | group epochs | deaths | evacuations | retries | "
+           "backoff (µs) | p50 (µs) | p99 (µs) | jobs/s | total (µs) | "
+           "overhead |")
+    print(hdr)
+    print("|" + "---|" * 11)
+    points = []
+    for name, plan_str, events in SERVE_PLANS:
+        r = run_serve(events)
+        points.append((name, plan_str, r))
+    base = points[0][2]
+    for name, _, r in points:
+        # faults move work, never change it: survivors replay the same
+        # machines, so total work T1 is identical across plans
+        assert r["work"] == base["work"], (name, r["work"], base["work"])
+        assert r["jobs"] == len(SERVE_FEED), name
+        print(f"| {name} | {r['steps']} | {r['deaths']} | {r['evac']} | "
+              f"{r['retries']} | {r['backoff']:.0f} | {r['p50']:.0f} | "
+              f"{r['p99']:.0f} | {r['jps']:.0f} | {r['us']:.0f} | "
+              f"{r['us'] / base['us']:.2f}x |")
+
+    # transient faults: bounded retries, no deaths, backoff in the bill
+    flaky = run_serve([(3, 0, "flaky", 2), (9, 1, "flaky", 1)])
+    assert (flaky["deaths"], flaky["retries"]) == (0, 3)
+    assert abs(flaky["backoff"] - (15.0 + 5.0)) < 1e-9
+    print(f"\ntransient demo (flaky:0@3:x2, flaky:1@9:x1): {flaky['retries']} "
+          f"retries, {flaky['backoff']:.0f} µs backoff, 0 deaths — "
+          f"{flaky['us']:.0f} µs total (x{flaky['us'] / base['us']:.2f} "
+          f"vs fault-free)")
+
+    # snapshot for the perf trajectory (schema matches bench_serve.rs)
+    out = {
+        "bench": "serve",
+        "devices": SERVE_DEVICES,
+        "plans": [
+            {
+                "name": name,
+                "fault_plan": plan_str,
+                "jobs": r["jobs"],
+                "group_steps": r["steps"],
+                "total_us": round(r["us"], 3),
+                "p50_us": round(r["p50"], 3),
+                "p99_us": round(r["p99"], 3),
+                "jobs_per_sec": round(r["jps"], 3),
+                "device_deaths": r["deaths"],
+                "evacuations": r["evac"],
+                "launch_retries": r["retries"],
+                "overhead_vs_fault_free": round(r["us"] / base["us"], 4),
+            }
+            for name, plan_str, r in points
+        ],
+    }
+    path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "BENCH_serve.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
 
 
 def fuse_table():
@@ -630,6 +885,7 @@ def shard_table():
 def main():
     fuse_table()
     shard_table()
+    fault_table()
 
 
 if __name__ == "__main__":

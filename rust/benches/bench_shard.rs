@@ -48,6 +48,7 @@ fn run_sharded(tokens: &[&str], devices: usize) -> ShardPoint {
         placement: PlacementKind::RoundRobin,
         rebalance: RebalanceCfg::default(),
         sched: SchedConfig { trace: true, ..Default::default() },
+        ..Default::default()
     });
     for b in &builds {
         group.admit_build(b);

@@ -1,0 +1,337 @@
+//! Fault model for the serving stack: structured job outcomes,
+//! deterministic injectable device faults, and the retry/backoff policy
+//! for transient launch failures.
+//!
+//! TREES' explicit epoch boundary is the natural recovery point — every
+//! lane is quiescent there, so quarantining a wedged tenant, cancelling
+//! a job, or evacuating a dead device's tenants is just an evict at the
+//! boundary, the same seam migration already uses. Nothing in this
+//! module changes *what* a tenant computes; it only decides when a
+//! tenant stops riding shared epochs and with which [`Outcome`].
+//!
+//! A [`FaultPlan`] is a deterministic schedule of device faults keyed on
+//! group-epoch numbers: `die:D@E` kills device D at the boundary of
+//! group epoch E (its tenants are evacuated to the least-loaded live
+//! survivor and the barrier tree shrinks), and `flaky:D@E[:xK]` makes
+//! D's launch fail K times at that boundary, paying bounded retries with
+//! exponential backoff in modeled µs ([`RetryCfg`]) — past
+//! `max_retries` the fault escalates to a death. Plans come from the CLI
+//! (`trees serve --fault-plan`) or from [`FaultPlan::random`] for the
+//! property suite.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// How a job left the scheduler. Everything except `Done` is a
+/// structured early exit: the job's engine is preserved as-is (mid-run
+/// machine state), but its result never passed the finish line, so
+/// result oracles must not be consulted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Ran to completion; results are live and verifiable.
+    Done,
+    /// Explicitly cancelled (`Session::cancel` / `!cancel` feed token).
+    Cancelled,
+    /// Still resident past its `dD` deadline epoch; evicted.
+    DeadlineExceeded,
+    /// Rode more epochs than its `sS` step budget allows — the wedged
+    /// (non-terminating) job guard.
+    Quarantined,
+    /// Its device died and no live device remained to receive it.
+    Evacuated,
+}
+
+impl Outcome {
+    /// True only for a normal completion.
+    pub fn is_done(&self) -> bool {
+        matches!(self, Outcome::Done)
+    }
+}
+
+impl std::fmt::Display for Outcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Outcome::Done => "done",
+            Outcome::Cancelled => "cancelled",
+            Outcome::DeadlineExceeded => "deadline-exceeded",
+            Outcome::Quarantined => "quarantined",
+            Outcome::Evacuated => "evacuated",
+        })
+    }
+}
+
+/// What happens to the faulted device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Permanent: the device dies and never comes back.
+    Death,
+    /// The device's next launch fails `failures` times before
+    /// succeeding; each failure is retried with exponential backoff.
+    /// More failures than `RetryCfg::max_retries` escalate to `Death`.
+    Transient { failures: u32 },
+}
+
+/// One scheduled fault: `device` faults at the boundary of group epoch
+/// `at_step` (0-based — an event at E fires before the group's E'th
+/// epoch runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub device: usize,
+    pub at_step: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of device faults, applied by `ShardGroup`
+/// at group-epoch boundaries.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated plan: `die:D@E` and `flaky:D@E[:xK]`
+    /// (K failed launches, default 1). Devices accept `d1` or `1`.
+    ///
+    /// ```
+    /// use trees::fault::{FaultKind, FaultPlan};
+    /// let p = FaultPlan::parse("die:d1@4, flaky:0@2:x3").unwrap();
+    /// assert_eq!(p.events.len(), 2);
+    /// assert_eq!(p.events[0].kind, FaultKind::Transient { failures: 3 });
+    /// ```
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        if s.trim().is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        let mut events = Vec::new();
+        for tok in crate::sched::split_tokens(s)? {
+            events.push(Self::parse_event(tok)?);
+        }
+        events.sort_by_key(|e| e.at_step);
+        Ok(FaultPlan { events })
+    }
+
+    fn parse_event(tok: &str) -> Result<FaultEvent> {
+        let mut parts = tok.split(':');
+        let kind_tok = parts.next().unwrap_or("").trim();
+        let Some(at) = parts.next() else {
+            bail!(
+                "fault event {tok:?} is missing its device@epoch part \
+                 (want die:D@E or flaky:D@E[:xK])"
+            );
+        };
+        let Some((dev_tok, epoch_tok)) = at.rsplit_once('@') else {
+            bail!(
+                "fault event {tok:?} has no @epoch \
+                 (want die:D@E or flaky:D@E[:xK])"
+            );
+        };
+        let dev_tok = dev_tok.trim();
+        let device = dev_tok
+            .strip_prefix('d')
+            .unwrap_or(dev_tok)
+            .parse::<usize>()
+            .map_err(|_| {
+                anyhow!("bad device {dev_tok:?} in fault event {tok:?} (want d1 or 1)")
+            })?;
+        let at_step = epoch_tok.trim().parse::<u64>().map_err(|_| {
+            anyhow!("bad fault epoch {epoch_tok:?} in {tok:?} (want an integer group epoch)")
+        })?;
+        let kind = match kind_tok {
+            "die" => {
+                if let Some(extra) = parts.next() {
+                    bail!("unexpected field {extra:?} after die event {tok:?}");
+                }
+                FaultKind::Death
+            }
+            "flaky" => {
+                let failures = match parts.next() {
+                    None => 1,
+                    Some(x) => {
+                        let Some(k) =
+                            x.trim().strip_prefix('x').and_then(|v| v.parse::<u32>().ok())
+                        else {
+                            bail!(
+                                "bad failure count {x:?} in fault event {tok:?} (want xK)"
+                            );
+                        };
+                        if k == 0 {
+                            bail!("failure count must be >= 1 in fault event {tok:?}");
+                        }
+                        k
+                    }
+                };
+                if let Some(extra) = parts.next() {
+                    bail!("unexpected field {extra:?} in fault event {tok:?}");
+                }
+                FaultKind::Transient { failures }
+            }
+            other => bail!("unknown fault kind {other:?} in {tok:?} (have: die, flaky)"),
+        };
+        Ok(FaultEvent { device, at_step, kind })
+    }
+
+    /// A seeded random plan over `devices` devices and group epochs
+    /// `0..horizon`, shaped so runs still make progress: at most
+    /// `devices - 1` deaths (always one survivor) and only transient
+    /// bursts below the default escalation threshold.
+    pub fn random(seed: u64, devices: usize, horizon: u64) -> FaultPlan {
+        if devices == 0 {
+            return FaultPlan::default();
+        }
+        let mut rng = Rng::new(seed ^ 0x5eed_fa17);
+        let horizon = horizon.max(1);
+        let mut order: Vec<usize> = (0..devices).collect();
+        rng.shuffle(&mut order);
+        let deaths = if devices > 1 { rng.below(devices as u64) as usize } else { 0 };
+        let mut events = Vec::new();
+        for &d in order.iter().take(deaths) {
+            events.push(FaultEvent {
+                device: d,
+                at_step: rng.below(horizon),
+                kind: FaultKind::Death,
+            });
+        }
+        for _ in 0..rng.below(3) {
+            events.push(FaultEvent {
+                device: order[rng.below(devices as u64) as usize],
+                at_step: rng.below(horizon),
+                kind: FaultKind::Transient { failures: 1 + rng.below(3) as u32 },
+            });
+        }
+        events.sort_by_key(|e| e.at_step);
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Bounded retry + exponential backoff for transient launch failures.
+/// Backoff is modeled µs, charged to the group step that paid it — the
+/// counting twin (`fusion_model.py`) mirrors the same formula.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryCfg {
+    /// Failed launches tolerated per fault event before it escalates
+    /// to a device death.
+    pub max_retries: u32,
+    /// First retry's backoff (µs); doubles on each further retry.
+    pub base_backoff_us: f64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        RetryCfg { max_retries: 3, base_backoff_us: 5.0 }
+    }
+}
+
+impl RetryCfg {
+    /// Total backoff paid for `failures` consecutive failed launches:
+    /// `base * (2^failures - 1)` — the sum of the exponential schedule
+    /// base, 2·base, 4·base, …
+    pub fn backoff_us(&self, failures: u32) -> f64 {
+        let f = failures.min(32);
+        self.base_backoff_us * ((1u64 << f) - 1) as f64
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_parses_and_sorts() {
+        let p = FaultPlan::parse("flaky:d1@7:x2, die:0@3").unwrap();
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent { device: 0, at_step: 3, kind: FaultKind::Death },
+                FaultEvent {
+                    device: 1,
+                    at_step: 7,
+                    kind: FaultKind::Transient { failures: 2 }
+                },
+            ]
+        );
+        assert_eq!(
+            FaultPlan::parse("flaky:2@5").unwrap().events[0].kind,
+            FaultKind::Transient { failures: 1 }
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_grammar_rejects_malformed_events() {
+        for (bad, needle) in [
+            ("die", "device@epoch"),
+            ("die:1", "no @epoch"),
+            ("die:x@3", "bad device"),
+            ("die:1@soon", "bad fault epoch"),
+            ("die:1@3:x2", "unexpected field"),
+            ("flaky:1@3:y2", "bad failure count"),
+            ("flaky:1@3:x0", "must be >= 1"),
+            ("flaky:1@3:x2:zz", "unexpected field"),
+            ("zap:1@3", "unknown fault kind"),
+            ("die:1@3,,die:0@4", "empty job token"),
+        ] {
+            let e = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(needle), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn random_plans_always_leave_a_survivor() {
+        for seed in 0..64 {
+            for devices in 1..=4usize {
+                let p = FaultPlan::random(seed, devices, 10);
+                let deaths: std::collections::BTreeSet<usize> = p
+                    .events
+                    .iter()
+                    .filter(|e| e.kind == FaultKind::Death)
+                    .map(|e| e.device)
+                    .collect();
+                assert!(deaths.len() < devices, "seed {seed}: all devices die");
+                for e in &p.events {
+                    assert!(e.device < devices);
+                    assert!(e.at_step < 10);
+                    if let FaultKind::Transient { failures } = e.kind {
+                        assert!(
+                            failures <= RetryCfg::default().max_retries,
+                            "random transients must not escalate to deaths"
+                        );
+                    }
+                }
+                assert!(p.events.windows(2).all(|w| w[0].at_step <= w[1].at_step));
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_follows_the_exponential_schedule() {
+        let r = RetryCfg::default();
+        assert_eq!(r.backoff_us(0), 0.0);
+        assert_eq!(r.backoff_us(1), 5.0);
+        assert_eq!(r.backoff_us(2), 15.0);
+        assert_eq!(r.backoff_us(3), 35.0);
+        assert!(r.backoff_us(64).is_finite(), "shift is clamped");
+    }
+
+    #[test]
+    fn outcomes_display_and_classify() {
+        assert!(Outcome::Done.is_done());
+        for (o, s) in [
+            (Outcome::Done, "done"),
+            (Outcome::Cancelled, "cancelled"),
+            (Outcome::DeadlineExceeded, "deadline-exceeded"),
+            (Outcome::Quarantined, "quarantined"),
+            (Outcome::Evacuated, "evacuated"),
+        ] {
+            assert_eq!(o.to_string(), s);
+            assert_eq!(o.is_done(), o == Outcome::Done);
+        }
+    }
+}

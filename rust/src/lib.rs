@@ -31,6 +31,14 @@
 //!   / least-live-lanes / app affinity), a lock-step group epoch loop
 //!   with a cross-device completion barrier, and epoch-boundary tenant
 //!   migration when live-lane load skews.
+//! * [`fault`] — the fault model the serving stack recovers with:
+//!   structured per-job [`fault::Outcome`]s (done / cancelled /
+//!   deadline-exceeded / quarantined / evacuated), deterministic
+//!   injectable device-fault schedules ([`fault::FaultPlan`]), and the
+//!   bounded retry + exponential-backoff policy for transient launch
+//!   failures. `sched` quarantines past deadlines/step budgets, `shard`
+//!   evacuates dead devices over the migration seam and elastically
+//!   shrinks the barrier tree.
 //! * [`session`] — the serving facade over all of the above:
 //!   [`session::Session`] hides the solo / fused / sharded split
 //!   behind one builder + `submit()/step()/poll()/drain()` API, with
@@ -58,6 +66,7 @@ pub mod baselines;
 pub mod benchkit;
 pub mod cilk;
 pub mod coordinator;
+pub mod fault;
 pub mod graph;
 pub mod runtime;
 pub mod sched;

@@ -29,6 +29,7 @@ use trees::benchkit::Table;
 use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use trees::graph::{gen, Csr};
 use trees::runtime::{load_manifest, Device};
+use trees::fault::FaultPlan;
 use trees::sched::{
     modeled_fused_us, modeled_solo_us, solo_profile, Fairness, Fuser, JobSpec,
     SchedConfig,
@@ -52,19 +53,23 @@ USAGE:
               [--capacity N] [--slice-cap N] [--max-active N]
               [--max-live-lanes N] [--fairness round-robin|weighted]
               [--devices N] [--placement round-robin|least-loaded|affinity]
-              [--skew T] [--no-rebalance]
+              [--skew T] [--no-rebalance] [--fault-plan <plan>]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
 
-JOB FEED (serve): comma/newline-separated app[:graph][:n][:seed][:wW][@E]
-tokens, e.g. --jobs fib:18:w4,mergesort:512@3,bfs:grid:5@10. `@E` is the
-arrival epoch: the job is submitted online once E shared epochs have
-run, exercising mid-run admission (no @ = epoch 0). `--spec-file -`
-reads the feed from stdin; `#` starts a comment. Jobs are instantiated
+JOB FEED (serve): comma/newline-separated
+app[:graph][:n][:seed][:wW][:dD][:sS][@E] tokens, e.g.
+--jobs fib:18:w4,mergesort:512@3,bfs:grid:5@10. `@E` is the arrival
+epoch: the job is submitted online once E shared epochs have run,
+exercising mid-run admission (no @ = epoch 0). `--spec-file -` reads
+the feed from stdin; `#` starts a comment. Jobs are instantiated
 lazily at submit time through a `trees::session::Session`. batch takes
 the same tokens without `@E`. (wW = fairness weight under --fairness
-weighted.)
+weighted; dD = deadline, evicted after D resident epochs; sS = step
+budget, quarantined after riding S epochs — the wedged-job guard.)
+A `!cancel jN@E` feed token cancels job N — ids are admission order —
+at epoch E; cancelling an unknown or finished job is a clean no-op.
 
 Admission backpressure: --max-active caps co-resident tenants,
 --max-live-lanes caps their summed live-lane demand (0 = uncapped) —
@@ -74,6 +79,13 @@ later submissions queue until resident demand drains.
 per-device epoch fusion, a lock-step group loop with a cross-device
 barrier, and epoch-boundary tenant migration when live-lane load skews
 past --skew (default 1.5; --no-rebalance pins placement).
+
+--fault-plan injects deterministic device faults at group-epoch
+boundaries: comma-separated die:D@E (device D dies before group epoch
+E) and flaky:D@E[:xK] (transient launch failure, K failures, bounded
+retry with exponential backoff; K past the retry budget escalates to a
+death). Dead devices evacuate their tenants to the least-loaded
+survivor; jobs finish with structured outcomes either way.
 "
 }
 
@@ -91,7 +103,7 @@ fn real_main() -> Result<()> {
             "n", "bucket", "seed", "graph", "scale", "steps", "jobs",
             "capacity", "slice-cap", "max-active", "max-live-lanes",
             "copies", "fairness", "devices", "placement", "skew",
-            "spec-file",
+            "spec-file", "fault-plan",
         ],
         &["trace", "verbose", "help", "no-rebalance"],
     )
@@ -354,15 +366,23 @@ fn serve(args: &Args) -> Result<()> {
     if arrivals.is_empty() {
         bail!("job feed is empty\n{}", usage());
     }
+    let fault = match args.get("fault-plan") {
+        Some(plan) => {
+            let p = FaultPlan::parse(plan)?;
+            if p.is_empty() { None } else { Some(p) }
+        }
+        None => None,
+    };
     // clamp like SessionBuilder::devices does, so the artifact gate and
     // the banner agree with the session actually built
     let devices =
         args.usize_or("devices", 1).map_err(anyhow::Error::msg)?.max(1);
     let mut builder = session_builder(args, false)?;
-    if devices == 1 {
+    if devices == 1 && fault.is_none() {
         // sharded serving stays on per-device interpreter engines
         // (per-app artifacts are single-device; the group model is
-        // what's under study there)
+        // what's under study there — and a fault plan forces the
+        // sharded backend even for one device)
         let art = trees::runtime::try_artifacts()
             .and_then(|(manifest, dir)| Ok((Device::cpu()?, manifest, dir)));
         match art {
@@ -375,6 +395,9 @@ fn serve(args: &Args) -> Result<()> {
             ),
         }
     }
+    if let Some(plan) = fault {
+        builder = builder.fault_plan(plan);
+    }
     let mut session = builder.build()?;
     println!(
         "serving {} arrival(s) over {} device(s):",
@@ -383,12 +406,15 @@ fn serve(args: &Args) -> Result<()> {
     );
     session.run_feed(
         &arrivals,
-        |id, a| {
-            println!("  @{:<4} admit {id}  {}", a.at_step, a.spec.label())
-        },
+        |id, a| println!("  @{:<4} admit {id}  {}", a.at_step, a.label()),
         |r| {
+            let tag = if r.job.outcome.is_done() {
+                String::new()
+            } else {
+                format!(" [{}]", r.job.outcome)
+            };
             println!(
-                "  @{:<4} done  {}  {} after {} epochs ({} stalls)",
+                "  @{:<4} done  {}  {}{tag} after {} epochs ({} stalls)",
                 r.at_step,
                 r.job.id,
                 r.job.label,
@@ -463,6 +489,28 @@ fn serve_report(session: &Session) {
             session.devices(),
             s.migrations,
             s.peak_imbalance,
+        );
+    }
+    let has_faults = st.cancelled
+        + st.deadline_exceeded
+        + st.quarantined
+        + st.evacuated
+        + st.device_deaths
+        + st.launch_retries
+        > 0;
+    if has_faults {
+        println!(
+            "faults: {} cancelled, {} deadline-exceeded, {} quarantined, \
+             {} evacuated dead-ends | {} device deaths, {} evacuations | \
+             {} launch retries ({:.1} us backoff)",
+            st.cancelled,
+            st.deadline_exceeded,
+            st.quarantined,
+            st.evacuated,
+            st.device_deaths,
+            st.evacuations,
+            st.launch_retries,
+            st.retry_backoff_us,
         );
     }
 }

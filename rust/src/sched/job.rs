@@ -3,10 +3,13 @@
 //! to verify the result afterwards.
 //!
 //! A job spec is a colon-separated token (the `trees serve --jobs`
-//! grammar): `app[:graph][:n][:seed][:wW]`, e.g. `fib:18`,
+//! grammar): `app[:graph][:n][:seed][:wW][:dD][:sS]`, e.g. `fib:18`,
 //! `mergesort:512`, `bfs:grid:5`, `sssp:rmat:6:7`, `nqueens:7`,
 //! `tsp:8`, `fib:18:w4` (fairness weight 4 — a latency tier under the
-//! `Weighted` policy).
+//! `Weighted` policy), `fib:18:d40` (deadline: evict with
+//! `Outcome::DeadlineExceeded` if still resident after 40 epochs),
+//! `spin:s30` (step budget: quarantine after riding 30 epochs — the
+//! guard that keeps a wedged job from stalling the feed).
 
 use std::sync::Arc;
 
@@ -41,6 +44,14 @@ pub struct JobSpec {
     /// Fairness weight (`wW` field): multiplies the slice cap under the
     /// `Weighted` policy. 1 = default batch tier.
     pub weight: u64,
+    /// Deadline epoch (`dD` field): a job still resident `D` epochs
+    /// after admission is evicted with `Outcome::DeadlineExceeded`.
+    /// 0 = no deadline.
+    pub deadline: u64,
+    /// Step budget (`sS` field): a job that *rides* more than `S`
+    /// shared epochs is quarantined (`Outcome::Quarantined`) — the
+    /// wedged-job guard. 0 = unbounded.
+    pub step_budget: u64,
 }
 
 impl JobSpec {
@@ -54,6 +65,8 @@ impl JobSpec {
         let mut ints: Vec<u64> = Vec::new();
         let mut graph = None;
         let mut weight = None;
+        let mut deadline = None;
+        let mut step_budget = None;
         for p in parts {
             if let Ok(v) = p.parse::<u64>() {
                 if ints.len() == 2 {
@@ -73,6 +86,28 @@ impl JobSpec {
                     bail!("weight must be >= 1 in job spec {tok:?}");
                 }
                 weight = Some(w);
+            } else if let Some(d) = p.strip_prefix('d').and_then(|s| s.parse::<u64>().ok()) {
+                if deadline.is_some() {
+                    bail!("duplicate deadline field in job spec {tok:?}");
+                }
+                if d == 0 {
+                    bail!(
+                        "deadline must be >= 1 in job spec {tok:?} \
+                         (dD = evict after D resident epochs)"
+                    );
+                }
+                deadline = Some(d);
+            } else if let Some(b) = p.strip_prefix('s').and_then(|s| s.parse::<u64>().ok()) {
+                if step_budget.is_some() {
+                    bail!("duplicate step-budget field in job spec {tok:?}");
+                }
+                if b == 0 {
+                    bail!(
+                        "step budget must be >= 1 in job spec {tok:?} \
+                         (sS = quarantine after riding S epochs)"
+                    );
+                }
+                step_budget = Some(b);
             } else {
                 bail!("unrecognized job-spec field {p:?} in {tok:?}");
             }
@@ -83,6 +118,8 @@ impl JobSpec {
             seed: ints.get(1).copied().unwrap_or(42),
             graph,
             weight: weight.unwrap_or(1),
+            deadline: deadline.unwrap_or(0),
+            step_budget: step_budget.unwrap_or(0),
         })
     }
 
@@ -117,9 +154,24 @@ impl JobSpec {
 
     /// Build the graph instance for bfs/sssp specs (shared by both
     /// engines so `--jobs bfs:grid:5` means the same problem on each).
+    /// Scales are bounded: a feed token must not be able to ask the
+    /// server for a 2^60-vertex graph.
     pub fn build_graph(&self) -> Result<Csr> {
         let scale = self.effective_n();
-        Ok(match self.graph.as_deref().unwrap_or("grid") {
+        let kind = self.graph.as_deref().unwrap_or("grid");
+        match kind {
+            "rmat" | "uniform" if scale > 12 => bail!(
+                "graph scale {scale} too large for {kind} in job spec \
+                 {:?} (max 12 = 4096 vertices)",
+                self.label()
+            ),
+            "grid" if scale > 64 => bail!(
+                "grid side {scale} too large in job spec {:?} (max 64)",
+                self.label()
+            ),
+            _ => {}
+        }
+        Ok(match kind {
             "rmat" => gen::rmat(scale as u32, 8, 10, self.seed),
             "grid" => gen::grid2d(scale, 10, self.seed),
             "uniform" => gen::uniform(1 << scale, 4, 10, self.seed),
@@ -140,7 +192,22 @@ impl JobSpec {
         if self.weight > 1 {
             s.push_str(&format!(":w{}", self.weight));
         }
+        if self.deadline != 0 {
+            s.push_str(&format!(":d{}", self.deadline));
+        }
+        if self.step_budget != 0 {
+            s.push_str(&format!(":s{}", self.step_budget));
+        }
         s
+    }
+
+    /// The per-job limits a tenant carries into the scheduler.
+    pub fn limits(&self) -> JobLimits {
+        JobLimits {
+            weight: self.weight.max(1),
+            deadline: self.deadline,
+            step_budget: self.step_budget,
+        }
     }
 
     /// Build the tenant: program + initial machine image + verifier.
@@ -149,9 +216,17 @@ impl JobSpec {
         Ok(match self.app.as_str() {
             "fib" => {
                 let n = self.effective_n() as u32;
+                if n > 32 {
+                    bail!(
+                        "fib: n={n} too large for a served job (max 32; \
+                         capacity grows as fib(n) itself)"
+                    );
+                }
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
+                    deadline: self.deadline,
+                    step_budget: self.step_budget,
                     prog: Arc::new(Fib),
                     kind: AppKind::Fib { n },
                     init: JobInit {
@@ -169,6 +244,8 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
+                    deadline: self.deadline,
+                    step_budget: self.step_budget,
                     prog: Arc::new(NQueens),
                     kind: AppKind::NQueens { n },
                     init: JobInit {
@@ -189,6 +266,8 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
+                    deadline: self.deadline,
+                    step_budget: self.step_budget,
                     prog: Arc::new(Tsp),
                     kind: AppKind::Tsp { dist, n },
                     init: JobInit {
@@ -202,6 +281,13 @@ impl JobSpec {
             }
             "mergesort" | "msort" => {
                 let n = self.effective_n();
+                if n > 1 << 22 {
+                    bail!(
+                        "mergesort: n={n} too large for a served job \
+                         (max {})",
+                        1 << 22
+                    );
+                }
                 let mut rng = Rng::new(self.seed);
                 let data: Vec<f32> = (0..n).map(|_| rng.f32() * 1000.0).collect();
                 let nmax = n.next_power_of_two().max(G);
@@ -211,6 +297,8 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
+                    deadline: self.deadline,
+                    step_budget: self.step_budget,
                     prog: Arc::new(MSort { nmax, use_map: false }),
                     kind: AppKind::MergeSort { nmax, n2, n },
                     init: JobInit {
@@ -235,6 +323,8 @@ impl JobSpec {
                 JobBuild {
                     label,
                     weight: self.weight.max(1),
+                    deadline: self.deadline,
+                    step_budget: self.step_budget,
                     kind: AppKind::Graph { weighted, nv, want },
                     init: JobInit {
                         capacity,
@@ -246,9 +336,22 @@ impl JobSpec {
                     prog: Arc::new(GraphSp { lay }),
                 }
             }
+            "spin" => JobBuild {
+                label,
+                weight: self.weight.max(1),
+                deadline: self.deadline,
+                step_budget: self.step_budget,
+                prog: Arc::new(Spin),
+                kind: AppKind::Spin,
+                init: JobInit {
+                    capacity: 64,
+                    init_args: vec![0],
+                    ..Default::default()
+                },
+            },
             other => bail!(
                 "no fused-job builder for app {other:?} \
-                 (have: fib, nqueens, tsp, mergesort, bfs, sssp)"
+                 (have: fib, nqueens, tsp, mergesort, bfs, sssp, spin)"
             ),
         })
     }
@@ -269,6 +372,45 @@ pub(crate) fn split_tokens(s: &str) -> Result<Vec<&str>> {
             Ok(t)
         })
         .collect()
+}
+
+/// Per-job scheduling limits that travel with a tenant wherever it
+/// runs (admission, migration, evacuation): fairness weight plus the
+/// fault-tolerance bounds. `0` means "no limit" for the bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobLimits {
+    /// Fairness weight under the `Weighted` policy (>= 1).
+    pub weight: u64,
+    /// Evict with `Outcome::DeadlineExceeded` after this many resident
+    /// epochs (0 = no deadline).
+    pub deadline: u64,
+    /// Quarantine after riding this many shared epochs (0 = unbounded)
+    /// — the wedged-job guard.
+    pub step_budget: u64,
+}
+
+impl Default for JobLimits {
+    fn default() -> Self {
+        JobLimits { weight: 1, deadline: 0, step_budget: 0 }
+    }
+}
+
+/// A deliberately non-terminating program: its single task re-joins
+/// itself every epoch (one lane, no allocation), so it never halts.
+/// Exists to exercise the fault layer — a `spin:sS` job must be
+/// quarantined by its step budget instead of wedging `run_feed` for
+/// every other tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct Spin;
+
+impl TvmProgram for Spin {
+    fn num_task_types(&self) -> usize {
+        1
+    }
+
+    fn run_task(&self, _tid: usize, args: &[i32], ctx: &mut crate::tvm::TaskCtx) {
+        ctx.join(1, vec![args.first().copied().unwrap_or(0).wrapping_add(1)]);
+    }
 }
 
 /// Initial machine image of a tenant (its private heap segment and
@@ -308,6 +450,10 @@ pub struct JobBuild {
     pub kind: AppKind,
     /// Fairness weight under the `Weighted` policy (1 = batch tier).
     pub weight: u64,
+    /// Deadline epoch (0 = none); see [`JobSpec::deadline`].
+    pub deadline: u64,
+    /// Riding budget (0 = unbounded); see [`JobSpec::step_budget`].
+    pub step_budget: u64,
 }
 
 impl JobBuild {
@@ -315,6 +461,15 @@ impl JobBuild {
     /// run or a scheduler tenant executes.
     pub fn machine(&self) -> Machine {
         self.init.machine(self.prog.clone())
+    }
+
+    /// The limits a tenant built from this spec carries.
+    pub fn limits(&self) -> JobLimits {
+        JobLimits {
+            weight: self.weight.max(1),
+            deadline: self.deadline,
+            step_budget: self.step_budget,
+        }
     }
 }
 
@@ -326,6 +481,8 @@ pub enum AppKind {
     Tsp { dist: Vec<i32>, n: usize },
     MergeSort { nmax: usize, n2: usize, n: usize },
     Graph { weighted: bool, nv: usize, want: Vec<i32> },
+    /// The non-terminating fault-layer fixture; has no oracle.
+    Spin,
 }
 
 impl AppKind {
@@ -368,6 +525,11 @@ impl AppKind {
                         .to_string())
                 }
             }
+            AppKind::Spin => Err(
+                "spin never halts; a halted spin machine means the \
+                 scheduler ran something it should have quarantined"
+                    .to_string(),
+            ),
         }
     }
 
@@ -390,6 +552,7 @@ impl AppKind {
                     if *weighted { "sssp" } else { "bfs" }
                 )
             }
+            AppKind::Spin => "spin (non-terminating)".to_string(),
         }
     }
 }
@@ -435,6 +598,63 @@ mod tests {
     }
 
     #[test]
+    fn parses_limit_fields() {
+        let s = JobSpec::parse("fib:18:w4:d40:s100").unwrap();
+        assert_eq!((s.weight, s.deadline, s.step_budget), (4, 40, 100));
+        assert_eq!(s.label(), "fib:18:w4:d40:s100");
+        assert_eq!(
+            s.limits(),
+            JobLimits { weight: 4, deadline: 40, step_budget: 100 }
+        );
+        let plain = JobSpec::parse("fib:18").unwrap();
+        assert_eq!((plain.deadline, plain.step_budget), (0, 0));
+        assert_eq!(plain.limits(), JobLimits::default());
+
+        for (bad, needle) in [
+            ("fib:d0", "deadline must be >= 1"),
+            ("fib:s0", "step budget must be >= 1"),
+            ("fib:d4:d5", "duplicate deadline"),
+            ("fib:s4:s5", "duplicate step-budget"),
+            ("fib:d4x", "unrecognized job-spec field"),
+        ] {
+            let e = JobSpec::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(needle), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_specs_are_rejected_with_actionable_errors() {
+        // a feed token must not be able to allocate the world
+        for (bad, needle) in [
+            ("fib:33", "max 32"),
+            ("mergesort:8388609", "too large"),
+            ("bfs:rmat:13", "max 12"),
+            ("bfs:uniform:20", "max 12"),
+            ("bfs:grid:65", "max 64"),
+        ] {
+            let e = JobSpec::parse(bad)
+                .unwrap()
+                .instantiate()
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains(needle), "{bad}: {e}");
+        }
+        assert!(JobSpec::parse("bfs:grid:8").unwrap().instantiate().is_ok());
+    }
+
+    #[test]
+    fn spin_builds_and_never_halts() {
+        let b = JobSpec::parse("spin").unwrap().instantiate().unwrap();
+        let mut m = b.machine();
+        for _ in 0..50 {
+            m.step();
+        }
+        assert!(!m.halted(), "spin must still be running after 50 epochs");
+        assert!(b.kind.verify(&m).is_err(), "spin has no success oracle");
+        assert_eq!(b.kind.describe(&m), "spin (non-terminating)");
+    }
+
+    #[test]
     fn label_round_trips_with_and_without_weight() {
         for tok in [
             "fib:18",
@@ -444,6 +664,9 @@ mod tests {
             "nqueens:7:w2",
             "bfs:grid:5",
             "tsp",
+            "fib:18:d40",
+            "spin:s30",
+            "fib:18:w4:d40:s100",
         ] {
             let s = JobSpec::parse(tok).unwrap();
             let rt = JobSpec::parse(&s.label()).unwrap();
@@ -451,6 +674,8 @@ mod tests {
             assert_eq!(rt.n, s.n, "{tok}");
             assert_eq!(rt.graph, s.graph, "{tok}");
             assert_eq!(rt.weight, s.weight, "{tok}");
+            assert_eq!(rt.deadline, s.deadline, "{tok}");
+            assert_eq!(rt.step_budget, s.step_budget, "{tok}");
             assert_eq!(rt.label(), s.label(), "{tok}: label is a fixpoint");
         }
     }

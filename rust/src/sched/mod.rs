@@ -48,7 +48,7 @@ mod policy;
 mod stats;
 
 pub use fuse::{Front, FusedFrame, Fuser, Slice, FALLBACK_BUCKET};
-pub use job::{AppKind, JobBuild, JobId, JobInit, JobSpec};
+pub use job::{AppKind, JobBuild, JobId, JobInit, JobLimits, JobSpec, Spin};
 pub(crate) use job::split_tokens;
 pub use policy::{Fairness, RoundRobin, Weighted};
 pub use stats::{
@@ -64,6 +64,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, GatherFn, RunCtx, TvState, Workload};
+use crate::fault::Outcome;
 use crate::tvm::{Machine, TvmProgram};
 
 /// Scheduler tunables.
@@ -252,6 +253,16 @@ pub struct Tenant {
     pub kind: Option<AppKind>,
     /// Fairness weight under [`Fairness::Weighted`] (1 = batch tier).
     pub weight: u64,
+    /// Deadline in resident epochs (0 = none): once `age` reaches this,
+    /// the tenant is evicted with [`Outcome::DeadlineExceeded`].
+    pub deadline: u64,
+    /// Budget of epochs actually ridden (0 = unbounded): exceeded means
+    /// [`Outcome::Quarantined`] — the wedged-job guard.
+    pub step_budget: u64,
+    /// Epochs this tenant has been resident (active or queued), summed
+    /// across every scheduler it has lived on — deadlines survive
+    /// migration and evacuation.
+    pub age: u64,
 }
 
 impl Tenant {
@@ -261,13 +272,17 @@ impl Tenant {
     /// read (its program `Arc` is shared into the machine): the caller
     /// may drop it right after, or admit it again for another run.
     pub fn from_build(id: JobId, b: &JobBuild) -> Tenant {
+        let l = b.limits();
         Tenant {
             id,
             label: b.label.clone(),
             engine: Engine::Interp(b.machine()),
             stats: JobStats::default(),
             kind: Some(b.kind.clone()),
-            weight: b.weight.max(1),
+            weight: l.weight,
+            deadline: l.deadline,
+            step_budget: l.step_budget,
+            age: 0,
         }
     }
 
@@ -280,7 +295,7 @@ impl Tenant {
         label: &str,
         co: &Arc<Coordinator>,
         w: &Workload,
-        weight: u64,
+        limits: JobLimits,
     ) -> Tenant {
         let st = co.init_state(w);
         let rc = co.begin_run(&st);
@@ -290,7 +305,10 @@ impl Tenant {
             engine: Engine::Artifact { co: co.clone(), st, gather: w.gather, rc },
             stats: JobStats::default(),
             kind: None,
-            weight: weight.max(1),
+            weight: limits.weight.max(1),
+            deadline: limits.deadline,
+            step_budget: limits.step_budget,
+            age: 0,
         }
     }
 
@@ -314,6 +332,11 @@ pub struct FinishedJob {
     pub stats: JobStats,
     pub kind: Option<AppKind>,
     pub engine: Engine,
+    /// How the job left the scheduler. Anything but [`Outcome::Done`]
+    /// is a structured early exit (cancelled / deadline-exceeded /
+    /// quarantined / evacuated): the engine holds mid-run state and
+    /// result oracles must not be consulted.
+    pub outcome: Outcome,
 }
 
 /// Co-schedules many concurrent jobs into shared epochs.
@@ -362,10 +385,15 @@ impl FusedScheduler {
         prog: Arc<dyn TvmProgram>,
         init: &JobInit,
     ) -> JobId {
-        self.admit_engine(label, Engine::Interp(init.machine(prog)), None, 1)
+        self.admit_engine(
+            label,
+            Engine::Interp(init.machine(prog)),
+            None,
+            JobLimits::default(),
+        )
     }
 
-    /// Admit a [`JobBuild`] (carries its verifier and weight along).
+    /// Admit a [`JobBuild`] (carries its verifier and limits along).
     /// Only reads the build — its program `Arc` is shared into the
     /// tenant's machine, so the build need not outlive the scheduler.
     pub fn admit_build(&mut self, b: &JobBuild) -> JobId {
@@ -373,19 +401,19 @@ impl FusedScheduler {
             &b.label,
             Engine::Interp(b.machine()),
             Some(b.kind.clone()),
-            b.weight,
+            b.limits(),
         )
     }
 
     /// Admit an artifact-engine tenant (AOT epoch-step execution).
-    /// `weight` is the fairness weight (`JobSpec::weight`, 1 = batch
-    /// tier) — same meaning as on the interpreter engine.
+    /// `limits` carries the fairness weight plus deadline/step budget
+    /// (`JobSpec::limits()`) — same meaning as on the interp engine.
     pub fn admit_artifact(
         &mut self,
         label: &str,
         co: &Arc<Coordinator>,
         w: &Workload,
-        weight: u64,
+        limits: JobLimits,
     ) -> JobId {
         let st = co.init_state(w);
         let rc = co.begin_run(&st);
@@ -393,7 +421,7 @@ impl FusedScheduler {
             label,
             Engine::Artifact { co: co.clone(), st, gather: w.gather, rc },
             None,
-            weight,
+            limits,
         )
     }
 
@@ -402,7 +430,7 @@ impl FusedScheduler {
         label: &str,
         engine: Engine,
         kind: Option<AppKind>,
-        weight: u64,
+        limits: JobLimits,
     ) -> JobId {
         let id = JobId(self.next_id);
         self.next_id += 1;
@@ -412,7 +440,10 @@ impl FusedScheduler {
             engine,
             stats: JobStats::default(),
             kind,
-            weight: weight.max(1),
+            weight: limits.weight.max(1),
+            deadline: limits.deadline,
+            step_budget: limits.step_budget,
+            age: 0,
         });
         id
     }
@@ -457,12 +488,15 @@ impl FusedScheduler {
 
     /// Remove a job from this scheduler, returning the live tenant with
     /// its machine state intact (the eviction half of migration). The
-    /// fairness cursor keeps pointing at the same successor. `None` if
+    /// fairness cursor keeps pointing at the same successor, and the
+    /// headroom the evictee releases activates queued tenants
+    /// *immediately* — backpressure must never count ghosts. `None` if
     /// the id is not resident here.
     pub fn evict(&mut self, id: JobId) -> Option<Tenant> {
         if let Some(pos) = self.active.iter().position(|t| t.id == id) {
             let t = self.active.remove(pos);
             self.policy.retire(pos);
+            self.admit_from_queue();
             return Some(t);
         }
         if let Some(pos) = self.pending.iter().position(|t| t.id == id) {
@@ -471,16 +505,76 @@ impl FusedScheduler {
         None
     }
 
+    /// Evict every resident tenant — active first (fairness order),
+    /// then the pending queue — with machine state intact. This is the
+    /// evacuation half of device death in the shard group: the caller
+    /// re-admits the tenants elsewhere over [`admit_tenant`]
+    /// (Self::admit_tenant), exactly like migration.
+    pub fn drain_tenants(&mut self) -> Vec<Tenant> {
+        let mut out = Vec::with_capacity(self.active.len() + self.pending.len());
+        while !self.active.is_empty() {
+            out.push(self.active.remove(0));
+            self.policy.retire(0);
+        }
+        while let Some(t) = self.pending.pop_front() {
+            out.push(t);
+        }
+        out
+    }
+
+    /// Retire a tenant with a structured outcome: count it in
+    /// [`FusedStats`], build the [`FinishedJob`], fire the completion
+    /// callback, and record it. The normal completion sweep uses
+    /// [`Outcome::Done`]; the fault layer (cancellation, deadlines,
+    /// quarantine, evacuation dead-ends) supplies the rest.
+    pub fn finish_tenant(&mut self, t: Tenant, outcome: Outcome) {
+        match outcome {
+            Outcome::Done => self.stats.jobs_completed += 1,
+            Outcome::Cancelled => self.stats.jobs_cancelled += 1,
+            Outcome::DeadlineExceeded => self.stats.jobs_deadline_exceeded += 1,
+            Outcome::Quarantined => self.stats.jobs_quarantined += 1,
+            Outcome::Evacuated => self.stats.jobs_evacuated += 1,
+        }
+        let fj = FinishedJob {
+            id: t.id,
+            label: t.label,
+            stats: t.stats,
+            kind: t.kind,
+            engine: t.engine,
+            outcome,
+        };
+        if let Some(cb) = &mut self.on_complete {
+            cb(&fj);
+        }
+        self.finished.push(fj);
+    }
+
+    /// Cancel a resident job: evict it (active or pending) and retire
+    /// it with [`Outcome::Cancelled`], freeing its slot and lanes
+    /// immediately. Returns `false` when the id is not resident here —
+    /// double-cancel and cancel-of-finished are clean no-ops.
+    pub fn cancel(&mut self, id: JobId) -> bool {
+        match self.evict(id) {
+            Some(t) => {
+                self.finish_tenant(t, Outcome::Cancelled);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Activate queued tenants in FIFO order while both admission gates
     /// (tenant count, live-lane demand) allow — never reordering past a
     /// blocked head, which would starve wide tenants behind narrow ones.
     fn admit_from_queue(&mut self) {
-        while let Some(t) = self.pending.front() {
-            if !self.can_admit(t.live_load()) {
-                break;
+        loop {
+            match self.pending.front() {
+                Some(t) if self.can_admit(t.live_load()) => {}
+                _ => break,
             }
-            let t = self.pending.pop_front().expect("front exists");
-            self.active.push(t);
+            if let Some(t) = self.pending.pop_front() {
+                self.active.push(t);
+            }
         }
     }
 
@@ -580,18 +674,50 @@ impl FusedScheduler {
             if self.active[i].engine.halted() {
                 let t = self.active.remove(i);
                 self.policy.retire(i);
-                self.stats.jobs_completed += 1;
-                let fj = FinishedJob {
-                    id: t.id,
-                    label: t.label,
-                    stats: t.stats,
-                    kind: t.kind,
-                    engine: t.engine,
+                self.finish_tenant(t, Outcome::Done);
+            } else {
+                i += 1;
+            }
+        }
+
+        // ---- deadlines and step budgets (the fault seam) ----
+        // Residency clocks tick for queued tenants too: a deadline is a
+        // promise about epochs since admission, not epochs of service.
+        // Done wins ties — the completion sweep above already retired
+        // anything that halted this step.
+        for t in &mut self.active {
+            t.age += 1;
+        }
+        for t in &mut self.pending {
+            t.age += 1;
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            let t = &self.active[i];
+            let past_deadline = t.deadline > 0 && t.age >= t.deadline;
+            let past_budget =
+                t.step_budget > 0 && t.stats.steps_ridden >= t.step_budget;
+            if past_deadline || past_budget {
+                let t = self.active.remove(i);
+                self.policy.retire(i);
+                let outcome = if past_deadline {
+                    Outcome::DeadlineExceeded
+                } else {
+                    Outcome::Quarantined
                 };
-                if let Some(cb) = &mut self.on_complete {
-                    cb(&fj);
+                self.finish_tenant(t, outcome);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.pending.len() {
+            let past = self.pending[i].deadline > 0
+                && self.pending[i].age >= self.pending[i].deadline;
+            if past {
+                if let Some(t) = self.pending.remove(i) {
+                    self.finish_tenant(t, Outcome::DeadlineExceeded);
                 }
-                self.finished.push(fj);
             } else {
                 i += 1;
             }
@@ -824,6 +950,107 @@ mod tests {
         solo.admit_build(&wide[0]);
         solo.run_to_completion().unwrap();
         assert_eq!(solo.finished().len(), 1);
+    }
+
+    #[test]
+    fn evict_releases_headroom_and_activates_pending_immediately() {
+        // regression (ISSUE 6 satellite): a wide resident tenant pins a
+        // narrow arrival in pending under a tight lane cap; evicting the
+        // wide one mid-epoch must release its live-lane headroom and
+        // activate the queued tenant *without waiting for a step* —
+        // backpressure must never count ghosts.
+        let bs = builds(&["fib:12", "fib:8"]);
+        let cfg = SchedConfig {
+            max_live_lanes: 4,
+            fairness: Fairness::Weighted,
+            ..Default::default()
+        };
+        let mut sched = FusedScheduler::new(cfg);
+        let wide = sched.admit_build(&bs[0]);
+        while sched.live_lanes() <= 4 {
+            sched.step().unwrap();
+        }
+        sched.admit_build(&bs[1]);
+        assert_eq!((sched.active_count(), sched.pending_count()), (1, 1));
+        assert!(!sched.can_admit(1), "cap is saturated before the evict");
+
+        let moved = sched.evict(wide).expect("wide tenant is resident");
+        assert!(moved.stats.steps_ridden > 0);
+        assert_eq!(
+            (sched.active_count(), sched.pending_count()),
+            (1, 0),
+            "eviction must activate the queued tenant immediately"
+        );
+        assert!(
+            sched.admit_headroom().is_some(),
+            "released lanes are visible to admission at once"
+        );
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 1);
+        assert!(sched.finished()[0].outcome.is_done());
+    }
+
+    #[test]
+    fn deadline_and_budget_retire_with_structured_outcomes() {
+        // fib:14 runs 27 epochs; a d5 deadline cuts it off, an s6 budget
+        // quarantines it, and generous limits leave it untouched.
+        let bs =
+            builds(&["fib:14:d5", "fib:14:s6", "fib:14:d500:s600", "spin:s9"]);
+        let mut sched = FusedScheduler::new(SchedConfig::default());
+        for b in &bs {
+            sched.admit_build(b);
+        }
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.finished().len(), 4);
+        for fj in sched.finished() {
+            let want = match fj.label.as_str() {
+                "fib:14:d5" => Outcome::DeadlineExceeded,
+                "fib:14:s6" => Outcome::Quarantined,
+                "fib:14:d500:s600" => Outcome::Done,
+                "spin:s9" => Outcome::Quarantined,
+                other => panic!("unexpected label {other}"),
+            };
+            assert_eq!(fj.outcome, want, "{}", fj.label);
+        }
+        let s = sched.stats();
+        assert_eq!(
+            (s.jobs_completed, s.jobs_deadline_exceeded, s.jobs_quarantined),
+            (1, 1, 2)
+        );
+        // the survivor still verifies: limits never touch tenant state
+        let done = sched
+            .finished()
+            .iter()
+            .find(|f| f.outcome.is_done())
+            .unwrap();
+        done.kind
+            .as_ref()
+            .unwrap()
+            .verify(done.engine.machine().unwrap())
+            .unwrap();
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_frees_the_slot() {
+        let bs = builds(&["fib:12", "fib:10"]);
+        let mut sched = FusedScheduler::new(SchedConfig::default());
+        let ids: Vec<JobId> = bs.iter().map(|b| sched.admit_build(b)).collect();
+        for _ in 0..3 {
+            sched.step().unwrap();
+        }
+        assert!(sched.cancel(ids[0]), "first cancel hits");
+        assert!(!sched.cancel(ids[0]), "double-cancel is a clean no-op");
+        assert_eq!(sched.active_count(), 1);
+        sched.run_to_completion().unwrap();
+        assert!(
+            !sched.cancel(ids[1]),
+            "cancel-of-finished is a clean no-op"
+        );
+        assert_eq!(sched.finished().len(), 2);
+        let cancelled =
+            sched.finished().iter().find(|f| f.id == ids[0]).unwrap();
+        assert_eq!(cancelled.outcome, Outcome::Cancelled);
+        assert_eq!(sched.stats().jobs_cancelled, 1);
     }
 
     #[test]

@@ -67,6 +67,17 @@ pub struct FusedStats {
     pub peak_window: usize,
     pub peak_active: usize,
     pub jobs_completed: u64,
+    /// Jobs retired by explicit cancellation (`Outcome::Cancelled`).
+    pub jobs_cancelled: u64,
+    /// Jobs evicted past their deadline epoch
+    /// (`Outcome::DeadlineExceeded`).
+    pub jobs_deadline_exceeded: u64,
+    /// Jobs that outran their step budget (`Outcome::Quarantined` —
+    /// the wedged-job guard).
+    pub jobs_quarantined: u64,
+    /// Jobs retired as evacuation dead-ends: their device died with no
+    /// live device left to receive them (`Outcome::Evacuated`).
+    pub jobs_evacuated: u64,
     /// Per-step trace (enabled by `SchedConfig::trace`).
     pub trace: Vec<StepTrace>,
 }

@@ -33,51 +33,98 @@
 //! (`app[:…]@epoch` tokens from `--jobs`, a `--spec-file`, or stdin)
 //! is replayed against the session clock by [`Session::run_feed`],
 //! submitting jobs between epochs exactly when their arrival step
-//! comes up.
+//! comes up. Fault tolerance rides the same boundary: per-job
+//! deadlines and step budgets ([`JobSpec`] `dD`/`sS` fields), explicit
+//! cancellation ([`Session::cancel`], `!cancel jN@E` feed tokens), and
+//! an injectable device-[`FaultPlan`] with bounded-retry recovery —
+//! every completion carries a structured [`crate::fault::Outcome`].
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::apps;
 use crate::coordinator::{Coordinator, CoordinatorConfig, Workload};
+use crate::fault::{FaultPlan, RetryCfg};
 use crate::runtime::{AppManifest, Device, Manifest};
 use crate::sched::{
     Fairness, FinishedJob, FusedScheduler, FusedStats, Fuser, JobBuild, JobId,
-    JobSpec, SchedConfig,
+    JobLimits, JobSpec, SchedConfig,
 };
 use crate::shard::{
     DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup, ShardStats,
 };
 use crate::util::rng::Rng;
 
-/// One parsed feed token: a job spec plus the session step at which it
-/// arrives (`fib:18:w2@5` → submit once 5 shared epochs have run;
-/// no `@` means epoch 0).
+/// Feed arrival epochs beyond this are almost certainly typos (a fat-
+/// fingered `@` epoch would fast-forward the session clock into a
+/// near-infinite idle spin in modeled time).
+const MAX_ARRIVAL_EPOCH: u64 = 1_000_000_000;
+
+/// What a feed token asks the session to do when its step comes up.
+#[derive(Debug, Clone)]
+pub enum ArrivalKind {
+    /// Instantiate and admit a job.
+    Submit(JobSpec),
+    /// Cancel a previously admitted job (ids are admission order:
+    /// `j0` is the feed's first submit). Cancelling an unknown or
+    /// already-finished job is a clean no-op.
+    Cancel(JobId),
+}
+
+/// One parsed feed token: an action plus the session step at which it
+/// fires (`fib:18:w2@5` → submit once 5 shared epochs have run;
+/// `!cancel j0@9` → cancel job 0 at epoch 9; no `@` means epoch 0).
 #[derive(Debug, Clone)]
 pub struct Arrival {
-    pub spec: JobSpec,
-    /// Session epoch clock value at (or after) which the job is
-    /// submitted.
+    pub kind: ArrivalKind,
+    /// Session epoch clock value at (or after) which the action fires.
     pub at_step: u64,
 }
 
 impl Arrival {
-    /// Parse one `spec[@epoch]` token.
+    /// A submit arrival (the common case; tests and generators).
+    pub fn submit(spec: JobSpec, at_step: u64) -> Arrival {
+        Arrival { kind: ArrivalKind::Submit(spec), at_step }
+    }
+
+    /// What this arrival does, for logs: the job label, or
+    /// `"!cancel jN"`.
+    pub fn label(&self) -> String {
+        match &self.kind {
+            ArrivalKind::Submit(spec) => spec.label(),
+            ArrivalKind::Cancel(id) => format!("!cancel {id}"),
+        }
+    }
+
+    /// Parse one `spec[@epoch]` or `!directive[@epoch]` token.
     pub fn parse(tok: &str) -> Result<Arrival> {
-        let (spec_tok, at_step) = match tok.rsplit_once('@') {
+        let (action_tok, at_step) = match tok.rsplit_once('@') {
             Some((s, e)) => {
                 let at = e.trim().parse::<u64>().map_err(|_| {
-                    anyhow::anyhow!(
-                        "bad arrival epoch {e:?} in {tok:?} (want spec@N)"
-                    )
+                    anyhow!("bad arrival epoch {e:?} in {tok:?} (want spec@N)")
                 })?;
+                if at > MAX_ARRIVAL_EPOCH {
+                    bail!(
+                        "arrival epoch {at} in {tok:?} is out of range \
+                         (max {MAX_ARRIVAL_EPOCH})"
+                    );
+                }
                 (s, at)
             }
             None => (tok, 0),
         };
-        Ok(Arrival { spec: JobSpec::parse(spec_tok.trim())?, at_step })
+        let action_tok = action_tok.trim();
+        if let Some(directive) = action_tok.strip_prefix('!') {
+            return Ok(Arrival {
+                kind: parse_directive(directive, tok)?,
+                at_step,
+            });
+        }
+        Ok(Arrival::submit(JobSpec::parse(action_tok)?, at_step))
     }
 
     /// Parse a whole feed: comma- and newline-separated `spec[@epoch]`
@@ -101,6 +148,33 @@ impl Arrival {
     }
 }
 
+/// Parse the body of a `!`-prefixed feed token (`directive` has the
+/// `!` stripped; `tok` is the original token, for error context).
+fn parse_directive(directive: &str, tok: &str) -> Result<ArrivalKind> {
+    let mut parts = directive.split_whitespace();
+    match parts.next().unwrap_or("") {
+        "cancel" => {
+            let id_tok = parts.next().ok_or_else(|| {
+                anyhow!(
+                    "!cancel in {tok:?} is missing a job id \
+                     (want !cancel jN@E)"
+                )
+            })?;
+            let digits = id_tok.strip_prefix('j').unwrap_or(id_tok);
+            let id = digits.parse::<usize>().map_err(|_| {
+                anyhow!("bad job id {id_tok:?} in {tok:?} (want j0, j1, …)")
+            })?;
+            if let Some(extra) = parts.next() {
+                bail!("unexpected {extra:?} after the !cancel id in {tok:?}");
+            }
+            Ok(ArrivalKind::Cancel(JobId(id)))
+        }
+        other => {
+            bail!("unknown feed directive {other:?} in {tok:?} (have: !cancel)")
+        }
+    }
+}
+
 /// AOT execution configuration: artifacts to serve from, and the
 /// device to compile them on.
 struct ArtifactEngine {
@@ -116,6 +190,8 @@ pub struct SessionBuilder {
     placement: PlacementKind,
     rebalance: RebalanceCfg,
     artifacts: Option<ArtifactEngine>,
+    fault: Option<FaultPlan>,
+    retry: RetryCfg,
 }
 
 impl Default for SessionBuilder {
@@ -126,6 +202,8 @@ impl Default for SessionBuilder {
             placement: PlacementKind::RoundRobin,
             rebalance: RebalanceCfg::default(),
             artifacts: None,
+            fault: None,
+            retry: RetryCfg::default(),
         }
     }
 }
@@ -194,6 +272,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Inject a device-fault schedule (deaths + transient launch
+    /// failures, fired at group-epoch boundaries). Forces the sharded
+    /// backend even for one device, so the fault seam always exists.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Transient-launch-failure retry policy (bounded retries with
+    /// exponential backoff in modeled µs).
+    pub fn retry(mut self, cfg: RetryCfg) -> Self {
+        self.retry = cfg;
+        self
+    }
+
     /// Serve submits through AOT artifact coordinators compiled on
     /// `dev` (built lazily, one per submit). A submit whose app has no
     /// artifact falls back to the interpreter engine for that job —
@@ -238,12 +331,14 @@ impl SessionBuilder {
                 .context("artifact manifest exposes no usable window buckets")?;
             sched.buckets = buckets;
         }
-        let backend = if self.devices > 1 {
+        let backend = if self.devices > 1 || self.fault.is_some() {
             Backend::Sharded(ShardGroup::new(ShardConfig {
                 devices: self.devices,
                 placement: self.placement,
                 rebalance: self.rebalance,
                 sched,
+                fault: self.fault,
+                retry: self.retry,
             }))
         } else {
             Backend::Fused(FusedScheduler::new(sched))
@@ -277,8 +372,13 @@ pub struct SessionResult {
 impl SessionResult {
     /// One-line result summary, verified against the app's oracle when
     /// the job ran on the interpreter engine: `"fib(18) = 2584 [ok]"`,
-    /// or the raw root result for artifact tenants.
+    /// or the raw root result for artifact tenants. Jobs that did not
+    /// run to completion report their outcome instead — a cancelled or
+    /// quarantined job has no answer to verify.
     pub fn summary(&self) -> String {
+        if !self.job.outcome.is_done() {
+            return format!("{} [{}]", self.job.label, self.job.outcome);
+        }
         match (&self.job.kind, self.job.engine.machine()) {
             (Some(k), Some(m)) => {
                 let check = match k.verify(m) {
@@ -292,8 +392,12 @@ impl SessionResult {
     }
 
     /// `Some(true)` verified, `Some(false)` mismatched, `None` when the
-    /// job has no oracle to check (artifact engine).
+    /// job has no oracle to check (artifact engine) or did not run to
+    /// completion (see [`FinishedJob::outcome`]).
     pub fn verified(&self) -> Option<bool> {
+        if !self.job.outcome.is_done() {
+            return None;
+        }
         match (&self.job.kind, self.job.engine.machine()) {
             (Some(k), Some(m)) => Some(k.verify(m).is_ok()),
             _ => None,
@@ -314,6 +418,25 @@ pub struct SessionStats {
     pub work: u64,
     /// Tenants moved between devices (0 for single-device sessions).
     pub migrations: u64,
+    /// Jobs that ran to completion (`Outcome::Done`).
+    pub completed: u64,
+    /// Jobs retired by explicit cancellation.
+    pub cancelled: u64,
+    /// Jobs evicted past their deadline epoch (`dD`).
+    pub deadline_exceeded: u64,
+    /// Jobs that outran their step budget (`sS` — the wedged-job guard).
+    pub quarantined: u64,
+    /// Jobs that dead-ended in evacuation (device death with no
+    /// survivor to receive them).
+    pub evacuated: u64,
+    /// Devices the fault plan killed (escalated transients included).
+    pub device_deaths: u64,
+    /// Tenants evacuated off dead devices (dead-ends included).
+    pub evacuations: u64,
+    /// Transient launch failures retried.
+    pub launch_retries: u64,
+    /// Modeled backoff (µs) those retries paid.
+    pub retry_backoff_us: f64,
 }
 
 /// An online multi-job serving session (see module docs).
@@ -338,23 +461,22 @@ impl Session {
     /// the interpreter engine (identical results, per-tenant launch
     /// accounting either way).
     pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
-        if self.art.is_some() {
-            match self.build_artifact_job(spec) {
-                Ok((label, co, w, weight)) => {
-                    return Ok(self.submit_artifact(&label, &co, &w, weight));
-                }
-                Err(e) => {
-                    // fall through to the interp engine, but never
-                    // silently: a corrupt artifact set would otherwise
-                    // masquerade as AOT-path numbers (matches the
-                    // visible-skip convention of runtime::artifacts_available)
-                    eprintln!(
-                        "artifact path unavailable for {} ({e:#}); \
-                         serving it on the interpreter engine",
-                        spec.label()
-                    );
-                }
+        match self.art.as_ref().map(|art| build_artifact_job(art, spec)) {
+            Some(Ok((label, co, w, limits))) => {
+                return Ok(self.submit_artifact(&label, &co, &w, limits));
             }
+            Some(Err(e)) => {
+                // fall through to the interp engine, but never
+                // silently: a corrupt artifact set would otherwise
+                // masquerade as AOT-path numbers (matches the
+                // visible-skip convention of runtime::artifacts_available)
+                eprintln!(
+                    "artifact path unavailable for {} ({e:#}); \
+                     serving it on the interpreter engine",
+                    spec.label()
+                );
+            }
+            None => {}
         }
         let b = spec.instantiate()?;
         Ok(self.submit_build(&b))
@@ -380,29 +502,27 @@ impl Session {
         label: &str,
         co: &Arc<Coordinator>,
         w: &Workload,
-        weight: u64,
+        limits: JobLimits,
     ) -> JobId {
         match &mut self.backend {
-            Backend::Fused(s) => s.admit_artifact(label, co, w, weight),
-            Backend::Sharded(g) => g.admit_artifact(label, co, w, weight).0,
+            Backend::Fused(s) => s.admit_artifact(label, co, w, limits),
+            Backend::Sharded(g) => g.admit_artifact(label, co, w, limits).0,
         }
     }
 
-    fn build_artifact_job(
-        &self,
-        spec: &JobSpec,
-    ) -> Result<(String, Arc<Coordinator>, Workload, u64)> {
-        let art = self.art.as_ref().expect("checked by submit");
-        let app = art.manifest.app(&canonical_app(&spec.app))?;
-        let w = spec_workload(spec, app)?;
-        let co = Arc::new(Coordinator::for_workload(
-            &art.dev,
-            &art.dir,
-            app,
-            &w,
-            CoordinatorConfig::default(),
-        )?);
-        Ok((spec.label(), co, w, spec.weight))
+    /// Cancel an admitted job wherever it lives. `false` for unknown or
+    /// already-finished jobs — a clean no-op either way; cancelling
+    /// never perturbs the other tenants' schedules beyond freeing the
+    /// lanes the victim held.
+    pub fn cancel(&mut self, id: JobId) -> bool {
+        let hit = match &mut self.backend {
+            Backend::Fused(s) => s.cancel(id),
+            Backend::Sharded(g) => g.cancel(id),
+        };
+        if hit {
+            self.collect();
+        }
+        hit
     }
 
     /// Run one shared epoch (one lock-step group epoch when sharded).
@@ -504,16 +624,38 @@ impl Session {
                     launches: st.launches,
                     work: st.work,
                     migrations: 0,
+                    completed: st.jobs_completed,
+                    cancelled: st.jobs_cancelled,
+                    deadline_exceeded: st.jobs_deadline_exceeded,
+                    quarantined: st.jobs_quarantined,
+                    evacuated: st.jobs_evacuated,
+                    device_deaths: 0,
+                    evacuations: 0,
+                    launch_retries: 0,
+                    retry_backoff_us: 0.0,
                 }
             }
             Backend::Sharded(g) => {
                 let st = g.stats();
+                let devs = g.device_stats();
+                let sum = |f: fn(&&FusedStats) -> u64| -> u64 {
+                    devs.iter().map(f).sum()
+                };
                 SessionStats {
                     steps: st.group_steps,
                     syncs: st.group_syncs,
                     launches: g.total_launches(),
-                    work: g.device_stats().iter().map(|d| d.work).sum(),
+                    work: sum(|d| d.work),
                     migrations: st.migrations,
+                    completed: sum(|d| d.jobs_completed),
+                    cancelled: sum(|d| d.jobs_cancelled),
+                    deadline_exceeded: sum(|d| d.jobs_deadline_exceeded),
+                    quarantined: sum(|d| d.jobs_quarantined),
+                    evacuated: sum(|d| d.jobs_evacuated),
+                    device_deaths: st.device_deaths,
+                    evacuations: st.evacuations,
+                    launch_retries: st.retries,
+                    retry_backoff_us: st.retry_backoff_us,
                 }
             }
         }
@@ -521,11 +663,16 @@ impl Session {
 
     /// The service loop: replay a feed (sorted by [`Arrival::at_step`],
     /// as [`Arrival::parse_feed`] returns it) against the session
-    /// clock. Each iteration submits every arrival whose step has come
-    /// up, then runs one shared epoch; when the session idles with
-    /// arrivals still pending, the clock fast-forwards to the next one
-    /// (an idle service loop burns no epochs). `on_admit` fires per
-    /// submission, `on_complete` per completion, in order.
+    /// clock. Each iteration fires every arrival whose step has come up
+    /// (submits admit, `!cancel` directives cancel), then runs one
+    /// shared epoch; when the session idles with arrivals still
+    /// pending, the clock fast-forwards to the next one (an idle
+    /// service loop burns no epochs). `on_admit` fires per submission,
+    /// `on_complete` per completion — including cancellations and
+    /// fault-path retirements — in order. Termination needs no job to
+    /// cooperate: deadlines, budgets, and cancellation all retire
+    /// tenants at epoch boundaries, so a wedged job cannot stall the
+    /// loop past its `sS` budget.
     pub fn run_feed(
         &mut self,
         arrivals: &[Arrival],
@@ -535,22 +682,52 @@ impl Session {
         let mut next = 0;
         loop {
             while next < arrivals.len() && arrivals[next].at_step <= self.steps {
-                let id = self.submit(&arrivals[next].spec)?;
-                on_admit(id, &arrivals[next]);
+                let a = &arrivals[next];
+                match &a.kind {
+                    ArrivalKind::Submit(spec) => {
+                        let id = self.submit(spec)?;
+                        on_admit(id, a);
+                    }
+                    // unknown / double / already-finished: clean no-op
+                    ArrivalKind::Cancel(id) => {
+                        self.cancel(*id);
+                    }
+                }
                 next += 1;
             }
-            if !self.step()? {
+            let progressed = self.step()?;
+            while self.polled < self.results.len() {
+                on_complete(&self.results[self.polled]);
+                self.polled += 1;
+            }
+            if !progressed {
                 match arrivals.get(next) {
                     Some(a) => self.steps = self.steps.max(a.at_step),
                     None => return Ok(()),
                 }
             }
-            while self.polled < self.results.len() {
-                on_complete(&self.results[self.polled]);
-                self.polled += 1;
-            }
         }
     }
+}
+
+/// Compile `spec` into an artifact-engine job: manifest lookup,
+/// workload build, and a lazily compiled coordinator. A free function
+/// (not a method) so `submit` can call it while holding no claim on the
+/// rest of the session — the `Option` dance stays expect-free.
+fn build_artifact_job(
+    art: &ArtifactEngine,
+    spec: &JobSpec,
+) -> Result<(String, Arc<Coordinator>, Workload, JobLimits)> {
+    let app = art.manifest.app(&canonical_app(&spec.app))?;
+    let w = spec_workload(spec, app)?;
+    let co = Arc::new(Coordinator::for_workload(
+        &art.dev,
+        &art.dir,
+        app,
+        &w,
+        CoordinatorConfig::default(),
+    )?);
+    Ok((spec.label(), co, w, spec.limits()))
 }
 
 /// `msort` is the CLI alias for the mergesort artifact set.
@@ -581,6 +758,7 @@ fn spec_workload(s: &JobSpec, app: &AppManifest) -> Result<Workload> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -588,7 +766,7 @@ mod tests {
     fn arrival_grammar_parses_and_sorts() {
         let a = Arrival::parse("fib:18:w4@5").unwrap();
         assert_eq!(a.at_step, 5);
-        assert_eq!(a.spec.label(), "fib:18:w4");
+        assert_eq!(a.label(), "fib:18:w4");
         assert_eq!(Arrival::parse("fib:18").unwrap().at_step, 0);
         assert!(Arrival::parse("fib:18@").is_err());
         assert!(Arrival::parse("fib:18@x").is_err());
@@ -600,6 +778,65 @@ mod tests {
         assert_eq!(steps, vec![0, 2, 4], "sorted by arrival step");
         assert!(Arrival::parse_feed("fib:12,,bfs").is_err(), "empty token");
         assert!(Arrival::parse_feed("\n  \n# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn arrival_directives_and_bounds() {
+        let a = Arrival::parse("!cancel j2@9").unwrap();
+        assert_eq!(a.at_step, 9);
+        assert_eq!(a.label(), "!cancel j2");
+        assert!(matches!(a.kind, ArrivalKind::Cancel(JobId(2))));
+        // a bare index works too, and no @ means epoch 0
+        let b = Arrival::parse("!cancel 0").unwrap();
+        assert!(matches!(b.kind, ArrivalKind::Cancel(JobId(0))));
+        assert_eq!(b.at_step, 0);
+
+        for (tok, needle) in [
+            ("!cancel@3", "missing a job id"),
+            ("!cancel jx@3", "bad job id"),
+            ("!cancel j1 j2@3", "unexpected"),
+            ("!pause j1@3", "unknown feed directive"),
+            ("fib:12@9999999999", "out of range"),
+        ] {
+            let e = Arrival::parse(tok).unwrap_err().to_string();
+            assert!(e.contains(needle), "{tok}: {e}");
+        }
+    }
+
+    #[test]
+    fn deadline_and_cancel_ride_the_feed() {
+        // j0 wedges (spin) but carries a step budget; j1 is cancelled
+        // by a directive; j2 runs to completion. The loop must
+        // terminate with three structured results and no hang.
+        let arrivals =
+            Arrival::parse_feed("spin:s6,fib:12,fib:10@2,!cancel j1@1")
+                .unwrap();
+        let mut s = Session::builder().build().unwrap();
+        let mut done = Vec::new();
+        s.run_feed(
+            &arrivals,
+            |_, _| {},
+            |r| done.push((r.job.id, r.job.outcome)),
+        )
+        .unwrap();
+        use crate::fault::Outcome;
+        assert_eq!(done.len(), 3);
+        assert!(done.contains(&(JobId(0), Outcome::Quarantined)));
+        assert!(done.contains(&(JobId(1), Outcome::Cancelled)));
+        assert!(done.contains(&(JobId(2), Outcome::Done)));
+        let st = s.stats();
+        assert_eq!(
+            (st.quarantined, st.cancelled, st.completed),
+            (1, 1, 1)
+        );
+        // cancelled / quarantined jobs report outcomes, not answers
+        let by_id = |id: usize| {
+            s.results().iter().find(|r| r.job.id == JobId(id)).unwrap()
+        };
+        assert!(by_id(0).summary().contains("[quarantined]"));
+        assert_eq!(by_id(0).verified(), None);
+        assert!(by_id(1).summary().contains("[cancelled]"));
+        assert_eq!(by_id(2).verified(), Some(true));
     }
 
     #[test]

@@ -63,26 +63,33 @@ impl Rebalancer {
 
     /// Decide whether to migrate at this epoch boundary. `loads[d]` is
     /// device `d`'s live-lane load *after* the group step; `devs` are
-    /// the per-device schedulers (read-only: candidate listing).
+    /// the per-device schedulers (read-only: candidate listing);
+    /// `alive[d]` marks devices the fault plan has not killed — dead
+    /// devices are invisible here (they hold no tenants and must never
+    /// be picked as a destination).
     pub fn plan(
         &mut self,
         loads: &[u64],
         devs: &[FusedScheduler],
+        alive: &[bool],
     ) -> Option<Migration> {
-        if !self.cfg.enabled || loads.len() < 2 {
+        let live: Vec<usize> =
+            (0..loads.len()).filter(|&d| alive.get(d).copied().unwrap_or(true)).collect();
+        if !self.cfg.enabled || live.len() < 2 {
             return None;
         }
         if self.steps_since < self.cfg.cooldown {
             self.steps_since += 1;
             return None;
         }
-        let total: u64 = loads.iter().sum();
+        let total: u64 = live.iter().map(|&d| loads[d]).sum();
         if total == 0 {
             return None;
         }
-        let mut src = 0;
-        let mut dst = 0;
-        for (d, &l) in loads.iter().enumerate() {
+        let mut src = live[0];
+        let mut dst = live[0];
+        for &d in &live {
+            let l = loads[d];
             if l > loads[src] {
                 src = d;
             }
@@ -90,7 +97,7 @@ impl Rebalancer {
                 dst = d;
             }
         }
-        let mean = total as f64 / loads.len() as f64;
+        let mean = total as f64 / live.len() as f64;
         if (loads[src] as f64) <= mean * self.cfg.skew_threshold.max(1.0) {
             return None;
         }
@@ -156,8 +163,8 @@ mod tests {
         let bs = builds(&["fib:10", "fib:10"]);
         let devs = vec![dev_with(&bs[..1], 0), dev_with(&bs[1..], 1)];
         let mut r = Rebalancer::new(RebalanceCfg::default());
-        assert_eq!(r.plan(&[100, 100], &devs), None);
-        assert_eq!(r.plan(&[100, 90], &devs), None, "below threshold");
+        assert_eq!(r.plan(&[100, 100], &devs, &[true, true]), None);
+        assert_eq!(r.plan(&[100, 90], &devs, &[true, true]), None, "below threshold");
     }
 
     #[test]
@@ -169,7 +176,7 @@ mod tests {
             ..Default::default()
         });
         // fresh machines: 1 live lane per tenant => loads (3, 0)
-        let m = r.plan(&[3, 0], &devs).expect("skew must trigger");
+        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew must trigger");
         assert_eq!(m.from, DeviceId(0));
         assert_eq!(m.to, DeviceId(1));
     }
@@ -182,7 +189,7 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[500, 0], &devs), None);
+        assert_eq!(r.plan(&[500, 0], &devs, &[true, true]), None);
     }
 
     #[test]
@@ -203,7 +210,7 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[30, 1], &devs), None);
+        assert_eq!(r.plan(&[30, 1], &devs, &[true, true]), None);
     }
 
     #[test]
@@ -214,10 +221,32 @@ mod tests {
             cooldown: 2,
             ..Default::default()
         });
-        assert!(r.plan(&[3, 0], &devs).is_some(), "starts eligible");
-        assert_eq!(r.plan(&[3, 0], &devs), None, "cooldown 1/2");
-        assert_eq!(r.plan(&[3, 0], &devs), None, "cooldown 2/2");
-        assert!(r.plan(&[3, 0], &devs).is_some(), "eligible again");
+        assert!(r.plan(&[3, 0], &devs, &[true, true]).is_some(), "starts eligible");
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, true]), None, "cooldown 1/2");
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, true]), None, "cooldown 2/2");
+        assert!(r.plan(&[3, 0], &devs, &[true, true]).is_some(), "eligible again");
+    }
+
+    #[test]
+    fn dead_devices_are_invisible_to_the_planner() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        // the idle device is dead: with one live device left there is
+        // no pair to balance, however skewed the loads look
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, false]), None);
+        // three devices, the *empty* one dead: the move must target the
+        // live low-load device, never the dead slot
+        let bs3 = builds(&["fib:10", "fib:10", "fib:10", "fib:10"]);
+        let devs3 = vec![dev_with(&bs3[..3], 0), dev_with(&[], 3), dev_with(&bs3[3..], 4)];
+        let m = r
+            .plan(&[9, 0, 1], &devs3, &[true, false, true])
+            .expect("live pair is still skewed");
+        assert_eq!(m.from, DeviceId(0));
+        assert_eq!(m.to, DeviceId(2));
     }
 
     #[test]
@@ -229,6 +258,6 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[1000, 0], &devs), None);
+        assert_eq!(r.plan(&[1000, 0], &devs, &[true, true]), None);
     }
 }

@@ -31,6 +31,16 @@
 //! live-lane imbalance, and [`modeled_group_us`] replays the group
 //! trace through the `DeviceGroup` cost model (`bench_shard`,
 //! `trees batch --devices N`, E-SHARD-1).
+//!
+//! The same quiescent boundary is the *recovery* point: an injectable
+//! [`crate::fault::FaultPlan`] can kill a device or fail its launch
+//! transiently between group steps. Deaths evacuate every resident
+//! tenant to the least-loaded live device over the identical
+//! evict/re-admit seam migration uses (bit-identity for free), the
+//! barrier tree elastically shrinks to the survivors, and transient
+//! failures pay a bounded retry + exponential-backoff cost
+//! ([`crate::fault::RetryCfg`]) that escalates to a death past the
+//! retry budget. See E-FAULT-1.
 
 mod balance;
 mod place;
@@ -38,14 +48,18 @@ mod stats;
 
 pub use balance::{Migration, RebalanceCfg, Rebalancer};
 pub use place::{Placement, PlacementKind};
-pub use stats::{modeled_group_us, GroupStepTrace, MigrationEvent, ShardStats};
+pub use stats::{
+    group_step_cost_us, modeled_group_us, EvacuationEvent, GroupStepTrace,
+    MigrationEvent, ShardStats,
+};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, Workload};
+use crate::fault::{FaultEvent, FaultKind, FaultPlan, Outcome, RetryCfg};
 use crate::sched::{
-    FinishedJob, FusedScheduler, FusedStats, JobBuild, JobId, SchedConfig,
-    Tenant,
+    FinishedJob, FusedScheduler, FusedStats, JobBuild, JobId, JobLimits,
+    SchedConfig, Tenant,
 };
 
 /// A device's index within its group.
@@ -71,6 +85,10 @@ pub struct ShardConfig {
     /// Per-device scheduler tunables (each device gets its own window
     /// budget, fairness cursor, and bucket tiling from a clone).
     pub sched: SchedConfig,
+    /// Injectable device-fault schedule (`None` = fault-free run).
+    pub fault: Option<FaultPlan>,
+    /// Transient-launch-failure retry policy.
+    pub retry: RetryCfg,
 }
 
 impl Default for ShardConfig {
@@ -80,6 +98,8 @@ impl Default for ShardConfig {
             placement: PlacementKind::RoundRobin,
             rebalance: RebalanceCfg::default(),
             sched: SchedConfig::default(),
+            fault: None,
+            retry: RetryCfg::default(),
         }
     }
 }
@@ -96,6 +116,17 @@ pub struct ShardGroup {
     next_id: usize,
     /// Current device of each admitted job, indexed by `JobId.0`.
     homes: Vec<DeviceId>,
+    /// `alive[d]` until the fault plan kills device `d`.
+    alive: Vec<bool>,
+    fault: FaultPlan,
+    /// Cursor into `fault.events` (sorted by `at_step`) — each event
+    /// fires exactly once, at the first boundary whose group-step
+    /// count has reached it.
+    fault_next: usize,
+    retry: RetryCfg,
+    /// Backoff (µs) accumulated by the boundary injection of the
+    /// *current* step, copied into its trace entry.
+    backoff_this_step: f64,
 }
 
 impl ShardGroup {
@@ -103,6 +134,8 @@ impl ShardGroup {
         let n = cfg.devices.max(1);
         let devs: Vec<FusedScheduler> =
             (0..n).map(|_| FusedScheduler::new(cfg.sched.clone())).collect();
+        let mut fault = cfg.fault.unwrap_or_default();
+        fault.events.sort_by_key(|e| e.at_step);
         ShardGroup {
             devs,
             placer: Placement::new(cfg.placement, n),
@@ -111,11 +144,21 @@ impl ShardGroup {
             trace: cfg.sched.trace,
             next_id: 0,
             homes: Vec::new(),
+            alive: vec![true; n],
+            fault,
+            fault_next: 0,
+            retry: cfg.retry,
+            backoff_this_step: 0.0,
         }
     }
 
     pub fn devices(&self) -> usize {
         self.devs.len()
+    }
+
+    /// Devices the fault plan has not (yet) killed.
+    pub fn alive_devices(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
     }
 
     /// Pre-pin an app to a device (effective under
@@ -146,10 +189,32 @@ impl ShardGroup {
         self.placer.place(app, &loads, &counts)
     }
 
+    /// First live device at or (cyclically) after `want` — admission
+    /// routing around dead devices.
+    fn first_alive_from(&self, want: usize) -> Option<usize> {
+        let n = self.devs.len();
+        (want..n).chain(0..want).find(|&d| self.alive[d])
+    }
+
     fn admit(&mut self, app: &str, make: impl FnOnce(JobId) -> Tenant) -> (JobId, DeviceId) {
         let id = JobId(self.next_id);
         self.next_id += 1;
-        let d = self.place(app);
+        let want = self.place(app);
+        let Some(d) = self.first_alive_from(want) else {
+            // the whole group is dead: the job dead-ends right at
+            // admission with a structured outcome instead of parking
+            // forever on a device that will never step
+            self.homes.push(DeviceId(want));
+            self.stats.evacuations += 1;
+            self.stats.evacuation_log.push(EvacuationEvent {
+                step: self.stats.group_steps,
+                job: id,
+                from: DeviceId(want),
+                to: None,
+            });
+            self.devs[want].finish_tenant(make(id), Outcome::Evacuated);
+            return (id, DeviceId(want));
+        };
         self.devs[d].admit_tenant(make(id));
         self.homes.push(DeviceId(d));
         if let Some(slot) = self.stats.placed.get_mut(d) {
@@ -169,27 +234,124 @@ impl ShardGroup {
 
     /// Admit an artifact-engine tenant: its `TvState` is built through
     /// the coordinator's begin-run seam and migrates with the tenant.
-    /// `weight` is the fairness weight (1 = batch tier).
+    /// `limits` carries the fairness weight plus deadline/step-budget.
     pub fn admit_artifact(
         &mut self,
         label: &str,
         co: &std::sync::Arc<Coordinator>,
         w: &Workload,
-        weight: u64,
+        limits: JobLimits,
     ) -> (JobId, DeviceId) {
         let app = label.split(':').next().unwrap_or("").to_string();
-        self.admit(&app, |id| Tenant::from_artifact(id, label, co, w, weight))
+        self.admit(&app, |id| Tenant::from_artifact(id, label, co, w, limits))
+    }
+
+    /// Cancel a job wherever it currently lives (follows migrations and
+    /// evacuations). Returns `false` for unknown or already-finished
+    /// jobs — a clean no-op, like [`FusedScheduler::cancel`].
+    pub fn cancel(&mut self, id: JobId) -> bool {
+        match self.home_of(id) {
+            Some(d) => self.devs[d.0].cancel(id),
+            None => false,
+        }
     }
 
     pub fn has_work(&self) -> bool {
         self.devs.iter().any(|d| d.has_work())
     }
 
-    /// One lock-step group epoch: every device with resident work runs
-    /// one fused step (one launch set + its tenants' epochs), then the
-    /// group synchronizes at the cross-device barrier; at that epoch
-    /// boundary the rebalancer may migrate one tenant.
+    /// Fire every fault-plan event whose step has arrived. Called at
+    /// the epoch boundary *before* the group steps — an event at step
+    /// `E` hits before the group's `E`'th epoch (0-based), while no
+    /// tenant has in-flight work, which is exactly what makes recovery
+    /// an evict/re-admit instead of a checkpoint restore.
+    fn inject_faults(&mut self) {
+        while self.fault_next < self.fault.events.len()
+            && self.fault.events[self.fault_next].at_step
+                <= self.stats.group_steps
+        {
+            let ev = self.fault.events[self.fault_next];
+            self.fault_next += 1;
+            self.apply_fault(ev);
+        }
+    }
+
+    fn apply_fault(&mut self, ev: FaultEvent) {
+        let d = ev.device;
+        if d >= self.devs.len() || !self.alive[d] {
+            return; // stale event: unknown or already-dead device
+        }
+        match ev.kind {
+            FaultKind::Death => self.kill(d),
+            FaultKind::Transient { failures } => {
+                let paid = failures.min(self.retry.max_retries);
+                let us = self.retry.backoff_us(paid);
+                self.stats.retries += u64::from(paid);
+                self.stats.retry_backoff_us += us;
+                self.backoff_this_step += us;
+                if failures > self.retry.max_retries {
+                    // the launch never came back inside the retry
+                    // budget: escalate to a permanent death
+                    self.kill(d);
+                }
+            }
+        }
+    }
+
+    /// Permanently kill device `d` and evacuate its tenants to the
+    /// least-loaded live device over the same evict/re-admit seam
+    /// migration uses. With no live device left the tenants dead-end
+    /// with [`Outcome::Evacuated`].
+    fn kill(&mut self, d: usize) {
+        self.alive[d] = false;
+        self.stats.device_deaths += 1;
+        let orphans = self.devs[d].drain_tenants();
+        for t in orphans {
+            let id = t.id;
+            match self.least_loaded_alive() {
+                Some(to) => {
+                    self.devs[to].admit_tenant(t);
+                    self.homes[id.0] = DeviceId(to);
+                    self.stats.evacuations += 1;
+                    self.stats.evacuation_log.push(EvacuationEvent {
+                        step: self.stats.group_steps,
+                        job: id,
+                        from: DeviceId(d),
+                        to: Some(DeviceId(to)),
+                    });
+                }
+                None => {
+                    self.stats.evacuations += 1;
+                    self.stats.evacuation_log.push(EvacuationEvent {
+                        step: self.stats.group_steps,
+                        job: id,
+                        from: DeviceId(d),
+                        to: None,
+                    });
+                    self.devs[d].finish_tenant(t, Outcome::Evacuated);
+                }
+            }
+        }
+    }
+
+    fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.devs.len()).filter(|&d| self.alive[d]).min_by_key(|&d| {
+            let dev = &self.devs[d];
+            (dev.live_lanes(), dev.active_count() + dev.pending_count(), d)
+        })
+    }
+
+    /// One lock-step group epoch: fault-plan events due at this
+    /// boundary fire first (deaths evacuate, transients pay bounded
+    /// retries), then every live device with resident work runs one
+    /// fused step (one launch set + its tenants' epochs), then the
+    /// group synchronizes at the cross-device barrier — spanning only
+    /// the live devices, so the tree shrinks elastically after a death;
+    /// at that boundary the rebalancer may migrate one tenant.
     pub fn step(&mut self) -> Result<bool> {
+        self.backoff_this_step = 0.0;
+        let evac_mark = self.stats.evacuation_log.len();
+        self.inject_faults();
         if !self.has_work() {
             return Ok(false);
         }
@@ -215,17 +377,31 @@ impl ShardGroup {
                     }
                 })
                 .collect();
-            self.stats.trace.push(GroupStepTrace { per_dev });
+            let evacuations =
+                self.stats.evacuation_log[evac_mark..].to_vec();
+            self.stats.trace.push(GroupStepTrace {
+                per_dev,
+                alive: self.alive_devices(),
+                evacuations,
+                retry_backoff_us: self.backoff_this_step,
+            });
         }
 
         // ---- epoch boundary: measure skew, maybe migrate ----
-        // (single-device groups have nothing to balance — skip the
-        // per-tenant front scans entirely)
-        if self.devs.len() > 1 {
+        // (a group with one live device has nothing to balance — skip
+        // the per-tenant front scans entirely)
+        if self.alive_devices() > 1 {
             let loads: Vec<u64> =
                 self.devs.iter().map(|d| d.live_lanes()).collect();
-            self.stats.note_imbalance(&loads);
-            if let Some(m) = self.balancer.plan(&loads, &self.devs) {
+            let live_loads: Vec<u64> = loads
+                .iter()
+                .zip(&self.alive)
+                .filter_map(|(&l, &a)| a.then_some(l))
+                .collect();
+            self.stats.note_imbalance(&live_loads);
+            if let Some(m) =
+                self.balancer.plan(&loads, &self.devs, &self.alive)
+            {
                 self.migrate(m)?;
             }
         }
@@ -371,5 +547,123 @@ mod tests {
             .any(|e| g.home_of(e.job) == Some(e.to));
         assert!(moved, "home_of must track the executed migrations");
         assert_eq!(g.finished_count(), 4);
+    }
+
+    #[test]
+    fn death_evacuates_tenants_and_shrinks_the_barrier() {
+        let bs = builds(&["fib:12", "fib:13", "fib:14", "fib:12"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            fault: Some(FaultPlan::parse("die:1@2").unwrap()),
+            sched: SchedConfig { trace: true, ..Default::default() },
+            // keep placement deterministic: no migrations before death
+            rebalance: RebalanceCfg { enabled: false, ..Default::default() },
+            ..Default::default()
+        });
+        let ids: Vec<JobId> = bs.iter().map(|b| g.admit_build(b).0).collect();
+        g.run_to_completion().unwrap();
+
+        assert_eq!(g.stats().device_deaths, 1);
+        assert_eq!(g.alive_devices(), 1);
+        assert_eq!(g.stats().evacuations, 2, "d1 held jobs 1 and 3");
+        for ev in &g.stats().evacuation_log {
+            assert_eq!(ev.from, DeviceId(1));
+            assert_eq!(ev.to, Some(DeviceId(0)));
+            assert_eq!(ev.step, 2, "died at the step-2 boundary");
+        }
+        // every job still completes, homed on the survivor
+        assert_eq!(g.finished_count(), 4);
+        for id in &ids {
+            assert_eq!(g.home_of(*id), Some(DeviceId(0)));
+        }
+        // the trace records the elastic shrink: 2 live, then 1
+        let alives: Vec<usize> =
+            g.stats().trace.iter().map(|t| t.alive).collect();
+        assert_eq!(alives[..2], [2, 2]);
+        assert!(alives[2..].iter().all(|&a| a == 1), "{alives:?}");
+        // dead device never steps again: its per-dev slot stays None
+        assert!(g.stats().trace[2..]
+            .iter()
+            .all(|t| t.per_dev[1].is_none()));
+    }
+
+    #[test]
+    fn transient_faults_pay_bounded_retries_and_escalate_past_budget() {
+        let bs = builds(&["fib:12", "fib:12"]);
+        // x2 stays transient (≤ max_retries 3); x9 escalates to death
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            fault: Some(FaultPlan::parse("flaky:0@1:x2,flaky:1@3:x9").unwrap()),
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for b in &bs {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+
+        let s = g.stats();
+        // 2 retries for the transient + 3 (capped) for the escalation
+        assert_eq!(s.retries, 5);
+        let want_us =
+            g.retry.backoff_us(2) + g.retry.backoff_us(3);
+        assert!((s.retry_backoff_us - want_us).abs() < 1e-9);
+        assert_eq!(s.device_deaths, 1, "x9 exhausts the budget");
+        let traced: f64 =
+            s.trace.iter().map(|t| t.retry_backoff_us).sum();
+        assert!((traced - want_us).abs() < 1e-9, "trace must account it");
+        assert_eq!(g.finished_count(), 2);
+    }
+
+    #[test]
+    fn fully_dead_group_dead_ends_jobs_instead_of_hanging() {
+        let bs = builds(&["fib:12", "fib:10"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            fault: Some(FaultPlan::parse("die:0@0,die:1@0").unwrap()),
+            ..Default::default()
+        });
+        let id0 = g.admit_build(&bs[0]).0;
+        g.run_to_completion().unwrap(); // terminates immediately
+        assert_eq!(g.alive_devices(), 0);
+
+        // a submit after total loss dead-ends with a structured outcome
+        let id1 = g.admit_build(&bs[1]).0;
+        g.run_to_completion().unwrap();
+        let outcomes: Vec<(JobId, Outcome)> =
+            g.finished().map(|(_, fj)| (fj.id, fj.outcome)).collect();
+        assert!(outcomes.contains(&(id0, Outcome::Evacuated)));
+        assert!(outcomes.contains(&(id1, Outcome::Evacuated)));
+        // job 0 first hops d0→d1 (d1 outlives d0 within the boundary),
+        // then dead-ends when d1 dies too; job 1 dead-ends at admission
+        assert_eq!(g.stats().evacuations, 3);
+        let dead_ends = g
+            .stats()
+            .evacuation_log
+            .iter()
+            .filter(|ev| ev.to.is_none())
+            .count();
+        assert_eq!(dead_ends, 2);
+    }
+
+    #[test]
+    fn group_cancel_follows_the_home_and_is_idempotent() {
+        let bs = builds(&["fib:14", "fib:12"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            ..Default::default()
+        });
+        let id0 = g.admit_build(&bs[0]).0;
+        let id1 = g.admit_build(&bs[1]).0;
+        g.step().unwrap();
+        assert!(g.cancel(id0));
+        assert!(!g.cancel(id0), "double-cancel is a clean no-op");
+        assert!(!g.cancel(JobId(99)), "unknown job is a clean no-op");
+        g.run_to_completion().unwrap();
+        let outcomes: Vec<(JobId, Outcome)> =
+            g.finished().map(|(_, fj)| (fj.id, fj.outcome)).collect();
+        assert!(outcomes.contains(&(id0, Outcome::Cancelled)));
+        assert!(outcomes.contains(&(id1, Outcome::Done)));
+        assert!(!g.cancel(id1), "cancel-of-finished is a clean no-op");
     }
 }

@@ -13,6 +13,14 @@ use super::DeviceId;
 #[derive(Debug, Clone)]
 pub struct GroupStepTrace {
     pub per_dev: Vec<Option<StepTrace>>,
+    /// Devices still alive when this step ran — the barrier tree spans
+    /// only these (elastic shrink after a death).
+    pub alive: usize,
+    /// Evacuation edges fired at this step's boundary (device deaths).
+    pub evacuations: Vec<EvacuationEvent>,
+    /// Modeled retry backoff (µs) paid this step for transient launch
+    /// failures — added on top of the group-step cost.
+    pub retry_backoff_us: f64,
 }
 
 /// One executed migration, for tests and the CLI report.
@@ -25,6 +33,19 @@ pub struct MigrationEvent {
     pub to: DeviceId,
 }
 
+/// One tenant evacuated off a dead device — the fault-path sibling of
+/// [`MigrationEvent`], riding the same evict/re-admit seam.
+#[derive(Debug, Clone, Copy)]
+pub struct EvacuationEvent {
+    /// Group step at whose boundary the device died.
+    pub step: u64,
+    pub job: JobId,
+    pub from: DeviceId,
+    /// Receiving device, or `None` when no live device was left — the
+    /// job dead-ends with `Outcome::Evacuated`.
+    pub to: Option<DeviceId>,
+}
+
 /// Whole-run device-group totals.
 #[derive(Debug, Clone, Default)]
 pub struct ShardStats {
@@ -35,6 +56,17 @@ pub struct ShardStats {
     /// Tenants moved between devices at epoch boundaries.
     pub migrations: u64,
     pub migration_log: Vec<MigrationEvent>,
+    /// Devices killed by the fault plan (permanent deaths, including
+    /// transient failures that escalated past the retry budget).
+    pub device_deaths: u64,
+    /// Tenants evacuated off dead devices (dead-ends included).
+    pub evacuations: u64,
+    pub evacuation_log: Vec<EvacuationEvent>,
+    /// Transient launch failures retried (bounded by
+    /// [`crate::fault::RetryCfg::max_retries`] per event).
+    pub retries: u64,
+    /// Total modeled backoff (µs) those retries paid.
+    pub retry_backoff_us: f64,
     /// Admissions per device (placement histogram).
     pub placed: Vec<u64>,
     /// Peak of `max_load / mean_load` observed at epoch boundaries
@@ -65,31 +97,35 @@ impl ShardStats {
     }
 }
 
-/// Modeled wall time (µs) of the sharded run: every group step costs
-/// the slowest device's fused epoch (its packed live lanes through
+/// Modeled cost (µs) of one group step: the slowest device's fused
+/// epoch (its packed live lanes through
 /// [`crate::simt::GpuModel::fused_epoch_us`], overflow tiles at full
 /// launch cost — the same per-device formula `modeled_fused_us` uses)
-/// plus the group barrier. The single shared formula behind
-/// `bench_shard`, `trees batch --devices`, and E-SHARD-1.
-pub fn modeled_group_us(g: &DeviceGroup, trace: &[GroupStepTrace]) -> f64 {
-    trace
+/// plus the barrier over the devices *alive at that step* (the barrier
+/// tree shrinks elastically after a death), plus any retry backoff the
+/// step paid.
+pub fn group_step_cost_us(g: &DeviceGroup, gs: &GroupStepTrace) -> f64 {
+    let dev_us: Vec<f64> = gs
+        .per_dev
         .iter()
-        .map(|gs| {
-            let dev_us: Vec<f64> = gs
-                .per_dev
-                .iter()
-                .map(|d| match d {
-                    Some(t) => {
-                        g.dev.fused_epoch_us(&t.live_per_job)
-                            + t.launches.saturating_sub(1) as f64
-                                * g.dev.launch_us
-                    }
-                    None => 0.0,
-                })
-                .collect();
-            g.group_step_us(&dev_us)
+        .map(|d| match d {
+            Some(t) => {
+                g.dev.fused_epoch_us(&t.live_per_job)
+                    + t.launches.saturating_sub(1) as f64 * g.dev.launch_us
+            }
+            None => 0.0,
         })
-        .sum()
+        .collect();
+    let live = DeviceGroup { devices: gs.alive.max(1), ..*g };
+    live.group_step_us(&dev_us) + gs.retry_backoff_us
+}
+
+/// Modeled wall time (µs) of the sharded run: the sum of
+/// [`group_step_cost_us`] over the trace. The single shared formula
+/// behind `bench_shard`, `bench_serve`, `trees batch --devices`,
+/// E-SHARD-1, and E-FAULT-1.
+pub fn modeled_group_us(g: &DeviceGroup, trace: &[GroupStepTrace]) -> f64 {
+    trace.iter().map(|gs| group_step_cost_us(g, gs)).sum()
 }
 
 #[cfg(test)]
@@ -116,7 +152,12 @@ mod tests {
             window: live as usize,
             launches: 1,
         };
-        let trace = vec![GroupStepTrace { per_dev: vec![Some(t(40)), Some(t(4000))] }];
+        let trace = vec![GroupStepTrace {
+            per_dev: vec![Some(t(40)), Some(t(4000))],
+            alive: 2,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+        }];
         let want = g.dev.fused_epoch_us(&[4000]) + g.barrier_us();
         let got = modeled_group_us(&g, &trace);
         assert!((got - want).abs() < 1e-9, "{got} vs {want}");
@@ -126,8 +167,30 @@ mod tests {
     fn idle_devices_cost_nothing_but_the_barrier_stands() {
         let g = DeviceGroup::new(GpuModel::default(), 2);
         let t = StepTrace { live_per_job: vec![10], window: 10, launches: 1 };
-        let trace = vec![GroupStepTrace { per_dev: vec![Some(t), None] }];
+        let trace = vec![GroupStepTrace {
+            per_dev: vec![Some(t), None],
+            alive: 2,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+        }];
         let want = g.dev.fused_epoch_us(&[10]) + g.barrier_us();
         assert!((modeled_group_us(&g, &trace) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shrunk_barrier_and_backoff_enter_the_step_cost() {
+        let g = DeviceGroup::new(GpuModel::default(), 4);
+        let t = StepTrace { live_per_job: vec![10], window: 10, launches: 1 };
+        let gs = GroupStepTrace {
+            per_dev: vec![Some(t), None, None, None],
+            alive: 1,
+            evacuations: Vec::new(),
+            retry_backoff_us: 15.0,
+        };
+        // one survivor left: the barrier tree collapses to nothing and
+        // only the epoch plus the step's retry backoff remains
+        let want = g.dev.fused_epoch_us(&[10]) + 15.0;
+        let got = group_step_cost_us(&g, &gs);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
     }
 }

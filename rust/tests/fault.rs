@@ -1,0 +1,230 @@
+//! Fault-tolerance properties (ISSUE 6 acceptance):
+//!
+//! (a) **faults are invisible to survivors**: under any `FaultPlan`,
+//!     every job that is not cancelled and does not dead-end finishes
+//!     bit-identical (root, res vector, heaps, machine counters) to a
+//!     fault-free run of the same specs;
+//! (b) cancellation retires exactly its victim and never perturbs the
+//!     other tenants' results;
+//! (c) liveness: a wedged job (non-terminating `spin`) riding a step
+//!     budget plus a device death cannot stall `run_feed` — the loop
+//!     terminates with a structured outcome per job.
+//!
+//! The random-plan sweep runs over a fixed seed matrix so CI is
+//! deterministic: set `TREES_FAULT_SEEDS` to `a..b` (inclusive) or a
+//! comma list to widen it (`make check` / ci.yml use `0..4`).
+
+use trees::fault::{FaultPlan, Outcome};
+use trees::sched::JobId;
+use trees::session::{Arrival, Session, SessionResult};
+
+fn seeds() -> Vec<u64> {
+    let spec =
+        std::env::var("TREES_FAULT_SEEDS").unwrap_or_else(|_| "0..2".into());
+    parse_seeds(&spec)
+}
+
+/// `a..b` (inclusive) or `s0,s1,…`.
+fn parse_seeds(spec: &str) -> Vec<u64> {
+    let bad = |t: &str| format!("bad TREES_FAULT_SEEDS entry {t:?}");
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().unwrap_or_else(|_| panic!("{}", bad(a)));
+        let b: u64 = b.trim().parse().unwrap_or_else(|_| panic!("{}", bad(b)));
+        (a..=b).collect()
+    } else {
+        spec.split(',')
+            .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("{}", bad(t))))
+            .collect()
+    }
+}
+
+const MIX: &[&str] =
+    &["fib:12", "mergesort:64", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
+
+/// The survivor's machine must be indistinguishable from the
+/// reference's — same answer, same memory, same work done.
+fn assert_same_machine(tag: &str, got: &SessionResult, want: &SessionResult) {
+    let (mg, mw) = (
+        got.job.engine.machine().expect("interp engine"),
+        want.job.engine.machine().expect("interp engine"),
+    );
+    assert_eq!(mg.root_result(), mw.root_result(), "{tag}: root");
+    assert_eq!(mg.res, mw.res, "{tag}: res vector");
+    assert_eq!(mg.heap_i, mw.heap_i, "{tag}: heap_i");
+    assert_eq!(mg.heap_f, mw.heap_f, "{tag}: heap_f");
+    assert_eq!(mg.stats.work, mw.stats.work, "{tag}: work");
+    assert_eq!(mg.stats.epochs, mw.stats.epochs, "{tag}: epochs");
+}
+
+fn run_mix(devices: usize, fault: Option<FaultPlan>) -> Session {
+    let mut b = Session::builder().devices(devices);
+    if let Some(plan) = fault {
+        b = b.fault_plan(plan);
+    }
+    let mut s = b.build().expect("interp sessions build infallibly");
+    for tok in MIX {
+        s.submit_spec(tok).expect("mix token");
+    }
+    s.drain().expect("drain");
+    s
+}
+
+#[test]
+fn prop_survivors_bit_identical_under_random_fault_plans() {
+    // the fault-free reference (backend split is already covered by
+    // tests/session.rs; one reference serves every plan)
+    let reference = run_mix(1, None);
+    for seed in seeds() {
+        for devices in 2..=4 {
+            let plan = FaultPlan::random(seed, devices, 30);
+            let tag = format!("seed {seed}, {devices} devices");
+            let s = run_mix(devices, Some(plan));
+            assert_eq!(s.results().len(), MIX.len(), "{tag}: all finish");
+            for r in s.results() {
+                // random plans always leave a survivor, so every job
+                // runs to completion — however many devices died
+                assert_eq!(
+                    r.job.outcome,
+                    Outcome::Done,
+                    "{tag}: {}",
+                    r.job.label
+                );
+                assert_eq!(r.verified(), Some(true), "{tag}: {}", r.job.label);
+                let w = reference
+                    .results()
+                    .iter()
+                    .find(|x| x.job.id == r.job.id)
+                    .expect("same admission order");
+                assert_same_machine(&format!("{tag}: {}", r.job.label), r, w);
+            }
+            let st = s.stats();
+            assert_eq!(st.completed, MIX.len() as u64, "{tag}");
+            assert_eq!(st.evacuated, 0, "{tag}: no dead-ends possible");
+        }
+    }
+}
+
+#[test]
+fn cancellation_never_perturbs_the_other_tenants() {
+    for devices in [1usize, 3] {
+        let base = Arrival::parse_feed("fib:12,fib:14,mergesort:64@2")
+            .expect("feed");
+        let cancelled =
+            Arrival::parse_feed("fib:12,fib:14,mergesort:64@2,!cancel j1@3")
+                .expect("feed");
+
+        let mut with_cancel = Session::builder().devices(devices).build().unwrap();
+        with_cancel.run_feed(&cancelled, |_, _| {}, |_| {}).unwrap();
+        let mut reference = Session::builder().devices(devices).build().unwrap();
+        reference.run_feed(&base, |_, _| {}, |_| {}).unwrap();
+
+        assert_eq!(with_cancel.results().len(), 3);
+        for r in with_cancel.results() {
+            if r.job.id == JobId(1) {
+                assert_eq!(r.job.outcome, Outcome::Cancelled);
+                assert_eq!(r.verified(), None, "no answer to verify");
+                continue;
+            }
+            assert_eq!(r.job.outcome, Outcome::Done);
+            let w = reference
+                .results()
+                .iter()
+                .find(|x| x.job.id == r.job.id)
+                .expect("uncancelled twin");
+            assert_same_machine(
+                &format!("{} devices: {}", devices, r.job.label),
+                r,
+                w,
+            );
+        }
+        let st = with_cancel.stats();
+        assert_eq!((st.cancelled, st.completed), (1, 2));
+    }
+}
+
+#[test]
+fn wedged_job_and_device_death_cannot_stall_run_feed() {
+    // spin never halts; its step budget is the only thing that ends it.
+    // d0 dies mid-run, so the wedged tenant also rides an evacuation.
+    let arrivals =
+        Arrival::parse_feed("spin:s40,fib:12,mergesort:64@3").expect("feed");
+    let mut s = Session::builder()
+        .devices(2)
+        .fault_plan(FaultPlan::parse("die:0@5").unwrap())
+        .build()
+        .unwrap();
+    let mut outcomes = Vec::new();
+    s.run_feed(&arrivals, |_, _| {}, |r| {
+        outcomes.push((r.job.id, r.job.outcome));
+    })
+    .expect("the loop must terminate");
+
+    assert_eq!(outcomes.len(), 3);
+    assert!(outcomes.contains(&(JobId(0), Outcome::Quarantined)));
+    assert!(outcomes.contains(&(JobId(1), Outcome::Done)));
+    assert!(outcomes.contains(&(JobId(2), Outcome::Done)));
+    for r in s.results() {
+        if r.job.outcome.is_done() {
+            assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+        }
+    }
+    let st = s.stats();
+    assert_eq!(st.quarantined, 1);
+    assert_eq!(st.device_deaths, 1);
+    assert!(st.evacuations >= 1, "d0's tenants moved to d1");
+}
+
+#[test]
+fn deadlines_evict_late_jobs_but_spare_punctual_ones() {
+    let mut s = Session::builder().build().unwrap();
+    s.submit_spec("fib:14:d5").unwrap(); // fib:14 needs far more than 5
+    s.submit_spec("fib:14:d100").unwrap();
+    s.drain().unwrap();
+
+    let by_id = |id: usize| {
+        s.results()
+            .iter()
+            .find(|r| r.job.id == JobId(id))
+            .expect("both retired")
+    };
+    assert_eq!(by_id(0).job.outcome, Outcome::DeadlineExceeded);
+    assert_eq!(by_id(0).verified(), None);
+    assert_eq!(by_id(1).job.outcome, Outcome::Done);
+    assert_eq!(by_id(1).verified(), Some(true));
+    let st = s.stats();
+    assert_eq!((st.deadline_exceeded, st.completed), (1, 1));
+}
+
+#[test]
+fn transient_faults_recover_with_bounded_backoff() {
+    let mut s = Session::builder()
+        .devices(2)
+        .fault_plan(FaultPlan::parse("flaky:0@1:x2").unwrap())
+        .trace(true)
+        .build()
+        .unwrap();
+    s.submit_spec("fib:12").unwrap();
+    s.submit_spec("fib:10").unwrap();
+    s.drain().unwrap();
+
+    let st = s.stats();
+    assert_eq!(st.launch_retries, 2);
+    // exponential backoff: 5 µs base → 5 + 10 = 15 µs for 2 failures
+    assert!((st.retry_backoff_us - 15.0).abs() < 1e-9);
+    assert_eq!(st.device_deaths, 0, "within the retry budget");
+    for r in s.results() {
+        assert_eq!(r.job.outcome, Outcome::Done);
+        assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+    }
+    // the group trace carries the same backoff the totals claim
+    let sh = s.shard_stats().expect("fault plans force the sharded backend");
+    let traced: f64 = sh.trace.iter().map(|t| t.retry_backoff_us).sum();
+    assert!((traced - st.retry_backoff_us).abs() < 1e-9);
+}
+
+#[test]
+fn seed_matrix_spec_parses_both_forms() {
+    assert_eq!(parse_seeds("0..2"), vec![0, 1, 2]);
+    assert_eq!(parse_seeds("7"), vec![7]);
+    assert_eq!(parse_seeds("3, 5,8"), vec![3, 5, 8]);
+}

@@ -87,4 +87,69 @@ fn serve_rejects_malformed_feeds() {
     let (_, stderr, ok) = run_serve(&["serve", "--jobs", "fib:12@oops"]);
     assert!(!ok, "bad arrival epoch must be rejected");
     assert!(stderr.contains("arrival epoch"), "unhelpful error:\n{stderr}");
+
+    let (_, stderr, ok) = run_serve(&["serve", "--jobs", "!pause j0@2"]);
+    assert!(!ok, "unknown directive must be rejected");
+    assert!(
+        stderr.contains("unknown feed directive"),
+        "unhelpful error:\n{stderr}"
+    );
+}
+
+#[test]
+fn serve_cancels_a_job_via_feed_directive() {
+    let (stdout, stderr, ok) = run_serve(&[
+        "serve",
+        "--jobs",
+        "fib:14,nqueens:5,!cancel j0@4",
+    ]);
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    // the victim reports its outcome, not an answer…
+    assert!(stdout.contains("[cancelled]"), "no cancel outcome:\n{stdout}");
+    assert!(!stdout.contains("fib(14)"), "cancelled job answered:\n{stdout}");
+    // …the survivor still completes and verifies
+    assert!(stdout.contains("5-queens solutions = 10"), "{stdout}");
+    assert!(stdout.contains("faults: 1 cancelled"), "no fault line:\n{stdout}");
+    assert!(!stdout.contains("MISMATCH"), "mismatched result:\n{stdout}");
+}
+
+#[test]
+fn serve_survives_a_device_death_and_a_wedged_job() {
+    // d1 dies at group epoch 4; the wedged spin job rides its 25-epoch
+    // budget and is quarantined; the real jobs evacuate and finish.
+    let (stdout, stderr, ok) = run_serve(&[
+        "serve",
+        "--jobs",
+        "fib:12,spin:s25,mergesort:64@2",
+        "--devices",
+        "2",
+        "--fault-plan",
+        "die:1@4",
+    ]);
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("[quarantined]"), "spin not retired:\n{stdout}");
+    for needle in ["fib(12) = 144", "sorted 64 elements"] {
+        assert!(stdout.contains(needle), "missing {needle:?}:\n{stdout}");
+    }
+    assert!(
+        stdout.contains("1 device deaths"),
+        "no fault accounting:\n{stdout}"
+    );
+    assert!(!stdout.contains("MISMATCH"), "mismatched result:\n{stdout}");
+}
+
+#[test]
+fn serve_rejects_malformed_fault_plans() {
+    let (_, stderr, ok) = run_serve(&[
+        "serve",
+        "--jobs",
+        "fib:10",
+        "--fault-plan",
+        "zap:0@1",
+    ]);
+    assert!(!ok, "unknown fault kind must be rejected");
+    assert!(
+        stderr.contains("unknown fault kind"),
+        "unhelpful error:\n{stderr}"
+    );
 }

@@ -10,7 +10,7 @@
 //! (c) the arrival feed grammar round-trips through `JobSpec::label`.
 
 use trees::sched::{Fairness, JobSpec};
-use trees::session::{Arrival, Session};
+use trees::session::{Arrival, ArrivalKind, Session};
 use trees::shard::PlacementKind;
 use trees::util::quickcheck::{check, shrink_vec, Config};
 use trees::util::rng::Rng;
@@ -70,10 +70,7 @@ fn sorted_arrivals(sc: &Scenario) -> Vec<Arrival> {
     let mut v: Vec<Arrival> = sc
         .jobs
         .iter()
-        .map(|(tok, at)| Arrival {
-            spec: JobSpec::parse(tok).unwrap(),
-            at_step: *at,
-        })
+        .map(|(tok, at)| Arrival::submit(JobSpec::parse(tok).unwrap(), *at))
         .collect();
     v.sort_by_key(|a| a.at_step);
     v
@@ -85,7 +82,8 @@ fn online_matches_batch(sc: &Scenario) -> Result<(), String> {
     // batch: everything admitted up front (all at_step = 0), drained
     let mut batch = session_for(sc);
     for a in &arrivals {
-        batch.submit(&a.spec).map_err(|e| e.to_string())?;
+        let ArrivalKind::Submit(spec) = &a.kind else { unreachable!() };
+        batch.submit(spec).map_err(|e| e.to_string())?;
     }
     batch.drain().map_err(|e| e.to_string())?;
 

@@ -8,7 +8,9 @@
 //! (c) a forced skew triggers migration, and post-migration results
 //!     stay bit-identical.
 
-use trees::sched::{solo_profile, Fuser, JobBuild, JobId, JobSpec, SchedConfig};
+use trees::sched::{
+    solo_profile, Fuser, JobBuild, JobId, JobLimits, JobSpec, SchedConfig,
+};
 use trees::shard::{
     DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup,
 };
@@ -79,6 +81,7 @@ fn sharded_matches_solo(sc: &Scenario) -> Result<(), String> {
         placement: PLACEMENTS[sc.placement],
         rebalance,
         sched: SchedConfig::default(),
+        ..Default::default()
     });
     for b in &builds {
         group.admit_build(b);
@@ -172,6 +175,7 @@ fn balanced_load_is_subadditive_per_device() {
         placement: PlacementKind::RoundRobin,
         rebalance: RebalanceCfg { enabled: false, ..Default::default() },
         sched: SchedConfig::default(),
+        ..Default::default()
     });
     let mut homes = vec![Vec::new(); 2];
     for b in &builds {
@@ -241,9 +245,10 @@ fn sharded_artifact_tenants_migrate_and_match_solo() {
         placement: PlacementKind::RoundRobin,
         rebalance: RebalanceCfg { cooldown: 0, ..Default::default() },
         sched: SchedConfig::default(),
+        ..Default::default()
     });
     for ((co, w), &n) in cos.iter().zip(&workloads).zip(&ns) {
-        group.admit_artifact(&format!("fib:{n}"), co, w, 1);
+        group.admit_artifact(&format!("fib:{n}"), co, w, JobLimits::default());
     }
     group.run_to_completion().unwrap();
     assert_eq!(group.finished_count(), 4);
@@ -289,6 +294,7 @@ fn forced_skew_migrates_and_stays_bit_identical() {
         placement: PlacementKind::Affinity,
         rebalance: RebalanceCfg::default(),
         sched: SchedConfig::default(),
+        ..Default::default()
     });
     group.pin("fib", 0);
     group.pin("mergesort", 1);
