@@ -1,5 +1,6 @@
 """Deterministic twin of rust/src/sched + rust/src/shard + rust/src/fault
-for the EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1 and E-FAULT-1).
++ rust/src/trace for the EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1,
+E-FAULT-1 and E-TRACE-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
 exact counting semantics of the fused scheduler (rust/src/sched), the
@@ -12,9 +13,11 @@ for apps whose epoch schedules are RNG-independent: fib, mergesort
 deterministic 4-neighbor grid. Every quantity printed here is a *model*
 quantity (epoch counts, live lanes, bucket-tiled launches, modeled
 microseconds) — `cargo bench --bench bench_fusion`, `--bench
-bench_shard` and `--bench bench_serve` compute the same numbers from
-the real machines. The E-FAULT-1 twin also snapshots the repo-root
-BENCH_serve.json.
+bench_shard`, `--bench bench_serve` and `--bench bench_trace` compute
+the same numbers from the real machines. The E-FAULT-1 twin also
+snapshots the repo-root BENCH_serve.json, and the E-TRACE-1 twin
+(critical-path window twin of rust/src/trace) snapshots
+BENCH_trace.json.
 
 Run:  python tools/fusion_model.py
 """
@@ -22,6 +25,7 @@ Run:  python tools/fusion_model.py
 import json
 import math
 import os
+import time
 
 # ------------------------------- TVM machine (mirrors tvm::Interp)
 
@@ -388,6 +392,7 @@ class ShardDevice:
         self.launches = 0
         self.work = 0
         self.finished = []  # machines retired since last drain
+        self.last = None  # last step's (jobs, live_per_job, launches)
 
     def has_work(self):
         return bool(self.active) or bool(self.pending)
@@ -428,13 +433,16 @@ class ShardDevice:
             cen, lo, hi = m.front()
             fronts.append((i, hi - lo))
         sel = self.policy.select(fronts)
-        live_per_job, window = [], 0
+        live_per_job, jobs, window = [], [], 0
         for i in sel:
             m = self.active[i]
             cen, lo, hi = m.front()
             live_per_job.append(m.live_in(cen, lo, hi))
+            jobs.append(getattr(m, "job", None))
             window += hi - lo
         step_launches = launches_for(window)
+        # StepTrace twin: what the trace/critical-path layer observes
+        self.last = (jobs, list(live_per_job), step_launches)
         self.steps += 1
         self.launches += step_launches
         self.work += sum(live_per_job)
@@ -451,15 +459,79 @@ class ShardDevice:
         return live_per_job, step_launches
 
 
+WINDOW = 8  # RebalanceCfg::default().window / `trees trace --window`
+
+
+class CriticalWindow:
+    """trace::critical::CriticalWindow twin. Each pushed group epoch
+    banks the straggler device's per-tenant compute edges (lane-share
+    attribution of the device's modeled fused-epoch cost); owner() is
+    the (device, job) pair with the most banked critical µs over the
+    window, ties to the smallest key."""
+
+    def __init__(self, window=WINDOW):
+        self.window = max(window, 1)
+        self.entries = []  # one [(device, job, us), ...] per epoch
+
+    def push(self, per_dev):
+        """per_dev: per device None (idle) or the ShardDevice.last
+        tuple (jobs, live_per_job, launches)."""
+        seg = []
+        straggler, best = None, 0.0
+        for d, e in enumerate(per_dev):
+            if e is None or not e[0]:
+                continue
+            us = fused_epoch_us(e[1]) + (e[2] - 1) * LAUNCH_US
+            if straggler is None or us > best:
+                straggler, best = d, us
+        if straggler is not None:
+            jobs, live, _ = per_dev[straggler]
+            total = sum(live)
+            for j, l in zip(jobs, live):
+                share = l / total if total > 0 else 1.0 / len(jobs)
+                seg.append((straggler, j, best * share))
+        self.entries.append(seg)
+        while len(self.entries) > self.window:
+            self.entries.pop(0)
+
+    def owner(self):
+        acc, total = {}, 0.0
+        for seg in self.entries:
+            for d, j, us in seg:
+                acc[(d, j)] = acc.get((d, j), 0.0) + us
+                total += us
+        best = None
+        for k in sorted(acc):
+            if best is None or acc[k] > best[1]:
+                best = (k, acc[k])
+        if best is None:
+            return None
+        (d, j), us = best
+        return dict(device=d, job=j, us=us,
+                    share=us / total if total > 0.0 else 0.0)
+
+
 class Rebalancer:
     """shard::balance::Rebalancer twin: at most one migration per
-    boundary; trigger max > mean * skew; strict gap improvement."""
+    boundary; trigger max > mean * skew; strict gap improvement. Under
+    mode="critical-path" the migrant preference goes to the tenant the
+    CriticalWindow attributes the recent critical path to (when it
+    lives on the overloaded device and passes the same gap-shrinking
+    guards), falling back to the static gap-evening pick."""
 
-    def __init__(self, enabled=True, skew=SKEW_THRESHOLD, cooldown=COOLDOWN):
+    def __init__(self, enabled=True, skew=SKEW_THRESHOLD, cooldown=COOLDOWN,
+                 mode="skew", window=WINDOW):
         self.enabled = enabled
         self.skew = skew
         self.cooldown = cooldown
         self.steps_since = cooldown
+        self.mode = mode
+        self.win = CriticalWindow(window) if mode == "critical-path" else None
+
+    def observe(self, per_dev):
+        """Rebalancer::observe twin — no-op outside critical-path."""
+        if self.win is not None:
+            self.win.push(per_dev)
 
     def plan(self, loads, devs, alive=None):
         live = [d for d in range(len(loads))
@@ -483,6 +555,19 @@ class Rebalancer:
         if len(tenants) < 2:
             return None
         gap0 = loads[src] - loads[dst]
+        if self.win is not None:
+            o = self.win.owner()
+            if o is not None and o["device"] == src:
+                hit = next((t for t in tenants
+                            if getattr(t[0], "job", None) == o["job"]),
+                           None)
+                if hit is not None:
+                    m, load = hit
+                    if 0 < load < gap0 and \
+                            abs((loads[src] - load)
+                                - (loads[dst] + load)) < gap0:
+                        self.steps_since = 0
+                        return m, src, dst
         best = None
         for m, load in tenants:
             if load == 0 or load >= gap0:
@@ -496,11 +581,17 @@ class Rebalancer:
         return best[0], src, dst
 
 
-def run_sharded(tokens, devices, placement="rr", pins=None, rebalance=True):
+def run_sharded(tokens, devices, placement="rr", pins=None, rebalance=True,
+                mode="skew", trace_out=None):
     """shard::ShardGroup twin: lock-step group epochs over per-device
     fused schedulers, modeled via DeviceGroup (max-over-devices +
-    barrier per step)."""
+    barrier per step). `mode` picks the rebalancer's migrant policy
+    ("skew" | "critical-path"); `trace_out` (a list) collects each
+    group epoch's per-device trace tuples — the GroupStepTrace twin
+    the rust/src/trace analyzer replays."""
     machines = [build(t) for t in tokens]
+    for i, m in enumerate(machines):
+        m.job = i  # JobId twin: admission order
     devs = [ShardDevice() for _ in range(devices)]
     pins = dict(pins) if pins else {}
     rr_next = 0
@@ -515,20 +606,25 @@ def run_sharded(tokens, devices, placement="rr", pins=None, rebalance=True):
             d = rr_next % devices
             rr_next += 1
         devs[d].admit(m)
-    bal = Rebalancer(enabled=rebalance)
+    bal = Rebalancer(enabled=rebalance, mode=mode)
     steps = migrations = 0
     us = peak_imb = 0.0
     while any(d.has_work() for d in devs):
-        dev_us = []
+        dev_us, per_dev = [], []
         for d in devs:
             if d.has_work():
                 live_per_job, launches = d.step()
                 dev_us.append(fused_epoch_us(live_per_job)
                               + (launches - 1) * LAUNCH_US)
+                per_dev.append(d.last)
             else:
                 dev_us.append(0.0)
+                per_dev.append(None)
         steps += 1
         us += max(dev_us) + barrier_us(devices)
+        bal.observe(per_dev)  # before plan(), as in ShardGroup::step
+        if trace_out is not None:
+            trace_out.append(per_dev)
         if devices > 1:  # nothing to balance (or measure) solo
             loads = [d.live_lanes() for d in devs]
             if sum(loads) > 0:
@@ -882,10 +978,91 @@ def shard_table():
           f"{frozen['imb']:.2f}x vs {pinned['imb']:.2f}x)")
 
 
+# E-TRACE-1 runs the policy comparison on the E-SHARD-1 forced-skew
+# mix: six long fibs pinned to d0 opposite one quick sort on d1.
+TRACE_TOKENS = ["fib:16"] * 6 + ["mergesort:16"]
+TRACE_PINS = {"fib": 0, "mergesort": 1}
+TRACE_MIX = "6x fib:16 pinned d0 + mergesort:16 pinned d1"
+
+
+def trace_table():
+    print("\nE-TRACE-1 — trace-guided (critical-path) vs skew-threshold "
+          "rebalancing, forced-skew mix, 2 devices (bench_trace twin)")
+    trace = []
+    runs = []
+    for name, kw in (
+        ("no-rebalance", dict(rebalance=False)),
+        ("skew-threshold", {}),
+        ("critical-path", dict(mode="critical-path", trace_out=trace)),
+    ):
+        r = run_sharded(TRACE_TOKENS, 2, placement="affinity",
+                        pins=dict(TRACE_PINS), **kw)
+        runs.append((name, r))
+    base, skew, crit = (r for _, r in runs)
+    for name, r in runs:
+        # the policy decides when/where, never what: same total work
+        assert r["work"] == base["work"], (name, r["work"], base["work"])
+    # the acceptance bar: trace-guided matches-or-beats the static pick
+    assert crit["us"] <= skew["us"] + 1e-9, (crit["us"], skew["us"])
+
+    hdr = ("| policy | group epochs | migrations | peak imbalance | "
+           "modeled APU (µs) | vs skew-threshold |")
+    print(hdr)
+    print("|" + "---|" * 6)
+    for name, r in runs:
+        print(f"| {name} | {r['steps']} | {r['migrations']} | "
+              f"{max(r['imb'], 1.0):.2f}x | {r['us']:.0f} | "
+              f"{r['us'] / skew['us']:.2f}x |")
+
+    # analyzer overhead twin: replay the recorded group trace through a
+    # fresh CriticalWindow (the per-epoch work `trees trace` adds)
+    win = CriticalWindow()
+    t0 = time.perf_counter()
+    for per_dev in trace:
+        win.push(per_dev)
+    ns = (time.perf_counter() - t0) * 1e9 / max(len(trace), 1)
+    edges = sum(
+        sum(len(e[0]) + 1 for e in per_dev if e is not None)
+        for per_dev in trace
+    ) + crit["migrations"]
+    print(f"\nanalyzer: {edges} PAG edges over {len(trace)} epochs, "
+          f"~{ns:.0f} ns/epoch (python twin; bench_trace measures the "
+          f"Rust analyzer)")
+
+    out = {
+        "bench": "trace",
+        "devices": 2,
+        "mix": TRACE_MIX,
+        "policies": [
+            {
+                "name": name,
+                "group_steps": r["steps"],
+                "migrations": r["migrations"],
+                "peak_imbalance": round(max(r["imb"], 1.0), 4),
+                "modeled_us": round(r["us"], 3),
+                "vs_skew_threshold": round(r["us"] / skew["us"], 4),
+            }
+            for name, r in runs
+        ],
+        "analyzer": {
+            "pag_edges": edges,
+            "epochs": len(trace),
+            "ns_per_epoch": round(ns, 1),
+        },
+    }
+    path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "BENCH_trace.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main():
     fuse_table()
     shard_table()
     fault_table()
+    trace_table()
 
 
 if __name__ == "__main__":

@@ -46,6 +46,11 @@
 //!   and may join mid-run at any epoch boundary. `trees serve` /
 //!   `trees batch` are thin loops over it; see the module docs for the
 //!   "which entry point do I use" table.
+//! * [`trace`] — epoch-trace observability: the program-activity
+//!   graph (PAG) built from the shard group's epoch-ticked traces,
+//!   sliding-window critical-path attribution to a (device, tenant)
+//!   pair, and the `trees trace` NDJSON stream. Also feeds the
+//!   `critical-path` rebalancing mode back into [`shard`].
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
 //!   interpreter: the correctness oracle and the `T_1` (work) meter;
 //!   also home of the TMS-compression update every driver shares.
@@ -73,5 +78,6 @@ pub mod sched;
 pub mod session;
 pub mod shard;
 pub mod simt;
+pub mod trace;
 pub mod tvm;
 pub mod util;

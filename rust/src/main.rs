@@ -9,6 +9,9 @@
 //!                                `Session` (arrival schedule `spec@epoch`,
 //!                                fed from --jobs, --spec-file, or stdin)
 //!   batch [--jobs <spec>]        fused-vs-solo comparison for a job mix
+//!   trace [--jobs <feed>]        run a feed and stream one NDJSON record
+//!                                per group epoch to stdout (the schema is
+//!                                documented at `trees::trace`)
 //!
 //! Workload options (app-dependent):
 //!   --n N          problem size (fib n, fft/sort length, matmul edge,
@@ -35,7 +38,9 @@ use trees::sched::{
     SchedConfig,
 };
 use trees::session::{Arrival, Session, SessionBuilder};
-use trees::shard::{modeled_group_us, PlacementKind, RebalanceCfg};
+use trees::shard::{
+    modeled_group_us, PlacementKind, RebalanceCfg, RebalanceMode,
+};
 use trees::simt::{DeviceGroup, GpuModel};
 use trees::util::cli::Args;
 use trees::util::rng::Rng;
@@ -54,7 +59,11 @@ USAGE:
               [--max-live-lanes N] [--fairness round-robin|weighted]
               [--devices N] [--placement round-robin|least-loaded|affinity]
               [--skew T] [--no-rebalance] [--fault-plan <plan>]
+              [--rebalance-mode skew|critical-path] [--window W] [--trace]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
+  trees trace [serve options] — serve the feed silently and stream one
+              NDJSON record per group epoch to stdout (--window W sets
+              the critical-path attribution window, default 8)
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
 
@@ -79,6 +88,11 @@ later submissions queue until resident demand drains.
 per-device epoch fusion, a lock-step group loop with a cross-device
 barrier, and epoch-boundary tenant migration when live-lane load skews
 past --skew (default 1.5; --no-rebalance pins placement).
+--rebalance-mode critical-path migrates the tenant the sliding-window
+critical-path analyzer (over --window epochs) attributes the group's
+critical path to, instead of the most-live-lanes tenant. serve --trace
+mirrors the trace subcommand's NDJSON stream onto stderr, keeping the
+human-readable service log on stdout.
 
 --fault-plan injects deterministic device faults at group-epoch
 boundaries: comma-separated die:D@E (device D dies before group epoch
@@ -103,7 +117,7 @@ fn real_main() -> Result<()> {
             "n", "bucket", "seed", "graph", "scale", "steps", "jobs",
             "capacity", "slice-cap", "max-active", "max-live-lanes",
             "copies", "fairness", "devices", "placement", "skew",
-            "spec-file", "fault-plan",
+            "spec-file", "fault-plan", "rebalance-mode", "window",
         ],
         &["trace", "verbose", "help", "no-rebalance"],
     )
@@ -121,6 +135,7 @@ fn real_main() -> Result<()> {
         "native" => native(&args),
         "serve" => serve(&args),
         "batch" => batch(&args),
+        "trace" => trace_cmd(&args),
         cmd => bail!("unknown command {cmd:?}\n{}", usage()),
     }
 }
@@ -319,11 +334,20 @@ fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
     let devices = args.usize_or("devices", 1).map_err(anyhow::Error::msg)?;
     let placement = PlacementKind::parse(&args.str_or("placement", "round-robin"))?;
     let rb = RebalanceCfg::default();
+    let mode = match args.str_or("rebalance-mode", "skew").as_str() {
+        "skew" | "skew-threshold" => RebalanceMode::SkewThreshold,
+        "critical-path" | "critical" | "cp" => RebalanceMode::CriticalPath,
+        other => bail!(
+            "unknown rebalance mode {other:?} (skew | critical-path)"
+        ),
+    };
     let rebalance = RebalanceCfg {
         enabled: !args.flag("no-rebalance"),
         skew_threshold: args
             .f64_or("skew", rb.skew_threshold)
             .map_err(anyhow::Error::msg)?,
+        mode,
+        window: trace_window(args)?,
         ..rb
     };
     Ok(Session::builder()
@@ -331,6 +355,13 @@ fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
         .devices(devices)
         .placement(placement)
         .rebalance(rebalance))
+}
+
+/// `--window W`: the sliding critical-path attribution window, in group
+/// epochs, shared by the analyzer stream and the critical-path
+/// rebalancer (default 8, clamped to at least 1).
+fn trace_window(args: &Args) -> Result<usize> {
+    Ok(args.usize_or("window", 8).map_err(anyhow::Error::msg)?.max(1))
 }
 
 /// The serve feed: `--spec-file PATH` (`-` = stdin), else `--jobs`.
@@ -377,12 +408,19 @@ fn serve(args: &Args) -> Result<()> {
     // the banner agree with the session actually built
     let devices =
         args.usize_or("devices", 1).map_err(anyhow::Error::msg)?.max(1);
-    let mut builder = session_builder(args, false)?;
-    if devices == 1 && fault.is_none() {
+    let trace = args.flag("trace");
+    let mut builder = session_builder(args, trace)?;
+    if trace {
+        // the NDJSON stream goes to stderr so the human-readable
+        // service log on stdout stays parseable on its own
+        builder = builder
+            .trace_sink(trace_window(args)?, |line| eprintln!("{line}"));
+    }
+    if devices == 1 && fault.is_none() && !trace {
         // sharded serving stays on per-device interpreter engines
         // (per-app artifacts are single-device; the group model is
-        // what's under study there — and a fault plan forces the
-        // sharded backend even for one device)
+        // what's under study there — a fault plan or trace sink
+        // forces the sharded backend even for one device)
         let art = trees::runtime::try_artifacts()
             .and_then(|(manifest, dir)| Ok((Device::cpu()?, manifest, dir)));
         match art {
@@ -513,6 +551,41 @@ fn serve_report(session: &Session) {
             st.retry_backoff_us,
         );
     }
+}
+
+/// `trees trace`: serve the feed silently and stream the epoch trace as
+/// NDJSON — one record per group epoch, schema documented at
+/// [`trees::trace`]. stdout carries nothing but the records (goldens
+/// diff it byte-for-byte); the run summary goes to stderr. Always runs
+/// on the sharded backend so the group trace exists even for one
+/// device.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let arrivals = Arrival::parse_feed(&serve_feed(args)?)?;
+    if arrivals.is_empty() {
+        bail!("job feed is empty\n{}", usage());
+    }
+    let mut builder = session_builder(args, true)?
+        .trace_sink(trace_window(args)?, |line| println!("{line}"));
+    if let Some(plan) = args.get("fault-plan") {
+        let p = FaultPlan::parse(plan)?;
+        if !p.is_empty() {
+            builder = builder.fault_plan(p);
+        }
+    }
+    let mut session = builder.build()?;
+    session.run_feed(&arrivals, |_, _| {}, |_| {})?;
+    let epochs = session
+        .shard_stats()
+        .map(|s| s.group_steps)
+        .unwrap_or(session.stats().steps);
+    eprintln!(
+        "traced {} job(s) over {} device(s): {} group epochs, {} launches",
+        session.results().len(),
+        session.devices(),
+        epochs,
+        session.stats().launches,
+    );
+    Ok(())
 }
 
 /// `trees batch`: run a job mix fused and compare against the sum of

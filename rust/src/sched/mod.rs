@@ -350,6 +350,11 @@ pub struct FusedScheduler {
     stats: FusedStats,
     next_id: usize,
     on_complete: Option<Box<dyn FnMut(&FinishedJob)>>,
+    /// The most recent step's trace entry, kept regardless of
+    /// `SchedConfig::trace` (which only gates the unbounded
+    /// accumulation in `FusedStats::trace`) — the shard group reads it
+    /// every boundary to feed the trace-guided rebalancer.
+    last_step: Option<StepTrace>,
 }
 
 impl FusedScheduler {
@@ -370,6 +375,7 @@ impl FusedScheduler {
             stats: FusedStats::default(),
             next_id: 0,
             on_complete: None,
+            last_step: None,
         }
     }
 
@@ -632,13 +638,22 @@ impl FusedScheduler {
         self.stats.work += frame.live;
         self.stats.peak_window = self.stats.peak_window.max(frame.window());
         self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+        let st = StepTrace {
+            live_per_job: frame.slices.iter().map(|s| s.live).collect(),
+            jobs: views.iter().map(|v| v.job).collect(),
+            window: frame.window(),
+            launches,
+            solo_launches: frame
+                .slices
+                .iter()
+                .map(|s| self.fuser.launches_for(s.len))
+                .sum(),
+            pending: self.pending.len(),
+        };
         if self.cfg.trace {
-            self.stats.trace.push(StepTrace {
-                live_per_job: frame.slices.iter().map(|s| s.live).collect(),
-                window: frame.window(),
-                launches,
-            });
+            self.stats.trace.push(st.clone());
         }
+        self.last_step = Some(st);
 
         // ---- riders run their epoch; everyone else stalls ----
         let mut selected = vec![false; self.active.len()];
@@ -734,6 +749,13 @@ impl FusedScheduler {
 
     pub fn stats(&self) -> &FusedStats {
         &self.stats
+    }
+
+    /// The most recent step's trace entry (`None` before the first
+    /// step). Available whether or not `SchedConfig::trace` is on —
+    /// the shard group's per-boundary window sample.
+    pub fn last_step(&self) -> Option<&StepTrace> {
+        self.last_step.as_ref()
     }
 
     pub fn finished(&self) -> &[FinishedJob] {

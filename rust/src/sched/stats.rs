@@ -6,7 +6,7 @@ use crate::simt::GpuModel;
 use crate::tvm::TvmProgram;
 
 use super::fuse::Fuser;
-use super::job::JobInit;
+use super::job::{JobId, JobInit};
 
 /// Per-job scheduler accounting.
 #[derive(Debug, Clone, Default)]
@@ -41,15 +41,25 @@ impl JobStats {
     }
 }
 
-/// One fused step, for the modeled-APU replay.
+/// One fused step, for the modeled-APU replay and the
+/// [`crate::trace`] program-activity graph.
 #[derive(Debug, Clone)]
 pub struct StepTrace {
     /// Live lanes per participating tenant (slice order).
     pub live_per_job: Vec<u64>,
+    /// The riders, in slice order (parallel to `live_per_job`) — what
+    /// lets the trace layer attribute a device's epoch to tenants.
+    pub jobs: Vec<JobId>,
     /// Fused window length (lanes shipped).
     pub window: usize,
     /// Launches after bucket tiling.
     pub launches: u64,
+    /// Launches the riders would have paid solo (Σ per-slice tiling) —
+    /// the per-step numerator of "launches saved vs solo".
+    pub solo_launches: u64,
+    /// Tenants parked in the pending queue when this step launched
+    /// (admission queue depth under backpressure).
+    pub pending: usize,
 }
 
 /// Whole-run scheduler totals.

@@ -57,6 +57,8 @@ use crate::sched::{
 use crate::shard::{
     DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup, ShardStats,
 };
+use crate::simt::{DeviceGroup, GpuModel};
+use crate::trace::Streamer;
 use crate::util::rng::Rng;
 
 /// Feed arrival epochs beyond this are almost certainly typos (a fat-
@@ -192,6 +194,7 @@ pub struct SessionBuilder {
     artifacts: Option<ArtifactEngine>,
     fault: Option<FaultPlan>,
     retry: RetryCfg,
+    sink: Option<(usize, Box<dyn FnMut(&str)>)>,
 }
 
 impl Default for SessionBuilder {
@@ -204,6 +207,7 @@ impl Default for SessionBuilder {
             artifacts: None,
             fault: None,
             retry: RetryCfg::default(),
+            sink: None,
         }
     }
 }
@@ -287,6 +291,23 @@ impl SessionBuilder {
         self
     }
 
+    /// Stream one NDJSON record per group epoch to `sink` — the
+    /// `trees trace` pipeline (see [`crate::trace`] for the record
+    /// schema). Implies per-step tracing and forces the sharded
+    /// backend, so the group trace exists even for one device (a
+    /// 1-device group degenerates to plain fusion, so single-device
+    /// sessions pay nothing in the modeled schedule). `window` is the
+    /// critical-path attribution span in epochs (clamped to ≥ 1).
+    pub fn trace_sink(
+        mut self,
+        window: usize,
+        sink: impl FnMut(&str) + 'static,
+    ) -> Self {
+        self.sched.trace = true;
+        self.sink = Some((window.max(1), Box::new(sink)));
+        self
+    }
+
     /// Serve submits through AOT artifact coordinators compiled on
     /// `dev` (built lazily, one per submit). A submit whose app has no
     /// artifact falls back to the interpreter engine for that job —
@@ -331,7 +352,9 @@ impl SessionBuilder {
                 .context("artifact manifest exposes no usable window buckets")?;
             sched.buckets = buckets;
         }
-        let backend = if self.devices > 1 || self.fault.is_some() {
+        let want_shard =
+            self.devices > 1 || self.fault.is_some() || self.sink.is_some();
+        let backend = if want_shard {
             Backend::Sharded(ShardGroup::new(ShardConfig {
                 devices: self.devices,
                 placement: self.placement,
@@ -343,14 +366,30 @@ impl SessionBuilder {
         } else {
             Backend::Fused(FusedScheduler::new(sched))
         };
+        let tracer = self.sink.map(|(window, sink)| Tracer {
+            streamer: Streamer::new(
+                DeviceGroup::new(GpuModel::default(), self.devices),
+                window,
+            ),
+            sink,
+        });
         Ok(Session {
             backend,
             art: self.artifacts,
+            tracer,
             results: Vec::new(),
             polled: 0,
             steps: 0,
         })
     }
+}
+
+/// The NDJSON trace pipeline: the streaming analyzer plus the sink it
+/// writes each record to (stdout for `trees trace`, stderr for
+/// `trees serve --trace`).
+struct Tracer {
+    streamer: Streamer,
+    sink: Box<dyn FnMut(&str)>,
 }
 
 /// The scheduler a session serves from: one fused epoch loop, or a
@@ -443,6 +482,7 @@ pub struct SessionStats {
 pub struct Session {
     backend: Backend,
     art: Option<ArtifactEngine>,
+    tracer: Option<Tracer>,
     results: Vec<SessionResult>,
     polled: usize,
     steps: u64,
@@ -536,7 +576,16 @@ impl Session {
             self.steps += 1;
         }
         self.collect();
+        self.emit_trace();
         Ok(progressed)
+    }
+
+    /// Drain freshly traced group epochs into the NDJSON sink — a
+    /// no-op without a [`SessionBuilder::trace_sink`].
+    fn emit_trace(&mut self) {
+        let Some(tr) = self.tracer.as_mut() else { return };
+        let Backend::Sharded(g) = &self.backend else { return };
+        tr.streamer.drain(g.stats(), &mut tr.sink);
     }
 
     fn collect(&mut self) {
@@ -878,6 +927,32 @@ mod tests {
         assert_eq!(completed.len(), 2);
         assert!(s.steps() >= 40, "clock reached the late arrival");
         assert_eq!(s.results().len(), 2);
+    }
+
+    #[test]
+    fn trace_sink_streams_one_record_per_group_epoch() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let lines: Rc<RefCell<Vec<String>>> = Rc::default();
+        let tap = Rc::clone(&lines);
+        let mut s = Session::builder()
+            .trace_sink(8, move |l: &str| {
+                tap.borrow_mut().push(l.to_string());
+            })
+            .build()
+            .unwrap();
+        s.submit_spec("fib:10").unwrap();
+        s.submit_spec("mergesort:16").unwrap();
+        s.drain().unwrap();
+        assert!(
+            s.shard_stats().is_some(),
+            "a trace sink forces the shard seam even for one device"
+        );
+        let lines = lines.borrow();
+        assert_eq!(lines.len() as u64, s.stats().steps);
+        for l in lines.iter() {
+            assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
+        }
     }
 
     #[test]

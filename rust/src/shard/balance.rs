@@ -16,10 +16,36 @@
 //!   least loaded device *strictly* shrinks the load gap (this rules
 //!   out ping-pong: every migration monotonically improves the pair);
 //! * damping: at least `cooldown` group steps between migrations.
+//!
+//! Two candidate-selection modes share that trigger and damping
+//! ([`RebalanceMode`]): `SkewThreshold` picks the tenant that best
+//! evens the (src, dst) pair — a static, load-only view — while
+//! `CriticalPath` asks the [`crate::trace::CriticalWindow`] which
+//! tenant *owned* the critical path over the recent epochs and moves
+//! that one when it passes the same gap-shrinking guards (falling
+//! back to the static pick otherwise). Either way a move is a whole
+//! tenant at a quiescent boundary, so results stay bit-identical to
+//! solo runs.
 
 use crate::sched::{FusedScheduler, JobId};
+use crate::simt::{DeviceGroup, GpuModel};
+use crate::trace::CriticalWindow;
 
-use super::DeviceId;
+use super::{DeviceId, GroupStepTrace};
+
+/// How the rebalancer picks its migrant once the skew trigger fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Static pick: the tenant that best evens the (src, dst) load
+    /// pair right now.
+    SkewThreshold,
+    /// Trace-guided pick: the tenant the
+    /// [`crate::trace::CriticalWindow`] attributes the recent
+    /// critical path to, when it lives on the overloaded device and
+    /// passes the same gap-shrinking guards; the static pick
+    /// otherwise.
+    CriticalPath,
+}
 
 /// Rebalancer tunables.
 #[derive(Debug, Clone)]
@@ -31,11 +57,22 @@ pub struct RebalanceCfg {
     pub skew_threshold: f64,
     /// Minimum group steps between two migrations.
     pub cooldown: u64,
+    /// Candidate selection once the trigger fires.
+    pub mode: RebalanceMode,
+    /// Critical-path attribution window (group epochs) under
+    /// [`RebalanceMode::CriticalPath`]; clamped to ≥ 1.
+    pub window: usize,
 }
 
 impl Default for RebalanceCfg {
     fn default() -> Self {
-        RebalanceCfg { enabled: true, skew_threshold: 1.5, cooldown: 2 }
+        RebalanceCfg {
+            enabled: true,
+            skew_threshold: 1.5,
+            cooldown: 2,
+            mode: RebalanceMode::SkewThreshold,
+            window: 8,
+        }
     }
 }
 
@@ -52,13 +89,34 @@ pub struct Migration {
 pub struct Rebalancer {
     cfg: RebalanceCfg,
     steps_since: u64,
+    /// Critical-path attribution window, lazily sized to the group on
+    /// the first observed step ([`RebalanceMode::CriticalPath`] only).
+    win: Option<CriticalWindow>,
 }
 
 impl Rebalancer {
     pub fn new(cfg: RebalanceCfg) -> Rebalancer {
         // start eligible: the first boundary may already be skewed
         let steps_since = cfg.cooldown;
-        Rebalancer { cfg, steps_since }
+        Rebalancer { cfg, steps_since, win: None }
+    }
+
+    /// Feed one group-epoch trace entry into the critical-path window.
+    /// The shard group calls this every step regardless of mode — it
+    /// is a no-op under [`RebalanceMode::SkewThreshold`], so the
+    /// default policy pays nothing for the hook.
+    pub fn observe(&mut self, gs: &GroupStepTrace) {
+        if self.cfg.mode != RebalanceMode::CriticalPath {
+            return;
+        }
+        let window = self.cfg.window;
+        let win = self.win.get_or_insert_with(|| {
+            CriticalWindow::new(
+                DeviceGroup::new(GpuModel::default(), gs.per_dev.len()),
+                window,
+            )
+        });
+        win.push(gs);
     }
 
     /// Decide whether to migrate at this epoch boundary. `loads[d]` is
@@ -115,6 +173,33 @@ impl Rebalancer {
         // if the gap strictly shrinks — overshooting a big tenant onto
         // the idle device would invert the skew and oscillate
         let gap0 = loads[src] - loads[dst];
+        if self.cfg.mode == RebalanceMode::CriticalPath {
+            // prefer the tenant *owning* the recent critical path when
+            // it lives on the overloaded device and passes the same
+            // monotone gap-shrinking guards as the static pick
+            let owner = self
+                .win
+                .as_ref()
+                .and_then(|w| w.owner())
+                .filter(|o| o.device.0 == src);
+            if let Some(o) = owner {
+                if let Some(&(id, l)) =
+                    tenants.iter().find(|&&(id, _)| id == o.job)
+                {
+                    let fits = l > 0 && l < gap0 && l <= headroom;
+                    if fits
+                        && (loads[src] - l).abs_diff(loads[dst] + l) < gap0
+                    {
+                        self.steps_since = 0;
+                        return Some(Migration {
+                            job: id,
+                            from: DeviceId(src),
+                            to: DeviceId(dst),
+                        });
+                    }
+                }
+            }
+        }
         let mut best: Option<(JobId, u64)> = None;
         for &(id, l) in &tenants {
             if l == 0 || l >= gap0 || l > headroom {
@@ -247,6 +332,71 @@ mod tests {
             .expect("live pair is still skewed");
         assert_eq!(m.from, DeviceId(0));
         assert_eq!(m.to, DeviceId(2));
+    }
+
+    fn gs(d0: &[(usize, u64)], d1: &[(usize, u64)]) -> GroupStepTrace {
+        let st = |jobs: &[(usize, u64)]| crate::sched::StepTrace {
+            live_per_job: jobs.iter().map(|&(_, l)| l).collect(),
+            jobs: jobs.iter().map(|&(j, _)| JobId(j)).collect(),
+            window: 0,
+            launches: 1,
+            solo_launches: jobs.len() as u64,
+            pending: 0,
+        };
+        GroupStepTrace {
+            per_dev: vec![Some(st(d0)), Some(st(d1))],
+            alive: 2,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn critical_path_mode_prefers_the_owning_tenant() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            mode: RebalanceMode::CriticalPath,
+            cooldown: 0,
+            ..Default::default()
+        });
+        // job 1 dominates the straggler device d0 over the window
+        r.observe(&gs(&[(0, 10), (1, 900), (2, 10)], &[(3, 5)]));
+        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        assert_eq!(m.job, JobId(1), "the critical-path owner moves");
+        assert_eq!(m.from, DeviceId(0));
+        assert_eq!(m.to, DeviceId(1));
+    }
+
+    #[test]
+    fn critical_path_mode_falls_back_to_the_static_pick() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            mode: RebalanceMode::CriticalPath,
+            cooldown: 0,
+            ..Default::default()
+        });
+        // the critical path lives on d1 — not the overloaded device —
+        // so the planner takes the ordinary gap-shrinking candidate
+        r.observe(&gs(&[(0, 10), (1, 10), (2, 10)], &[(3, 900)]));
+        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        assert_eq!(m.job, JobId(0), "static candidate order");
+        assert_eq!(m.to, DeviceId(1));
+    }
+
+    #[test]
+    fn skew_threshold_mode_ignores_observations() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        // same observation as the preference test: a no-op here
+        r.observe(&gs(&[(0, 10), (1, 900), (2, 10)], &[(3, 5)]));
+        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        assert_eq!(m.job, JobId(0), "default mode stays load-only");
     }
 
     #[test]

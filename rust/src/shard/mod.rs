@@ -20,7 +20,9 @@
 //! [`balance`] rebalancer can move a whole tenant — machine state and
 //! accumulated stats riding along through the scheduler's
 //! evict/re-admit seam — whenever live-lane load skews past a
-//! threshold. Results stay bit-identical to solo runs by the same
+//! threshold (and, under [`RebalanceMode::CriticalPath`], the move
+//! targets the tenant the [`crate::trace`] window attributes the
+//! critical path to). Results stay bit-identical to solo runs by the same
 //! argument as fusion itself: scheduling (and now placement and
 //! migration) decides *when and where* a tenant's next epoch runs,
 //! never what it computes.
@@ -46,7 +48,7 @@ mod balance;
 mod place;
 mod stats;
 
-pub use balance::{Migration, RebalanceCfg, Rebalancer};
+pub use balance::{Migration, RebalanceCfg, RebalanceMode, Rebalancer};
 pub use place::{Placement, PlacementKind};
 pub use stats::{
     group_step_cost_us, modeled_group_us, EvacuationEvent, GroupStepTrace,
@@ -364,27 +366,31 @@ impl ShardGroup {
         }
         self.stats.group_steps += 1;
         self.stats.group_syncs += 1;
+        // always assemble this step's group-trace entry: the unbounded
+        // accumulation in `stats.trace` stays gated on `trace`, but
+        // the rebalancer observes every entry (its critical-path mode
+        // needs the window even when nobody keeps the full trace)
+        let per_dev: Vec<Option<_>> = self
+            .devs
+            .iter()
+            .zip(&stepped)
+            .map(|(dev, &s)| {
+                if s {
+                    dev.last_step().cloned()
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let gs = GroupStepTrace {
+            per_dev,
+            alive: self.alive_devices(),
+            evacuations: self.stats.evacuation_log[evac_mark..].to_vec(),
+            retry_backoff_us: self.backoff_this_step,
+        };
+        self.balancer.observe(&gs);
         if self.trace {
-            let per_dev = self
-                .devs
-                .iter()
-                .zip(&stepped)
-                .map(|(dev, &s)| {
-                    if s {
-                        dev.stats().trace.last().cloned()
-                    } else {
-                        None
-                    }
-                })
-                .collect();
-            let evacuations =
-                self.stats.evacuation_log[evac_mark..].to_vec();
-            self.stats.trace.push(GroupStepTrace {
-                per_dev,
-                alive: self.alive_devices(),
-                evacuations,
-                retry_backoff_us: self.backoff_this_step,
-            });
+            self.stats.trace.push(gs);
         }
 
         // ---- epoch boundary: measure skew, maybe migrate ----

@@ -149,8 +149,11 @@ mod tests {
         let g = DeviceGroup::new(GpuModel::default(), 2);
         let t = |live: u64| StepTrace {
             live_per_job: vec![live],
+            jobs: vec![JobId(0)],
             window: live as usize,
             launches: 1,
+            solo_launches: 1,
+            pending: 0,
         };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t(40)), Some(t(4000))],
@@ -166,7 +169,14 @@ mod tests {
     #[test]
     fn idle_devices_cost_nothing_but_the_barrier_stands() {
         let g = DeviceGroup::new(GpuModel::default(), 2);
-        let t = StepTrace { live_per_job: vec![10], window: 10, launches: 1 };
+        let t = StepTrace {
+            live_per_job: vec![10],
+            jobs: vec![JobId(0)],
+            window: 10,
+            launches: 1,
+            solo_launches: 1,
+            pending: 0,
+        };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t), None],
             alive: 2,
@@ -180,7 +190,14 @@ mod tests {
     #[test]
     fn shrunk_barrier_and_backoff_enter_the_step_cost() {
         let g = DeviceGroup::new(GpuModel::default(), 4);
-        let t = StepTrace { live_per_job: vec![10], window: 10, launches: 1 };
+        let t = StepTrace {
+            live_per_job: vec![10],
+            jobs: vec![JobId(0)],
+            window: 10,
+            launches: 1,
+            solo_launches: 1,
+            pending: 0,
+        };
         let gs = GroupStepTrace {
             per_dev: vec![Some(t), None, None, None],
             alive: 1,

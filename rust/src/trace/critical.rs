@@ -1,0 +1,375 @@
+//! Critical-path attribution over a sliding window of the PAG, plus
+//! the per-epoch summary metrics the NDJSON stream carries.
+//!
+//! Under the lock-step model an epoch's critical path is not a search
+//! problem: the group step waits for exactly one device — the
+//! straggler, the device with the largest modeled fused-epoch cost —
+//! so the epoch's critical-path segment *is* that device's
+//! [`Activity::Compute`] edge set, one edge per rider weighted by its
+//! live-lane share. [`CriticalWindow`] banks those segments over a
+//! sliding window of recent epochs and names the (device, tenant)
+//! pair that accumulated the most critical time — the pair whose
+//! shrinking would shorten the run. That attribution is what the
+//! `critical-path` rebalancing mode migrates on
+//! ([`crate::shard::RebalanceCfg`]).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::sched::JobId;
+use crate::shard::{DeviceId, GroupStepTrace};
+use crate::simt::DeviceGroup;
+
+use super::pag::{epoch_edges, Activity};
+
+/// The (device, tenant) pair owning the critical path over the
+/// current window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CriticalOwner {
+    /// Device whose timeline the group kept waiting for.
+    pub device: DeviceId,
+    /// The tenant that contributed the most critical compute there.
+    pub job: JobId,
+    /// Modeled critical-path µs attributed to the pair in the window.
+    pub us: f64,
+    /// `us` over the window's total critical compute (0 ..= 1).
+    pub share: f64,
+}
+
+/// Sliding window of per-epoch critical-path segments.
+#[derive(Debug)]
+pub struct CriticalWindow {
+    g: DeviceGroup,
+    window: usize,
+    epochs: u64,
+    /// One segment per retained epoch: the straggler's compute edges
+    /// as (device, job, µs) triples.
+    entries: VecDeque<Vec<(DeviceId, JobId, f64)>>,
+}
+
+impl CriticalWindow {
+    /// `window` is the number of recent epochs attribution spans
+    /// (clamped to ≥ 1).
+    pub fn new(g: DeviceGroup, window: usize) -> CriticalWindow {
+        CriticalWindow {
+            g,
+            window: window.max(1),
+            epochs: 0,
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// Group epochs folded in so far.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Fold one group epoch into the window: walk the epoch's PAG
+    /// edges, find the straggler device, and bank its riders' compute
+    /// edges as this epoch's critical-path segment.
+    pub fn push(&mut self, gs: &GroupStepTrace) {
+        self.epochs += 1;
+        let edges = epoch_edges(&self.g, self.epochs, gs);
+        let mut totals: BTreeMap<usize, f64> = BTreeMap::new();
+        for e in &edges {
+            if e.activity == Activity::Compute {
+                *totals.entry(e.device.0).or_insert(0.0) += e.weight_us;
+            }
+        }
+        // argmax with strictly-greater: ties go to the smallest device
+        let mut straggler: Option<(usize, f64)> = None;
+        for (&d, &us) in &totals {
+            let better = match straggler {
+                Some((_, best)) => us > best,
+                None => true,
+            };
+            if better {
+                straggler = Some((d, us));
+            }
+        }
+        let seg: Vec<(DeviceId, JobId, f64)> = match straggler {
+            Some((d, _)) => edges
+                .iter()
+                .filter(|e| {
+                    e.activity == Activity::Compute && e.device.0 == d
+                })
+                .filter_map(|e| e.job.map(|j| (e.device, j, e.weight_us)))
+                .collect(),
+            None => Vec::new(),
+        };
+        self.entries.push_back(seg);
+        while self.entries.len() > self.window {
+            self.entries.pop_front();
+        }
+    }
+
+    /// The (device, tenant) pair owning the window's critical path, or
+    /// `None` before the first pushed epoch (ties go to the smallest
+    /// (device, job) key — fully deterministic).
+    pub fn owner(&self) -> Option<CriticalOwner> {
+        let mut acc: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+        let mut total = 0.0;
+        for seg in &self.entries {
+            for &(d, j, us) in seg {
+                *acc.entry((d.0, j.0)).or_insert(0.0) += us;
+                total += us;
+            }
+        }
+        let mut best: Option<((usize, usize), f64)> = None;
+        for (&k, &us) in &acc {
+            let better = match best {
+                Some((_, b)) => us > b,
+                None => true,
+            };
+            if better {
+                best = Some((k, us));
+            }
+        }
+        let ((d, j), us) = best?;
+        let share = if total > 0.0 { us / total } else { 0.0 };
+        Some(CriticalOwner {
+            device: DeviceId(d),
+            job: JobId(j),
+            us,
+            share,
+        })
+    }
+}
+
+/// Everything the stream reports about one group epoch.
+#[derive(Debug, Clone)]
+pub struct EpochMetrics {
+    /// 1-based group epoch.
+    pub epoch: u64,
+    /// Modeled group-step cost (µs): straggler + barrier + backoff —
+    /// identical to [`crate::shard::group_step_cost_us`].
+    pub cost_us: f64,
+    /// Barrier-tree cost over the devices alive at this step.
+    pub barrier_us: f64,
+    /// Retry backoff the boundary paid.
+    pub backoff_us: f64,
+    /// Fraction of stepping-device time idled waiting at the barrier:
+    /// Σ over stepping devices of (straggler − own compute + barrier),
+    /// over stepping × (straggler + barrier). 0 = perfectly balanced.
+    pub idle_frac: f64,
+    /// Straggler compute over mean compute across stepping devices
+    /// (1.0 when balanced or when at most one device stepped).
+    pub imbalance: f64,
+    /// Fused launches this epoch (Σ over devices).
+    pub launches: u64,
+    /// Launches the riders would have paid solo this epoch.
+    pub solo_launches: u64,
+    /// Live lanes shipped this epoch (Σ over devices and riders).
+    pub live_lanes: u64,
+    /// Tenants parked in pending queues (admission backpressure).
+    pub pending: usize,
+    /// Devices alive at this step.
+    pub alive: usize,
+    /// The epoch's straggler device (`None` if nothing stepped).
+    pub straggler: Option<DeviceId>,
+    /// The straggler's own compute cost (µs).
+    pub straggler_us: f64,
+    /// Window critical-path owner *after* folding this epoch in.
+    pub critical: Option<CriticalOwner>,
+}
+
+/// Streaming per-epoch analyzer: rolls a [`CriticalWindow`] and
+/// derives the summary metrics every NDJSON record carries.
+#[derive(Debug)]
+pub struct Analyzer {
+    g: DeviceGroup,
+    win: CriticalWindow,
+}
+
+impl Analyzer {
+    pub fn new(g: DeviceGroup, window: usize) -> Analyzer {
+        Analyzer { g, win: CriticalWindow::new(g, window) }
+    }
+
+    /// Fold one group epoch and report its metrics.
+    pub fn push(&mut self, gs: &GroupStepTrace) -> EpochMetrics {
+        let dev_us: Vec<f64> = gs
+            .per_dev
+            .iter()
+            .map(|d| match d {
+                Some(t) => {
+                    self.g.dev.fused_epoch_us(&t.live_per_job)
+                        + t.launches.saturating_sub(1) as f64
+                            * self.g.dev.launch_us
+                }
+                None => 0.0,
+            })
+            .collect();
+        let stepping: Vec<usize> = gs
+            .per_dev
+            .iter()
+            .enumerate()
+            .filter_map(|(d, s)| s.is_some().then_some(d))
+            .collect();
+        let max_us = dev_us.iter().copied().fold(0.0, f64::max);
+        let barrier =
+            DeviceGroup { devices: gs.alive.max(1), ..self.g }.barrier_us();
+        let mut straggler: Option<usize> = None;
+        for &d in &stepping {
+            let better = match straggler {
+                Some(s) => dev_us[d] > dev_us[s],
+                None => true,
+            };
+            if better {
+                straggler = Some(d);
+            }
+        }
+        let n = stepping.len() as f64;
+        let span = max_us + barrier;
+        let idle: f64 = stepping
+            .iter()
+            .map(|&d| (max_us - dev_us[d]) + barrier)
+            .sum();
+        let idle_frac =
+            if n > 0.0 && span > 0.0 { idle / (n * span) } else { 0.0 };
+        let mean = if n > 0.0 {
+            stepping.iter().map(|&d| dev_us[d]).sum::<f64>() / n
+        } else {
+            0.0
+        };
+        let imbalance = if mean > 0.0 { max_us / mean } else { 1.0 };
+        let mut launches = 0u64;
+        let mut solo_launches = 0u64;
+        let mut live_lanes = 0u64;
+        let mut pending = 0usize;
+        for t in gs.per_dev.iter().flatten() {
+            launches += t.launches;
+            solo_launches += t.solo_launches;
+            live_lanes += t.live_per_job.iter().sum::<u64>();
+            pending += t.pending;
+        }
+        self.win.push(gs);
+        EpochMetrics {
+            epoch: self.win.epochs(),
+            cost_us: max_us + barrier + gs.retry_backoff_us,
+            barrier_us: barrier,
+            backoff_us: gs.retry_backoff_us,
+            idle_frac,
+            imbalance,
+            launches,
+            solo_launches,
+            live_lanes,
+            pending,
+            alive: gs.alive,
+            straggler: straggler.map(DeviceId),
+            straggler_us: straggler.map(|d| dev_us[d]).unwrap_or(0.0),
+            critical: self.win.owner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::StepTrace;
+    use crate::shard::group_step_cost_us;
+    use crate::simt::GpuModel;
+
+    fn st(jobs: &[(usize, u64)], pending: usize) -> StepTrace {
+        StepTrace {
+            live_per_job: jobs.iter().map(|&(_, l)| l).collect(),
+            jobs: jobs.iter().map(|&(j, _)| JobId(j)).collect(),
+            window: jobs.iter().map(|&(_, l)| l as usize).sum(),
+            launches: 1,
+            solo_launches: jobs.len() as u64,
+            pending,
+        }
+    }
+
+    fn group(per_dev: Vec<Option<StepTrace>>, alive: usize) -> GroupStepTrace {
+        GroupStepTrace {
+            per_dev,
+            alive,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+        }
+    }
+
+    fn model() -> DeviceGroup {
+        DeviceGroup::new(GpuModel::default(), 2)
+    }
+
+    #[test]
+    fn owner_is_the_heavy_tenant_on_the_straggler() {
+        let mut w = CriticalWindow::new(model(), 8);
+        assert!(w.owner().is_none(), "empty window has no owner");
+        // d1 dominates every step; job 7 dominates d1
+        for _ in 0..3 {
+            w.push(&group(
+                vec![
+                    Some(st(&[(0, 20)], 0)),
+                    Some(st(&[(7, 3000), (2, 10)], 0)),
+                ],
+                2,
+            ));
+        }
+        let o = w.owner().expect("three epochs banked");
+        assert_eq!(o.device, DeviceId(1));
+        assert_eq!(o.job, JobId(7));
+        assert!(o.us > 0.0);
+        // job 2's sliver rides the same straggler, so the share is
+        // high but strictly below 1
+        assert!(o.share > 0.9 && o.share < 1.0, "{}", o.share);
+    }
+
+    #[test]
+    fn window_slides_old_epochs_out() {
+        let mut w = CriticalWindow::new(model(), 2);
+        // epoch 1: d0's job 1 is critical
+        w.push(&group(
+            vec![Some(st(&[(1, 5000)], 0)), Some(st(&[(2, 10)], 0))],
+            2,
+        ));
+        assert_eq!(w.owner().map(|o| o.job), Some(JobId(1)));
+        // epochs 2..3: d1's job 2 takes over; epoch 1 slides out
+        for _ in 0..2 {
+            w.push(&group(
+                vec![Some(st(&[(1, 10)], 0)), Some(st(&[(2, 4000)], 0))],
+                2,
+            ));
+        }
+        let o = w.owner().expect("window is full");
+        assert_eq!(o.job, JobId(2));
+        assert_eq!(o.device, DeviceId(1));
+        assert!((o.share - 1.0).abs() < 1e-9, "old epoch slid out");
+    }
+
+    #[test]
+    fn metrics_match_the_shared_cost_formula() {
+        let mut an = Analyzer::new(model(), 4);
+        let gs = group(
+            vec![Some(st(&[(0, 40)], 1)), Some(st(&[(1, 4000)], 0))],
+            2,
+        );
+        let m = an.push(&gs);
+        let want = group_step_cost_us(&model(), &gs);
+        assert!((m.cost_us - want).abs() < 1e-9, "{} vs {want}", m.cost_us);
+        assert_eq!(m.epoch, 1);
+        assert_eq!(m.straggler, Some(DeviceId(1)));
+        assert!(m.imbalance > 1.0);
+        assert!(m.idle_frac > 0.0 && m.idle_frac < 1.0);
+        assert_eq!(m.launches, 2);
+        assert_eq!(m.solo_launches, 2);
+        assert_eq!(m.live_lanes, 4040);
+        assert_eq!(m.pending, 1);
+        assert_eq!(
+            m.critical.map(|o| (o.device, o.job)),
+            Some((DeviceId(1), JobId(1)))
+        );
+    }
+
+    #[test]
+    fn idle_devices_leave_metrics_well_defined() {
+        let mut an = Analyzer::new(model(), 4);
+        let m = an.push(&group(vec![Some(st(&[(0, 10)], 0)), None], 2));
+        assert!((m.imbalance - 1.0).abs() < 1e-9, "single stepper");
+        assert_eq!(m.straggler, Some(DeviceId(0)));
+        // the lone stepper still pays the 2-device barrier
+        assert!(m.barrier_us > 0.0);
+        assert!(m.idle_frac > 0.0, "barrier wait counts as idle");
+    }
+}

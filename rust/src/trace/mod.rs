@@ -1,0 +1,70 @@
+//! Epoch-trace observability: a program-activity graph over the shard
+//! group's epoch-ticked traces, critical-path attribution, and the
+//! `trees trace` NDJSON stream.
+//!
+//! Every layer below already emits deterministic per-epoch traces —
+//! [`crate::sched::StepTrace`] per fused step,
+//! [`crate::shard::GroupStepTrace`] per lock-step group epoch with
+//! evacuation edges, plus the migration log — but until this
+//! subsystem nothing consumed them online. Three consumers live here:
+//!
+//! * [`Pag`] ([`pag`]) — the program-activity graph. SnailTrail
+//!   pioneered PAG-over-epochs for dataflow systems; TREES's explicit
+//!   epoch synchronization makes the construction trivial and exact:
+//!   each (device, group epoch) cell gets typed activity edges
+//!   ([`Activity`]: compute, barrier-idle, migration, evacuation)
+//!   whose µs weights replay the same
+//!   [`crate::shard::group_step_cost_us`] model as the benches, so
+//!   any stepping device's timeline sums to the modeled wall time.
+//! * [`CriticalWindow`] / [`Analyzer`] ([`critical`]) — critical-path
+//!   attribution. Per epoch the critical path is the straggler
+//!   device's compute edge set; a sliding window accumulates those
+//!   segments and names the (device, tenant) pair owning the most
+//!   critical time, plus summary metrics (imbalance ratio,
+//!   barrier-idle fraction, launches saved vs solo, queue depth).
+//! * [`Streamer`] ([`stream`]) — `trees trace`: one NDJSON record per
+//!   group epoch, drained incrementally so a live session can stream
+//!   while it serves (`trees serve --trace` routes here too).
+//!
+//! The attribution also *closes the loop*: the `critical-path`
+//! rebalancing mode ([`crate::shard::RebalanceMode`]) migrates the
+//! tenant owning the critical path instead of the best static
+//! gap-shrinker, feeding observed phase state back into placement —
+//! while preserving bit-identity to solo, because it still only
+//! decides *when and where* a tenant's next epoch runs.
+//!
+//! # NDJSON record schema
+//!
+//! One JSON object per line per group epoch, compact form, keys in
+//! sorted (byte) order. Runs with the same config and seed produce
+//! byte-identical streams.
+//!
+//! | key | type | meaning |
+//! |-----|------|---------|
+//! | `alive` | int | devices alive at this step |
+//! | `backoff_us` | float | retry backoff paid at this boundary |
+//! | `barrier_us` | float | barrier tree over the live devices |
+//! | `cost_us` | float | modeled group-step cost (straggler + barrier + backoff) |
+//! | `critical` | object \| null | window critical-path owner: `{device, job, share, us}` |
+//! | `cum_us` | float | running Σ of `cost_us` (modeled wall time so far) |
+//! | `epoch` | int | 1-based group epoch |
+//! | `evacuations` | array | `{from, job, to}` per evacuation at this boundary (`to` null = dead end) |
+//! | `idle_frac` | float | fraction of stepping-device time idled at the barrier |
+//! | `imbalance` | float | straggler compute / mean compute over stepping devices |
+//! | `launches` | int | fused launches this epoch (Σ devices) |
+//! | `launches_saved` | float | cumulative solo-minus-fused launches |
+//! | `live_lanes` | int | live lanes shipped this epoch |
+//! | `migrations` | array | `{from, job, to}` per rebalancer move at this boundary |
+//! | `pending` | int | tenants parked in pending queues (backpressure) |
+//! | `straggler` | int \| null | device the group step waited for |
+//!
+//! Device fields are group indices (`d0` = 0); `job` fields are
+//! group-global job ids in admission order.
+
+pub mod critical;
+pub mod pag;
+pub mod stream;
+
+pub use critical::{Analyzer, CriticalOwner, CriticalWindow, EpochMetrics};
+pub use pag::{epoch_edges, Activity, Pag, PagEdge};
+pub use stream::Streamer;

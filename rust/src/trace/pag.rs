@@ -1,0 +1,355 @@
+//! The program-activity graph (PAG): typed, µs-weighted activity
+//! edges reconstructed from the shard group's epoch-ticked trace.
+//!
+//! SnailTrail builds its PAG by aligning wall-clock timestamps across
+//! workers; TREES gets the alignment for free from explicit epoch
+//! synchronization — every activity is already bucketed into a
+//! (device, group epoch) cell of the lock-step grid. Edge weights come
+//! from the same [`crate::shard::group_step_cost_us`] formula the
+//! benches and EXPERIMENTS.md replay, so the graph is *exact* with
+//! respect to the cost model rather than sampled.
+//!
+//! The load-bearing invariant (tested): for every device that stepped
+//! in an epoch, its [`Activity::Compute`] edges plus its
+//! [`Activity::BarrierIdle`] edge sum to exactly the modeled
+//! group-step cost. Walking any single device's timeline therefore
+//! reproduces the group's wall time, which is what lets the
+//! [`crate::trace::CriticalWindow`] attribute the critical path by
+//! looking only at the straggler's compute edges.
+
+use crate::sched::JobId;
+use crate::shard::{DeviceId, GroupStepTrace, MigrationEvent};
+use crate::simt::DeviceGroup;
+
+/// What a device spent a slice of a group epoch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// A tenant's live-lane share of its device's fused-epoch cost.
+    Compute,
+    /// Waiting for the group's straggler, plus the barrier tree over
+    /// the live devices and any retry backoff the boundary paid.
+    BarrierIdle,
+    /// A rebalancer move at this epoch's boundary. Weight 0: epoch
+    /// boundaries are quiescent, so a move ships no in-flight state —
+    /// the edge records topology, not cost.
+    Migration,
+    /// A fault-path evacuation off a dead device (weight 0, riding the
+    /// same evict/re-admit seam as migration).
+    Evacuation,
+}
+
+impl Activity {
+    /// Stable lower-case name, used by reports and tests.
+    pub fn name(self) -> &'static str {
+        match self {
+            Activity::Compute => "compute",
+            Activity::BarrierIdle => "barrier-idle",
+            Activity::Migration => "migration",
+            Activity::Evacuation => "evacuation",
+        }
+    }
+}
+
+/// One edge of the PAG: an activity occupying (part of) a device's
+/// timeline during one group epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct PagEdge {
+    /// 1-based group epoch the edge lives in.
+    pub epoch: u64,
+    /// The device whose timeline the edge occupies (for moves: the
+    /// source device).
+    pub device: DeviceId,
+    pub activity: Activity,
+    /// The tenant involved (`None` for barrier-idle, which the whole
+    /// device pays regardless of its riders).
+    pub job: Option<JobId>,
+    /// Destination device for moves; `None` elsewhere, and for
+    /// dead-end evacuations with no survivor left.
+    pub to: Option<DeviceId>,
+    /// Modeled cost (µs) under the group's [`DeviceGroup`] model.
+    pub weight_us: f64,
+}
+
+/// The PAG edges of one group epoch (1-based `epoch`): per stepping
+/// device one [`Activity::Compute`] edge per rider (its live-lane
+/// share of the device's fused-epoch cost, launch overflow included)
+/// and one [`Activity::BarrierIdle`] edge (straggler wait + barrier
+/// over the devices alive at the step + retry backoff), plus the
+/// boundary's [`Activity::Evacuation`] edges. Migration edges live in
+/// the group's separate migration log — [`Pag::from_group_trace`]
+/// splices them in.
+pub fn epoch_edges(
+    g: &DeviceGroup,
+    epoch: u64,
+    gs: &GroupStepTrace,
+) -> Vec<PagEdge> {
+    let dev_us: Vec<f64> = gs
+        .per_dev
+        .iter()
+        .map(|d| match d {
+            Some(t) => {
+                g.dev.fused_epoch_us(&t.live_per_job)
+                    + t.launches.saturating_sub(1) as f64 * g.dev.launch_us
+            }
+            None => 0.0,
+        })
+        .collect();
+    let max_us = dev_us.iter().copied().fold(0.0, f64::max);
+    let barrier =
+        DeviceGroup { devices: gs.alive.max(1), ..*g }.barrier_us();
+    let mut edges = Vec::new();
+    for (d, slot) in gs.per_dev.iter().enumerate() {
+        let Some(t) = slot else { continue };
+        let total: u64 = t.live_per_job.iter().sum();
+        let riders = t.jobs.len().max(1) as f64;
+        for (&job, &live) in t.jobs.iter().zip(&t.live_per_job) {
+            // lane-share attribution: Σ over riders == dev_us[d]
+            let share = if total > 0 {
+                live as f64 / total as f64
+            } else {
+                1.0 / riders
+            };
+            edges.push(PagEdge {
+                epoch,
+                device: DeviceId(d),
+                activity: Activity::Compute,
+                job: Some(job),
+                to: None,
+                weight_us: dev_us[d] * share,
+            });
+        }
+        edges.push(PagEdge {
+            epoch,
+            device: DeviceId(d),
+            activity: Activity::BarrierIdle,
+            job: None,
+            to: None,
+            weight_us: (max_us - dev_us[d])
+                + barrier
+                + gs.retry_backoff_us,
+        });
+    }
+    for ev in &gs.evacuations {
+        edges.push(PagEdge {
+            epoch,
+            device: ev.from,
+            activity: Activity::Evacuation,
+            job: Some(ev.job),
+            to: ev.to,
+            weight_us: 0.0,
+        });
+    }
+    edges
+}
+
+/// The whole-run program-activity graph.
+#[derive(Debug, Clone)]
+pub struct Pag {
+    /// Edges in (epoch, device, slice) order.
+    pub edges: Vec<PagEdge>,
+    /// Group epochs covered (the trace length).
+    pub epochs: u64,
+    /// Group width (devices, dead ones included).
+    pub devices: usize,
+}
+
+impl Pag {
+    /// Build the PAG from a shard group's trace and migration log
+    /// (both straight off [`crate::shard::ShardStats`]). Migration
+    /// events carry the 1-based step at whose *boundary* they fired,
+    /// which is exactly the PAG epoch they attach to; evacuation
+    /// events are already embedded in their step's trace entry.
+    pub fn from_group_trace(
+        g: &DeviceGroup,
+        trace: &[GroupStepTrace],
+        migrations: &[MigrationEvent],
+    ) -> Pag {
+        let mut edges = Vec::new();
+        let mut devices = 0;
+        let mut mi = 0;
+        for (k, gs) in trace.iter().enumerate() {
+            devices = devices.max(gs.per_dev.len());
+            let epoch = k as u64 + 1;
+            edges.extend(epoch_edges(g, epoch, gs));
+            while mi < migrations.len() && migrations[mi].step <= epoch {
+                let m = migrations[mi];
+                mi += 1;
+                if m.step == epoch {
+                    edges.push(PagEdge {
+                        epoch,
+                        device: m.from,
+                        activity: Activity::Migration,
+                        job: Some(m.job),
+                        to: Some(m.to),
+                        weight_us: 0.0,
+                    });
+                }
+            }
+        }
+        Pag { edges, epochs: trace.len() as u64, devices }
+    }
+
+    /// All edges of one activity kind, in epoch order.
+    pub fn of_kind(
+        &self,
+        kind: Activity,
+    ) -> impl Iterator<Item = &PagEdge> {
+        self.edges.iter().filter(move |e| e.activity == kind)
+    }
+
+    /// One device's timeline cost (µs) in one epoch: its compute plus
+    /// its barrier-idle. For any device that stepped this equals the
+    /// modeled group-step cost (the PAG invariant).
+    pub fn device_epoch_us(&self, epoch: u64, device: usize) -> f64 {
+        self.edges
+            .iter()
+            .filter(|e| {
+                e.epoch == epoch
+                    && e.device.0 == device
+                    && matches!(
+                        e.activity,
+                        Activity::Compute | Activity::BarrierIdle
+                    )
+            })
+            .map(|e| e.weight_us)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultPlan;
+    use crate::sched::{JobBuild, JobSpec, SchedConfig};
+    use crate::shard::{
+        group_step_cost_us, modeled_group_us, PlacementKind, ShardConfig,
+        ShardGroup,
+    };
+    use crate::simt::GpuModel;
+
+    fn builds(tokens: &[&str]) -> Vec<JobBuild> {
+        tokens
+            .iter()
+            .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+            .collect()
+    }
+
+    fn run(tokens: &[&str], devices: usize, fault: Option<&str>) -> ShardGroup {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            fault: fault.map(|f| FaultPlan::parse(f).unwrap()),
+            ..Default::default()
+        });
+        for b in &builds(tokens) {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+        g
+    }
+
+    #[test]
+    fn any_stepping_device_timeline_reproduces_the_step_cost() {
+        let g = run(&["fib:12", "mergesort:64", "fib:10"], 2, None);
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let st = g.stats();
+        let pag =
+            Pag::from_group_trace(&model, &st.trace, &st.migration_log);
+        assert_eq!(pag.epochs, st.group_steps);
+        for (k, gs) in st.trace.iter().enumerate() {
+            let epoch = k as u64 + 1;
+            let want = group_step_cost_us(&model, gs);
+            for (d, slot) in gs.per_dev.iter().enumerate() {
+                if slot.is_none() {
+                    continue;
+                }
+                let got = pag.device_epoch_us(epoch, d);
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "epoch {epoch} dev {d}: {got} vs {want}"
+                );
+            }
+        }
+        // and therefore any per-epoch stepping device chain sums to
+        // the modeled wall time of the whole run
+        let total: f64 = st
+            .trace
+            .iter()
+            .enumerate()
+            .map(|(k, gs)| {
+                let d = gs
+                    .per_dev
+                    .iter()
+                    .position(|s| s.is_some())
+                    .expect("a pushed step has a stepping device");
+                pag.device_epoch_us(k as u64 + 1, d)
+            })
+            .sum();
+        let want = modeled_group_us(&model, &st.trace);
+        assert!((total - want).abs() < 1e-6, "{total} vs {want}");
+    }
+
+    #[test]
+    fn evacuation_edges_mirror_the_log_at_zero_weight() {
+        let g = run(&["fib:12", "fib:13", "fib:14", "fib:12"], 2, Some("die:1@2"));
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let st = g.stats();
+        let pag =
+            Pag::from_group_trace(&model, &st.trace, &st.migration_log);
+        let evs: Vec<&PagEdge> =
+            pag.of_kind(Activity::Evacuation).collect();
+        assert_eq!(evs.len(), st.evacuation_log.len());
+        assert!(!evs.is_empty(), "the death must evacuate someone");
+        for (e, ev) in evs.iter().zip(&st.evacuation_log) {
+            assert_eq!(e.job, Some(ev.job));
+            assert_eq!(e.device, ev.from);
+            assert_eq!(e.to, ev.to);
+            assert_eq!(e.weight_us, 0.0);
+            // evacuations fire *before* their step runs: the event's
+            // step counter is one behind the epoch that embeds it
+            assert_eq!(e.epoch, ev.step + 1);
+        }
+    }
+
+    #[test]
+    fn migration_edges_mirror_the_log_at_zero_weight() {
+        // the E-SHARD-1 forced skew: fibs pinned to d0, the sort to d1
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            placement: PlacementKind::Affinity,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        g.pin("fib", 0);
+        g.pin("mergesort", 1);
+        let tokens =
+            ["fib:16", "fib:16", "fib:16", "fib:16", "fib:16", "fib:16", "mergesort:16"];
+        for b in &builds(&tokens) {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+        let st = g.stats();
+        assert!(st.migrations >= 1, "skew must trigger a migration");
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let pag =
+            Pag::from_group_trace(&model, &st.trace, &st.migration_log);
+        let moves: Vec<&PagEdge> =
+            pag.of_kind(Activity::Migration).collect();
+        assert_eq!(moves.len(), st.migration_log.len());
+        for (e, m) in moves.iter().zip(&st.migration_log) {
+            assert_eq!(e.job, Some(m.job));
+            assert_eq!(e.device, m.from);
+            assert_eq!(e.to, Some(m.to));
+            assert_eq!(e.weight_us, 0.0);
+            assert_eq!(e.epoch, m.step);
+        }
+    }
+
+    #[test]
+    fn activity_names_are_stable() {
+        assert_eq!(Activity::Compute.name(), "compute");
+        assert_eq!(Activity::BarrierIdle.name(), "barrier-idle");
+        assert_eq!(Activity::Migration.name(), "migration");
+        assert_eq!(Activity::Evacuation.name(), "evacuation");
+    }
+}

@@ -1,0 +1,230 @@
+//! NDJSON streaming for `trees trace`: one record per group epoch,
+//! drained incrementally off the shard group's trace.
+//!
+//! The record schema is documented at [`crate::trace`] (module docs).
+//! Determinism is part of the contract: records are compact JSON with
+//! keys in sorted order (the [`crate::util::json::Json`] object form),
+//! weights come from the deterministic cost model, and the schedule
+//! itself is deterministic — so two runs of the same config and seed
+//! produce byte-identical streams (golden-tested in `tests/trace.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::shard::ShardStats;
+use crate::simt::DeviceGroup;
+use crate::util::json::Json;
+
+use super::critical::Analyzer;
+
+/// Incremental NDJSON producer over a growing [`ShardStats`] trace.
+#[derive(Debug)]
+pub struct Streamer {
+    an: Analyzer,
+    /// Trace entries already emitted (cursor into `stats.trace`).
+    emitted: usize,
+    /// Migration-log cursor (events are in step order).
+    migr: usize,
+    cum_us: f64,
+    cum_launches: u64,
+    cum_solo: u64,
+}
+
+impl Streamer {
+    /// `g` is the cost model the weights are computed under; `window`
+    /// is the critical-path attribution window in epochs.
+    pub fn new(g: DeviceGroup, window: usize) -> Streamer {
+        Streamer {
+            an: Analyzer::new(g, window),
+            emitted: 0,
+            migr: 0,
+            cum_us: 0.0,
+            cum_launches: 0,
+            cum_solo: 0,
+        }
+    }
+
+    /// Group epochs emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Emit one NDJSON line (no trailing newline) per trace entry not
+    /// yet seen. Call after every session step — or once after a whole
+    /// run — with the current stats; the internal cursors make the
+    /// stream identical either way.
+    pub fn drain(
+        &mut self,
+        st: &ShardStats,
+        out: &mut impl FnMut(&str),
+    ) {
+        while self.emitted < st.trace.len() {
+            let gs = &st.trace[self.emitted];
+            self.emitted += 1;
+            let epoch = self.emitted as u64;
+            let m = self.an.push(gs);
+            self.cum_us += m.cost_us;
+            self.cum_launches += m.launches;
+            self.cum_solo += m.solo_launches;
+
+            let mut migrations = Vec::new();
+            while self.migr < st.migration_log.len()
+                && st.migration_log[self.migr].step <= epoch
+            {
+                let ev = st.migration_log[self.migr];
+                self.migr += 1;
+                if ev.step == epoch {
+                    let mut o = BTreeMap::new();
+                    o.insert("from".into(), Json::Num(ev.from.0 as f64));
+                    o.insert("job".into(), Json::Num(ev.job.0 as f64));
+                    o.insert("to".into(), Json::Num(ev.to.0 as f64));
+                    migrations.push(Json::Obj(o));
+                }
+            }
+            let evacuations: Vec<Json> = gs
+                .evacuations
+                .iter()
+                .map(|ev| {
+                    let mut o = BTreeMap::new();
+                    o.insert("from".into(), Json::Num(ev.from.0 as f64));
+                    o.insert("job".into(), Json::Num(ev.job.0 as f64));
+                    o.insert(
+                        "to".into(),
+                        match ev.to {
+                            Some(d) => Json::Num(d.0 as f64),
+                            None => Json::Null,
+                        },
+                    );
+                    Json::Obj(o)
+                })
+                .collect();
+            let critical = match m.critical {
+                Some(o) => {
+                    let mut c = BTreeMap::new();
+                    c.insert("device".into(), Json::Num(o.device.0 as f64));
+                    c.insert("job".into(), Json::Num(o.job.0 as f64));
+                    c.insert("share".into(), Json::Num(o.share));
+                    c.insert("us".into(), Json::Num(o.us));
+                    Json::Obj(c)
+                }
+                None => Json::Null,
+            };
+
+            let mut rec = BTreeMap::new();
+            rec.insert("alive".into(), Json::Num(m.alive as f64));
+            rec.insert("backoff_us".into(), Json::Num(m.backoff_us));
+            rec.insert("barrier_us".into(), Json::Num(m.barrier_us));
+            rec.insert("cost_us".into(), Json::Num(m.cost_us));
+            rec.insert("critical".into(), critical);
+            rec.insert("cum_us".into(), Json::Num(self.cum_us));
+            rec.insert("epoch".into(), Json::Num(epoch as f64));
+            rec.insert("evacuations".into(), Json::Arr(evacuations));
+            rec.insert("idle_frac".into(), Json::Num(m.idle_frac));
+            rec.insert("imbalance".into(), Json::Num(m.imbalance));
+            rec.insert("launches".into(), Json::Num(m.launches as f64));
+            rec.insert(
+                "launches_saved".into(),
+                Json::Num(self.cum_solo as f64 - self.cum_launches as f64),
+            );
+            rec.insert(
+                "live_lanes".into(),
+                Json::Num(m.live_lanes as f64),
+            );
+            rec.insert("migrations".into(), Json::Arr(migrations));
+            rec.insert("pending".into(), Json::Num(m.pending as f64));
+            rec.insert(
+                "straggler".into(),
+                match m.straggler {
+                    Some(d) => Json::Num(d.0 as f64),
+                    None => Json::Null,
+                },
+            );
+            out(&Json::Obj(rec).to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, SchedConfig};
+    use crate::shard::{modeled_group_us, ShardConfig, ShardGroup};
+    use crate::simt::GpuModel;
+
+    fn run(tokens: &[&str]) -> ShardGroup {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for t in tokens {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        g
+    }
+
+    const KEYS: &[&str] = &[
+        "alive",
+        "backoff_us",
+        "barrier_us",
+        "cost_us",
+        "critical",
+        "cum_us",
+        "epoch",
+        "evacuations",
+        "idle_frac",
+        "imbalance",
+        "launches",
+        "launches_saved",
+        "live_lanes",
+        "migrations",
+        "pending",
+        "straggler",
+    ];
+
+    #[test]
+    fn records_parse_and_carry_the_documented_keys() {
+        let g = run(&["fib:12", "mergesort:64", "fib:10"]);
+        let mut lines = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+        assert_eq!(lines.len() as u64, g.stats().group_steps);
+        let mut last_cum = 0.0;
+        for (k, line) in lines.iter().enumerate() {
+            let v = Json::parse(line).expect("every record is valid JSON");
+            let obj = v.as_obj().expect("records are objects");
+            let got: Vec<&str> =
+                obj.keys().map(String::as_str).collect();
+            assert_eq!(got, KEYS, "schema drift in record {k}");
+            assert_eq!(
+                v.get("epoch").and_then(Json::as_i64),
+                Some(k as i64 + 1)
+            );
+            let cum = v.get("cum_us").and_then(Json::as_f64).unwrap();
+            assert!(cum >= last_cum, "cum_us must be monotone");
+            last_cum = cum;
+        }
+        // the stream's cumulative cost is the modeled wall time
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let want = modeled_group_us(&model, &g.stats().trace);
+        assert!((last_cum - want).abs() < 1e-6, "{last_cum} vs {want}");
+    }
+
+    #[test]
+    fn incremental_drain_equals_one_shot_drain() {
+        let g = run(&["fib:12", "fib:13", "mergesort:16"]);
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let mut whole = Vec::new();
+        Streamer::new(model, 8)
+            .drain(g.stats(), &mut |l: &str| whole.push(l.to_string()));
+        // drain twice mid-way: the cursor must not re-emit or skip
+        let mut parts = Vec::new();
+        let mut s = Streamer::new(model, 8);
+        s.drain(g.stats(), &mut |l: &str| parts.push(l.to_string()));
+        s.drain(g.stats(), &mut |l: &str| parts.push(l.to_string()));
+        assert_eq!(whole, parts);
+        assert_eq!(s.emitted() as u64, g.stats().group_steps);
+    }
+}

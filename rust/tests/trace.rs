@@ -1,0 +1,317 @@
+//! Epoch-trace observability properties (ISSUE 7 acceptance):
+//!
+//! (a) **determinism goldens**: two `trees trace` runs of the same
+//!     config and feed stream byte-identical NDJSON, every record
+//!     carries exactly the documented schema keys, and `serve --trace`
+//!     mirrors the stream onto stderr without polluting stdout;
+//! (b) **PAG faithfulness**: under random fault plans (the
+//!     `TREES_FAULT_SEEDS` matrix) the PAG carries one evacuation edge
+//!     per logged evacuation and prices every stepping device's epoch
+//!     timeline at exactly the modeled group-step cost;
+//! (c) **what never changes**: critical-path rebalancing — like every
+//!     scheduling policy in TREES — only decides *when and where*, so
+//!     every job finishes bit-identical to a solo run, fault plans
+//!     included;
+//! (d) **what improves**: on the E-SHARD-1 forced-skew mix the
+//!     trace-guided policy matches-or-beats the static skew pick in
+//!     modeled µs (`BENCH_trace.json` records the delta).
+
+use std::process::Command;
+
+use trees::fault::{FaultPlan, Outcome};
+use trees::sched::SchedConfig;
+use trees::session::{Session, SessionResult};
+use trees::shard::{
+    group_step_cost_us, modeled_group_us, PlacementKind, RebalanceCfg,
+    RebalanceMode, ShardConfig, ShardGroup,
+};
+use trees::simt::{DeviceGroup, GpuModel};
+use trees::trace::{Activity, Pag, PagEdge};
+use trees::util::json::Json;
+
+fn seeds() -> Vec<u64> {
+    let spec =
+        std::env::var("TREES_FAULT_SEEDS").unwrap_or_else(|_| "0..2".into());
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().expect("seed range start");
+        let b: u64 = b.trim().parse().expect("seed range end");
+        (a..=b).collect()
+    } else {
+        spec.split(',')
+            .map(|t| t.trim().parse().expect("seed entry"))
+            .collect()
+    }
+}
+
+const MIX: &[&str] =
+    &["fib:12", "mergesort:64", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
+
+/// The documented NDJSON schema, sorted — see `trees::trace` docs.
+const KEYS: &[&str] = &[
+    "alive",
+    "backoff_us",
+    "barrier_us",
+    "cost_us",
+    "critical",
+    "cum_us",
+    "epoch",
+    "evacuations",
+    "idle_frac",
+    "imbalance",
+    "launches",
+    "launches_saved",
+    "live_lanes",
+    "migrations",
+    "pending",
+    "straggler",
+];
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_trees"))
+        .args(args)
+        .output()
+        .expect("spawn trees binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+fn assert_schema(line: &str, tag: &str) {
+    let v = Json::parse(line)
+        .unwrap_or_else(|e| panic!("{tag}: invalid JSON {line:?}: {e}"));
+    let obj = v.as_obj().unwrap_or_else(|| panic!("{tag}: not an object"));
+    let got: Vec<&str> = obj.keys().map(String::as_str).collect();
+    assert_eq!(got, KEYS, "{tag}: schema drift in {line:?}");
+}
+
+#[test]
+fn trace_cli_streams_byte_identical_goldens() {
+    let args = &[
+        "trace",
+        "--jobs",
+        "fib:12,mergesort:64@3,nqueens:5@5",
+        "--devices",
+        "2",
+    ];
+    let (out1, err1, ok1) = run_cli(args);
+    assert!(ok1, "trace failed\nstdout:\n{out1}\nstderr:\n{err1}");
+    let (out2, _, ok2) = run_cli(args);
+    assert!(ok2, "second run failed");
+    assert_eq!(out1, out2, "same config + feed must golden-match");
+
+    let lines: Vec<&str> = out1.lines().collect();
+    assert!(!lines.is_empty(), "an NDJSON stream must have records");
+    for (k, line) in lines.iter().enumerate() {
+        assert_schema(line, &format!("record {k}"));
+        let v = Json::parse(line).expect("checked above");
+        assert_eq!(
+            v.get("epoch").and_then(Json::as_i64),
+            Some(k as i64 + 1),
+            "epochs are a 1-based dense sequence"
+        );
+    }
+    assert!(
+        err1.contains("traced 3 job(s)"),
+        "summary goes to stderr:\n{err1}"
+    );
+}
+
+#[test]
+fn serve_trace_flag_mirrors_the_stream_on_stderr() {
+    // the ISSUE 7 bugfix: `serve --trace` used to be silently ignored
+    let (stdout, stderr, ok) = run_cli(&[
+        "serve",
+        "--jobs",
+        "fib:12,mergesort:64@3",
+        "--trace",
+    ]);
+    assert!(ok, "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    let ndjson: Vec<&str> =
+        stderr.lines().filter(|l| l.starts_with('{')).collect();
+    assert!(
+        !ndjson.is_empty(),
+        "--trace must stream NDJSON records on stderr:\n{stderr}"
+    );
+    for (k, line) in ndjson.iter().enumerate() {
+        assert_schema(line, &format!("stderr record {k}"));
+    }
+    // the human-readable service log keeps stdout to itself
+    assert!(stdout.contains("admit"), "service log lost:\n{stdout}");
+    assert!(
+        !stdout.lines().any(|l| l.starts_with('{')),
+        "NDJSON leaked onto stdout:\n{stdout}"
+    );
+}
+
+fn run_mix(
+    devices: usize,
+    fault: Option<FaultPlan>,
+    mode: RebalanceMode,
+) -> Session {
+    let mut b = Session::builder()
+        .devices(devices)
+        .trace(true)
+        .rebalance(RebalanceCfg { mode, ..Default::default() });
+    if let Some(plan) = fault {
+        b = b.fault_plan(plan);
+    }
+    let mut s = b.build().expect("interp sessions build infallibly");
+    for tok in MIX {
+        s.submit_spec(tok).expect("mix token");
+    }
+    s.drain().expect("drain");
+    s
+}
+
+fn assert_pag_mirrors_run(s: &Session, devices: usize, tag: &str) {
+    let sh = s.shard_stats().expect("sharded backend");
+    let model = DeviceGroup::new(GpuModel::default(), devices);
+    let pag = Pag::from_group_trace(&model, &sh.trace, &sh.migration_log);
+    let evs: Vec<&PagEdge> = pag.of_kind(Activity::Evacuation).collect();
+    assert_eq!(evs.len(), sh.evacuation_log.len(), "{tag}: evac edges");
+    for (e, ev) in evs.iter().zip(&sh.evacuation_log) {
+        assert_eq!(e.job, Some(ev.job), "{tag}");
+        assert_eq!(e.device, ev.from, "{tag}");
+        assert_eq!(e.to, ev.to, "{tag}");
+        assert_eq!(e.weight_us, 0.0, "{tag}: boundaries are quiescent");
+        assert_eq!(e.epoch, ev.step + 1, "{tag}: embeds in the next step");
+    }
+    // the PAG invariant survives faults: any stepping device's epoch
+    // timeline (compute + barrier-idle) prices the whole group step
+    for (k, gs) in sh.trace.iter().enumerate() {
+        let want = group_step_cost_us(&model, gs);
+        for (d, slot) in gs.per_dev.iter().enumerate() {
+            if slot.is_none() {
+                continue;
+            }
+            let got = pag.device_epoch_us(k as u64 + 1, d);
+            assert!(
+                (got - want).abs() < 1e-6,
+                "{tag}: epoch {}, dev {d}: {got} vs {want}",
+                k + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pag_mirrors_evacuations_under_random_fault_plans() {
+    // a fixed plan first, so the evacuation arm provably bites
+    let s = run_mix(
+        2,
+        Some(FaultPlan::parse("die:1@3").expect("plan")),
+        RebalanceMode::SkewThreshold,
+    );
+    let sh = s.shard_stats().expect("sharded");
+    assert!(
+        !sh.evacuation_log.is_empty(),
+        "the death must evacuate someone"
+    );
+    assert_pag_mirrors_run(&s, 2, "die:1@3");
+
+    for seed in seeds() {
+        for devices in 2..=4 {
+            let plan = FaultPlan::random(seed, devices, 30);
+            let tag = format!("seed {seed}, {devices} devices");
+            let s = run_mix(devices, Some(plan), RebalanceMode::SkewThreshold);
+            assert_pag_mirrors_run(&s, devices, &tag);
+        }
+    }
+}
+
+/// The survivor's machine must be indistinguishable from the
+/// reference's — same answer, same memory, same work done.
+fn assert_same_machine(tag: &str, got: &SessionResult, want: &SessionResult) {
+    let (mg, mw) = (
+        got.job.engine.machine().expect("interp engine"),
+        want.job.engine.machine().expect("interp engine"),
+    );
+    assert_eq!(mg.root_result(), mw.root_result(), "{tag}: root");
+    assert_eq!(mg.res, mw.res, "{tag}: res vector");
+    assert_eq!(mg.heap_i, mw.heap_i, "{tag}: heap_i");
+    assert_eq!(mg.heap_f, mw.heap_f, "{tag}: heap_f");
+    assert_eq!(mg.stats.work, mw.stats.work, "{tag}: work");
+    assert_eq!(mg.stats.epochs, mw.stats.epochs, "{tag}: epochs");
+}
+
+#[test]
+fn prop_critical_path_rebalancing_is_bit_identical_to_solo() {
+    let reference = run_mix(1, None, RebalanceMode::SkewThreshold);
+    let check = |s: &Session, tag: &str| {
+        assert_eq!(s.results().len(), MIX.len(), "{tag}: all finish");
+        for r in s.results() {
+            assert_eq!(r.job.outcome, Outcome::Done, "{tag}: {}", r.job.label);
+            let w = reference
+                .results()
+                .iter()
+                .find(|x| x.job.id == r.job.id)
+                .expect("same admission order");
+            assert_same_machine(&format!("{tag}: {}", r.job.label), r, w);
+        }
+    };
+    // fault-free, where the policy actually migrates…
+    for devices in 2..=4 {
+        let s = run_mix(devices, None, RebalanceMode::CriticalPath);
+        check(&s, &format!("fault-free, {devices} devices"));
+    }
+    // …and under the random fault-plan matrix
+    for seed in seeds() {
+        for devices in 2..=4 {
+            let plan = FaultPlan::random(seed, devices, 30);
+            let tag =
+                format!("critical-path, seed {seed}, {devices} devices");
+            let s = run_mix(devices, Some(plan), RebalanceMode::CriticalPath);
+            check(&s, &tag);
+        }
+    }
+}
+
+fn run_forced_skew(rebalance: RebalanceCfg) -> ShardGroup {
+    let mut g = ShardGroup::new(ShardConfig {
+        devices: 2,
+        placement: PlacementKind::Affinity,
+        rebalance,
+        sched: SchedConfig { trace: true, ..Default::default() },
+        ..Default::default()
+    });
+    g.pin("fib", 0);
+    g.pin("mergesort", 1);
+    let tokens = [
+        "fib:16", "fib:16", "fib:16", "fib:16", "fib:16", "fib:16",
+        "mergesort:16",
+    ];
+    for t in tokens {
+        let b = trees::sched::JobSpec::parse(t)
+            .expect("token")
+            .instantiate()
+            .expect("build");
+        g.admit_build(&b);
+    }
+    g.run_to_completion().expect("runs to completion");
+    g
+}
+
+#[test]
+fn critical_path_matches_or_beats_skew_on_the_forced_skew_mix() {
+    let model = DeviceGroup::new(GpuModel::default(), 2);
+    let skew = run_forced_skew(RebalanceCfg::default());
+    let crit = run_forced_skew(RebalanceCfg {
+        mode: RebalanceMode::CriticalPath,
+        ..Default::default()
+    });
+    let (s, c) = (skew.stats(), crit.stats());
+    assert!(s.migrations >= 1, "the forced skew must trigger moves");
+    assert!(c.migrations >= 1, "critical-path migrates too");
+    let work = |g: &ShardGroup| -> u64 {
+        g.device_stats().iter().map(|d| d.work).sum()
+    };
+    assert_eq!(work(&skew), work(&crit), "policies never change the what");
+    let su = modeled_group_us(&model, &s.trace);
+    let cu = modeled_group_us(&model, &c.trace);
+    assert!(
+        cu <= su + 1e-9,
+        "trace-guided must match-or-beat the static pick: {cu} vs {su}"
+    );
+}
