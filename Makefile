@@ -10,10 +10,15 @@
 #   make artifacts  AOT-lower the epoch-step programs to HLO text
 #                   (needs the python/compile JAX toolchain)
 #   make bench      run all paper benches (skip-aware)
+#   make inspect-smoke
+#                   record a `trees trace` run, replay the recording
+#                   through `trees inspect --invariants strict`, and
+#                   diff the two summary blocks (byte-identical gate)
 
 CARGO ?= cargo
 
-.PHONY: check build test clippy doc fmt fmt-check artifacts bench pytest
+.PHONY: check build test clippy doc fmt fmt-check artifacts bench \
+        pytest inspect-smoke
 
 check: build test clippy doc
 
@@ -43,3 +48,22 @@ pytest:
 
 bench:
 	cd rust && $(CARGO) bench
+
+# The flight-recorder e2e gate: a live `trees trace` run and a
+# `trees inspect` replay of its own recording must print the same
+# summary block byte for byte, with strict invariants clean.
+inspect-smoke: build
+	@set -e; \
+	tmp=$$(mktemp -d); trap 'rm -rf "$$tmp"' EXIT; \
+	bin=rust/target/release/trees; \
+	$$bin trace --jobs fib:12,mergesort:64@3,nqueens:5@5 --devices 2 \
+	    --fault-plan die:1@4 --invariants strict \
+	    > "$$tmp/rec.ndjson" 2> "$$tmp/live.log"; \
+	sed -n '/== trace summary ==/,/== end summary ==/p' \
+	    "$$tmp/live.log" > "$$tmp/live.sum"; \
+	$$bin inspect --file "$$tmp/rec.ndjson" --invariants strict \
+	    > "$$tmp/replay.out"; \
+	sed -n '/== trace summary ==/,/== end summary ==/p' \
+	    "$$tmp/replay.out" > "$$tmp/replay.sum"; \
+	diff -u "$$tmp/live.sum" "$$tmp/replay.sum"; \
+	echo "inspect-smoke: live and replayed summaries are byte-identical"

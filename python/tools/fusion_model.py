@@ -1,6 +1,6 @@
 """Deterministic twin of rust/src/sched + rust/src/shard + rust/src/fault
-+ rust/src/trace for the EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1,
-E-FAULT-1 and E-TRACE-1).
++ rust/src/trace + rust/src/metrics for the EXPERIMENTS.md tables
+(E-FUSE-1, E-SHARD-1, E-FAULT-1, E-TRACE-1 and E-OBS-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
 exact counting semantics of the fused scheduler (rust/src/sched), the
@@ -15,9 +15,11 @@ quantity (epoch counts, live lanes, bucket-tiled launches, modeled
 microseconds) — `cargo bench --bench bench_fusion`, `--bench
 bench_shard`, `--bench bench_serve` and `--bench bench_trace` compute
 the same numbers from the real machines. The E-FAULT-1 twin also
-snapshots the repo-root BENCH_serve.json, and the E-TRACE-1 twin
+snapshots the repo-root BENCH_serve.json, the E-TRACE-1 twin
 (critical-path window twin of rust/src/trace) snapshots
-BENCH_trace.json.
+BENCH_trace.json, and the E-OBS-1 twin mirrors the rust/src/metrics
+registry (log2-bucket latency histograms, SLO counters, utilization
+gauges) over the same serve feed.
 
 Run:  python tools/fusion_model.py
 """
@@ -656,8 +658,9 @@ class FaultyGroup:
     before the group's at_step'th epoch), deaths evacuate every
     resident tenant to the least-loaded live device, transients pay a
     bounded exponential backoff (and escalate to a death past the retry
-    budget), and each step is priced with the *shrunk* barrier —
-    `shard::stats::group_step_cost_us`."""
+    budget), and each step is priced with the *shrunk* barrier plus one
+    re-launch (LAUNCH_US) per evacuated tenant that landed on a
+    survivor — `shard::stats::group_step_cost_us`."""
 
     def __init__(self, devices, events=()):
         self.devs = [ShardDevice() for _ in range(devices)]
@@ -673,6 +676,8 @@ class FaultyGroup:
         self.deaths = self.evacuations = self.retries = 0
         self.backoff_total = 0.0
         self.dead_ended = []
+        self.pending_relaunch = 0  # received evacs awaiting their step
+        self.busy = [0.0] * devices  # per-device modeled busy µs
 
     def alive_count(self):
         return sum(self.alive)
@@ -720,6 +725,9 @@ class FaultyGroup:
                 self.dead_ended.append(m)
             else:
                 self.devs[to].admit(m)
+                # the survivor re-launches the displaced tenant: one
+                # LAUNCH_US on the boundary's step (dead-ends are free)
+                self.pending_relaunch += 1
 
     def inject(self):
         """Fire due events; returns this boundary's backoff µs."""
@@ -751,6 +759,8 @@ class FaultyGroup:
         backoff = self.inject()
         if not self.has_work():
             return False, []
+        evac_us = self.pending_relaunch * LAUNCH_US
+        self.pending_relaunch = 0
         dev_us, finished = [], []
         for dev in self.devs:
             if dev.has_work():
@@ -761,8 +771,11 @@ class FaultyGroup:
                 dev.finished = []
             else:
                 dev_us.append(0.0)
+        for d, u in enumerate(dev_us):
+            self.busy[d] += u
         self.steps += 1
-        self.us += max(dev_us) + barrier_us(self.alive_count()) + backoff
+        self.us += max(dev_us) + barrier_us(self.alive_count()) \
+            + backoff + evac_us
         self.at_us.append(self.us)
         if self.alive_count() > 1:
             loads = [d.live_lanes() for d in self.devs]
@@ -842,13 +855,17 @@ def run_serve(events=()):
         if not progressed:
             assert nxt >= len(SERVE_FEED), "feed must keep the group busy"
             break
-    lat = sorted(g.at_us[dones[j]] - g.at_us[admits[j]] for j in dones)
+    lat_by_job = {j: g.at_us[dones[j]] - g.at_us[admits[j]]
+                  for j in dones}
+    lat = sorted(lat_by_job.values())
     return dict(jobs=len(dones), steps=g.steps, us=g.us,
                 p50=percentile(lat, 50.0), p99=percentile(lat, 99.0),
                 jps=len(dones) / (g.us / 1e6),
                 deaths=g.deaths, evac=g.evacuations, retries=g.retries,
                 backoff=g.backoff_total,
-                work=sum(d.work for d in g.devs))
+                work=sum(d.work for d in g.devs),
+                lat_by_job=lat_by_job, busy=list(g.busy),
+                dead_ends=len(g.dead_ended))
 
 
 def fault_table():
@@ -869,6 +886,9 @@ def fault_table():
         # machines, so total work T1 is identical across plans
         assert r["work"] == base["work"], (name, r["work"], base["work"])
         assert r["jobs"] == len(SERVE_FEED), name
+        # deaths cannot make the run cheaper: every received evacuation
+        # bills one re-launch, so faulty plans sit at >= 1.0x (ISSUE 8a)
+        assert r["us"] >= base["us"] - 1e-9, (name, r["us"], base["us"])
         print(f"| {name} | {r['steps']} | {r['deaths']} | {r['evac']} | "
               f"{r['retries']} | {r['backoff']:.0f} | {r['p50']:.0f} | "
               f"{r['p99']:.0f} | {r['jps']:.0f} | {r['us']:.0f} | "
@@ -911,6 +931,73 @@ def fault_table():
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {path}")
+
+
+# ------------------------------- metrics twins (rust/src/metrics)
+
+HIST_BUCKETS = 24  # metrics::HIST_BUCKETS
+
+
+def hist_bucket(v):
+    """metrics::Hist::bucket_of twin: bucket 0 holds v < 1, bucket i
+    holds 2^(i-1) <= v < 2^i, the last bucket is the overflow sink."""
+    if v < 1.0:
+        return 0
+    return min(int(math.floor(math.log2(v))) + 1, HIST_BUCKETS - 1)
+
+
+class HistTwin:
+    """metrics::Hist twin — fixed log2 buckets, no rebinning."""
+
+    def __init__(self):
+        self.buckets = [0] * HIST_BUCKETS
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v):
+        self.buckets[hist_bucket(v)] += 1
+        self.count += 1
+        self.sum += v
+
+    def occupied(self):
+        return [i for i, b in enumerate(self.buckets) if b > 0]
+
+
+def obs_table():
+    """E-OBS-1: the flight-recorder metrics registry twin over the
+    bench_serve feed — per-plan SLO counters, per-app log2 latency
+    histograms, and per-device utilization gauges, computed exactly as
+    metrics::Registry folds the epoch + outcome records."""
+    print("\nE-OBS-1 — flight-recorder metrics twin over the serve feed "
+          "(rust/src/metrics mirror)")
+    hdr = ("| plan | outcome_done | deadline_miss | evac re-launches | "
+           "dead-end | lat mean (µs) | lat max (µs) | lat_us buckets | "
+           "util d0..d3 |")
+    print(hdr)
+    print("|" + "---|" * 9)
+    for name, _, events in SERVE_PLANS:
+        r = run_serve(events)
+        hist = HistTwin()
+        per_app = {}
+        for j, lat in sorted(r["lat_by_job"].items()):
+            hist.observe(lat)
+            app = SERVE_FEED[j][0].split(":")[0]
+            per_app.setdefault(app, HistTwin()).observe(lat)
+        # counter conservation: every outcome lands in exactly one
+        # global bucket, and the per-app histograms partition it
+        assert hist.count == r["jobs"]
+        assert sum(h.count for h in per_app.values()) == hist.count
+        relaunches = r["evac"] - r["dead_ends"]
+        util = [b / r["us"] for b in r["busy"]]
+        occ = hist.occupied()
+        span = f"{occ[0]}..{occ[-1]}" if occ else "-"
+        print(f"| {name} | {r['jobs']} | 0 | {relaunches} | "
+              f"{r['dead_ends']} | {hist.sum / hist.count:.0f} | "
+              f"{max(r['lat_by_job'].values()):.0f} | {span} | "
+              + " ".join(f"{u:.2f}" for u in util) + " |")
+    print("(deadline_miss is 0 by construction: the serve feed carries "
+          "no deadlines; the `dD` job-token suffix exercises the "
+          "counter live)")
 
 
 def fuse_table():
@@ -1025,9 +1112,29 @@ def trace_table():
         sum(len(e[0]) + 1 for e in per_dev if e is not None)
         for per_dev in trace
     ) + crit["migrations"]
+
+    # flight-recorder twin: fold every recorded epoch into the metrics
+    # counters + the cost-decomposition invariant — the per-epoch work
+    # `--invariants warn` adds on top of the stream itself
+    counters = {"epochs": 0, "launches": 0}
+    cost_hist = HistTwin()
+    t1 = time.perf_counter()
+    cum = 0.0
+    for per_dev in trace:
+        counters["epochs"] += 1
+        dev_us = [0.0 if e is None
+                  else fused_epoch_us(e[1]) + (e[2] - 1) * LAUNCH_US
+                  for e in per_dev]
+        counters["launches"] += sum(
+            e[2] for e in per_dev if e is not None)
+        cost = max(dev_us) + barrier_us(2)
+        cost_hist.observe(cost)
+        cum += cost
+    ns2 = (time.perf_counter() - t1) * 1e9 / max(len(trace), 1)
+    assert counters["epochs"] == len(trace)
     print(f"\nanalyzer: {edges} PAG edges over {len(trace)} epochs, "
-          f"~{ns:.0f} ns/epoch (python twin; bench_trace measures the "
-          f"Rust analyzer)")
+          f"~{ns:.0f} ns/epoch + recorder fold ~{ns2:.0f} ns/epoch "
+          f"(python twin; bench_trace measures the Rust analyzer)")
 
     out = {
         "bench": "trace",
@@ -1048,6 +1155,7 @@ def trace_table():
             "pag_edges": edges,
             "epochs": len(trace),
             "ns_per_epoch": round(ns, 1),
+            "recorder_ns_per_epoch": round(ns2, 1),
         },
     }
     path = os.path.abspath(os.path.join(
@@ -1063,6 +1171,7 @@ def main():
     shard_table()
     fault_table()
     trace_table()
+    obs_table()
 
 
 if __name__ == "__main__":

@@ -50,7 +50,14 @@
 //!   graph (PAG) built from the shard group's epoch-ticked traces,
 //!   sliding-window critical-path attribution to a (device, tenant)
 //!   pair, and the `trees trace` NDJSON stream. Also feeds the
-//!   `critical-path` rebalancing mode back into [`shard`].
+//!   `critical-path` rebalancing mode back into [`shard`], carries
+//!   the typed record parsers and the online invariant checker
+//!   behind the session flight recorder, and implements the
+//!   `trees inspect` offline replay (summary, top-K epochs, HTML
+//!   dashboard).
+//! * [`metrics`] — the deterministic metrics registry (counters,
+//!   gauges, log2-bucket histograms) fed from trace records; its
+//!   snapshot is the stream's `kind:"metrics"` record.
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
 //!   interpreter: the correctness oracle and the `T_1` (work) meter;
 //!   also home of the TMS-compression update every driver shares.
@@ -73,6 +80,7 @@ pub mod cilk;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;
+pub mod metrics;
 pub mod runtime;
 pub mod sched;
 pub mod session;

@@ -9,9 +9,13 @@
 //!                                `Session` (arrival schedule `spec@epoch`,
 //!                                fed from --jobs, --spec-file, or stdin)
 //!   batch [--jobs <spec>]        fused-vs-solo comparison for a job mix
-//!   trace [--jobs <feed>]        run a feed and stream one NDJSON record
-//!                                per group epoch to stdout (the schema is
+//!   trace [--jobs <feed>]        run a feed and stream flight-recorder
+//!                                NDJSON records to stdout (the schema is
 //!                                documented at `trees::trace`)
+//!   inspect --file PATH          replay a recorded NDJSON stream offline:
+//!                                summary, utilization timelines, critical
+//!                                path breakdown, top-K epochs, invariant
+//!                                checking, optional HTML dashboard
 //!
 //! Workload options (app-dependent):
 //!   --n N          problem size (fib n, fft/sort length, matmul edge,
@@ -42,6 +46,7 @@ use trees::shard::{
     modeled_group_us, PlacementKind, RebalanceCfg, RebalanceMode,
 };
 use trees::simt::{DeviceGroup, GpuModel};
+use trees::trace::{InvariantMode, Replay, Summary};
 use trees::util::cli::Args;
 use trees::util::rng::Rng;
 
@@ -61,9 +66,27 @@ USAGE:
               [--skew T] [--no-rebalance] [--fault-plan <plan>]
               [--rebalance-mode skew|critical-path] [--window W] [--trace]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
-  trees trace [serve options] — serve the feed silently and stream one
-              NDJSON record per group epoch to stdout (--window W sets
-              the critical-path attribution window, default 8)
+  trees trace [serve options] — serve the feed silently and stream
+              flight-recorder NDJSON records to stdout: one `epoch`
+              record per group epoch, one `outcome` record per retired
+              job, a final `metrics` registry snapshot (--window W sets
+              the critical-path attribution window, default 8; W = 0 is
+              rejected). The deterministic run summary goes to stderr.
+  trees inspect --file PATH [--invariants off|warn|strict] [--top K]
+              [--window W] [--html PATH] — replay a recorded stream
+              offline through the same analyzer / metrics / invariant
+              code paths as the live run. Prints the byte-identical
+              summary block, per-device utilization timelines, the
+              critical-path ownership breakdown, and the top-K slowest
+              epochs; --html writes a self-contained dashboard
+              (inline SVG/JS, no network). Default --invariants warn;
+              strict exits nonzero on the first violation.
+
+--invariants off|warn|strict (serve, trace, inspect) checks each epoch
+record online against the invariant table in `trees::trace`
+(lane conservation, epoch monotonicity, barrier/cost-model consistency,
+unique outcomes, critical-owner-in-PAG). warn emits `violation` records
+into the stream; strict aborts the run on the first violation.
 
 APPS: fib tree bfs sssp fft mergesort msort_map nqueens matmul tsp annealing
 
@@ -118,6 +141,7 @@ fn real_main() -> Result<()> {
             "capacity", "slice-cap", "max-active", "max-live-lanes",
             "copies", "fairness", "devices", "placement", "skew",
             "spec-file", "fault-plan", "rebalance-mode", "window",
+            "invariants", "file", "top", "html",
         ],
         &["trace", "verbose", "help", "no-rebalance"],
     )
@@ -136,6 +160,7 @@ fn real_main() -> Result<()> {
         "serve" => serve(&args),
         "batch" => batch(&args),
         "trace" => trace_cmd(&args),
+        "inspect" => inspect(&args),
         cmd => bail!("unknown command {cmd:?}\n{}", usage()),
     }
 }
@@ -359,9 +384,22 @@ fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
 
 /// `--window W`: the sliding critical-path attribution window, in group
 /// epochs, shared by the analyzer stream and the critical-path
-/// rebalancer (default 8, clamped to at least 1).
+/// rebalancer (default 8). `--window 0` is rejected — a zero window
+/// would silently clamp, and an operator asking for it almost
+/// certainly meant something else.
 fn trace_window(args: &Args) -> Result<usize> {
-    Ok(args.usize_or("window", 8).map_err(anyhow::Error::msg)?.max(1))
+    let w = args.usize_or("window", 8).map_err(anyhow::Error::msg)?;
+    if w == 0 {
+        bail!("--window must be at least 1 epoch, got 0");
+    }
+    Ok(w)
+}
+
+/// `--invariants off|warn|strict` with a per-command default
+/// (`"off"` for live serving, `"warn"` for inspect).
+fn invariants_mode(args: &Args, default: &str) -> Result<InvariantMode> {
+    InvariantMode::parse(&args.str_or("invariants", default))
+        .map_err(|e| anyhow!("{e}"))
 }
 
 /// The serve feed: `--spec-file PATH` (`-` = stdin), else `--jobs`.
@@ -409,14 +447,20 @@ fn serve(args: &Args) -> Result<()> {
     let devices =
         args.usize_or("devices", 1).map_err(anyhow::Error::msg)?.max(1);
     let trace = args.flag("trace");
+    let inv = invariants_mode(args, "off")?;
     let mut builder = session_builder(args, trace)?;
     if trace {
         // the NDJSON stream goes to stderr so the human-readable
         // service log on stdout stays parseable on its own
         builder = builder
             .trace_sink(trace_window(args)?, |line| eprintln!("{line}"));
+    } else if inv.enabled() {
+        // checking without streaming: the flight recorder still needs
+        // to run, so attach a sink that drops the records
+        builder = builder.trace_sink(trace_window(args)?, |_| {});
     }
-    if devices == 1 && fault.is_none() && !trace {
+    builder = builder.invariants(inv);
+    if devices == 1 && fault.is_none() && !trace && !inv.enabled() {
         // sharded serving stays on per-device interpreter engines
         // (per-app artifacts are single-device; the group model is
         // what's under study there — a fault plan or trace sink
@@ -461,6 +505,7 @@ fn serve(args: &Args) -> Result<()> {
             )
         },
     )?;
+    session.finish_trace()?;
     serve_report(&session);
     Ok(())
 }
@@ -553,19 +598,29 @@ fn serve_report(session: &Session) {
     }
 }
 
-/// `trees trace`: serve the feed silently and stream the epoch trace as
-/// NDJSON — one record per group epoch, schema documented at
-/// [`trees::trace`]. stdout carries nothing but the records (goldens
-/// diff it byte-for-byte); the run summary goes to stderr. Always runs
-/// on the sharded backend so the group trace exists even for one
-/// device.
+/// `trees trace`: serve the feed silently and stream the flight
+/// recorder as NDJSON — `epoch` / `outcome` / `metrics` (and, in warn
+/// mode, `violation`) records, schema documented at [`trees::trace`].
+/// stdout carries nothing but the records (goldens diff it
+/// byte-for-byte); the run summary goes to stderr, ending with the
+/// same summary block `trees inspect` reprints byte-identically from
+/// the recorded stream. Always runs on the sharded backend so the
+/// group trace exists even for one device.
 fn trace_cmd(args: &Args) -> Result<()> {
+    use std::cell::RefCell;
+    use std::rc::Rc;
     let arrivals = Arrival::parse_feed(&serve_feed(args)?)?;
     if arrivals.is_empty() {
         bail!("job feed is empty\n{}", usage());
     }
+    let recorded: Rc<RefCell<Vec<String>>> = Rc::default();
+    let tap = Rc::clone(&recorded);
     let mut builder = session_builder(args, true)?
-        .trace_sink(trace_window(args)?, |line| println!("{line}"));
+        .trace_sink(trace_window(args)?, move |line| {
+            println!("{line}");
+            tap.borrow_mut().push(line.to_string());
+        })
+        .invariants(invariants_mode(args, "off")?);
     if let Some(plan) = args.get("fault-plan") {
         let p = FaultPlan::parse(plan)?;
         if !p.is_empty() {
@@ -574,6 +629,7 @@ fn trace_cmd(args: &Args) -> Result<()> {
     }
     let mut session = builder.build()?;
     session.run_feed(&arrivals, |_, _| {}, |_| {})?;
+    session.finish_trace()?;
     let epochs = session
         .shard_stats()
         .map(|s| s.group_steps)
@@ -585,6 +641,101 @@ fn trace_cmd(args: &Args) -> Result<()> {
         epochs,
         session.stats().launches,
     );
+    // the summary is computed from the emitted lines themselves —
+    // `trees inspect` over this run's recording reprints it
+    // byte-identically
+    let summary = Summary::from_lines(&recorded.borrow())
+        .map_err(|e| anyhow!("summarizing own trace stream: {e}"))?;
+    eprint!("{}", summary.render());
+    Ok(())
+}
+
+/// `trees inspect`: replay a recorded NDJSON stream offline through
+/// the same analyzer / metrics / invariant code paths as the live
+/// run. The opening summary block is byte-identical to the one the
+/// recording run printed; everything after it is inspect-only
+/// analysis (timelines, ownership, top-K epochs).
+fn inspect(args: &Args) -> Result<()> {
+    let path = match args.get("file") {
+        Some(p) => p.to_string(),
+        None => args.positionals().get(1).cloned().ok_or_else(|| {
+            anyhow!("inspect needs a recorded NDJSON file (--file PATH)")
+        })?,
+    };
+    let mode = invariants_mode(args, "warn")?;
+    let window = trace_window(args)?;
+    let top_k = args.usize_or("top", 5).map_err(anyhow::Error::msg)?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading trace recording {path}"))?;
+    let lines: Vec<String> = text.lines().map(str::to_string).collect();
+    let replay = Replay::parse(&lines).map_err(|e| anyhow!("{path}: {e}"))?;
+    if replay.epochs.is_empty() {
+        bail!("{path}: no epoch records (is this a trees trace recording?)");
+    }
+
+    let summary =
+        Summary::from_lines(&lines).map_err(|e| anyhow!("{path}: {e}"))?;
+    print!("{}", summary.render());
+
+    let devices = replay.devices().max(1);
+    if mode.enabled() {
+        let model = DeviceGroup::new(GpuModel::default(), devices);
+        let vs = Replay::check_lines(&lines, model, window)
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+        for v in &vs {
+            eprintln!(
+                "violation: epoch {} {}: {}",
+                v.epoch, v.invariant, v.detail
+            );
+        }
+        match replay.metrics_consistent() {
+            Ok(true) => eprintln!("metrics snapshot: consistent with replay"),
+            Ok(false) => {
+                eprintln!("metrics snapshot: none recorded (nothing checked)")
+            }
+            Err(e) => {
+                if mode == InvariantMode::Strict {
+                    bail!("{path}: {e}");
+                }
+                eprintln!("violation: {e}");
+            }
+        }
+        if mode == InvariantMode::Strict && !vs.is_empty() {
+            bail!("{path}: {} invariant violation(s)", vs.len());
+        }
+    }
+
+    println!();
+    println!("== device utilization timeline ==");
+    print!("{}", replay.timeline(64));
+    println!();
+    println!("== critical-path ownership ==");
+    let owners = replay.owners();
+    if owners.is_empty() {
+        println!("(no critical-path attributions)");
+    }
+    for (d, j, n) in owners.iter().take(8) {
+        println!("d{d}/j{j}: {n} epoch(s)");
+    }
+    println!();
+    println!("== top {top_k} slowest epochs ==");
+    println!("{:>6} {:>12} {:>9} {:>6}", "epoch", "cost_us", "owner", "alive");
+    for e in replay.top_epochs(top_k) {
+        let owner = match e.critical {
+            Some(c) => format!("d{}/j{}", c.device.0, c.job.0),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:>6} {:>12.1} {:>9} {:>6}",
+            e.epoch, e.cost_us, owner, e.alive
+        );
+    }
+
+    if let Some(out) = args.get("html") {
+        std::fs::write(out, replay.dashboard(top_k))
+            .with_context(|| format!("writing dashboard {out}"))?;
+        eprintln!("dashboard written to {out}");
+    }
     Ok(())
 }
 

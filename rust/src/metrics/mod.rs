@@ -1,0 +1,266 @@
+//! Deterministic metrics registry: counters, gauges, and fixed
+//! log2-bucket histograms over the epoch stream.
+//!
+//! SnailTrail's `commands/metrics.rs` aggregates critical-path metrics
+//! off its PAG; this is the TREES equivalent, fed from the *records*
+//! of [`crate::trace`] rather than from the runtime directly — the
+//! same registry code runs behind the live session flight recorder and
+//! behind `trees inspect`'s offline replay, which is what makes the
+//! two summaries byte-identical. Everything is deterministic by
+//! construction: `BTreeMap` name ordering, fixed bucket edges, and
+//! values that come from the deterministic cost model — so a metrics
+//! snapshot is golden-testable like every other artifact in this repo.
+//!
+//! Naming convention: plain counters (`epochs`, `migrations`,
+//! `retries`, `deadline_miss`, `outcome_done`, …), per-device gauges
+//! (`util_d0`, …), and latency histograms `lat_us` (global) plus
+//! `lat_us_<app>` per tenant app (the label prefix before `:`).
+
+use std::collections::BTreeMap;
+
+use crate::trace::{EpochRecord, OutcomeRecord};
+use crate::util::json::Json;
+
+/// Histogram bucket count: bucket 0 holds `v < 1`, bucket `i` holds
+/// `2^(i-1) <= v < 2^i`, and the last bucket is the overflow sink —
+/// with 24 buckets the top finite edge is 2^22 µs ≈ 4.2 s of modeled
+/// time, far past any workload here.
+pub const HIST_BUCKETS: usize = 24;
+
+/// Fixed log2-bucket histogram (deterministic, no rebinning).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: [0; HIST_BUCKETS], count: 0, sum: 0.0 }
+    }
+}
+
+impl Hist {
+    /// The bucket index a value lands in (negatives clamp to 0).
+    pub fn bucket_of(v: f64) -> usize {
+        if v < 1.0 {
+            return 0;
+        }
+        let idx = v.log2().floor() as usize + 1;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// `{buckets, count, sum}` with the bucket array in full (fixed
+    /// width keeps snapshots diffable).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "buckets".into(),
+            Json::Arr(
+                self.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
+            ),
+        );
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("sum".into(), Json::Num(self.sum));
+        Json::Obj(o)
+    }
+}
+
+/// The registry: every name space is a sorted map, so iteration —
+/// and therefore the snapshot — has one canonical order.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+    /// Per-device modeled busy µs, accumulated across epochs — the
+    /// numerator of the utilization gauges.
+    busy_us: Vec<f64>,
+    /// Cumulative modeled µs of the last folded epoch (denominator).
+    cum_us: f64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Fold one epoch record: epoch/launch/migration/evacuation/retry
+    /// counters, per-device busy time, and the utilization + idle
+    /// gauges (device busy over cumulative group time so far).
+    pub fn observe_epoch(&mut self, r: &EpochRecord) {
+        self.inc("epochs", 1);
+        self.inc("launches", r.launches);
+        self.inc("migrations", r.migrations as u64);
+        self.inc("retries", r.retries);
+        for ev in &r.evacuations {
+            match ev.to {
+                Some(_) => self.inc("evacuations", 1),
+                None => self.inc("evacuations_dead_end", 1),
+            }
+        }
+        if self.busy_us.len() < r.dev_us.len() {
+            self.busy_us.resize(r.dev_us.len(), 0.0);
+        }
+        for (d, &us) in r.dev_us.iter().enumerate() {
+            self.busy_us[d] += us;
+        }
+        self.cum_us = r.cum_us;
+        for (d, &busy) in self.busy_us.iter().enumerate() {
+            let util =
+                if self.cum_us > 0.0 { busy / self.cum_us } else { 0.0 };
+            self.set_gauge(&format!("util_d{d}"), util);
+            self.set_gauge(&format!("idle_frac_d{d}"), 1.0 - util);
+        }
+        self.set_gauge("cum_us", self.cum_us);
+    }
+
+    /// Fold one outcome record: the per-outcome counter, the SLO
+    /// deadline-miss counter, and the global + per-app modeled-latency
+    /// histograms.
+    pub fn observe_outcome(&mut self, r: &OutcomeRecord) {
+        self.inc(&format!("outcome_{}", r.outcome.replace('-', "_")), 1);
+        if r.outcome == "deadline-exceeded" {
+            self.inc("deadline_miss", 1);
+        }
+        self.observe("lat_us", r.lat_us);
+        let app = r.label.split(':').next().unwrap_or("");
+        if !app.is_empty() {
+            self.observe(&format!("lat_us_{app}"), r.lat_us);
+        }
+    }
+
+    /// The `kind:"metrics"` NDJSON record at `epoch`: the full
+    /// registry state as sorted compact JSON.
+    pub fn record(&self, epoch: u64) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        let hist: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("counters".into(), Json::Obj(counters));
+        o.insert("epoch".into(), Json::Num(epoch as f64));
+        o.insert("gauges".into(), Json::Obj(gauges));
+        o.insert("hist".into(), Json::Obj(hist));
+        o.insert("kind".into(), Json::Str("metrics".into()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Record;
+
+    #[test]
+    fn buckets_are_log2_with_underflow_and_overflow_sinks() {
+        assert_eq!(Hist::bucket_of(0.0), 0);
+        assert_eq!(Hist::bucket_of(-3.0), 0);
+        assert_eq!(Hist::bucket_of(0.99), 0);
+        assert_eq!(Hist::bucket_of(1.0), 1);
+        assert_eq!(Hist::bucket_of(1.9), 1);
+        assert_eq!(Hist::bucket_of(2.0), 2);
+        assert_eq!(Hist::bucket_of(3.9), 2);
+        assert_eq!(Hist::bucket_of(4.0), 3);
+        assert_eq!(Hist::bucket_of(1e30), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_sorted() {
+        let mut r = Registry::new();
+        r.inc("zebra", 2);
+        r.inc("alpha", 1);
+        r.set_gauge("util_d1", 0.5);
+        r.set_gauge("util_d0", 0.25);
+        r.observe("lat_us", 100.0);
+        r.observe("lat_us", 3.0);
+        let a = r.record(7).to_string();
+        let b = r.record(7).to_string();
+        assert_eq!(a, b);
+        // sorted key order: counters < epoch < gauges < hist < kind
+        let ci = a.find("\"counters\"").unwrap();
+        let ei = a.find("\"epoch\"").unwrap();
+        let gi = a.find("\"gauges\"").unwrap();
+        let hi = a.find("\"hist\"").unwrap();
+        let ki = a.find("\"kind\"").unwrap();
+        assert!(ci < ei && ei < gi && gi < hi && hi < ki, "{a}");
+        assert!(a.find("\"alpha\"").unwrap() < a.find("\"zebra\"").unwrap());
+        assert!(
+            a.find("\"util_d0\"").unwrap() < a.find("\"util_d1\"").unwrap()
+        );
+        // and the record round-trips through the typed parser
+        match Record::parse(&a) {
+            Ok(Record::Metrics(v)) => {
+                assert_eq!(
+                    v.get("epoch").and_then(crate::util::json::Json::as_i64),
+                    Some(7)
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn outcome_feeding_builds_slo_counters_and_per_app_hists() {
+        let mut r = Registry::new();
+        let mk = |label: &str, outcome: &str, lat: f64| OutcomeRecord {
+            epoch: 1,
+            job: crate::sched::JobId(0),
+            label: label.into(),
+            lat_us: lat,
+            outcome: outcome.into(),
+        };
+        r.observe_outcome(&mk("fib:18", "done", 120.0));
+        r.observe_outcome(&mk("fib:14", "done", 40.0));
+        r.observe_outcome(&mk("mergesort:256", "deadline-exceeded", 900.0));
+        assert_eq!(r.counter("outcome_done"), 2);
+        assert_eq!(r.counter("outcome_deadline_exceeded"), 1);
+        assert_eq!(r.counter("deadline_miss"), 1);
+        assert_eq!(r.hist("lat_us").unwrap().count, 3);
+        assert_eq!(r.hist("lat_us_fib").unwrap().count, 2);
+        assert_eq!(r.hist("lat_us_mergesort").unwrap().count, 1);
+        assert!((r.hist("lat_us_fib").unwrap().sum - 160.0).abs() < 1e-9);
+    }
+}

@@ -41,6 +41,7 @@
 
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -49,6 +50,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::apps;
 use crate::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use crate::fault::{FaultPlan, RetryCfg};
+use crate::metrics::Registry;
 use crate::runtime::{AppManifest, Device, Manifest};
 use crate::sched::{
     Fairness, FinishedJob, FusedScheduler, FusedStats, Fuser, JobBuild, JobId,
@@ -58,7 +60,8 @@ use crate::shard::{
     DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup, ShardStats,
 };
 use crate::simt::{DeviceGroup, GpuModel};
-use crate::trace::Streamer;
+use crate::trace::{Checker, InvariantMode, Record, Streamer};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Feed arrival epochs beyond this are almost certainly typos (a fat-
@@ -195,6 +198,7 @@ pub struct SessionBuilder {
     fault: Option<FaultPlan>,
     retry: RetryCfg,
     sink: Option<(usize, Box<dyn FnMut(&str)>)>,
+    invariants: InvariantMode,
 }
 
 impl Default for SessionBuilder {
@@ -208,6 +212,7 @@ impl Default for SessionBuilder {
             fault: None,
             retry: RetryCfg::default(),
             sink: None,
+            invariants: InvariantMode::Off,
         }
     }
 }
@@ -291,13 +296,17 @@ impl SessionBuilder {
         self
     }
 
-    /// Stream one NDJSON record per group epoch to `sink` — the
+    /// Stream NDJSON flight-recorder records to `sink` — the
     /// `trees trace` pipeline (see [`crate::trace`] for the record
-    /// schema). Implies per-step tracing and forces the sharded
-    /// backend, so the group trace exists even for one device (a
-    /// 1-device group degenerates to plain fusion, so single-device
-    /// sessions pay nothing in the modeled schedule). `window` is the
-    /// critical-path attribution span in epochs (clamped to ≥ 1).
+    /// schema): one `kind:"epoch"` record per group epoch, a
+    /// `kind:"outcome"` record per retired job, and a final
+    /// `kind:"metrics"` registry snapshot from
+    /// [`Session::finish_trace`]. Implies per-step tracing and forces
+    /// the sharded backend, so the group trace exists even for one
+    /// device (a 1-device group degenerates to plain fusion, so
+    /// single-device sessions pay nothing in the modeled schedule).
+    /// `window` is the critical-path attribution span in epochs
+    /// (clamped to ≥ 1).
     pub fn trace_sink(
         mut self,
         window: usize,
@@ -305,6 +314,17 @@ impl SessionBuilder {
     ) -> Self {
         self.sched.trace = true;
         self.sink = Some((window.max(1), Box::new(sink)));
+        self
+    }
+
+    /// Check the recorded stream online against the invariants of
+    /// [`crate::trace::Checker`]. `Warn` emits `kind:"violation"`
+    /// records into the stream and keeps serving; `Strict` also aborts
+    /// the session on the first violation. Only effective together
+    /// with a [`SessionBuilder::trace_sink`] — the checker reads the
+    /// same lines the sink does.
+    pub fn invariants(mut self, mode: InvariantMode) -> Self {
+        self.invariants = mode;
         self
     }
 
@@ -366,11 +386,16 @@ impl SessionBuilder {
         } else {
             Backend::Fused(FusedScheduler::new(sched))
         };
-        let tracer = self.sink.map(|(window, sink)| Tracer {
-            streamer: Streamer::new(
-                DeviceGroup::new(GpuModel::default(), self.devices),
-                window,
-            ),
+        let model = DeviceGroup::new(GpuModel::default(), self.devices);
+        let mode = self.invariants;
+        let tracer = self.sink.map(|(window, sink)| Recorder {
+            streamer: Streamer::new(model, window),
+            checker: Checker::new(model, window),
+            mode,
+            registry: Registry::new(),
+            admit_us: BTreeMap::new(),
+            outcomes: 0,
+            finished: false,
             sink,
         });
         Ok(Session {
@@ -384,12 +409,73 @@ impl SessionBuilder {
     }
 }
 
-/// The NDJSON trace pipeline: the streaming analyzer plus the sink it
-/// writes each record to (stdout for `trees trace`, stderr for
-/// `trees serve --trace`).
-struct Tracer {
+/// The flight recorder behind [`SessionBuilder::trace_sink`]: the
+/// streaming analyzer plus the sink each record goes to (stdout for
+/// `trees trace`, stderr for `trees serve --trace`), a metrics
+/// registry, and the online invariant checker. Registry and checker
+/// are fed from the *emitted NDJSON lines*, not from the runtime
+/// directly — the identical code path `trees inspect` replays a
+/// recorded file through, which is what makes the two summaries
+/// byte-equivalent.
+struct Recorder {
     streamer: Streamer,
     sink: Box<dyn FnMut(&str)>,
+    registry: Registry,
+    checker: Checker,
+    mode: InvariantMode,
+    /// Modeled cumulative µs at each job's admission (keyed by job
+    /// id): the baseline its outcome record's `lat_us` is measured
+    /// from.
+    admit_us: BTreeMap<usize, f64>,
+    /// Cursor into `Session::results` — jobs already given an outcome
+    /// record.
+    outcomes: usize,
+    /// Whether the final metrics snapshot went out.
+    finished: bool,
+}
+
+impl Recorder {
+    /// Feed one already-sunk line through the registry and (when
+    /// enabled) the invariant checker. Violations are emitted as
+    /// `kind:"violation"` records behind the line that broke them;
+    /// under [`InvariantMode::Strict`] the first one aborts.
+    fn ingest(&mut self, line: &str) -> Result<()> {
+        let rec = Record::parse(line)
+            .map_err(|e| anyhow!("broken trace record: {e}\n{line}"))?;
+        let vs = match &rec {
+            Record::Epoch(e) => {
+                self.registry.observe_epoch(e);
+                if self.mode.enabled() {
+                    self.checker.check_epoch(e)
+                } else {
+                    Vec::new()
+                }
+            }
+            Record::Outcome(o) => {
+                self.registry.observe_outcome(o);
+                if self.mode.enabled() {
+                    self.checker.check_outcome(o)
+                } else {
+                    Vec::new()
+                }
+            }
+            Record::Metrics(_) | Record::Violation(_) => Vec::new(),
+        };
+        for v in &vs {
+            (self.sink)(&v.record().to_string());
+        }
+        if self.mode == InvariantMode::Strict {
+            if let Some(v) = vs.first() {
+                bail!(
+                    "invariant {} violated at epoch {}: {}",
+                    v.invariant,
+                    v.epoch,
+                    v.detail
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The scheduler a session serves from: one fused epoch loop, or a
@@ -482,7 +568,7 @@ pub struct SessionStats {
 pub struct Session {
     backend: Backend,
     art: Option<ArtifactEngine>,
-    tracer: Option<Tracer>,
+    tracer: Option<Recorder>,
     results: Vec<SessionResult>,
     polled: usize,
     steps: u64,
@@ -530,10 +616,12 @@ impl Session {
     /// Admit a pre-instantiated build (the build is only read; its
     /// program is shared into the tenant).
     pub fn submit_build(&mut self, b: &JobBuild) -> JobId {
-        match &mut self.backend {
+        let id = match &mut self.backend {
             Backend::Fused(s) => s.admit_build(b),
             Backend::Sharded(g) => g.admit_build(b).0,
-        }
+        };
+        self.note_admit(id);
+        id
     }
 
     /// Admit an artifact-engine tenant over an owned coordinator.
@@ -544,9 +632,19 @@ impl Session {
         w: &Workload,
         limits: JobLimits,
     ) -> JobId {
-        match &mut self.backend {
+        let id = match &mut self.backend {
             Backend::Fused(s) => s.admit_artifact(label, co, w, limits),
             Backend::Sharded(g) => g.admit_artifact(label, co, w, limits).0,
+        };
+        self.note_admit(id);
+        id
+    }
+
+    /// Stamp a fresh admission with the recorder's cumulative modeled
+    /// clock — the admit-to-retire latency baseline.
+    fn note_admit(&mut self, id: JobId) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.admit_us.insert(id.0, tr.streamer.cum_us());
         }
     }
 
@@ -576,16 +674,69 @@ impl Session {
             self.steps += 1;
         }
         self.collect();
-        self.emit_trace();
+        self.emit_trace()?;
         Ok(progressed)
     }
 
-    /// Drain freshly traced group epochs into the NDJSON sink — a
-    /// no-op without a [`SessionBuilder::trace_sink`].
-    fn emit_trace(&mut self) {
-        let Some(tr) = self.tracer.as_mut() else { return };
-        let Backend::Sharded(g) = &self.backend else { return };
-        tr.streamer.drain(g.stats(), &mut tr.sink);
+    /// Drain freshly traced group epochs into the NDJSON sink, then
+    /// emit one `kind:"outcome"` record per newly retired job — a
+    /// no-op without a [`SessionBuilder::trace_sink`]. Every emitted
+    /// line also feeds the recorder's metrics registry and invariant
+    /// checker; under strict invariants the first violation is the
+    /// `Err`.
+    fn emit_trace(&mut self) -> Result<()> {
+        let Some(tr) = self.tracer.as_mut() else { return Ok(()) };
+        if let Backend::Sharded(g) = &self.backend {
+            let mut fresh = Vec::new();
+            tr.streamer
+                .drain(g.stats(), &mut |l: &str| fresh.push(l.to_string()));
+            for line in fresh {
+                (tr.sink)(&line);
+                tr.ingest(&line)?;
+            }
+        }
+        // outcome records ride behind the epoch that retired the job,
+        // so lat_us reads the cumulative clock after that epoch
+        while tr.outcomes < self.results.len() {
+            let r = &self.results[tr.outcomes];
+            tr.outcomes += 1;
+            let admit = tr.admit_us.get(&r.job.id.0).copied().unwrap_or(0.0);
+            let mut o = BTreeMap::new();
+            o.insert("epoch".into(), Json::Num(r.at_step as f64));
+            o.insert("job".into(), Json::Num(r.job.id.0 as f64));
+            o.insert("kind".into(), Json::Str("outcome".into()));
+            o.insert("label".into(), Json::Str(r.job.label.clone()));
+            o.insert(
+                "lat_us".into(),
+                Json::Num(tr.streamer.cum_us() - admit),
+            );
+            o.insert(
+                "outcome".into(),
+                Json::Str(r.job.outcome.to_string()),
+            );
+            let line = Json::Obj(o).to_string();
+            (tr.sink)(&line);
+            tr.ingest(&line)?;
+        }
+        Ok(())
+    }
+
+    /// Flush the flight recorder: emit any outcome records still
+    /// pending (e.g. a cancellation after the last epoch) and the
+    /// final `kind:"metrics"` registry snapshot. Idempotent, and a
+    /// no-op without a [`SessionBuilder::trace_sink`]; `trees trace`
+    /// and `trees serve --trace` call it once after their run.
+    pub fn finish_trace(&mut self) -> Result<()> {
+        self.emit_trace()?;
+        let steps = self.steps;
+        if let Some(tr) = self.tracer.as_mut() {
+            if !tr.finished {
+                tr.finished = true;
+                let line = tr.registry.record(steps).to_string();
+                (tr.sink)(&line);
+            }
+        }
+        Ok(())
     }
 
     fn collect(&mut self) {
@@ -930,7 +1081,7 @@ mod tests {
     }
 
     #[test]
-    fn trace_sink_streams_one_record_per_group_epoch() {
+    fn trace_sink_streams_epoch_outcome_and_metrics_records() {
         use std::cell::RefCell;
         use std::rc::Rc;
         let lines: Rc<RefCell<Vec<String>>> = Rc::default();
@@ -944,15 +1095,68 @@ mod tests {
         s.submit_spec("fib:10").unwrap();
         s.submit_spec("mergesort:16").unwrap();
         s.drain().unwrap();
+        s.finish_trace().unwrap();
         assert!(
             s.shard_stats().is_some(),
             "a trace sink forces the shard seam even for one device"
         );
         let lines = lines.borrow();
-        assert_eq!(lines.len() as u64, s.stats().steps);
+        let kind = |k: &str| {
+            let tag = format!("\"kind\":\"{k}\"");
+            lines.iter().filter(|l| l.contains(&tag)).count()
+        };
+        assert_eq!(kind("epoch") as u64, s.stats().steps);
+        assert_eq!(kind("outcome"), 2, "one outcome record per job");
+        assert_eq!(kind("metrics"), 1, "one final registry snapshot");
+        assert_eq!(kind("violation"), 0);
         for l in lines.iter() {
             assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
         }
+        // outcome records carry positive modeled latency; the metrics
+        // snapshot folded them into the latency histogram
+        let outcome = lines
+            .iter()
+            .find(|l| l.contains("\"kind\":\"outcome\""))
+            .unwrap();
+        let v = crate::util::json::Json::parse(outcome).unwrap();
+        assert!(
+            v.get("lat_us")
+                .and_then(crate::util::json::Json::as_f64)
+                .unwrap()
+                > 0.0
+        );
+        let metrics = lines.last().unwrap();
+        assert!(metrics.contains("\"lat_us\""), "{metrics}");
+        assert!(metrics.contains("\"outcome_done\":2"), "{metrics}");
+    }
+
+    #[test]
+    fn strict_invariants_pass_on_a_clean_faulted_run() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let lines: Rc<RefCell<Vec<String>>> = Rc::default();
+        let tap = Rc::clone(&lines);
+        let mut s = Session::builder()
+            .devices(3)
+            .fault_plan(FaultPlan::parse("die:2@3").unwrap())
+            .trace_sink(8, move |l: &str| {
+                tap.borrow_mut().push(l.to_string());
+            })
+            .invariants(crate::trace::InvariantMode::Strict)
+            .build()
+            .unwrap();
+        for tok in ["fib:12", "fib:11", "mergesort:64"] {
+            s.submit_spec(tok).unwrap();
+        }
+        // strict mode would abort the drain on any violation
+        s.drain().unwrap();
+        s.finish_trace().unwrap();
+        let lines = lines.borrow();
+        assert!(
+            !lines.iter().any(|l| l.contains("\"kind\":\"violation\"")),
+            "clean run must not report violations"
+        );
+        assert_eq!(s.results().len(), 3);
     }
 
     #[test]

@@ -348,6 +348,7 @@ mod tests {
             alive: 2,
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
+            retries: 0,
         }
     }
 

@@ -51,8 +51,8 @@ mod stats;
 pub use balance::{Migration, RebalanceCfg, RebalanceMode, Rebalancer};
 pub use place::{Placement, PlacementKind};
 pub use stats::{
-    group_step_cost_us, modeled_group_us, EvacuationEvent, GroupStepTrace,
-    MigrationEvent, ShardStats,
+    group_step_cost_us, modeled_group_us, received_evacuations,
+    EvacuationEvent, GroupStepTrace, MigrationEvent, ShardStats,
 };
 
 use anyhow::{bail, Result};
@@ -129,6 +129,9 @@ pub struct ShardGroup {
     /// Backoff (µs) accumulated by the boundary injection of the
     /// *current* step, copied into its trace entry.
     backoff_this_step: f64,
+    /// Retries paid by the boundary injection of the *current* step,
+    /// copied into its trace entry alongside the backoff.
+    retries_this_step: u64,
 }
 
 impl ShardGroup {
@@ -151,6 +154,7 @@ impl ShardGroup {
             fault_next: 0,
             retry: cfg.retry,
             backoff_this_step: 0.0,
+            retries_this_step: 0,
         }
     }
 
@@ -291,6 +295,7 @@ impl ShardGroup {
                 self.stats.retries += u64::from(paid);
                 self.stats.retry_backoff_us += us;
                 self.backoff_this_step += us;
+                self.retries_this_step += u64::from(paid);
                 if failures > self.retry.max_retries {
                     // the launch never came back inside the retry
                     // budget: escalate to a permanent death
@@ -352,6 +357,7 @@ impl ShardGroup {
     /// at that boundary the rebalancer may migrate one tenant.
     pub fn step(&mut self) -> Result<bool> {
         self.backoff_this_step = 0.0;
+        self.retries_this_step = 0;
         let evac_mark = self.stats.evacuation_log.len();
         self.inject_faults();
         if !self.has_work() {
@@ -387,6 +393,7 @@ impl ShardGroup {
             alive: self.alive_devices(),
             evacuations: self.stats.evacuation_log[evac_mark..].to_vec(),
             retry_backoff_us: self.backoff_this_step,
+            retries: self.retries_this_step,
         };
         self.balancer.observe(&gs);
         if self.trace {

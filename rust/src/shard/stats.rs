@@ -21,6 +21,9 @@ pub struct GroupStepTrace {
     /// Modeled retry backoff (µs) paid this step for transient launch
     /// failures — added on top of the group-step cost.
     pub retry_backoff_us: f64,
+    /// Transient launch failures retried at this step (the per-step
+    /// slice of [`ShardStats::retries`]).
+    pub retries: u64,
 }
 
 /// One executed migration, for tests and the CLI report.
@@ -103,7 +106,10 @@ impl ShardStats {
 /// launch cost — the same per-device formula `modeled_fused_us` uses)
 /// plus the barrier over the devices *alive at that step* (the barrier
 /// tree shrinks elastically after a death), plus any retry backoff the
-/// step paid.
+/// step paid, plus one re-launch ([`crate::simt::GpuModel::launch_us`])
+/// per tenant a survivor *received* at this boundary — a death is never
+/// free speedup (dead-ended tenants reach no survivor and cost
+/// nothing).
 pub fn group_step_cost_us(g: &DeviceGroup, gs: &GroupStepTrace) -> f64 {
     let dev_us: Vec<f64> = gs
         .per_dev
@@ -117,7 +123,15 @@ pub fn group_step_cost_us(g: &DeviceGroup, gs: &GroupStepTrace) -> f64 {
         })
         .collect();
     let live = DeviceGroup { devices: gs.alive.max(1), ..*g };
-    live.group_step_us(&dev_us) + gs.retry_backoff_us
+    live.group_step_us(&dev_us)
+        + gs.retry_backoff_us
+        + received_evacuations(gs) as f64 * g.dev.launch_us
+}
+
+/// Evacuations at this boundary that landed on a live survivor (the
+/// ones that cost a re-launch); dead-ends are excluded.
+pub fn received_evacuations(gs: &GroupStepTrace) -> usize {
+    gs.evacuations.iter().filter(|ev| ev.to.is_some()).count()
 }
 
 /// Modeled wall time (µs) of the sharded run: the sum of
@@ -160,6 +174,7 @@ mod tests {
             alive: 2,
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
+            retries: 0,
         }];
         let want = g.dev.fused_epoch_us(&[4000]) + g.barrier_us();
         let got = modeled_group_us(&g, &trace);
@@ -182,6 +197,7 @@ mod tests {
             alive: 2,
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
+            retries: 0,
         }];
         let want = g.dev.fused_epoch_us(&[10]) + g.barrier_us();
         assert!((modeled_group_us(&g, &trace) - want).abs() < 1e-9);
@@ -203,11 +219,62 @@ mod tests {
             alive: 1,
             evacuations: Vec::new(),
             retry_backoff_us: 15.0,
+            retries: 3,
         };
         // one survivor left: the barrier tree collapses to nothing and
         // only the epoch plus the step's retry backoff remains
         let want = g.dev.fused_epoch_us(&[10]) + 15.0;
         let got = group_step_cost_us(&g, &gs);
         assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn received_evacuations_charge_a_relaunch_but_dead_ends_do_not() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        let t = StepTrace {
+            live_per_job: vec![10],
+            jobs: vec![JobId(0)],
+            window: 10,
+            launches: 1,
+            solo_launches: 1,
+            pending: 0,
+        };
+        let base = GroupStepTrace {
+            per_dev: vec![Some(t), None],
+            alive: 1,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+            retries: 0,
+        };
+        let quiet = group_step_cost_us(&g, &base);
+        let mut received = base.clone();
+        received.evacuations = vec![
+            EvacuationEvent {
+                step: 1,
+                job: JobId(1),
+                from: DeviceId(1),
+                to: Some(DeviceId(0)),
+            },
+            EvacuationEvent {
+                step: 1,
+                job: JobId(2),
+                from: DeviceId(1),
+                to: Some(DeviceId(0)),
+            },
+        ];
+        // the survivor re-launches each received tenant once
+        let got = group_step_cost_us(&g, &received);
+        let want = quiet + 2.0 * g.dev.launch_us;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // a dead-end reaches no survivor — nothing to re-launch
+        let mut dead_end = base.clone();
+        dead_end.evacuations = vec![EvacuationEvent {
+            step: 1,
+            job: JobId(1),
+            from: DeviceId(1),
+            to: None,
+        }];
+        let got = group_step_cost_us(&g, &dead_end);
+        assert!((got - quiet).abs() < 1e-9, "{got} vs {quiet}");
     }
 }

@@ -140,8 +140,9 @@ impl CriticalWindow {
 pub struct EpochMetrics {
     /// 1-based group epoch.
     pub epoch: u64,
-    /// Modeled group-step cost (µs): straggler + barrier + backoff —
-    /// identical to [`crate::shard::group_step_cost_us`].
+    /// Modeled group-step cost (µs): straggler + barrier + backoff +
+    /// evacuation re-launches — identical to
+    /// [`crate::shard::group_step_cost_us`].
     pub cost_us: f64,
     /// Barrier-tree cost over the devices alive at this step.
     pub barrier_us: f64,
@@ -170,6 +171,9 @@ pub struct EpochMetrics {
     pub straggler_us: f64,
     /// Window critical-path owner *after* folding this epoch in.
     pub critical: Option<CriticalOwner>,
+    /// Per-device modeled compute cost (µs) this epoch — 0 for a
+    /// device that idled (or is dead). Indexed by device.
+    pub dev_us: Vec<f64>,
 }
 
 /// Streaming per-epoch analyzer: rolls a [`CriticalWindow`] and
@@ -243,9 +247,11 @@ impl Analyzer {
             pending += t.pending;
         }
         self.win.push(gs);
+        let evac_us = crate::shard::received_evacuations(gs) as f64
+            * self.g.dev.launch_us;
         EpochMetrics {
             epoch: self.win.epochs(),
-            cost_us: max_us + barrier + gs.retry_backoff_us,
+            cost_us: max_us + barrier + gs.retry_backoff_us + evac_us,
             barrier_us: barrier,
             backoff_us: gs.retry_backoff_us,
             idle_frac,
@@ -258,6 +264,7 @@ impl Analyzer {
             straggler: straggler.map(DeviceId),
             straggler_us: straggler.map(|d| dev_us[d]).unwrap_or(0.0),
             critical: self.win.owner(),
+            dev_us,
         }
     }
 }
@@ -286,6 +293,7 @@ mod tests {
             alive,
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
+            retries: 0,
         }
     }
 

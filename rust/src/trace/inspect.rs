@@ -1,0 +1,559 @@
+//! `trees inspect`: offline replay of a recorded NDJSON stream
+//! through the same record / metrics / invariant code paths the live
+//! flight recorder runs.
+//!
+//! The central contract is *replay equivalence*: the summary block
+//! printed by a live `trees trace` run and by `trees inspect` over
+//! the file that run recorded are byte-identical, because both are
+//! [`Summary::from_lines`] over the very same lines — the live side
+//! tees its sink, the replay side reads the file. Everything else
+//! here (utilization timelines, critical-path ownership breakdown,
+//! top-K slowest epochs, the HTML dashboard) is derived from the
+//! typed [`Replay`] and needs no live session at all.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Registry;
+use crate::simt::DeviceGroup;
+use crate::util::json::Json;
+
+use super::invariants::{Checker, Violation};
+use super::record::{
+    EpochRecord, OutcomeRecord, Record, ViolationRecord,
+};
+
+/// A recorded stream, parsed into typed records in stream order.
+#[derive(Debug, Default)]
+pub struct Replay {
+    pub epochs: Vec<EpochRecord>,
+    pub outcomes: Vec<OutcomeRecord>,
+    /// Recorded `kind:"metrics"` snapshots, kept as raw JSON for the
+    /// structural consistency check.
+    pub metrics: Vec<Json>,
+    pub violations: Vec<ViolationRecord>,
+}
+
+impl Replay {
+    /// Parse every line; the error names the offending line number.
+    pub fn parse(lines: &[String]) -> Result<Replay, String> {
+        let mut r = Replay::default();
+        for (i, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Record::parse(line)
+                .map_err(|e| format!("line {}: {e}", i + 1))?
+            {
+                Record::Epoch(e) => r.epochs.push(e),
+                Record::Outcome(o) => r.outcomes.push(o),
+                Record::Metrics(m) => r.metrics.push(m),
+                Record::Violation(v) => r.violations.push(v),
+            }
+        }
+        Ok(r)
+    }
+
+    /// Devices the stream was recorded over (width of the per-device
+    /// arrays; 0 for an empty stream).
+    pub fn devices(&self) -> usize {
+        self.epochs.iter().map(|e| e.dev_us.len()).max().unwrap_or(0)
+    }
+
+    /// Rebuild the metrics registry from the records, exactly as the
+    /// live recorder fed it.
+    pub fn recompute_metrics(&self) -> Registry {
+        let mut reg = Registry::new();
+        for e in &self.epochs {
+            reg.observe_epoch(e);
+        }
+        for o in &self.outcomes {
+            reg.observe_outcome(o);
+        }
+        reg
+    }
+
+    /// Structural consistency of the recorded final metrics snapshot
+    /// against one recomputed from the records. `Ok(false)` when the
+    /// stream carries no snapshot (nothing to check).
+    pub fn metrics_consistent(&self) -> Result<bool, String> {
+        let Some(recorded) = self.metrics.last() else {
+            return Ok(false);
+        };
+        let epoch = recorded
+            .get("epoch")
+            .and_then(Json::as_f64)
+            .ok_or("metrics record missing epoch")?;
+        let want = self.recompute_metrics().record(epoch as u64);
+        if recorded.to_string() != want.to_string() {
+            return Err(format!(
+                "recorded metrics snapshot diverges from replay:\n\
+                 recorded: {recorded}\nreplayed: {want}"
+            ));
+        }
+        Ok(true)
+    }
+
+    /// Run the invariant checker over the raw lines in stream order.
+    /// Malformed lines are `Err`; violations are returned (recorded
+    /// `kind:"violation"` lines assert nothing, so a warn-mode file
+    /// re-checks cleanly without double counting).
+    pub fn check_lines(
+        lines: &[String],
+        g: DeviceGroup,
+        window: usize,
+    ) -> Result<Vec<Violation>, String> {
+        let mut c = Checker::new(g, window);
+        let mut out = Vec::new();
+        for (i, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let vs = c
+                .check_line(line)
+                .map_err(|e| format!("line {}: {e}", i + 1))?;
+            out.extend(vs);
+        }
+        Ok(out)
+    }
+
+    /// Indices of the `k` slowest epochs, costliest first (ties break
+    /// toward the earlier epoch — deterministic).
+    pub fn top_epochs(&self, k: usize) -> Vec<&EpochRecord> {
+        let mut idx: Vec<usize> = (0..self.epochs.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.epochs[b]
+                .cost_us
+                .partial_cmp(&self.epochs[a].cost_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.into_iter().take(k).map(|i| &self.epochs[i]).collect()
+    }
+
+    /// Critical-path ownership: epochs owned per (device, job),
+    /// most-owned first (ties toward smaller device then job).
+    pub fn owners(&self) -> Vec<(usize, usize, u64)> {
+        let mut m: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for e in &self.epochs {
+            if let Some(c) = e.critical {
+                *m.entry((c.device.0, c.job.0)).or_insert(0) += 1;
+            }
+        }
+        let mut v: Vec<(usize, usize, u64)> =
+            m.into_iter().map(|((d, j), n)| (d, j, n)).collect();
+        v.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+        v
+    }
+
+    /// ASCII per-device utilization timeline: one row per device,
+    /// epochs bucketed into at most `cols` columns, each cell ramped
+    /// by the device's share of that bucket's stepping time.
+    pub fn timeline(&self, cols: usize) -> String {
+        const RAMP: &[u8] = b" .:-=+*#";
+        let devs = self.devices();
+        let n = self.epochs.len();
+        if devs == 0 || n == 0 || cols == 0 {
+            return String::new();
+        }
+        let cols = cols.min(n);
+        let mut out = String::new();
+        for d in 0..devs {
+            out.push_str(&format!("d{d} |"));
+            for c in 0..cols {
+                let lo = c * n / cols;
+                let hi = ((c + 1) * n / cols).max(lo + 1);
+                let (mut busy, mut total) = (0.0, 0.0);
+                for e in &self.epochs[lo..hi] {
+                    busy += e.dev_us.get(d).copied().unwrap_or(0.0);
+                    total += e.cost_us;
+                }
+                let frac = if total > 0.0 { busy / total } else { 0.0 };
+                let i = ((frac * (RAMP.len() - 1) as f64).round() as usize)
+                    .min(RAMP.len() - 1);
+                out.push(RAMP[i] as char);
+            }
+            out.push_str("|\n");
+        }
+        out
+    }
+
+    /// A self-contained static HTML dashboard (inline SVG + a little
+    /// inline JS, no network): epoch-cost sparkline, per-device
+    /// utilization bars, outcome counts, top-K epochs, violations.
+    pub fn dashboard(&self, top_k: usize) -> String {
+        let reg = self.recompute_metrics();
+        let devs = self.devices();
+        let n = self.epochs.len();
+        let cum = self.epochs.last().map(|e| e.cum_us).unwrap_or(0.0);
+        let max_cost = self
+            .epochs
+            .iter()
+            .map(|e| e.cost_us)
+            .fold(0.0_f64, f64::max)
+            .max(1e-9);
+
+        let (w, h) = (760.0_f64, 150.0_f64);
+        let mut pts = String::new();
+        for (i, e) in self.epochs.iter().enumerate() {
+            let x = if n > 1 {
+                i as f64 * w / (n - 1) as f64
+            } else {
+                w / 2.0
+            };
+            let y = h - e.cost_us / max_cost * (h - 10.0);
+            if i > 0 {
+                pts.push(' ');
+            }
+            pts.push_str(&format!("{x:.1},{y:.1}"));
+        }
+
+        let mut util_rows = String::new();
+        for d in 0..devs {
+            let u = reg.gauge(&format!("util_d{d}")).unwrap_or(0.0);
+            util_rows.push_str(&format!(
+                "<div class=row><span class=lbl>d{d}</span>\
+                 <div class=bar><div class=fill style=\"width:{:.1}%\">\
+                 </div></div><span>{:.1}%</span></div>\n",
+                u * 100.0,
+                u * 100.0
+            ));
+        }
+
+        let mut outcome_rows = String::new();
+        let mut by_outcome: BTreeMap<&str, u64> = BTreeMap::new();
+        for o in &self.outcomes {
+            *by_outcome.entry(o.outcome.as_str()).or_insert(0) += 1;
+        }
+        for (k, v) in &by_outcome {
+            outcome_rows.push_str(&format!(
+                "<tr><td>{}</td><td>{v}</td></tr>\n",
+                esc(k)
+            ));
+        }
+
+        let mut top_rows = String::new();
+        for e in self.top_epochs(top_k) {
+            let owner = match e.critical {
+                Some(c) => format!("d{}/j{}", c.device.0, c.job.0),
+                None => "-".to_string(),
+            };
+            top_rows.push_str(&format!(
+                "<tr><td>{}</td><td>{:.1}</td><td>{}</td>\
+                 <td>{}</td></tr>\n",
+                e.epoch,
+                e.cost_us,
+                esc(&owner),
+                e.alive
+            ));
+        }
+
+        let mut violation_rows = String::new();
+        for v in &self.violations {
+            violation_rows.push_str(&format!(
+                "<li>epoch {}: <b>{}</b> — {}</li>\n",
+                v.epoch,
+                esc(&v.invariant),
+                esc(&v.detail)
+            ));
+        }
+        let violations_block = if self.violations.is_empty() {
+            "<p>none</p>".to_string()
+        } else {
+            format!(
+                "<button onclick=\"toggle('viol')\">show/hide</button>\
+                 <ul id=viol>{violation_rows}</ul>"
+            )
+        };
+
+        format!(
+            r#"<!DOCTYPE html>
+<html><head><meta charset="utf-8"><title>trees inspect</title>
+<style>
+body{{font:14px/1.4 monospace;max-width:820px;margin:2em auto;color:#222}}
+h2{{border-bottom:1px solid #ccc}}
+table{{border-collapse:collapse}}td,th{{border:1px solid #ccc;padding:2px 8px}}
+.row{{display:flex;align-items:center;gap:8px;margin:2px 0}}
+.lbl{{width:3em}}
+.bar{{flex:1;height:12px;background:#eee}}
+.fill{{height:100%;background:#4a7}}
+svg{{background:#fafafa;border:1px solid #ccc}}
+</style>
+<script>
+function toggle(id){{var e=document.getElementById(id);
+e.style.display=e.style.display==='none'?'':'none';}}
+</script></head><body>
+<h1>trees inspect</h1>
+<p>{n} epoch(s), modeled {cum:.1} µs, {devs} device(s),
+{outcomes} outcome(s), {violations} violation(s)</p>
+<h2>epoch cost (µs)</h2>
+<svg viewBox="0 0 {w:.0} {h:.0}" width="{w:.0}" height="{h:.0}">
+<polyline fill="none" stroke="#36c" stroke-width="1.5"
+points="{pts}"><title>cost_us per epoch (max {max_cost:.1})</title>
+</polyline></svg>
+<h2>device utilization</h2>
+{util_rows}
+<h2>outcomes</h2>
+<table><tr><th>outcome</th><th>jobs</th></tr>{outcome_rows}</table>
+<h2>top {top_k} slowest epochs</h2>
+<table><tr><th>epoch</th><th>cost_us</th><th>critical owner</th>
+<th>alive</th></tr>{top_rows}</table>
+<h2>violations</h2>
+{violations_block}
+</body></html>
+"#,
+            outcomes = self.outcomes.len(),
+            violations = self.violations.len(),
+        )
+    }
+}
+
+/// Minimal HTML escaping for record-derived strings.
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// The replay-equivalent run summary. Live `trees trace` and offline
+/// `trees inspect` both build it with [`Summary::from_lines`] over
+/// the same lines, so [`Summary::render`] is byte-identical across
+/// the two (golden-tested end to end in `tests/inspect.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub epochs: usize,
+    pub cum_us: f64,
+    pub devices: usize,
+    pub alive_end: usize,
+    /// Per-device utilization: Σ dev_us over modeled wall time.
+    pub util: Vec<f64>,
+    pub launches: u64,
+    pub launches_saved: f64,
+    pub migrations: usize,
+    pub evacuations: usize,
+    pub evacuations_dead_end: usize,
+    pub retries: u64,
+    /// Outcome name → job count, sorted by name.
+    pub outcomes: BTreeMap<String, u64>,
+    pub lat_mean_us: f64,
+    pub lat_max_us: f64,
+    /// Top critical-path owners as (device, job, epochs-owned).
+    pub owners: Vec<(usize, usize, u64)>,
+    pub violations: usize,
+}
+
+impl Summary {
+    pub fn from_lines(lines: &[String]) -> Result<Summary, String> {
+        let r = Replay::parse(lines)?;
+        let devices = r.devices();
+        let cum_us = r.epochs.last().map(|e| e.cum_us).unwrap_or(0.0);
+        let mut util = vec![0.0; devices];
+        for e in &r.epochs {
+            for (d, &us) in e.dev_us.iter().enumerate() {
+                util[d] += us;
+            }
+        }
+        for u in &mut util {
+            *u = if cum_us > 0.0 { *u / cum_us } else { 0.0 };
+        }
+        let mut outcomes = BTreeMap::new();
+        let (mut lat_sum, mut lat_max) = (0.0_f64, 0.0_f64);
+        for o in &r.outcomes {
+            *outcomes.entry(o.outcome.clone()).or_insert(0) += 1;
+            lat_sum += o.lat_us;
+            lat_max = lat_max.max(o.lat_us);
+        }
+        let lat_mean_us = if r.outcomes.is_empty() {
+            0.0
+        } else {
+            lat_sum / r.outcomes.len() as f64
+        };
+        Ok(Summary {
+            epochs: r.epochs.len(),
+            cum_us,
+            devices,
+            alive_end: r.epochs.last().map(|e| e.alive).unwrap_or(0),
+            util,
+            launches: r.epochs.iter().map(|e| e.launches).sum(),
+            launches_saved: r
+                .epochs
+                .last()
+                .map(|e| e.launches_saved)
+                .unwrap_or(0.0),
+            migrations: r.epochs.iter().map(|e| e.migrations).sum(),
+            evacuations: r
+                .epochs
+                .iter()
+                .flat_map(|e| &e.evacuations)
+                .filter(|ev| ev.to.is_some())
+                .count(),
+            evacuations_dead_end: r
+                .epochs
+                .iter()
+                .flat_map(|e| &e.evacuations)
+                .filter(|ev| ev.to.is_none())
+                .count(),
+            retries: r.epochs.iter().map(|e| e.retries).sum(),
+            outcomes,
+            lat_mean_us,
+            lat_max_us: lat_max,
+            owners: r.owners(),
+            violations: r.violations.len(),
+        })
+    }
+
+    /// The deterministic summary block, bracketed by the
+    /// `== trace summary ==` / `== end summary ==` markers (what
+    /// `make inspect-smoke` extracts and diffs between a live run and
+    /// its replay).
+    pub fn render(&self) -> String {
+        let mut s = String::from("== trace summary ==\n");
+        s.push_str(&format!("epochs: {}\n", self.epochs));
+        s.push_str(&format!("modeled_us: {:.3}\n", self.cum_us));
+        s.push_str(&format!(
+            "devices: {} (alive at end: {})\n",
+            self.devices, self.alive_end
+        ));
+        let util: Vec<String> = self
+            .util
+            .iter()
+            .enumerate()
+            .map(|(d, u)| format!("d{d} {u:.4}"))
+            .collect();
+        s.push_str(&format!("util: {}\n", util.join(" ")));
+        s.push_str(&format!(
+            "launches: {} (saved {:.1})\n",
+            self.launches, self.launches_saved
+        ));
+        s.push_str(&format!(
+            "migrations: {} evacuations: {} (dead-end {}) retries: {}\n",
+            self.migrations,
+            self.evacuations,
+            self.evacuations_dead_end,
+            self.retries
+        ));
+        let outs: Vec<String> = self
+            .outcomes
+            .iter()
+            .map(|(k, v)| format!("{k} {v}"))
+            .collect();
+        s.push_str(&format!(
+            "outcomes: {}\n",
+            if outs.is_empty() { "-".to_string() } else { outs.join(", ") }
+        ));
+        s.push_str(&format!(
+            "latency_us: mean {:.3} max {:.3}\n",
+            self.lat_mean_us, self.lat_max_us
+        ));
+        let owners: Vec<String> = self
+            .owners
+            .iter()
+            .take(4)
+            .map(|(d, j, n)| format!("d{d}/j{j} {n}"))
+            .collect();
+        s.push_str(&format!(
+            "critical owners: {}\n",
+            if owners.is_empty() {
+                "-".to_string()
+            } else {
+                owners.join(", ")
+            }
+        ));
+        s.push_str(&format!("violations: {}\n", self.violations));
+        s.push_str("== end summary ==\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, SchedConfig};
+    use crate::shard::{ShardConfig, ShardGroup};
+    use crate::simt::GpuModel;
+    use crate::trace::Streamer;
+
+    fn lines(fault: Option<&str>) -> Vec<String> {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            fault: fault
+                .map(|f| crate::fault::FaultPlan::parse(f).unwrap()),
+            ..Default::default()
+        });
+        for t in ["fib:12", "mergesort:64", "fib:10"] {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        let mut out = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| out.push(l.to_string()));
+        out
+    }
+
+    #[test]
+    fn summary_is_deterministic_and_carries_the_marker() {
+        let ls = lines(None);
+        let a = Summary::from_lines(&ls).unwrap();
+        let b = Summary::from_lines(&ls).unwrap();
+        assert_eq!(a, b);
+        let text = a.render();
+        assert!(text.starts_with("== trace summary ==\n"), "{text}");
+        assert!(text.contains(&format!("epochs: {}", ls.len())), "{text}");
+        assert_eq!(a.devices, 2);
+        assert!(a.cum_us > 0.0);
+        assert!(a.util.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)));
+    }
+
+    #[test]
+    fn replay_orders_top_epochs_and_owners_deterministically() {
+        let ls = lines(Some("die:1@2"));
+        let r = Replay::parse(&ls).unwrap();
+        assert_eq!(r.epochs.len(), ls.len());
+        let top = r.top_epochs(3);
+        for w in top.windows(2) {
+            assert!(w[0].cost_us >= w[1].cost_us);
+        }
+        // owners are (device, job, count) with counts descending
+        let owners = r.owners();
+        for w in owners.windows(2) {
+            assert!(w[0].2 >= w[1].2);
+        }
+        let tl = r.timeline(40);
+        assert_eq!(tl.lines().count(), 2, "{tl}");
+        assert!(tl.starts_with("d0 |"), "{tl}");
+    }
+
+    #[test]
+    fn dashboard_is_self_contained_html() {
+        let ls = lines(Some("die:1@2"));
+        let r = Replay::parse(&ls).unwrap();
+        let html = r.dashboard(5);
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("<svg"), "sparkline present");
+        assert!(html.contains("trees inspect"));
+        assert!(!html.contains("http://") && !html.contains("https://"));
+    }
+
+    #[test]
+    fn metrics_consistency_checks_the_recorded_snapshot() {
+        let ls = lines(None);
+        let mut with_metrics = ls.clone();
+        let r = Replay::parse(&ls).unwrap();
+        let epoch = r.epochs.len() as u64;
+        with_metrics
+            .push(r.recompute_metrics().record(epoch).to_string());
+        let r2 = Replay::parse(&with_metrics).unwrap();
+        assert_eq!(r2.metrics_consistent(), Ok(true));
+        // no snapshot recorded → nothing to check
+        assert_eq!(r.metrics_consistent(), Ok(false));
+        // a tampered snapshot is flagged
+        let mut bad = ls.clone();
+        let mut reg = r.recompute_metrics();
+        reg.inc("epochs", 7);
+        bad.push(reg.record(epoch).to_string());
+        assert!(Replay::parse(&bad)
+            .unwrap()
+            .metrics_consistent()
+            .is_err());
+    }
+}

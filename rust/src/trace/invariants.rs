@@ -1,0 +1,361 @@
+//! Online invariant checking over the epoch stream.
+//!
+//! SnailTrail's `commands/invariants.rs` evaluates declarative
+//! invariants over epoch-ticked trace streams; this is the TREES
+//! equivalent, stated against the *records* of [`super::record`] so
+//! the same checker runs behind the live session (every epoch, as the
+//! flight recorder emits it) and behind `trees inspect` (over a
+//! recorded file). Each invariant that fails produces a structured
+//! [`Violation`]; under [`InvariantMode::Warn`] violations are
+//! reported and the run continues, under [`InvariantMode::Strict`]
+//! the first violation aborts the run with an error.
+//!
+//! The invariants, in check order per epoch record:
+//!
+//! | name                 | claim                                         |
+//! |----------------------|-----------------------------------------------|
+//! | `epoch-monotonic`    | epochs form a dense 1-based sequence          |
+//! | `lane-conservation`  | `live_lanes` == Σ `dev_lanes` (migrations and |
+//! |                      | evacuations move lanes, never create them)    |
+//! | `barrier-model`      | `barrier_us` matches the shrinking-barrier    |
+//! |                      | tree over the devices alive at the step       |
+//! | `cost-decomposition` | `cost_us` == max(`dev_us`) + barrier +        |
+//! |                      | backoff + evacuation re-launches              |
+//! | `cum-consistency`    | `cum_us` == previous `cum_us` + `cost_us`     |
+//! | `alive-monotonic`    | devices never resurrect (alive non-increasing)|
+//! | `critical-owner-pag` | the critical-path owner's device appears as a |
+//! |                      | straggler in that window's PAG segments       |
+//! | `outcome-unique`     | no job retires with two terminal outcomes     |
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::simt::DeviceGroup;
+use crate::util::json::Json;
+
+use super::record::{EpochRecord, OutcomeRecord, Record};
+
+/// Numeric tolerance for cost-model identities (the stream prints
+/// full-precision f64, so this only absorbs parse round-trip noise).
+const TOL: f64 = 1e-6;
+
+/// What the runtime does when an invariant fails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InvariantMode {
+    /// No checking (the default for live runs).
+    #[default]
+    Off,
+    /// Check, report violations, keep going.
+    Warn,
+    /// Check and abort the run on the first violation.
+    Strict,
+}
+
+impl InvariantMode {
+    /// Parse a `--invariants` value; anything but the documented
+    /// grammar is a structured error (CLI hardening, ISSUE 8).
+    pub fn parse(s: &str) -> Result<InvariantMode, String> {
+        match s {
+            "off" => Ok(InvariantMode::Off),
+            "warn" => Ok(InvariantMode::Warn),
+            "strict" => Ok(InvariantMode::Strict),
+            other => Err(format!(
+                "--invariants must be off|warn|strict, got {other:?}"
+            )),
+        }
+    }
+
+    pub fn enabled(self) -> bool {
+        self != InvariantMode::Off
+    }
+}
+
+/// One failed invariant, bound to the epoch that broke it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub epoch: u64,
+    /// The invariant's stable name (see the module table).
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl Violation {
+    /// The `kind:"violation"` NDJSON record.
+    pub fn record(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("detail".into(), Json::Str(self.detail.clone()));
+        o.insert("epoch".into(), Json::Num(self.epoch as f64));
+        o.insert("invariant".into(), Json::Str(self.invariant.into()));
+        o.insert("kind".into(), Json::Str("violation".into()));
+        Json::Obj(o)
+    }
+}
+
+/// Streaming invariant checker. Feed it every record in stream order;
+/// each call returns the violations that record introduced.
+#[derive(Debug)]
+pub struct Checker {
+    g: DeviceGroup,
+    window: usize,
+    last_epoch: u64,
+    last_cum: f64,
+    last_alive: Option<usize>,
+    /// Straggler device of each of the last `window` epochs — the
+    /// per-epoch PAG critical segments the owner must come from.
+    stragglers: VecDeque<Option<usize>>,
+    /// Terminal outcome already seen per job id.
+    outcomes: BTreeMap<usize, String>,
+    total: usize,
+}
+
+impl Checker {
+    /// `g` is the cost model the stream was priced under; `window` is
+    /// the critical-path attribution window (must match the stream's).
+    pub fn new(g: DeviceGroup, window: usize) -> Checker {
+        Checker {
+            g,
+            window: window.max(1),
+            last_epoch: 0,
+            last_cum: 0.0,
+            last_alive: None,
+            stragglers: VecDeque::new(),
+            outcomes: BTreeMap::new(),
+            total: 0,
+        }
+    }
+
+    /// Violations reported over the checker's lifetime.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Parse and check one NDJSON line. Malformed lines are errors
+    /// (the stream itself is broken), failed invariants are
+    /// violations.
+    pub fn check_line(&mut self, line: &str) -> Result<Vec<Violation>, String> {
+        let rec = Record::parse(line)?;
+        Ok(match rec {
+            Record::Epoch(e) => self.check_epoch(&e),
+            Record::Outcome(o) => self.check_outcome(&o),
+            // metrics snapshots and violation reports assert nothing
+            Record::Metrics(_) | Record::Violation(_) => Vec::new(),
+        })
+    }
+
+    pub fn check_epoch(&mut self, r: &EpochRecord) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let mut fail = |invariant: &'static str, detail: String| {
+            out.push(Violation { epoch: r.epoch, invariant, detail });
+        };
+
+        if r.epoch != self.last_epoch + 1 {
+            fail(
+                "epoch-monotonic",
+                format!(
+                    "expected epoch {}, got {}",
+                    self.last_epoch + 1,
+                    r.epoch
+                ),
+            );
+        }
+        self.last_epoch = r.epoch;
+
+        let lane_sum: u64 = r.dev_lanes.iter().sum();
+        if lane_sum != r.live_lanes {
+            fail(
+                "lane-conservation",
+                format!(
+                    "live_lanes {} but per-device lanes sum to {lane_sum}",
+                    r.live_lanes
+                ),
+            );
+        }
+
+        let want_barrier =
+            DeviceGroup { devices: r.alive.max(1), ..self.g }.barrier_us();
+        if (r.barrier_us - want_barrier).abs() > TOL {
+            fail(
+                "barrier-model",
+                format!(
+                    "barrier_us {} but the tree over {} live device(s) \
+                     costs {want_barrier}",
+                    r.barrier_us, r.alive
+                ),
+            );
+        }
+
+        let max_us = r.dev_us.iter().copied().fold(0.0, f64::max);
+        let evac_us = r.evacuations.iter().filter(|e| e.to.is_some()).count()
+            as f64
+            * self.g.dev.launch_us;
+        let want_cost = max_us + r.barrier_us + r.backoff_us + evac_us;
+        if (r.cost_us - want_cost).abs() > TOL {
+            fail(
+                "cost-decomposition",
+                format!(
+                    "cost_us {} but straggler {max_us} + barrier {} + \
+                     backoff {} + evacuation re-launches {evac_us} = \
+                     {want_cost}",
+                    r.cost_us, r.barrier_us, r.backoff_us
+                ),
+            );
+        }
+
+        let want_cum = self.last_cum + r.cost_us;
+        if (r.cum_us - want_cum).abs() > TOL {
+            fail(
+                "cum-consistency",
+                format!(
+                    "cum_us {} but previous cum + cost_us = {want_cum}",
+                    r.cum_us
+                ),
+            );
+        }
+        self.last_cum = r.cum_us;
+
+        if let Some(prev) = self.last_alive {
+            if r.alive > prev {
+                fail(
+                    "alive-monotonic",
+                    format!("alive grew from {prev} to {}", r.alive),
+                );
+            }
+        }
+        self.last_alive = Some(r.alive);
+
+        self.stragglers.push_back(r.straggler.map(|d| d.0));
+        while self.stragglers.len() > self.window {
+            self.stragglers.pop_front();
+        }
+        if let Some(c) = r.critical {
+            let seen = self
+                .stragglers
+                .iter()
+                .any(|s| *s == Some(c.device.0));
+            if !seen {
+                fail(
+                    "critical-owner-pag",
+                    format!(
+                        "critical owner d{} never straggled in the last \
+                         {} epoch(s)",
+                        c.device.0,
+                        self.stragglers.len()
+                    ),
+                );
+            }
+        }
+
+        self.total += out.len();
+        out
+    }
+
+    pub fn check_outcome(&mut self, r: &OutcomeRecord) -> Vec<Violation> {
+        let mut out = Vec::new();
+        match self.outcomes.get(&r.job.0) {
+            Some(prev) => out.push(Violation {
+                epoch: r.epoch,
+                invariant: "outcome-unique",
+                detail: format!(
+                    "job {} retired {:?} but was already {prev:?}",
+                    r.job.0, r.outcome
+                ),
+            }),
+            None => {
+                self.outcomes.insert(r.job.0, r.outcome.clone());
+            }
+        }
+        self.total += out.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, SchedConfig};
+    use crate::shard::{ShardConfig, ShardGroup};
+    use crate::simt::GpuModel;
+    use crate::trace::Streamer;
+
+    fn stream(tokens: &[&str], fault: Option<&str>) -> Vec<String> {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            fault: fault
+                .map(|f| crate::fault::FaultPlan::parse(f).unwrap()),
+            ..Default::default()
+        });
+        for t in tokens {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        let mut lines = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+        lines
+    }
+
+    fn model() -> DeviceGroup {
+        DeviceGroup::new(GpuModel::default(), 2)
+    }
+
+    #[test]
+    fn a_real_stream_is_clean_fault_free_and_under_a_death() {
+        for fault in [None, Some("die:1@2")] {
+            let lines =
+                stream(&["fib:12", "mergesort:64", "fib:10"], fault);
+            let mut c = Checker::new(model(), 8);
+            for l in &lines {
+                let vs = c.check_line(l).expect("well-formed stream");
+                assert!(vs.is_empty(), "{fault:?}: {vs:?}\n{l}");
+            }
+            assert_eq!(c.total(), 0);
+        }
+    }
+
+    #[test]
+    fn a_duplicated_epoch_is_flagged() {
+        let lines = stream(&["fib:12", "mergesort:64"], None);
+        let mut c = Checker::new(model(), 8);
+        c.check_line(&lines[0]).unwrap();
+        let vs = c.check_line(&lines[0]).unwrap();
+        assert!(
+            vs.iter().any(|v| v.invariant == "epoch-monotonic"),
+            "{vs:?}"
+        );
+        // the replayed record also breaks the cumulative-cost chain
+        assert!(
+            vs.iter().any(|v| v.invariant == "cum-consistency"),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn mode_parsing_is_structured() {
+        assert_eq!(InvariantMode::parse("off"), Ok(InvariantMode::Off));
+        assert_eq!(InvariantMode::parse("warn"), Ok(InvariantMode::Warn));
+        assert_eq!(
+            InvariantMode::parse("strict"),
+            Ok(InvariantMode::Strict)
+        );
+        assert!(InvariantMode::parse("STRICT").is_err());
+        assert!(InvariantMode::parse("").unwrap_err().contains("off|warn"));
+        assert!(!InvariantMode::Off.enabled());
+        assert!(InvariantMode::Strict.enabled());
+    }
+
+    #[test]
+    fn double_outcomes_are_flagged() {
+        let mut c = Checker::new(model(), 8);
+        let line = r#"{"epoch":3,"job":1,"kind":"outcome","label":"fib:12","lat_us":50,"outcome":"done"}"#;
+        assert!(c.check_line(line).unwrap().is_empty());
+        let again = r#"{"epoch":4,"job":1,"kind":"outcome","label":"fib:12","lat_us":60,"outcome":"cancelled"}"#;
+        let vs = c.check_line(again).unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].invariant, "outcome-unique");
+        // the violation serializes as a stream record
+        let rec = vs[0].record().to_string();
+        assert!(rec.contains("\"kind\":\"violation\""), "{rec}");
+    }
+}

@@ -1,12 +1,13 @@
 //! Epoch-trace observability: a program-activity graph over the shard
-//! group's epoch-ticked traces, critical-path attribution, and the
-//! `trees trace` NDJSON stream.
+//! group's epoch-ticked traces, critical-path attribution, the
+//! `trees trace` NDJSON stream, and the flight-recorder stack on top
+//! of it (typed records, online invariant checking, offline replay).
 //!
 //! Every layer below already emits deterministic per-epoch traces —
 //! [`crate::sched::StepTrace`] per fused step,
 //! [`crate::shard::GroupStepTrace`] per lock-step group epoch with
 //! evacuation edges, plus the migration log — but until this
-//! subsystem nothing consumed them online. Three consumers live here:
+//! subsystem nothing consumed them online. The consumers live here:
 //!
 //! * [`Pag`] ([`pag`]) — the program-activity graph. SnailTrail
 //!   pioneered PAG-over-epochs for dataflow systems; TREES's explicit
@@ -22,9 +23,20 @@
 //!   segments and names the (device, tenant) pair owning the most
 //!   critical time, plus summary metrics (imbalance ratio,
 //!   barrier-idle fraction, launches saved vs solo, queue depth).
-//! * [`Streamer`] ([`stream`]) — `trees trace`: one NDJSON record per
-//!   group epoch, drained incrementally so a live session can stream
-//!   while it serves (`trees serve --trace` routes here too).
+//! * [`Streamer`] ([`stream`]) — `trees trace`: one NDJSON epoch
+//!   record per group epoch, drained incrementally so a live session
+//!   can stream while it serves (`trees serve --trace` routes here
+//!   too).
+//! * [`Record`] ([`record`]) — the typed parse side of the stream
+//!   contract: every line round-trips back into a typed record, so
+//!   live checking and offline replay consume identical inputs.
+//! * [`Checker`] ([`invariants`]) — online invariant checking per
+//!   group epoch with structured [`Violation`] reports and a
+//!   warn/strict [`InvariantMode`].
+//! * [`Summary`] / [`Replay`] ([`inspect`]) — `trees inspect`:
+//!   offline replay of a recorded stream through the same analyzer,
+//!   metrics ([`crate::metrics`]), and invariant code paths, plus a
+//!   self-contained HTML dashboard.
 //!
 //! The attribution also *closes the loop*: the `critical-path`
 //! rebalancing mode ([`crate::shard::RebalanceMode`]) migrates the
@@ -35,36 +47,62 @@
 //!
 //! # NDJSON record schema
 //!
-//! One JSON object per line per group epoch, compact form, keys in
-//! sorted (byte) order. Runs with the same config and seed produce
-//! byte-identical streams.
+//! One JSON object per line, compact form, keys in sorted (byte)
+//! order, discriminated by `kind`. Runs with the same config and seed
+//! produce byte-identical streams.
+//!
+//! `kind:"epoch"` — one per group epoch (the [`Streamer`]):
 //!
 //! | key | type | meaning |
 //! |-----|------|---------|
 //! | `alive` | int | devices alive at this step |
 //! | `backoff_us` | float | retry backoff paid at this boundary |
 //! | `barrier_us` | float | barrier tree over the live devices |
-//! | `cost_us` | float | modeled group-step cost (straggler + barrier + backoff) |
+//! | `cost_us` | float | modeled group-step cost (straggler + barrier + backoff + evacuation re-launches) |
 //! | `critical` | object \| null | window critical-path owner: `{device, job, share, us}` |
 //! | `cum_us` | float | running Σ of `cost_us` (modeled wall time so far) |
+//! | `dev_lanes` | array | live lanes shipped per device (0 = idle/dead) |
+//! | `dev_us` | array | modeled compute µs per device (0 = idle/dead) |
 //! | `epoch` | int | 1-based group epoch |
 //! | `evacuations` | array | `{from, job, to}` per evacuation at this boundary (`to` null = dead end) |
 //! | `idle_frac` | float | fraction of stepping-device time idled at the barrier |
 //! | `imbalance` | float | straggler compute / mean compute over stepping devices |
+//! | `kind` | string | `"epoch"` |
 //! | `launches` | int | fused launches this epoch (Σ devices) |
 //! | `launches_saved` | float | cumulative solo-minus-fused launches |
 //! | `live_lanes` | int | live lanes shipped this epoch |
 //! | `migrations` | array | `{from, job, to}` per rebalancer move at this boundary |
 //! | `pending` | int | tenants parked in pending queues (backpressure) |
+//! | `retries` | int | transient launch failures retried at this boundary |
 //! | `straggler` | int \| null | device the group step waited for |
+//!
+//! `kind:"outcome"` — one per retired job (the session flight
+//! recorder): `{epoch, job, kind, label, lat_us, outcome}` where
+//! `lat_us` is the modeled admit-to-retire latency and `outcome` is
+//! the terminal [`crate::fault::Outcome`]'s lower-case name.
+//!
+//! `kind:"metrics"` — one final registry snapshot per run:
+//! `{counters, epoch, gauges, hist, kind}` (see [`crate::metrics`]).
+//!
+//! `kind:"violation"` — one per failed invariant in warn mode:
+//! `{detail, epoch, invariant, kind}` (see [`invariants`]).
 //!
 //! Device fields are group indices (`d0` = 0); `job` fields are
 //! group-global job ids in admission order.
 
 pub mod critical;
+pub mod inspect;
+pub mod invariants;
 pub mod pag;
+pub mod record;
 pub mod stream;
 
 pub use critical::{Analyzer, CriticalOwner, CriticalWindow, EpochMetrics};
+pub use inspect::{Replay, Summary};
+pub use invariants::{Checker, InvariantMode, Violation};
 pub use pag::{epoch_edges, Activity, Pag, PagEdge};
+pub use record::{
+    CriticalRef, EpochRecord, EvacRef, OutcomeRecord, Record,
+    ViolationRecord,
+};
 pub use stream::Streamer;

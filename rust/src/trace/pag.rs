@@ -33,8 +33,11 @@ pub enum Activity {
     /// boundaries are quiescent, so a move ships no in-flight state —
     /// the edge records topology, not cost.
     Migration,
-    /// A fault-path evacuation off a dead device (weight 0, riding the
-    /// same evict/re-admit seam as migration).
+    /// A fault-path evacuation off a dead device, riding the same
+    /// evict/re-admit seam as migration. An evacuation *received* by a
+    /// survivor weighs one re-launch
+    /// ([`crate::simt::GpuModel::launch_us`]) — the survivor pays to
+    /// bring the tenant up; a dead-end (no survivor left) weighs 0.
     Evacuation,
 }
 
@@ -74,10 +77,11 @@ pub struct PagEdge {
 /// device one [`Activity::Compute`] edge per rider (its live-lane
 /// share of the device's fused-epoch cost, launch overflow included)
 /// and one [`Activity::BarrierIdle`] edge (straggler wait + barrier
-/// over the devices alive at the step + retry backoff), plus the
-/// boundary's [`Activity::Evacuation`] edges. Migration edges live in
-/// the group's separate migration log — [`Pag::from_group_trace`]
-/// splices them in.
+/// over the devices alive at the step + retry backoff + the boundary's
+/// evacuation re-launches, so a stepping device's timeline still sums
+/// to the full group-step cost), plus the boundary's
+/// [`Activity::Evacuation`] edges. Migration edges live in the group's
+/// separate migration log — [`Pag::from_group_trace`] splices them in.
 pub fn epoch_edges(
     g: &DeviceGroup,
     epoch: u64,
@@ -97,6 +101,8 @@ pub fn epoch_edges(
     let max_us = dev_us.iter().copied().fold(0.0, f64::max);
     let barrier =
         DeviceGroup { devices: gs.alive.max(1), ..*g }.barrier_us();
+    let evac_us = crate::shard::received_evacuations(gs) as f64
+        * g.dev.launch_us;
     let mut edges = Vec::new();
     for (d, slot) in gs.per_dev.iter().enumerate() {
         let Some(t) = slot else { continue };
@@ -126,7 +132,8 @@ pub fn epoch_edges(
             to: None,
             weight_us: (max_us - dev_us[d])
                 + barrier
-                + gs.retry_backoff_us,
+                + gs.retry_backoff_us
+                + evac_us,
         });
     }
     for ev in &gs.evacuations {
@@ -136,7 +143,7 @@ pub fn epoch_edges(
             activity: Activity::Evacuation,
             job: Some(ev.job),
             to: ev.to,
-            weight_us: 0.0,
+            weight_us: if ev.to.is_some() { g.dev.launch_us } else { 0.0 },
         });
     }
     edges
@@ -290,7 +297,7 @@ mod tests {
     }
 
     #[test]
-    fn evacuation_edges_mirror_the_log_at_zero_weight() {
+    fn evacuation_edges_mirror_the_log_and_price_the_relaunch() {
         let g = run(&["fib:12", "fib:13", "fib:14", "fib:12"], 2, Some("die:1@2"));
         let model = DeviceGroup::new(GpuModel::default(), 2);
         let st = g.stats();
@@ -304,7 +311,14 @@ mod tests {
             assert_eq!(e.job, Some(ev.job));
             assert_eq!(e.device, ev.from);
             assert_eq!(e.to, ev.to);
-            assert_eq!(e.weight_us, 0.0);
+            // a received evacuation costs the survivor one re-launch;
+            // a dead-end reaches no survivor and costs nothing
+            let want = if ev.to.is_some() {
+                model.dev.launch_us
+            } else {
+                0.0
+            };
+            assert_eq!(e.weight_us, want);
             // evacuations fire *before* their step runs: the event's
             // step counter is one behind the epoch that embeds it
             assert_eq!(e.epoch, ev.step + 1);

@@ -1,0 +1,283 @@
+//! Typed NDJSON records: the parse side of the stream contract.
+//!
+//! The [`super::Streamer`] (epoch records) and the session's flight
+//! recorder (outcome / metrics / violation records) print compact
+//! sorted-key JSON; this module parses those lines back into typed
+//! records so the invariant checker and `trees inspect` consume the
+//! *identical* representation whether the stream is live or replayed
+//! from a file. Every record carries a `kind` discriminant; unknown
+//! kinds and malformed lines are structured errors, never panics.
+
+use crate::sched::JobId;
+use crate::shard::DeviceId;
+use crate::util::json::Json;
+
+/// The critical-path owner as an epoch record reports it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CriticalRef {
+    pub device: DeviceId,
+    pub job: JobId,
+    pub us: f64,
+    pub share: f64,
+}
+
+/// One evacuation as an epoch record reports it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvacRef {
+    pub job: JobId,
+    pub from: DeviceId,
+    /// `None` = dead-end (no survivor left).
+    pub to: Option<DeviceId>,
+}
+
+/// One `kind:"epoch"` record — the per-group-epoch schema documented
+/// at [`crate::trace`] (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    pub cost_us: f64,
+    pub cum_us: f64,
+    pub barrier_us: f64,
+    pub backoff_us: f64,
+    pub idle_frac: f64,
+    pub imbalance: f64,
+    pub alive: usize,
+    pub launches: u64,
+    pub launches_saved: f64,
+    pub live_lanes: u64,
+    pub pending: usize,
+    pub retries: u64,
+    /// Per-device modeled compute µs (0 for idle/dead devices).
+    pub dev_us: Vec<f64>,
+    /// Per-device live lanes shipped this epoch.
+    pub dev_lanes: Vec<u64>,
+    pub straggler: Option<DeviceId>,
+    pub critical: Option<CriticalRef>,
+    pub migrations: usize,
+    pub evacuations: Vec<EvacRef>,
+}
+
+/// One `kind:"outcome"` record — a job retiring with a terminal
+/// [`crate::fault::Outcome`] and its modeled latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutcomeRecord {
+    /// Group epoch at which the job retired.
+    pub epoch: u64,
+    pub job: JobId,
+    pub label: String,
+    /// Modeled admit-to-retire latency (µs).
+    pub lat_us: f64,
+    /// The terminal outcome's stable lower-case name.
+    pub outcome: String,
+}
+
+/// One `kind:"violation"` record — a structured invariant report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViolationRecord {
+    pub epoch: u64,
+    pub invariant: String,
+    pub detail: String,
+}
+
+/// Any stream record, discriminated by its `kind` key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    Epoch(EpochRecord),
+    Outcome(OutcomeRecord),
+    /// The registry snapshot is kept as raw JSON: `trees inspect`
+    /// compares it structurally against a recomputed snapshot.
+    Metrics(Json),
+    Violation(ViolationRecord),
+}
+
+fn num(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric key {key:?}"))
+}
+
+fn uint(v: &Json, key: &str) -> Result<u64, String> {
+    let x = num(v, key)?;
+    if x < 0.0 {
+        return Err(format!("key {key:?} is negative: {x}"));
+    }
+    Ok(x as u64)
+}
+
+fn string(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string key {key:?}"))
+}
+
+fn parse_epoch(v: &Json) -> Result<EpochRecord, String> {
+    let dev_us: Vec<f64> = v
+        .get("dev_us")
+        .and_then(Json::as_arr)
+        .ok_or("missing array key \"dev_us\"")?
+        .iter()
+        .map(|x| x.as_f64().ok_or("non-numeric dev_us entry".to_string()))
+        .collect::<Result<_, _>>()?;
+    let dev_lanes: Vec<u64> = v
+        .get("dev_lanes")
+        .and_then(Json::as_arr)
+        .ok_or("missing array key \"dev_lanes\"")?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as u64)
+                .ok_or("non-numeric dev_lanes entry".to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    let straggler = match v.req("straggler").map_err(|e| e.to_string())? {
+        Json::Null => None,
+        s => Some(DeviceId(
+            s.as_usize().ok_or("non-numeric straggler")?,
+        )),
+    };
+    let critical = match v.req("critical").map_err(|e| e.to_string())? {
+        Json::Null => None,
+        c => Some(CriticalRef {
+            device: DeviceId(num(c, "device")? as usize),
+            job: JobId(num(c, "job")? as usize),
+            us: num(c, "us")?,
+            share: num(c, "share")?,
+        }),
+    };
+    let evacuations: Vec<EvacRef> = v
+        .get("evacuations")
+        .and_then(Json::as_arr)
+        .ok_or("missing array key \"evacuations\"")?
+        .iter()
+        .map(|e| {
+            Ok(EvacRef {
+                job: JobId(num(e, "job")? as usize),
+                from: DeviceId(num(e, "from")? as usize),
+                to: match e.req("to").map_err(|x| x.to_string())? {
+                    Json::Null => None,
+                    d => Some(DeviceId(
+                        d.as_usize().ok_or("non-numeric evac to")?,
+                    )),
+                },
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    let migrations = v
+        .get("migrations")
+        .and_then(Json::as_arr)
+        .ok_or("missing array key \"migrations\"")?
+        .len();
+    Ok(EpochRecord {
+        epoch: uint(v, "epoch")?,
+        cost_us: num(v, "cost_us")?,
+        cum_us: num(v, "cum_us")?,
+        barrier_us: num(v, "barrier_us")?,
+        backoff_us: num(v, "backoff_us")?,
+        idle_frac: num(v, "idle_frac")?,
+        imbalance: num(v, "imbalance")?,
+        alive: num(v, "alive")? as usize,
+        launches: uint(v, "launches")?,
+        launches_saved: num(v, "launches_saved")?,
+        live_lanes: uint(v, "live_lanes")?,
+        pending: num(v, "pending")? as usize,
+        retries: uint(v, "retries")?,
+        dev_us,
+        dev_lanes,
+        straggler,
+        critical,
+        migrations,
+        evacuations,
+    })
+}
+
+fn parse_outcome(v: &Json) -> Result<OutcomeRecord, String> {
+    Ok(OutcomeRecord {
+        epoch: uint(v, "epoch")?,
+        job: JobId(num(v, "job")? as usize),
+        label: string(v, "label")?,
+        lat_us: num(v, "lat_us")?,
+        outcome: string(v, "outcome")?,
+    })
+}
+
+fn parse_violation(v: &Json) -> Result<ViolationRecord, String> {
+    Ok(ViolationRecord {
+        epoch: uint(v, "epoch")?,
+        invariant: string(v, "invariant")?,
+        detail: string(v, "detail")?,
+    })
+}
+
+impl Record {
+    /// Parse one NDJSON line into a typed record. Malformed JSON, a
+    /// missing `kind`, or an unknown kind is a structured error.
+    pub fn parse(line: &str) -> Result<Record, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("record missing \"kind\"")?
+            .to_string();
+        match kind.as_str() {
+            "epoch" => parse_epoch(&v).map(Record::Epoch),
+            "outcome" => parse_outcome(&v).map(Record::Outcome),
+            "metrics" => Ok(Record::Metrics(v)),
+            "violation" => parse_violation(&v).map(Record::Violation),
+            k => Err(format!("unknown record kind {k:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, SchedConfig};
+    use crate::shard::{ShardConfig, ShardGroup};
+    use crate::simt::{DeviceGroup, GpuModel};
+    use crate::trace::Streamer;
+
+    #[test]
+    fn streamer_lines_round_trip_through_the_typed_parser() {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for t in ["fib:12", "mergesort:64"] {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        let mut lines = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+        assert!(!lines.is_empty());
+        for (k, line) in lines.iter().enumerate() {
+            match Record::parse(line) {
+                Ok(Record::Epoch(e)) => {
+                    assert_eq!(e.epoch, k as u64 + 1);
+                    assert_eq!(e.dev_us.len(), 2);
+                    assert_eq!(e.dev_lanes.len(), 2);
+                    assert_eq!(
+                        e.live_lanes,
+                        e.dev_lanes.iter().sum::<u64>(),
+                        "lane conservation in record {k}"
+                    );
+                }
+                other => panic!("record {k}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_structured_errors() {
+        assert!(Record::parse("not json").is_err());
+        assert!(Record::parse("{}").unwrap_err().contains("kind"));
+        assert!(Record::parse(r#"{"kind":"martian"}"#)
+            .unwrap_err()
+            .contains("martian"));
+        assert!(Record::parse(r#"{"kind":"outcome","epoch":1}"#).is_err());
+    }
+}

@@ -48,6 +48,12 @@ impl Streamer {
         self.emitted
     }
 
+    /// Cumulative modeled cost (µs) over the epochs emitted so far —
+    /// the `cum_us` of the last record, 0 before the first.
+    pub fn cum_us(&self) -> f64 {
+        self.cum_us
+    }
+
     /// Emit one NDJSON line (no trailing newline) per trace entry not
     /// yet seen. Call after every session step — or once after a whole
     /// run — with the current stats; the internal cursors make the
@@ -109,6 +115,18 @@ impl Streamer {
                 None => Json::Null,
             };
 
+            let dev_lanes: Vec<Json> = gs
+                .per_dev
+                .iter()
+                .map(|d| {
+                    let lanes: u64 = d
+                        .as_ref()
+                        .map(|t| t.live_per_job.iter().sum())
+                        .unwrap_or(0);
+                    Json::Num(lanes as f64)
+                })
+                .collect();
+
             let mut rec = BTreeMap::new();
             rec.insert("alive".into(), Json::Num(m.alive as f64));
             rec.insert("backoff_us".into(), Json::Num(m.backoff_us));
@@ -116,10 +134,16 @@ impl Streamer {
             rec.insert("cost_us".into(), Json::Num(m.cost_us));
             rec.insert("critical".into(), critical);
             rec.insert("cum_us".into(), Json::Num(self.cum_us));
+            rec.insert("dev_lanes".into(), Json::Arr(dev_lanes));
+            rec.insert(
+                "dev_us".into(),
+                Json::Arr(m.dev_us.iter().map(|&u| Json::Num(u)).collect()),
+            );
             rec.insert("epoch".into(), Json::Num(epoch as f64));
             rec.insert("evacuations".into(), Json::Arr(evacuations));
             rec.insert("idle_frac".into(), Json::Num(m.idle_frac));
             rec.insert("imbalance".into(), Json::Num(m.imbalance));
+            rec.insert("kind".into(), Json::Str("epoch".into()));
             rec.insert("launches".into(), Json::Num(m.launches as f64));
             rec.insert(
                 "launches_saved".into(),
@@ -131,6 +155,7 @@ impl Streamer {
             );
             rec.insert("migrations".into(), Json::Arr(migrations));
             rec.insert("pending".into(), Json::Num(m.pending as f64));
+            rec.insert("retries".into(), Json::Num(gs.retries as f64));
             rec.insert(
                 "straggler".into(),
                 match m.straggler {
@@ -171,15 +196,19 @@ mod tests {
         "cost_us",
         "critical",
         "cum_us",
+        "dev_lanes",
+        "dev_us",
         "epoch",
         "evacuations",
         "idle_frac",
         "imbalance",
+        "kind",
         "launches",
         "launches_saved",
         "live_lanes",
         "migrations",
         "pending",
+        "retries",
         "straggler",
     ];
 

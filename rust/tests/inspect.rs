@@ -1,0 +1,297 @@
+//! Flight-recorder acceptance (ISSUE 8):
+//!
+//! (a) **replay equivalence**: `trees inspect` over a recorded stream
+//!     reprints the recording run's summary block byte-identically —
+//!     both sides are the same `Summary::from_lines` over the same
+//!     lines;
+//! (b) **invariant checking bites**: seeded corruptions of a real
+//!     recording (dropped lane, duplicated epoch, phantom
+//!     critical-path owner) are each flagged by name, and
+//!     `--invariants strict` exits nonzero;
+//! (c) **metrics determinism**: the final `kind:"metrics"` snapshot
+//!     golden-matches across runs of the same feed;
+//! (d) **the invariants hold**: live strict-mode checking passes over
+//!     the whole `TREES_FAULT_SEEDS` random fault-plan matrix;
+//! (e) **CLI hardening**: `--window 0` and malformed `--invariants`
+//!     are structured errors, not silent clamps.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+
+use trees::fault::FaultPlan;
+use trees::session::Session;
+use trees::trace::InvariantMode;
+use trees::util::json::Json;
+
+fn seeds() -> Vec<u64> {
+    let spec =
+        std::env::var("TREES_FAULT_SEEDS").unwrap_or_else(|_| "0..2".into());
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().expect("seed range start");
+        let b: u64 = b.trim().parse().expect("seed range end");
+        (a..=b).collect()
+    } else {
+        spec.split(',')
+            .map(|t| t.trim().parse().expect("seed entry"))
+            .collect()
+    }
+}
+
+const MIX: &[&str] =
+    &["fib:12", "mergesort:64", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_trees"))
+        .args(args)
+        .output()
+        .expect("spawn trees binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+fn temp(name: &str, contents: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("trees-inspect-{}-{name}.ndjson", std::process::id()));
+    std::fs::write(&p, contents).expect("write temp recording");
+    p
+}
+
+/// The `== trace summary ==` … `== end summary ==` block, markers
+/// included — what replay equivalence is asserted over.
+fn summary_block(text: &str) -> String {
+    let tail = "== end summary ==";
+    let start = text.find("== trace summary ==").unwrap_or_else(|| {
+        panic!("no summary marker in:\n{text}")
+    });
+    let end = text.find(tail).expect("end marker present");
+    format!("{}{tail}", &text[start..end])
+}
+
+/// Record a reference trace run (2 devices, a mid-run death) and
+/// return its (stdout records, stderr log).
+fn record() -> (String, String) {
+    let (out, err, ok) = run_cli(&[
+        "trace",
+        "--jobs",
+        "fib:12,mergesort:64@3,nqueens:5@5",
+        "--devices",
+        "2",
+        "--fault-plan",
+        "die:1@4",
+    ]);
+    assert!(ok, "trace failed\nstdout:\n{out}\nstderr:\n{err}");
+    (out, err)
+}
+
+/// Rewrite the first `kind:"epoch"` line of a recording through `f`.
+fn corrupt_first_epoch(
+    recording: &str,
+    f: impl FnOnce(&mut BTreeMap<String, Json>),
+) -> String {
+    let mut lines: Vec<String> =
+        recording.lines().map(str::to_string).collect();
+    let k = lines
+        .iter()
+        .position(|l| l.contains("\"kind\":\"epoch\""))
+        .expect("an epoch record");
+    let v = Json::parse(&lines[k]).expect("valid record");
+    let Json::Obj(mut o) = v else { panic!("record is not an object") };
+    f(&mut o);
+    lines[k] = Json::Obj(o).to_string();
+    lines.join("\n")
+}
+
+#[test]
+fn inspect_replays_the_live_summary_byte_identically() {
+    let (out, err) = record();
+    let path = temp("replay", &out);
+    let (iout, ierr, iok) = run_cli(&[
+        "inspect",
+        "--file",
+        path.to_str().expect("utf8 temp path"),
+        "--invariants",
+        "strict",
+    ]);
+    assert!(
+        iok,
+        "a clean recording passes strict replay\nstdout:\n{iout}\nstderr:\n{ierr}"
+    );
+    assert_eq!(
+        summary_block(&err),
+        summary_block(&iout),
+        "replay summary must be byte-identical to the live run's"
+    );
+    assert!(
+        ierr.contains("metrics snapshot: consistent with replay"),
+        "{ierr}"
+    );
+    // the inspect-only analyses ride after the summary block
+    assert!(iout.contains("== device utilization timeline =="), "{iout}");
+    assert!(iout.contains("== critical-path ownership =="), "{iout}");
+    assert!(iout.contains("slowest epochs =="), "{iout}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn inspect_writes_a_self_contained_dashboard() {
+    let (out, _) = record();
+    let path = temp("dash-src", &out);
+    let html_path = std::env::temp_dir().join(format!(
+        "trees-inspect-{}-dash.html",
+        std::process::id()
+    ));
+    let (_, ierr, iok) = run_cli(&[
+        "inspect",
+        "--file",
+        path.to_str().expect("utf8"),
+        "--html",
+        html_path.to_str().expect("utf8"),
+    ]);
+    assert!(iok, "{ierr}");
+    let html = std::fs::read_to_string(&html_path).expect("dashboard file");
+    assert!(html.starts_with("<!DOCTYPE html>"), "self-contained HTML");
+    assert!(html.contains("<svg"), "inline SVG sparkline");
+    assert!(
+        !html.contains("http://") && !html.contains("https://"),
+        "no network references"
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&html_path);
+}
+
+/// Each seeded corruption must be flagged by invariant name, and
+/// strict mode must exit nonzero.
+#[test]
+fn seeded_corruptions_are_flagged_by_name() {
+    let (out, _) = record();
+
+    // (1) dropped lane: live_lanes no longer equals Σ dev_lanes
+    let lane = corrupt_first_epoch(&out, |o| {
+        let cur = o["live_lanes"].as_f64().expect("numeric live_lanes");
+        o.insert("live_lanes".into(), Json::Num(cur + 1.0));
+    });
+    // (2) duplicated epoch: the same record replayed twice
+    let dup = {
+        let mut lines: Vec<String> =
+            out.lines().map(str::to_string).collect();
+        let k = lines
+            .iter()
+            .position(|l| l.contains("\"kind\":\"epoch\""))
+            .expect("an epoch record");
+        lines.insert(k + 1, lines[k].clone());
+        lines.join("\n")
+    };
+    // (3) phantom critical-path owner: a device that never straggled
+    let phantom = corrupt_first_epoch(&out, |o| {
+        let mut c = BTreeMap::new();
+        c.insert("device".into(), Json::Num(9.0));
+        c.insert("job".into(), Json::Num(0.0));
+        c.insert("share".into(), Json::Num(1.0));
+        c.insert("us".into(), Json::Num(1.0));
+        o.insert("critical".into(), Json::Obj(c));
+    });
+
+    for (name, corrupted, invariant) in [
+        ("lane", lane, "lane-conservation"),
+        ("dup", dup, "epoch-monotonic"),
+        ("phantom", phantom, "critical-owner-pag"),
+    ] {
+        let path = temp(name, &corrupted);
+        let (iout, ierr, iok) = run_cli(&[
+            "inspect",
+            "--file",
+            path.to_str().expect("utf8"),
+            "--invariants",
+            "strict",
+        ]);
+        assert!(
+            !iok,
+            "{name}: strict replay of a corrupted stream must fail\n{iout}"
+        );
+        assert!(
+            ierr.contains(invariant),
+            "{name}: violation must name {invariant}:\n{ierr}"
+        );
+        // warn mode reports but succeeds
+        let (_, werr, wok) = run_cli(&[
+            "inspect",
+            "--file",
+            path.to_str().expect("utf8"),
+            "--invariants",
+            "warn",
+        ]);
+        assert!(wok, "{name}: warn mode keeps going\n{werr}");
+        assert!(werr.contains(invariant), "{name}: still reported\n{werr}");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn metrics_snapshot_is_a_golden_across_runs() {
+    let (a, _) = record();
+    let (b, _) = record();
+    let last = |s: &str| s.lines().last().expect("records").to_string();
+    let (ma, mb) = (last(&a), last(&b));
+    assert!(ma.contains("\"kind\":\"metrics\""), "{ma}");
+    assert_eq!(ma, mb, "same feed + seed ⇒ byte-identical snapshot");
+    assert!(ma.contains("\"lat_us\""), "latency histograms present");
+    assert!(ma.contains("\"evacuations\""), "fault counters present: {ma}");
+}
+
+#[test]
+fn strict_invariants_hold_across_the_random_fault_matrix() {
+    for seed in seeds() {
+        for devices in 2..=4 {
+            let plan = FaultPlan::random(seed, devices, 30);
+            let tag = format!("seed {seed}, {devices} devices");
+            let mut s = Session::builder()
+                .devices(devices)
+                .fault_plan(plan)
+                .trace_sink(8, |_| {})
+                .invariants(InvariantMode::Strict)
+                .build()
+                .expect("interp sessions build infallibly");
+            for tok in MIX {
+                s.submit_spec(tok).expect("mix token");
+            }
+            s.drain().unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+            s.finish_trace().unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+            assert_eq!(s.results().len(), MIX.len(), "{tag}: all retire");
+        }
+    }
+}
+
+#[test]
+fn cli_rejects_zero_window_and_malformed_invariants() {
+    let (_, err, ok) =
+        run_cli(&["trace", "--jobs", "fib:10", "--window", "0"]);
+    assert!(!ok, "--window 0 must be rejected");
+    assert!(err.contains("--window must be at least 1"), "{err}");
+
+    let (_, err, ok) = run_cli(&[
+        "inspect",
+        "--file",
+        "/nonexistent.ndjson",
+        "--window",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--window must be at least 1"), "{err}");
+
+    let (_, err, ok) =
+        run_cli(&["trace", "--jobs", "fib:10", "--invariants", "sometimes"]);
+    assert!(!ok, "malformed --invariants must be rejected");
+    assert!(err.contains("off|warn|strict"), "{err}");
+
+    let (_, err, ok) = run_cli(&["serve", "--jobs", "fib:10", "--invariants", "loud"]);
+    assert!(!ok);
+    assert!(err.contains("off|warn|strict"), "{err}");
+
+    let (_, err, ok) = run_cli(&["inspect"]);
+    assert!(!ok, "inspect without a file is an error");
+    assert!(err.contains("recorded NDJSON file"), "{err}");
+}

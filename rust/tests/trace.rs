@@ -46,7 +46,8 @@ fn seeds() -> Vec<u64> {
 const MIX: &[&str] =
     &["fib:12", "mergesort:64", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
 
-/// The documented NDJSON schema, sorted — see `trees::trace` docs.
+/// The documented `kind:"epoch"` NDJSON schema, sorted — see
+/// `trees::trace` docs.
 const KEYS: &[&str] = &[
     "alive",
     "backoff_us",
@@ -54,15 +55,19 @@ const KEYS: &[&str] = &[
     "cost_us",
     "critical",
     "cum_us",
+    "dev_lanes",
+    "dev_us",
     "epoch",
     "evacuations",
     "idle_frac",
     "imbalance",
+    "kind",
     "launches",
     "launches_saved",
     "live_lanes",
     "migrations",
     "pending",
+    "retries",
     "straggler",
 ];
 
@@ -76,6 +81,16 @@ fn run_cli(args: &[&str]) -> (String, String, bool) {
         String::from_utf8_lossy(&out.stderr).into_owned(),
         out.status.success(),
     )
+}
+
+/// The `kind` discriminant of one stream line (panics on bad JSON).
+fn kind_of(line: &str, tag: &str) -> String {
+    let v = Json::parse(line)
+        .unwrap_or_else(|e| panic!("{tag}: invalid JSON {line:?}: {e}"));
+    v.get("kind")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("{tag}: record missing kind: {line:?}"))
+        .to_string()
 }
 
 fn assert_schema(line: &str, tag: &str) {
@@ -103,18 +118,42 @@ fn trace_cli_streams_byte_identical_goldens() {
 
     let lines: Vec<&str> = out1.lines().collect();
     assert!(!lines.is_empty(), "an NDJSON stream must have records");
+    let mut epochs = 0i64;
+    let mut outcomes = 0;
+    let mut metrics = 0;
     for (k, line) in lines.iter().enumerate() {
-        assert_schema(line, &format!("record {k}"));
-        let v = Json::parse(line).expect("checked above");
-        assert_eq!(
-            v.get("epoch").and_then(Json::as_i64),
-            Some(k as i64 + 1),
-            "epochs are a 1-based dense sequence"
-        );
+        let tag = format!("record {k}");
+        match kind_of(line, &tag).as_str() {
+            "epoch" => {
+                assert_schema(line, &tag);
+                let v = Json::parse(line).expect("checked above");
+                epochs += 1;
+                assert_eq!(
+                    v.get("epoch").and_then(Json::as_i64),
+                    Some(epochs),
+                    "epoch records are a 1-based dense sequence"
+                );
+            }
+            "outcome" => outcomes += 1,
+            "metrics" => metrics += 1,
+            other => panic!("{tag}: unexpected kind {other:?}"),
+        }
     }
+    assert!(epochs > 0, "epoch records present");
+    assert_eq!(outcomes, 3, "one outcome record per job");
+    assert_eq!(metrics, 1, "one final metrics snapshot");
+    assert_eq!(
+        kind_of(lines.last().expect("nonempty"), "last"),
+        "metrics",
+        "the registry snapshot closes the stream"
+    );
     assert!(
         err1.contains("traced 3 job(s)"),
         "summary goes to stderr:\n{err1}"
+    );
+    assert!(
+        err1.contains("== trace summary =="),
+        "the summary block goes to stderr:\n{err1}"
     );
 }
 
@@ -135,8 +174,17 @@ fn serve_trace_flag_mirrors_the_stream_on_stderr() {
         "--trace must stream NDJSON records on stderr:\n{stderr}"
     );
     for (k, line) in ndjson.iter().enumerate() {
-        assert_schema(line, &format!("stderr record {k}"));
+        let tag = format!("stderr record {k}");
+        if kind_of(line, &tag) == "epoch" {
+            assert_schema(line, &tag);
+        }
     }
+    assert!(
+        ndjson
+            .iter()
+            .any(|l| kind_of(l, "stderr").as_str() == "metrics"),
+        "serve --trace records the final metrics snapshot:\n{stderr}"
+    );
     // the human-readable service log keeps stdout to itself
     assert!(stdout.contains("admit"), "service log lost:\n{stdout}");
     assert!(
@@ -175,7 +223,11 @@ fn assert_pag_mirrors_run(s: &Session, devices: usize, tag: &str) {
         assert_eq!(e.job, Some(ev.job), "{tag}");
         assert_eq!(e.device, ev.from, "{tag}");
         assert_eq!(e.to, ev.to, "{tag}");
-        assert_eq!(e.weight_us, 0.0, "{tag}: boundaries are quiescent");
+        let want = if ev.to.is_some() { model.dev.launch_us } else { 0.0 };
+        assert_eq!(
+            e.weight_us, want,
+            "{tag}: a received evacuation prices one re-launch"
+        );
         assert_eq!(e.epoch, ev.step + 1, "{tag}: embeds in the next step");
     }
     // the PAG invariant survives faults: any stepping device's epoch
