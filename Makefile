@@ -10,6 +10,11 @@
 #   make artifacts  AOT-lower the epoch-step programs to HLO text
 #                   (needs the python/compile JAX toolchain)
 #   make bench      run all paper benches (skip-aware)
+#   make bench-hybrid
+#                   the E-HYBRID-1 crossover bench alone: modeled µs
+#                   under --engine cpu/gpu/auto per mix, snapshotted
+#                   to BENCH_hybrid.json (asserts auto never loses to
+#                   pure GPU and wins >=1.2x on the narrow-front mix)
 #   make inspect-smoke
 #                   record a `trees trace` run, replay the recording
 #                   through `trees inspect --invariants strict`, and
@@ -18,7 +23,7 @@
 CARGO ?= cargo
 
 .PHONY: check build test clippy doc fmt fmt-check artifacts bench \
-        pytest inspect-smoke
+        bench-hybrid pytest inspect-smoke
 
 check: build test clippy doc
 
@@ -48,6 +53,9 @@ pytest:
 
 bench:
 	cd rust && $(CARGO) bench
+
+bench-hybrid:
+	cd rust && $(CARGO) bench --bench bench_hybrid
 
 # The flight-recorder e2e gate: a live `trees trace` run and a
 # `trees inspect` replay of its own recording must print the same

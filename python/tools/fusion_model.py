@@ -1,6 +1,7 @@
 """Deterministic twin of rust/src/sched + rust/src/shard + rust/src/fault
-+ rust/src/trace + rust/src/metrics for the EXPERIMENTS.md tables
-(E-FUSE-1, E-SHARD-1, E-FAULT-1, E-TRACE-1 and E-OBS-1).
++ rust/src/trace + rust/src/metrics + rust/src/hybrid for the
+EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1, E-FAULT-1, E-TRACE-1,
+E-OBS-1 and E-HYBRID-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
 exact counting semantics of the fused scheduler (rust/src/sched), the
@@ -17,9 +18,13 @@ bench_shard`, `--bench bench_serve` and `--bench bench_trace` compute
 the same numbers from the real machines. The E-FAULT-1 twin also
 snapshots the repo-root BENCH_serve.json, the E-TRACE-1 twin
 (critical-path window twin of rust/src/trace) snapshots
-BENCH_trace.json, and the E-OBS-1 twin mirrors the rust/src/metrics
+BENCH_trace.json, the E-OBS-1 twin mirrors the rust/src/metrics
 registry (log2-bucket latency histograms, SLO counters, utilization
-gauges) over the same serve feed.
+gauges) over the same serve feed, and the E-HYBRID-1 twin mirrors the
+rust/src/hybrid crossover router (CpuModel, greedy peel + bulk
+fallback + hysteresis) and snapshots BENCH_hybrid.json — the same
+numbers `cargo bench --bench bench_hybrid` computes from the real
+engines.
 
 Run:  python tools/fusion_model.py
 """
@@ -395,6 +400,7 @@ class ShardDevice:
         self.work = 0
         self.finished = []  # machines retired since last drain
         self.last = None  # last step's (jobs, live_per_job, launches)
+        self.last_widths = None  # last step's per-rider window lengths
 
     def has_work(self):
         return bool(self.active) or bool(self.pending)
@@ -435,16 +441,18 @@ class ShardDevice:
             cen, lo, hi = m.front()
             fronts.append((i, hi - lo))
         sel = self.policy.select(fronts)
-        live_per_job, jobs, window = [], [], 0
+        live_per_job, jobs, widths, window = [], [], [], 0
         for i in sel:
             m = self.active[i]
             cen, lo, hi = m.front()
             live_per_job.append(m.live_in(cen, lo, hi))
             jobs.append(getattr(m, "job", None))
+            widths.append(hi - lo)
             window += hi - lo
         step_launches = launches_for(window)
         # StepTrace twin: what the trace/critical-path layer observes
         self.last = (jobs, list(live_per_job), step_launches)
+        self.last_widths = widths
         self.steps += 1
         self.launches += step_launches
         self.work += sum(live_per_job)
@@ -1166,12 +1174,224 @@ def trace_table():
     print(f"wrote {path}")
 
 
+# ------------------------------- hybrid twins (rust/src/hybrid)
+
+CPU_WORKERS = 8  # hybrid::CpuModel::default()
+CPU_PER_TASK_US = 0.5
+CPU_DISPATCH_US = 0.5
+CPU_STEAL_US = 0.2
+CROSSOVER_MARGIN = 1.25  # hybrid::DEFAULT_MARGIN
+
+
+def cpu_epoch_us(live):
+    """hybrid::CpuModel::epoch_us twin: one pool dispatch, a log-depth
+    steal ramp, then ceil(live/workers) rounds of task work."""
+    if live == 0:
+        return 0.0
+    return (CPU_DISPATCH_US + CPU_STEAL_US * math.log2(CPU_WORKERS)
+            + math.ceil(live / CPU_WORKERS) * CPU_PER_TASK_US)
+
+
+class HybridRouter:
+    """hybrid::Router twin: greedy peel off the all-GPU window
+    (narrowest first, by marginal fused cost), bulk fallback for
+    all-narrow windows, hysteresis by `margin` inside a never-worse
+    envelope. No pins here — every interp rider is cpu-capable."""
+
+    def __init__(self, mode, margin=CROSSOVER_MARGIN):
+        self.mode = mode
+        self.margin = max(margin, 1.0)
+        self.last = {}  # job -> "cpu" | "gpu"
+
+    def route(self, fronts):
+        """fronts: [(job, live), ...] in slice order; returns a
+        parallel list of "cpu"/"gpu"."""
+        if self.mode == "cpu":
+            kinds = ["cpu"] * len(fronts)
+        elif self.mode == "gpu":
+            kinds = ["gpu"] * len(fronts)
+        else:
+            kinds = self.route_auto(fronts)
+        for (job, _), k in zip(fronts, kinds):
+            self.last[job] = k
+        return kinds
+
+    def plan_cost(self, fronts, kinds):
+        gpu_lives = [l for (_, l), k in zip(fronts, kinds) if k == "gpu"]
+        cost = sum(cpu_epoch_us(l)
+                   for (_, l), k in zip(fronts, kinds) if k == "cpu")
+        if gpu_lives:
+            cost += fused_epoch_us(gpu_lives)
+        return cost
+
+    def route_auto(self, fronts):
+        plan = self.greedy_plan(fronts, True)
+        # never-worse envelope: if hysteresis held a side past the
+        # crossover, drop the history for this epoch
+        pure = self.plan_cost(fronts, ["gpu"] * len(fronts))
+        if self.plan_cost(fronts, plan) > pure + 1e-9:
+            return self.greedy_plan(fronts, False)
+        return plan
+
+    def greedy_plan(self, fronts, with_history):
+        kinds = ["gpu"] * len(fronts)
+        on_gpu = [True] * len(fronts)
+
+        def gpu_cost():
+            lives = [l for (_, l), g in zip(fronts, on_gpu) if g]
+            return fused_epoch_us(lives) if lives else 0.0
+
+        order = sorted(range(len(fronts)),
+                       key=lambda i: (fronts[i][1], fronts[i][0]))
+        for i in order:
+            job, live = fronts[i]
+            with_us = gpu_cost()
+            on_gpu[i] = False
+            delta = max(with_us - gpu_cost(), 0.0)
+            cpu_us = cpu_epoch_us(live)
+            prev = self.last.get(job) if with_history else None
+            if prev == "cpu":
+                to_cpu = cpu_us <= delta * self.margin
+            elif prev == "gpu":
+                to_cpu = cpu_us * self.margin < delta
+            else:
+                to_cpu = cpu_us < delta
+            if to_cpu:
+                kinds[i] = "cpu"  # stays off the GPU window
+            else:
+                on_gpu[i] = True
+        # bulk fallback: in an all-narrow window every marginal is ~0,
+        # but moving the whole set sheds the launch entirely
+        remaining = [i for i in range(len(fronts)) if on_gpu[i]]
+        if remaining:
+            fused = gpu_cost()
+            sum_cpu = sum(cpu_epoch_us(fronts[i][1]) for i in remaining)
+            settled_gpu = with_history and any(
+                self.last.get(fronts[i][0]) == "gpu" for i in remaining)
+            wins = (sum_cpu * self.margin < fused if settled_gpu
+                    else sum_cpu < fused)
+            if wins:
+                for i in remaining:
+                    kinds[i] = "cpu"
+        return kinds
+
+    def retire(self, job):
+        self.last.pop(job, None)
+
+
+def run_hybrid(tokens, mode):
+    """bench_hybrid run_mode twin: one engine-mode run of a mix, priced
+    per step by the shared engine-split arithmetic (CPU riders each pay
+    their own pool epoch; GPU riders share one fused launch computed
+    over the GPU-routed window only, plus overflow tiles)."""
+    dev = ShardDevice()
+    for j, t in enumerate(tokens):
+        m = build(t)
+        m.job = j
+        dev.admit(m)
+    router = HybridRouter(mode)
+    us, steps, cpu_epochs, gpu_epochs, widest = 0.0, 0, 0, 0, 0
+    while dev.has_work():
+        dev.step()
+        jobs, live, _ = dev.last
+        widths = dev.last_widths
+        kinds = router.route(list(zip(jobs, live)))
+        for m in dev.finished:
+            router.retire(m.job)
+        del dev.finished[:]
+        gpu_lives = [l for l, k in zip(live, kinds) if k == "gpu"]
+        launches = launches_for(
+            sum(w for w, k in zip(widths, kinds) if k == "gpu"))
+        us += sum(cpu_epoch_us(l) for l, k in zip(live, kinds)
+                  if k == "cpu")
+        if gpu_lives:
+            us += fused_epoch_us(gpu_lives) \
+                + max(launches - 1, 0) * LAUNCH_US
+        steps += 1
+        for l, k in zip(live, kinds):
+            if k == "cpu":
+                cpu_epochs += 1
+                widest = max(widest, l)
+            else:
+                gpu_epochs += 1
+    return dict(us=us, steps=steps, cpu_epochs=cpu_epochs,
+                gpu_epochs=gpu_epochs, widest_cpu=widest)
+
+
+# The three bench_hybrid mixes ("bfs:4" here is "bfs:grid:4" in the
+# Rust spec grammar): all-narrow fronts (launch-bound on the GPU),
+# all-wide fronts (launch amortized), and a serve-like blend.
+HYBRID_MIXES = [
+    ("narrow-front: fib:10 + fib:8 + nqueens:4",
+     ["fib:10", "fib:8", "nqueens:4"]),
+    ("wide-front: 2x mergesort:1024 + mergesort:512",
+     ["mergesort:1024", "mergesort:1024", "mergesort:512"]),
+    ("blended serve mix: fibs + bfs edges + sorts",
+     ["fib:12", "fib:10", "bfs:4", "bfs:5", "mergesort:256",
+      "mergesort:64", "nqueens:5"]),
+]
+
+
+def hybrid_table():
+    print("\nE-HYBRID-1 — front-width crossover, --engine cpu/gpu/auto, "
+          "1 device (bench_hybrid twin)")
+    print("| mix | steps | gpu µs | cpu µs | auto µs | auto vs gpu | "
+          "cpu-epochs | widest cpu front |")
+    print("|" + "---|" * 8)
+    rows = []
+    for name, tokens in HYBRID_MIXES:
+        gpu = run_hybrid(tokens, "gpu")
+        cpu = run_hybrid(tokens, "cpu")
+        auto = run_hybrid(tokens, "auto")
+        # routing never changes the epoch structure, only the venue
+        assert gpu["steps"] == cpu["steps"] == auto["steps"], name
+        # E-HYBRID-1 acceptance: auto never loses to pure GPU, and wide
+        # (>=512-lane) epochs never leave the fused path
+        assert auto["us"] <= gpu["us"] + 1e-9, (name, auto, gpu)
+        assert auto["widest_cpu"] < 512, (name, auto)
+        speed = gpu["us"] / max(auto["us"], 1e-9)
+        rows.append((name, gpu, cpu, auto, speed))
+        print(f"| {name} | {gpu['steps']} | {gpu['us']:.0f} | "
+              f"{cpu['us']:.0f} | {auto['us']:.0f} | {speed:.2f}x | "
+              f"{auto['cpu_epochs']}/{auto['cpu_epochs'] + auto['gpu_epochs']} | "
+              f"{auto['widest_cpu']} |")
+    narrow_speedup = rows[0][4]
+    assert narrow_speedup >= 1.2, narrow_speedup
+
+    out = {
+        "bench": "hybrid",
+        "devices": 1,
+        "crossover_margin": CROSSOVER_MARGIN,
+        "mixes": [
+            {
+                "mix": name,
+                "steps": gpu["steps"],
+                "gpu_us": round(gpu["us"], 3),
+                "cpu_us": round(cpu["us"], 3),
+                "auto_us": round(auto["us"], 3),
+                "auto_vs_gpu": round(speed, 4),
+                "auto_cpu_epochs": auto["cpu_epochs"],
+                "auto_gpu_epochs": auto["gpu_epochs"],
+                "widest_cpu_front": auto["widest_cpu"],
+            }
+            for name, gpu, cpu, auto, speed in rows
+        ],
+    }
+    path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "BENCH_hybrid.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main():
     fuse_table()
     shard_table()
     fault_table()
     trace_table()
     obs_table()
+    hybrid_table()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ pub fn fib(n: u32, cutoff: u32) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cilk::Pool;
@@ -86,7 +87,7 @@ pub fn fft(re: &mut [f32], im: &mut [f32], cutoff: usize) {
 pub fn mergesort(xs: &[f32], cutoff: usize) -> Vec<f32> {
     if xs.len() <= cutoff {
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         return v;
     }
     let mid = xs.len() / 2;
@@ -111,6 +112,7 @@ pub fn mergesort(xs: &[f32], cutoff: usize) -> Vec<f32> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod more_tests {
     use super::*;
     use crate::cilk::Pool;

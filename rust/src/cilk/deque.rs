@@ -121,11 +121,13 @@ impl Injector {
     }
 
     pub fn push(&self, v: usize) {
-        self.q.lock().unwrap().push_back(v);
+        // a poisoned lock means a panic elsewhere while holding it;
+        // the VecDeque itself is still coherent, so keep serving
+        self.q.lock().unwrap_or_else(|e| e.into_inner()).push_back(v);
     }
 
     pub fn pop(&self) -> Option<usize> {
-        self.q.lock().unwrap().pop_front()
+        self.q.lock().unwrap_or_else(|e| e.into_inner()).pop_front()
     }
 }
 
@@ -136,6 +138,7 @@ impl Default for Injector {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -171,6 +174,62 @@ mod tests {
         assert!(!d.push(99));
         assert_eq!(d.pop(), Some(3));
         assert!(d.push(99));
+    }
+
+    #[test]
+    fn size_one_race_has_exactly_one_winner() {
+        // The Chase–Lev correctness crux: when the deque holds one
+        // item, a bottom pop and a top steal race and arbitrate
+        // through `top`. Exactly one side may win each item — a
+        // double win is a duplicated job, a double loss a lost one.
+        // Pushing one item at a time keeps every single round on the
+        // size-one path.
+        const ROUNDS: usize = 20_000;
+        let d = Arc::new(ChaseLev::new(8));
+        let seen = Arc::new(
+            (0..ROUNDS).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>(),
+        );
+        let done = Arc::new(AtomicUsize::new(0));
+
+        let thief = {
+            let d = d.clone();
+            let seen = seen.clone();
+            let done = done.clone();
+            std::thread::spawn(move || loop {
+                match d.steal() {
+                    Steal::Success(v) => {
+                        seen[v - 1].fetch_add(1, SeqCst);
+                    }
+                    Steal::Retry | Steal::Empty => {
+                        if done.load(SeqCst) == 1 {
+                            return;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+
+        for i in 1..=ROUNDS {
+            assert!(d.push(i));
+            // immediate bottom pop: races the thief's top steal on a
+            // size-one deque. A losing pop (None) means the thief's
+            // CAS won and owns the item.
+            if let Some(v) = d.pop() {
+                seen[v - 1].fetch_add(1, SeqCst);
+            }
+        }
+        done.store(1, SeqCst);
+        thief.join().unwrap();
+        for (i, c) in seen.iter().enumerate() {
+            assert_eq!(
+                c.load(SeqCst),
+                1,
+                "item {} seen {} times",
+                i + 1,
+                c.load(SeqCst)
+            );
+        }
     }
 
     #[test]

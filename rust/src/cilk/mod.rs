@@ -1,9 +1,13 @@
 //! From-scratch work-first work-stealing runtime — the paper's Cilk-5
-//! baseline for Fig 5 and Fig 6.
+//! baseline for Fig 5 and Fig 6, and (since the hybrid subsystem) the
+//! execution substrate for [`crate::hybrid`]'s CPU engine: narrow
+//! epoch fronts routed off the GPU run lane-parallel on this pool via
+//! [`crate::hybrid::run_lanes`].
 //!
 //! [`deque`] implements the Chase–Lev deque; [`pool`] the worker pool
 //! and the `join` primitive; [`apps`] the cilk-style versions of the
 //! benchmark applications (fib, fft, mergesort, matmul).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod apps;
 pub mod deque;

@@ -16,6 +16,15 @@ use std::sync::{Arc, Condvar, Mutex};
 use super::deque::{ChaseLev, Injector, Steal};
 use crate::util::rng::Rng;
 
+/// Recover a mutex guard whether or not the lock is poisoned. A
+/// poisoned lock here means a *job* panicked while holding it; the
+/// pool's own state (job slots, the sleep mutex) stays coherent, so
+/// propagating the poison would only turn one job's panic into a
+/// wedged runtime.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Type-erased job handle: pointer to a header whose first field is the
 /// execute function. Valid until `done` is set by the executor; `join`
 /// and `run` keep the referent alive on their stack until then.
@@ -55,14 +64,20 @@ impl<F: FnOnce() -> R + Send, R: Send> StackJob<F, R> {
 
     unsafe fn exec(hdr: *mut JobHeader) {
         let this = unsafe { &*(hdr as *const StackJob<F, R>) };
-        let f = this.func.lock().unwrap().take().expect("job run twice");
+        let f = match relock(&this.func).take() {
+            Some(f) => f,
+            None => panic!("cilk job executed twice"),
+        };
         let r = f();
-        *this.result.lock().unwrap() = Some(r);
+        *relock(&this.result) = Some(r);
         this.done.store(true, Release);
     }
 
     fn take_result(&self) -> R {
-        self.result.lock().unwrap().take().expect("job not finished")
+        match relock(&self.result).take() {
+            Some(r) => r,
+            None => panic!("cilk job result taken before completion"),
+        }
     }
 }
 
@@ -103,12 +118,13 @@ impl Pool {
         let mut handles = Vec::new();
         for idx in 0..workers {
             let sh = shared.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("cilk-worker-{idx}"))
-                    .spawn(move || worker_loop(sh, idx))
-                    .expect("spawn worker"),
-            );
+            let spawned = std::thread::Builder::new()
+                .name(format!("cilk-worker-{idx}"))
+                .spawn(move || worker_loop(sh, idx));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => panic!("spawning cilk worker {idx}: {e}"),
+            }
         }
         Pool { shared, handles, workers }
     }
@@ -158,11 +174,11 @@ fn worker_loop(sh: Arc<Shared>, idx: usize) {
             if idle_spins < 64 {
                 std::hint::spin_loop();
             } else {
-                let guard = sh.sleep.lock().unwrap();
+                let guard = relock(&sh.sleep);
                 let _g = sh
                     .wake
                     .wait_timeout(guard, std::time::Duration::from_micros(100))
-                    .unwrap();
+                    .unwrap_or_else(|e| e.into_inner());
             }
         }
     }
@@ -213,7 +229,12 @@ where
     if !sh.deques[idx].push(job_b.as_ref().0) {
         // deque full: serialize
         let ra = a();
-        let f = job_b.func.lock().unwrap().take().unwrap();
+        let f = match relock(&job_b.func).take() {
+            Some(f) => f,
+            // unreachable: the job was never published, so nothing
+            // else can have taken it
+            None => panic!("unpublished cilk job already taken"),
+        };
         return (ra, f());
     }
 
@@ -247,6 +268,7 @@ where
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -292,6 +314,44 @@ mod tests {
         for i in 0..50u64 {
             assert_eq!(pool.run(|| fib(15 + (i % 3))), fib(15 + (i % 3)));
         }
+    }
+
+    #[test]
+    fn pool_terminates_under_contention() {
+        // Regression guard for the shutdown path: drop the pool while
+        // workers have just been hammered from several external
+        // threads (some spinning, some parked on the condvar). Drop
+        // joins every worker; the test completing at all — and fast —
+        // is the assertion.
+        let t0 = std::time::Instant::now();
+        for round in 0..4u64 {
+            let pool = Pool::new(4);
+            std::thread::scope(|s| {
+                for t in 0..3u64 {
+                    let pool = &pool;
+                    s.spawn(move || {
+                        for i in 0..8 {
+                            let n = 12 + ((round + t + i) % 6);
+                            assert_eq!(pool.run(|| fib(n)), fib_seq(n));
+                        }
+                    });
+                }
+            });
+            drop(pool); // must join all 4 workers, parked or spinning
+        }
+        assert!(
+            t0.elapsed().as_secs_f64() < 30.0,
+            "shutdown wedged: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    fn fib_seq(n: u64) -> u64 {
+        let (mut a, mut b) = (0u64, 1u64);
+        for _ in 0..n {
+            (a, b) = (b, a + b);
+        }
+        a
     }
 
     #[test]

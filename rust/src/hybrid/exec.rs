@@ -1,0 +1,120 @@
+//! The execution bridge: run an epoch's live lanes on the shared cilk
+//! pool, fork-join over the front, and feed the results back through
+//! [`Interp::run_epoch_with`](crate::tvm::Interp::run_epoch_with)'s
+//! sequential commit — bit-identical to the sequential interpreter.
+
+use std::sync::OnceLock;
+
+use crate::cilk::{join, Pool};
+use crate::tvm::{LaneOut, Machine};
+
+/// Below this many lanes a range runs inline: the front is too narrow
+/// for a steal to pay for itself (work-first grain control).
+const GRAIN: usize = 16;
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide cilk pool every CPU-engine epoch runs on, created
+/// on first use. Sized to the machine (capped at 8 — the width
+/// [`super::CpuModel`] models by default) so one pool serves every
+/// scheduler in the process; CPU devices in a shard group are
+/// simulated, exactly like GPU devices.
+pub fn shared_pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 8);
+        Pool::new(workers)
+    })
+}
+
+/// Lane mapper for [`Interp::run_epoch_with`]
+/// (crate::tvm::Interp::run_epoch_with): executes `(slot, fork_base)`
+/// pairs by recursive fork-join range splitting on the shared pool and
+/// returns the lane outputs in pair order. Narrow fronts (≤ [`GRAIN`])
+/// skip the pool entirely.
+pub fn run_lanes(
+    pairs: &[(usize, usize)],
+    run: &(dyn Fn(usize, usize) -> LaneOut + Sync),
+) -> Vec<LaneOut> {
+    let mut out: Vec<Option<LaneOut>> = Vec::new();
+    out.resize_with(pairs.len(), || None);
+    if pairs.len() <= GRAIN {
+        fill(pairs, &mut out, run);
+    } else {
+        shared_pool().run(|| fill(pairs, &mut out, run));
+    }
+    out.into_iter()
+        .map(|o| match o {
+            Some(l) => l,
+            None => unreachable!("fill covers every lane"),
+        })
+        .collect()
+}
+
+fn fill(
+    pairs: &[(usize, usize)],
+    out: &mut [Option<LaneOut>],
+    run: &(dyn Fn(usize, usize) -> LaneOut + Sync),
+) {
+    if pairs.len() <= GRAIN {
+        for (o, &(slot, base)) in out.iter_mut().zip(pairs) {
+            *o = Some(run(slot, base));
+        }
+        return;
+    }
+    let mid = pairs.len() / 2;
+    let (p1, p2) = pairs.split_at(mid);
+    let (o1, o2) = out.split_at_mut(mid);
+    join(|| fill(p1, o1, run), || fill(p2, o2, run));
+}
+
+/// Execute one epoch of `m` on the cilk pool. `false` when halted —
+/// the CPU engine's `step`.
+pub fn step_machine(m: &mut Machine) -> bool {
+    m.step_with(|pairs, run| run_lanes(pairs, run))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::sched::{JobSpec, Tenant};
+
+    #[test]
+    fn pool_epochs_match_sequential_for_every_app() {
+        // the spine property at the lowest level: a machine stepped
+        // through the pool is bit-identical, state and stats, to one
+        // stepped sequentially
+        for spec in
+            ["fib:13", "mergesort:64", "bfs:grid:4", "nqueens:6", "sssp:grid:4"]
+        {
+            let b = JobSpec::parse(spec).unwrap().instantiate().unwrap();
+            let ta = Tenant::from_build(crate::sched::JobId(0), &b);
+            let tb = Tenant::from_build(crate::sched::JobId(0), &b);
+            let (mut a, mut bm) = match (ta.engine, tb.engine) {
+                (
+                    crate::sched::Engine::Interp(a),
+                    crate::sched::Engine::Interp(b),
+                ) => (a, b),
+                _ => unreachable!("from_build yields interp engines"),
+            };
+            loop {
+                let pa = a.step();
+                let pb = step_machine(&mut bm);
+                assert_eq!(pa, pb, "{spec}");
+                assert_eq!(a.code, bm.code, "{spec}");
+                assert_eq!(a.args, bm.args, "{spec}");
+                assert_eq!(a.res, bm.res, "{spec}");
+                assert_eq!(a.heap_i, bm.heap_i, "{spec}");
+                assert_eq!(a.heap_f, bm.heap_f, "{spec}");
+                assert_eq!(a.next_free, bm.next_free, "{spec}");
+                assert_eq!(a.stats, bm.stats, "{spec}");
+                if !pa {
+                    break;
+                }
+            }
+        }
+    }
+}

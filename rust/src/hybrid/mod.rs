@@ -1,0 +1,43 @@
+//! Hybrid CPU/GPU execution — work-first below the crossover,
+//! work-together above it.
+//!
+//! The paper's premise is a CPU/GPU platform: narrow task fronts are
+//! launch-bound on the GPU (pure V∞ overhead) and belong on a
+//! work-first CPU pool; wide fronts amortize the launch and belong on
+//! the work-together GPU. This subsystem supplies the three pieces the
+//! serving stack needs to act on that:
+//!
+//! * **[`CpuModel`]** ([`model`]) — a deterministic cost model for
+//!   running one epoch's live front on the [`crate::cilk`]
+//!   work-stealing pool (dispatch + steal + per-task terms), mirroring
+//!   [`crate::simt::GpuModel`]'s accounting so the two sides are
+//!   directly comparable; [`device_speed`] collapses either into a
+//!   lanes-per-µs figure the shard placer/rebalancer can weigh.
+//! * **[`Router`]** ([`route`]) — the per-tenant, per-epoch crossover
+//!   policy ([`EngineMode`] `cpu|gpu|auto`). Under `auto` it routes by
+//!   *marginal* cost: starting from the all-GPU fused window it moves a
+//!   rider to the CPU only when the CPU epoch beats the rider's
+//!   marginal share of the fused cost, so the modeled device cost of an
+//!   `auto` epoch never exceeds the pure-GPU cost (greedy improvement),
+//!   with hysteresis so tenants near the crossover don't flap.
+//! * **[`run_lanes`]** ([`exec`]) — the execution bridge: drives
+//!   [`crate::tvm::Interp::run_epoch_with`] lane-parallel on the shared
+//!   cilk pool (fork-join range splitting over the live front). Epoch
+//!   boundaries are unchanged and lanes only read pre-epoch state, so
+//!   results are bit-identical to the sequential interpreter — routing
+//!   never changes *what* runs, only where an epoch executes.
+//!
+//! [`crate::sched`] wires these together as `Engine::Cpu` plus a router
+//! in the fused step; [`crate::shard`] gives device-group members an
+//! engine kind and speed-aware placement.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod exec;
+pub mod model;
+pub mod route;
+
+pub use exec::{run_lanes, shared_pool, step_machine};
+pub use model::{device_speed, CpuModel};
+pub use route::{
+    parse_crossover, EngineKind, EngineMode, Router, DEFAULT_MARGIN,
+};

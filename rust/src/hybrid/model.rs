@@ -1,0 +1,127 @@
+//! Deterministic CPU-pool cost model, mirroring [`GpuModel`]'s
+//! accounting so the router can compare the two sides in the same µs.
+
+use crate::simt::GpuModel;
+
+use super::route::EngineMode;
+
+/// Cost model for one epoch of a live front on the cilk work-stealing
+/// pool (the work-first side of the paper's platform).
+///
+/// `epoch_us = dispatch + steal·log2(workers) + ceil(live/workers)·per_task`
+///
+/// * `dispatch_us` — handing the epoch root to the pool (the CPU's
+///   analogue of a kernel launch, ~20× cheaper);
+/// * `steal_us · log2(workers)` — the steal tree that spreads the
+///   front across workers (Cilk's O(P·T∞) steal bound, per epoch);
+/// * `ceil(live/workers) · per_task_us` — the parallel task sweep.
+///
+/// Defaults put the crossover against the default [`GpuModel`] near
+/// 160 live lanes: narrow fib tails and BFS wavefront edges flip to
+/// the CPU, wide sort/FFT fronts stay on the GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CpuModel {
+    /// Pool width (the paper's baseline uses 4; we default to 8).
+    pub workers: usize,
+    /// Per-task scalar execution cost (µs).
+    pub per_task_us: f64,
+    /// Per-epoch dispatch overhead (µs).
+    pub dispatch_us: f64,
+    /// Per-steal-hop overhead (µs), paid log2(workers) deep per epoch.
+    pub steal_us: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel { workers: 8, per_task_us: 0.5, dispatch_us: 0.5, steal_us: 0.2 }
+    }
+}
+
+impl CpuModel {
+    /// Modeled µs for one epoch over `live` lanes (0 lanes cost 0 —
+    /// nothing is dispatched).
+    pub fn epoch_us(&self, live: u64) -> f64 {
+        if live == 0 {
+            return 0.0;
+        }
+        let w = self.workers.max(1) as f64;
+        self.dispatch_us
+            + self.steal_us * w.log2()
+            + (live as f64 / w).ceil() * self.per_task_us
+    }
+
+    /// Modeled µs for a whole run: one epoch per front width.
+    pub fn run_us(&self, lives: &[u64]) -> f64 {
+        lives.iter().map(|&l| self.epoch_us(l)).sum()
+    }
+}
+
+/// Reference front width for [`device_speed`]: wide enough that both
+/// models are in their throughput regime.
+pub const SPEED_REF_LANES: u64 = 4096;
+
+/// A device's speed in lanes/µs on the reference front — the scalar
+/// weight speed-aware placement and rebalancing divide loads by. An
+/// `auto` device can run either engine, so it is as fast as its faster
+/// side. Uniform modes yield uniform speeds, which keeps every
+/// placement decision identical to the unweighted code path.
+pub fn device_speed(mode: EngineMode, gpu: &GpuModel, cpu: &CpuModel) -> f64 {
+    let lanes = SPEED_REF_LANES;
+    let gpu_speed = lanes as f64 / gpu.fused_epoch_us(&[lanes]);
+    let cpu_speed = lanes as f64 / cpu.epoch_us(lanes);
+    match mode {
+        EngineMode::Gpu => gpu_speed,
+        EngineMode::Cpu => cpu_speed,
+        EngineMode::Auto => gpu_speed.max(cpu_speed),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_us_terms_add_up() {
+        let m = CpuModel::default();
+        assert_eq!(m.epoch_us(0), 0.0);
+        // 1 lane: dispatch 0.5 + steal 0.2*3 + 1 task wave 0.5
+        assert!((m.epoch_us(1) - 1.6).abs() < 1e-12);
+        // 10 lanes: two task waves over 8 workers
+        assert!((m.epoch_us(10) - 2.1).abs() < 1e-12);
+        // monotone in live
+        assert!(m.epoch_us(512) < m.epoch_us(4096));
+    }
+
+    #[test]
+    fn crossover_sits_between_narrow_and_wide() {
+        // the whole point: narrow fronts are cheaper on the CPU, wide
+        // fronts cheaper on the (launch-amortizing) GPU
+        let cpu = CpuModel::default();
+        let gpu = GpuModel::default();
+        for narrow in [1u64, 8, 32, 128] {
+            assert!(
+                cpu.epoch_us(narrow) < gpu.fused_epoch_us(&[narrow]),
+                "CPU must win at {narrow} lanes"
+            );
+        }
+        for wide in [512u64, 2048, 8192] {
+            assert!(
+                gpu.fused_epoch_us(&[wide]) < cpu.epoch_us(wide),
+                "GPU must win at {wide} lanes"
+            );
+        }
+    }
+
+    #[test]
+    fn speed_is_uniform_under_uniform_modes() {
+        let cpu = CpuModel::default();
+        let gpu = GpuModel::default();
+        let g = device_speed(EngineMode::Gpu, &gpu, &cpu);
+        let c = device_speed(EngineMode::Cpu, &gpu, &cpu);
+        let a = device_speed(EngineMode::Auto, &gpu, &cpu);
+        assert!(g > c, "default GPU outruns the pool on the wide front");
+        assert_eq!(a, g.max(c));
+        assert!(g > 0.0 && c > 0.0);
+    }
+}

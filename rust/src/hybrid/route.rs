@@ -1,0 +1,425 @@
+//! The front-width crossover router: per-tenant, per-epoch CPU/GPU
+//! routing by modeled marginal cost, with hysteresis.
+
+use std::collections::BTreeMap;
+
+use crate::simt::GpuModel;
+
+use super::model::CpuModel;
+
+/// Which engine a device (or a whole run) is allowed to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Every epoch runs on the cilk pool.
+    Cpu,
+    /// Every epoch runs through the GPU cost model (the pre-hybrid
+    /// behavior, and the default).
+    #[default]
+    Gpu,
+    /// Per-tenant, per-epoch crossover routing ([`Router`]).
+    Auto,
+}
+
+impl EngineMode {
+    /// Parse a `--engine` value. Structured error, same shape as the
+    /// `--invariants` parser.
+    pub fn parse(s: &str) -> Result<EngineMode, String> {
+        match s {
+            "cpu" => Ok(EngineMode::Cpu),
+            "gpu" => Ok(EngineMode::Gpu),
+            "auto" => Ok(EngineMode::Auto),
+            other => Err(format!("--engine must be cpu|gpu|auto, got {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Cpu => "cpu",
+            EngineMode::Gpu => "gpu",
+            EngineMode::Auto => "auto",
+        }
+    }
+}
+
+/// Where one rider's epoch actually ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Cpu,
+    Gpu,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Cpu => "cpu",
+            EngineKind::Gpu => "gpu",
+        }
+    }
+}
+
+/// Parse a `--crossover` hysteresis margin: a finite factor ≥ 1.
+pub fn parse_crossover(s: &str) -> Result<f64, String> {
+    match s.parse::<f64>() {
+        Ok(v) if v.is_finite() && v >= 1.0 => Ok(v),
+        _ => Err(format!(
+            "--crossover must be a finite factor >= 1.0, got {s:?}"
+        )),
+    }
+}
+
+/// Default hysteresis margin: the losing side must win by 1.25× to
+/// flip a tenant that has already picked an engine.
+pub const DEFAULT_MARGIN: f64 = 1.25;
+
+/// Per-scheduler crossover router.
+///
+/// `route` is called once per fused step with every selected rider's
+/// `(job, live)` front. Under [`EngineMode::Auto`] it greedily peels
+/// riders off the all-GPU fused window, narrowest first: a rider moves
+/// to the CPU only when its modeled CPU epoch beats its *marginal*
+/// share of the fused GPU cost (the cost the window sheds when the
+/// rider leaves). Every accepted move strictly reduces the modeled
+/// device cost, so an `auto` epoch never models worse than pure GPU —
+/// comparing against solo costs instead would overpay on mixed windows
+/// where riders share one launch.
+///
+/// Hysteresis: a tenant keeps its previous engine unless the other
+/// side wins by `margin`; a tenant with no history (fresh admission,
+/// or arrival by migration/evacuation) takes the better side outright,
+/// GPU on a tie. Held routes are bounded by a never-worse envelope: if
+/// honoring the history would make the window model worse than all-GPU,
+/// the history is dropped for that epoch — so the ≤-pure-GPU guarantee
+/// survives hysteresis.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub mode: EngineMode,
+    /// Hysteresis margin (≥ 1): how decisively the other engine must
+    /// win before a routed tenant flips.
+    pub margin: f64,
+    pub cpu: CpuModel,
+    pub gpu: GpuModel,
+    /// Previous route per job key (sorted for determinism).
+    last: BTreeMap<usize, EngineKind>,
+}
+
+impl Router {
+    pub fn new(mode: EngineMode, margin: f64, cpu: CpuModel, gpu: GpuModel) -> Router {
+        Router { mode, margin: margin.max(1.0), cpu, gpu, last: BTreeMap::new() }
+    }
+
+    /// Route each rider's epoch. `fronts` is `(job key, live lanes)`
+    /// in selection order; the result is parallel to it.
+    pub fn route(&mut self, fronts: &[(usize, u64)]) -> Vec<EngineKind> {
+        self.route_pinned(fronts, &vec![false; fronts.len()])
+    }
+
+    /// Like [`Router::route`], but riders with `pins[i]` set can never
+    /// leave the GPU (artifact engines have no CPU form). Pinned riders
+    /// still anchor the fused window, so their presence correctly
+    /// cheapens everyone else's marginal GPU cost.
+    pub fn route_pinned(
+        &mut self,
+        fronts: &[(usize, u64)],
+        pins: &[bool],
+    ) -> Vec<EngineKind> {
+        debug_assert_eq!(fronts.len(), pins.len());
+        let mut kinds = match self.mode {
+            EngineMode::Cpu => vec![EngineKind::Cpu; fronts.len()],
+            EngineMode::Gpu => vec![EngineKind::Gpu; fronts.len()],
+            EngineMode::Auto => self.route_auto(fronts, pins),
+        };
+        for (i, k) in kinds.iter_mut().enumerate() {
+            if pins.get(i).copied().unwrap_or(false) {
+                *k = EngineKind::Gpu;
+            }
+        }
+        for (&(job, _), &k) in fronts.iter().zip(&kinds) {
+            self.last.insert(job, k);
+        }
+        kinds
+    }
+
+    fn route_auto(&self, fronts: &[(usize, u64)], pins: &[bool]) -> Vec<EngineKind> {
+        let plan = self.greedy_plan(fronts, pins, true);
+        // Hysteresis may hold a tenant on a side that has drifted past
+        // the crossover — fine inside the never-worse envelope, but the
+        // auto contract is that an auto epoch never models worse than
+        // the all-GPU window. If the held plan breaks that, drop the
+        // history and take the pure greedy plan, whose moves are each
+        // strictly improving from the all-GPU start.
+        let pure = self.plan_cost(fronts, &vec![EngineKind::Gpu; fronts.len()]);
+        if self.plan_cost(fronts, &plan) > pure + 1e-9 {
+            return self.greedy_plan(fronts, pins, false);
+        }
+        plan
+    }
+
+    /// Modeled device cost of a routing plan: per-rider CPU epochs plus
+    /// one fused GPU window over the riders left on it.
+    fn plan_cost(&self, fronts: &[(usize, u64)], kinds: &[EngineKind]) -> f64 {
+        let mut cost = 0.0;
+        let mut gpu_lives: Vec<u64> = Vec::new();
+        for (&(_, live), &k) in fronts.iter().zip(kinds) {
+            match k {
+                EngineKind::Cpu => cost += self.cpu.epoch_us(live),
+                EngineKind::Gpu => gpu_lives.push(live),
+            }
+        }
+        if !gpu_lives.is_empty() {
+            cost += self.gpu.fused_epoch_us(&gpu_lives);
+        }
+        cost
+    }
+
+    fn greedy_plan(
+        &self,
+        fronts: &[(usize, u64)],
+        pins: &[bool],
+        with_history: bool,
+    ) -> Vec<EngineKind> {
+        let mut kinds = vec![EngineKind::Gpu; fronts.len()];
+        // current GPU residents, narrowest first (stable by job key);
+        // pinned riders never leave
+        let mut order: Vec<usize> = (0..fronts.len())
+            .filter(|&i| !pins.get(i).copied().unwrap_or(false))
+            .collect();
+        order.sort_by_key(|&i| (fronts[i].1, fronts[i].0));
+        let mut on_gpu: Vec<bool> = vec![true; fronts.len()];
+        let gpu_cost = |on: &[bool]| -> f64 {
+            let lives: Vec<u64> = fronts
+                .iter()
+                .zip(on)
+                .filter(|(_, &g)| g)
+                .map(|(&(_, l), _)| l)
+                .collect();
+            if lives.is_empty() {
+                0.0
+            } else {
+                self.gpu.fused_epoch_us(&lives)
+            }
+        };
+        for &i in &order {
+            let (job, live) = fronts[i];
+            let with = gpu_cost(&on_gpu);
+            on_gpu[i] = false;
+            let without = gpu_cost(&on_gpu);
+            let delta = (with - without).max(0.0);
+            let cpu_us = self.cpu.epoch_us(live);
+            let prev = if with_history { self.last.get(&job) } else { None };
+            let to_cpu = match prev {
+                // flip only when the other side wins by the margin
+                Some(EngineKind::Cpu) => cpu_us <= delta * self.margin,
+                Some(EngineKind::Gpu) => cpu_us * self.margin < delta,
+                // no history: better side outright, GPU on a tie
+                None => cpu_us < delta,
+            };
+            if to_cpu {
+                kinds[i] = EngineKind::Cpu; // stays off the GPU window
+            } else {
+                on_gpu[i] = true;
+            }
+        }
+        // Bulk fallback: in an all-narrow window no single rider's
+        // departure shrinks the one shared wave (every marginal is ~0),
+        // yet moving the *whole* set to the CPU sheds the launch
+        // entirely. Take it when the CPU sum wins (by the margin, if
+        // any affected rider is settled on the GPU). A pinned rider
+        // anchors the launch for good, so the bulk move can't shed it
+        // and is never worth taking.
+        let remaining: Vec<usize> =
+            (0..fronts.len()).filter(|&i| on_gpu[i]).collect();
+        let any_pinned =
+            remaining.iter().any(|&i| pins.get(i).copied().unwrap_or(false));
+        if !remaining.is_empty() && !any_pinned {
+            let fused = gpu_cost(&on_gpu);
+            let sum_cpu: f64 = remaining
+                .iter()
+                .map(|&i| self.cpu.epoch_us(fronts[i].1))
+                .sum();
+            let settled_gpu = with_history
+                && remaining.iter().any(|&i| {
+                    self.last.get(&fronts[i].0) == Some(&EngineKind::Gpu)
+                });
+            let wins = if settled_gpu {
+                sum_cpu * self.margin < fused
+            } else {
+                sum_cpu < fused
+            };
+            if wins {
+                for &i in &remaining {
+                    kinds[i] = EngineKind::Cpu;
+                }
+            }
+        }
+        kinds
+    }
+
+    /// Forget a retired tenant (completion, cancellation, eviction) so
+    /// a re-admission under the same key starts with no history.
+    pub fn retire(&mut self, job: usize) {
+        self.last.remove(&job);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn router(mode: EngineMode) -> Router {
+        Router::new(mode, DEFAULT_MARGIN, CpuModel::default(), GpuModel::default())
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for (s, m) in [
+            ("cpu", EngineMode::Cpu),
+            ("gpu", EngineMode::Gpu),
+            ("auto", EngineMode::Auto),
+        ] {
+            assert_eq!(EngineMode::parse(s).unwrap(), m);
+            assert_eq!(m.name(), s);
+        }
+        assert!(EngineMode::parse("tpu").unwrap_err().contains("cpu|gpu|auto"));
+        assert!(parse_crossover("1.0").unwrap() == 1.0);
+        assert!(parse_crossover("2.5").unwrap() == 2.5);
+        for bad in ["0.5", "-1", "nan", "inf", "fast", ""] {
+            assert!(parse_crossover(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn forced_modes_ignore_width() {
+        let fronts = [(0usize, 1u64), (1, 100_000)];
+        assert_eq!(
+            router(EngineMode::Cpu).route(&fronts),
+            vec![EngineKind::Cpu, EngineKind::Cpu]
+        );
+        assert_eq!(
+            router(EngineMode::Gpu).route(&fronts),
+            vec![EngineKind::Gpu, EngineKind::Gpu]
+        );
+    }
+
+    #[test]
+    fn auto_routes_narrow_to_cpu_wide_to_gpu() {
+        let mut r = router(EngineMode::Auto);
+        let kinds = r.route(&[(0, 4), (1, 8192)]);
+        assert_eq!(kinds, vec![EngineKind::Cpu, EngineKind::Gpu]);
+        // a lone wide front stays on the GPU
+        let kinds = r.route(&[(1, 8192)]);
+        assert_eq!(kinds, vec![EngineKind::Gpu]);
+        // a lone narrow front still flips (its marginal cost is the
+        // whole launch)
+        let kinds = r.route(&[(2, 4)]);
+        assert_eq!(kinds, vec![EngineKind::Cpu]);
+    }
+
+    #[test]
+    fn auto_never_models_worse_than_pure_gpu() {
+        // fresh router per window (no hysteresis history): the greedy
+        // peel must never exceed the all-GPU fused cost — including the
+        // mixed window that breaks per-rider solo comparison
+        let gpu = GpuModel::default();
+        let cpu = CpuModel::default();
+        let mixes: [&[u64]; 5] = [
+            &[4000, 100, 100, 100, 100],
+            &[1, 1, 1, 1],
+            &[4096, 4096],
+            &[16, 512, 33, 8000, 2],
+            &[160, 161],
+        ];
+        for lives in mixes {
+            let fronts: Vec<(usize, u64)> =
+                lives.iter().copied().enumerate().collect();
+            let kinds = router(EngineMode::Auto).route(&fronts);
+            let gpu_lives: Vec<u64> = lives
+                .iter()
+                .zip(&kinds)
+                .filter(|(_, &k)| k == EngineKind::Gpu)
+                .map(|(&l, _)| l)
+                .collect();
+            let mut auto_us: f64 = lives
+                .iter()
+                .zip(&kinds)
+                .filter(|(_, &k)| k == EngineKind::Cpu)
+                .map(|(&l, _)| cpu.epoch_us(l))
+                .sum();
+            if !gpu_lives.is_empty() {
+                auto_us += gpu.fused_epoch_us(&gpu_lives);
+            }
+            let pure = gpu.fused_epoch_us(lives);
+            assert!(
+                auto_us <= pure + 1e-9,
+                "{lives:?}: auto {auto_us} > gpu {pure}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_narrow_window_flips_wholesale() {
+        // four 1-lane riders share one wave: every per-rider marginal
+        // is 0, but the bulk move sheds the whole launch
+        let mut r = router(EngineMode::Auto);
+        let kinds = r.route(&[(0, 1), (1, 1), (2, 1), (3, 1)]);
+        assert_eq!(kinds, vec![EngineKind::Cpu; 4]);
+        // a wide rider anchors the window: it stays, the narrows peel
+        let mut r = router(EngineMode::Auto);
+        let kinds = r.route(&[(0, 1), (1, 1), (2, 8192)]);
+        assert_eq!(
+            kinds,
+            vec![EngineKind::Cpu, EngineKind::Cpu, EngineKind::Gpu]
+        );
+    }
+
+    #[test]
+    fn hysteresis_holds_routes_inside_the_never_worse_envelope() {
+        let mut r = router(EngineMode::Auto);
+        // establish a GPU route with a decisively wide front
+        assert_eq!(r.route(&[(0, 4096)]), vec![EngineKind::Gpu]);
+        // dip just below the break-even point: fresh routing would flip
+        // to CPU (10.1µs < 11.1µs), but not by the 1.25× margin — held
+        assert_eq!(
+            r.route(&[(0, 140)]),
+            vec![EngineKind::Gpu],
+            "held inside the margin band"
+        );
+        assert_eq!(
+            router(EngineMode::Auto).route(&[(0, 140)]),
+            vec![EngineKind::Cpu],
+            "a fresh router does flip at this width"
+        );
+        // a decisive narrowing flips it
+        assert_eq!(r.route(&[(0, 4)]), vec![EngineKind::Cpu]);
+        // the CPU hold is bounded by the never-worse envelope: past the
+        // crossover, holding CPU would model worse than the all-GPU
+        // window, so the history is dropped for the epoch
+        assert_eq!(r.route(&[(0, 176)]), vec![EngineKind::Gpu]);
+        // retire clears history: routing is by cost alone again
+        r.retire(0);
+        assert_eq!(r.route(&[(0, 140)]), vec![EngineKind::Cpu]);
+    }
+
+    #[test]
+    fn pinned_riders_never_leave_the_gpu() {
+        // forced-cpu mode still can't move a pinned (artifact) rider
+        let mut r = router(EngineMode::Cpu);
+        assert_eq!(
+            r.route_pinned(&[(0, 4), (1, 4)], &[false, true]),
+            vec![EngineKind::Cpu, EngineKind::Gpu]
+        );
+        // auto: an all-narrow window would flip wholesale, but a pinned
+        // rider anchors the launch — nobody gains by leaving
+        let mut r = router(EngineMode::Auto);
+        assert_eq!(
+            r.route_pinned(&[(0, 1), (1, 1), (2, 1)], &[false, false, true]),
+            vec![EngineKind::Gpu; 3]
+        );
+        // a pinned wide rider still lets true narrows peel per-rider
+        let mut r = router(EngineMode::Auto);
+        assert_eq!(
+            r.route_pinned(&[(0, 4), (1, 8192)], &[false, true]),
+            vec![EngineKind::Cpu, EngineKind::Gpu]
+        );
+    }
+}

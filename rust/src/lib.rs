@@ -61,9 +61,17 @@
 //! * [`tvm`] — the §4 Task Vector Machine as a sequential reference
 //!   interpreter: the correctness oracle and the `T_1` (work) meter;
 //!   also home of the TMS-compression update every driver shares.
+//! * [`hybrid`] — hybrid CPU/GPU execution: the deterministic
+//!   [`hybrid::CpuModel`] mirroring [`simt::GpuModel`]'s accounting,
+//!   the per-tenant per-epoch crossover [`hybrid::Router`]
+//!   (`--engine cpu|gpu|auto`, marginal-cost greedy with hysteresis),
+//!   and the cilk-pool execution bridge behind `sched`'s CPU engine —
+//!   work-first below the crossover, work-together above.
 //! * [`apps`] — the task-parallel applications of the evaluation.
 //! * [`cilk`] — a from-scratch work-first work-stealing runtime
-//!   (Chase–Lev deques): the paper's Cilk baseline.
+//!   (Chase–Lev deques): originally the paper's Cilk baseline, now
+//!   also the production engine behind [`hybrid`] — CPU-routed epochs
+//!   execute their live fronts fork-join on its shared pool.
 //! * [`baselines`] — hand-coded comparators: sequential, worklist
 //!   BFS/SSSP (LonestarGPU-style), native bitonic sort.
 //! * [`graph`] — CSR graphs and generators (RMAT, grid, uniform).
@@ -80,6 +88,7 @@ pub mod cilk;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;
+pub mod hybrid;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;

@@ -37,6 +37,7 @@ use trees::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use trees::graph::{gen, Csr};
 use trees::runtime::{load_manifest, Device};
 use trees::fault::FaultPlan;
+use trees::hybrid::{parse_crossover, EngineMode};
 use trees::sched::{
     modeled_fused_us, modeled_solo_us, solo_profile, Fairness, Fuser, JobSpec,
     SchedConfig,
@@ -65,6 +66,7 @@ USAGE:
               [--devices N] [--placement round-robin|least-loaded|affinity]
               [--skew T] [--no-rebalance] [--fault-plan <plan>]
               [--rebalance-mode skew|critical-path] [--window W] [--trace]
+              [--engine cpu|gpu|auto] [--crossover F]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
   trees trace [serve options] — serve the feed silently and stream
               flight-recorder NDJSON records to stdout: one `epoch`
@@ -117,6 +119,16 @@ critical path to, instead of the most-live-lanes tenant. serve --trace
 mirrors the trace subcommand's NDJSON stream onto stderr, keeping the
 human-readable service log on stdout.
 
+--engine cpu|gpu|auto (serve, batch, trace) picks the execution
+engine: gpu (default) runs every epoch through the fused-launch GPU
+model, cpu runs epochs lane-parallel on the cilk work-stealing pool,
+auto routes each tenant per epoch by the front-width crossover — a
+narrow front is launch-bound on the GPU and moves to the pool, a wide
+front amortizes the launch and stays fused. --crossover F (default
+1.25) is the hysteresis margin: the losing engine must win by F
+before a routed tenant flips. Routing never changes results, only
+where an epoch executes.
+
 --fault-plan injects deterministic device faults at group-epoch
 boundaries: comma-separated die:D@E (device D dies before group epoch
 E) and flaky:D@E[:xK] (transient launch failure, K failures, bounded
@@ -141,7 +153,7 @@ fn real_main() -> Result<()> {
             "capacity", "slice-cap", "max-active", "max-live-lanes",
             "copies", "fairness", "devices", "placement", "skew",
             "spec-file", "fault-plan", "rebalance-mode", "window",
-            "invariants", "file", "top", "html",
+            "invariants", "file", "top", "html", "engine", "crossover",
         ],
         &["trace", "verbose", "help", "no-rebalance"],
     )
@@ -338,6 +350,12 @@ fn sched_config(args: &Args) -> Result<SchedConfig> {
         "weighted" | "w" => Fairness::Weighted,
         other => bail!("unknown fairness policy {other:?} (round-robin | weighted)"),
     };
+    let engine = EngineMode::parse(&args.str_or("engine", d.engine.name()))
+        .map_err(anyhow::Error::msg)?;
+    let crossover = match args.get("crossover") {
+        Some(s) => parse_crossover(s).map_err(anyhow::Error::msg)?,
+        None => d.crossover,
+    };
     Ok(SchedConfig {
         capacity: args.usize_or("capacity", d.capacity).map_err(anyhow::Error::msg)?,
         slice_cap: args.usize_or("slice-cap", d.slice_cap).map_err(anyhow::Error::msg)?,
@@ -348,6 +366,8 @@ fn sched_config(args: &Args) -> Result<SchedConfig> {
             .usize_or("max-live-lanes", d.max_live_lanes)
             .map_err(anyhow::Error::msg)?,
         fairness,
+        engine,
+        crossover,
         ..d
     })
 }
@@ -460,11 +480,22 @@ fn serve(args: &Args) -> Result<()> {
         builder = builder.trace_sink(trace_window(args)?, |_| {});
     }
     builder = builder.invariants(inv);
-    if devices == 1 && fault.is_none() && !trace && !inv.enabled() {
+    let engine = EngineMode::parse(
+        &args.str_or("engine", EngineMode::Gpu.name()),
+    )
+    .map_err(anyhow::Error::msg)?;
+    if devices == 1
+        && fault.is_none()
+        && !trace
+        && !inv.enabled()
+        && engine == EngineMode::Gpu
+    {
         // sharded serving stays on per-device interpreter engines
         // (per-app artifacts are single-device; the group model is
         // what's under study there — a fault plan or trace sink
-        // forces the sharded backend even for one device)
+        // forces the sharded backend even for one device, and cpu /
+        // auto engines need interp-style tenants the router can
+        // rehome onto the cilk pool, which AOT artifacts are not)
         let art = trees::runtime::try_artifacts()
             .and_then(|(manifest, dir)| Ok((Device::cpu()?, manifest, dir)));
         match art {

@@ -117,13 +117,29 @@ impl Registry {
     }
 
     /// Fold one epoch record: epoch/launch/migration/evacuation/retry
-    /// counters, per-device busy time, and the utilization + idle
-    /// gauges (device busy over cumulative group time so far).
+    /// counters, the per-engine epoch counters and µs gauges (from the
+    /// record's `eng` decomposition), per-device busy time, and the
+    /// utilization + idle gauges (device busy over cumulative group
+    /// time so far).
     pub fn observe_epoch(&mut self, r: &EpochRecord) {
         self.inc("epochs", 1);
         self.inc("launches", r.launches);
         self.inc("migrations", r.migrations as u64);
         self.inc("retries", r.retries);
+        if r.eng.cpu_us > 0.0 {
+            self.inc("engine_cpu_epochs", 1);
+        }
+        if r.eng.gpu_us > 0.0 {
+            self.inc("engine_gpu_epochs", 1);
+        }
+        self.set_gauge(
+            "engine_cpu_us",
+            self.gauge("engine_cpu_us").unwrap_or(0.0) + r.eng.cpu_us,
+        );
+        self.set_gauge(
+            "engine_gpu_us",
+            self.gauge("engine_gpu_us").unwrap_or(0.0) + r.eng.gpu_us,
+        );
         for ev in &r.evacuations {
             match ev.to {
                 Some(_) => self.inc("evacuations", 1),
@@ -240,6 +256,44 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn epoch_feeding_splits_engine_counters() {
+        use crate::trace::{EngRef, EpochRecord};
+        let mut r = Registry::new();
+        let mk = |epoch: u64, cpu: f64, gpu: f64, cum: f64| EpochRecord {
+            epoch,
+            cost_us: cpu + gpu,
+            cum_us: cum,
+            barrier_us: 0.0,
+            backoff_us: 0.0,
+            idle_frac: 0.0,
+            imbalance: 1.0,
+            alive: 1,
+            launches: 1,
+            launches_saved: 0.0,
+            live_lanes: 4,
+            pending: 0,
+            retries: 0,
+            dev_us: vec![cpu + gpu],
+            dev_lanes: vec![4],
+            eng: EngRef {
+                cpu_us: cpu,
+                gpu_us: gpu,
+                modes: vec!["auto".into()],
+            },
+            straggler: None,
+            critical: None,
+            migrations: 0,
+            evacuations: Vec::new(),
+        };
+        r.observe_epoch(&mk(1, 2.5, 0.0, 2.5));
+        r.observe_epoch(&mk(2, 1.5, 11.0, 15.0));
+        assert_eq!(r.counter("engine_cpu_epochs"), 2);
+        assert_eq!(r.counter("engine_gpu_epochs"), 1);
+        assert!((r.gauge("engine_cpu_us").unwrap() - 4.0).abs() < 1e-9);
+        assert!((r.gauge("engine_gpu_us").unwrap() - 11.0).abs() < 1e-9);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! tenant simultaneously (the regime where Atos-style persistent
 //! scheduling and resident runtimes win).
 //!
-//! Two execution engines sit behind one scheduler:
+//! Three execution engines sit behind one scheduler:
 //!
 //! * **Interp** (always available): the tenant's lanes execute through
 //!   the reference TVM interpreter. Semantically this *is* the linked
@@ -28,6 +28,21 @@
 //!   kernel; set [`SchedConfig::fused_kernel`] to `false` so launch
 //!   accounting stays per-tenant and only the epoch synchronization is
 //!   shared.
+//! * **Cpu** ([`crate::hybrid`]): the tenant's epochs execute
+//!   fork-join on the cilk work-stealing pool — the paper's
+//!   work-first side, for launch-bound narrow fronts. Epoch
+//!   boundaries (and therefore results) are unchanged; only the
+//!   executor and the cost accounting differ.
+//!
+//! [`SchedConfig::engine`] picks the routing policy per scheduler
+//! (one scheduler = one device in a [`crate::shard`] group):
+//! `Gpu` is the pre-hybrid behavior, `Cpu` runs every epoch on the
+//! pool, and `Auto` routes each rider's epoch through the
+//! [`Router`]'s front-width crossover (with hysteresis via
+//! [`SchedConfig::crossover`]). [`Engine::rehome`] converts
+//! interp-style engines at the [`FusedScheduler::admit_tenant`] seam,
+//! so admission, migration, and fault evacuation all land tenants on
+//! the right engine for their device automatically.
 //!
 //! Per-job results are bit-identical to solo runs by construction: the
 //! scheduler never touches tenant state, it only decides *when* each
@@ -52,8 +67,8 @@ pub use job::{AppKind, JobBuild, JobId, JobInit, JobLimits, JobSpec, Spin};
 pub(crate) use job::split_tokens;
 pub use policy::{Fairness, RoundRobin, Weighted};
 pub use stats::{
-    modeled_fused_us, modeled_solo_us, solo_profile, FusedStats, JobStats,
-    SoloProfile, StepTrace,
+    dev_step_us, engine_split_us, modeled_fused_us, modeled_solo_us,
+    solo_profile, FusedStats, JobStats, SoloProfile, StepTrace,
 };
 
 use policy::Policy;
@@ -65,6 +80,8 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, GatherFn, RunCtx, TvState, Workload};
 use crate::fault::Outcome;
+use crate::hybrid::{self, CpuModel, EngineKind, EngineMode, Router};
+use crate::simt::GpuModel;
 use crate::tvm::{Machine, TvmProgram};
 
 /// Scheduler tunables.
@@ -101,6 +118,13 @@ pub struct SchedConfig {
     /// `Weighted` (per-tenant weight multiplies the slice cap —
     /// latency tiers, see [`Weighted`]).
     pub fairness: Fairness,
+    /// Engine routing for this scheduler (= this device): all-GPU
+    /// (default, the pre-hybrid behavior), all-CPU, or per-epoch
+    /// crossover routing (see [`crate::hybrid::Router`]).
+    pub engine: EngineMode,
+    /// Hysteresis margin for `Auto` routing (≥ 1): how decisively the
+    /// other engine must win before a routed tenant flips.
+    pub crossover: f64,
 }
 
 impl Default for SchedConfig {
@@ -115,6 +139,8 @@ impl Default for SchedConfig {
             fused_kernel: true,
             trace: false,
             fairness: Fairness::RoundRobin,
+            engine: EngineMode::Gpu,
+            crossover: hybrid::DEFAULT_MARGIN,
         }
     }
 }
@@ -129,6 +155,11 @@ impl Default for SchedConfig {
 pub enum Engine {
     /// Pure-Rust vectorized fallback over the reference interpreter.
     Interp(Machine),
+    /// Hybrid CPU engine: the same machine, but epochs execute their
+    /// live fronts fork-join on the cilk pool
+    /// ([`crate::hybrid::step_machine`]) — bit-identical results, CPU
+    /// cost accounting.
+    Cpu(Machine),
     /// AOT path: epochs run through the tenant's coordinator buckets.
     Artifact {
         co: Arc<Coordinator>,
@@ -142,7 +173,7 @@ impl Engine {
     /// The tenant's next epoch `(cen, lo, hi)`, if any.
     pub fn front(&self) -> Option<(i32, usize, usize)> {
         match self {
-            Engine::Interp(m) => m.front(),
+            Engine::Interp(m) | Engine::Cpu(m) => m.front(),
             Engine::Artifact { st, .. } => {
                 match (st.join_stack.last(), st.ndrange_stack.last()) {
                     (Some(&cen), Some(&(lo, hi))) => Some((cen, lo, hi)),
@@ -159,7 +190,7 @@ impl Engine {
     /// The tenant's `code[lo..hi]` window.
     pub fn codes(&self, lo: usize, hi: usize) -> &[i32] {
         match self {
-            Engine::Interp(m) => &m.code[lo..hi],
+            Engine::Interp(m) | Engine::Cpu(m) => &m.code[lo..hi],
             Engine::Artifact { st, .. } => &st.code[lo..hi],
         }
     }
@@ -167,7 +198,7 @@ impl Engine {
     /// Live lanes of `[lo, hi)` at epoch `cen`.
     pub fn live_in(&self, cen: i32, lo: usize, hi: usize) -> u64 {
         match self {
-            Engine::Interp(m) => m.live_in(cen, lo, hi),
+            Engine::Interp(m) | Engine::Cpu(m) => m.live_in(cen, lo, hi),
             Engine::Artifact { co, st, .. } => {
                 let t = co.app.t as i32;
                 st.code[lo..hi]
@@ -182,14 +213,53 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         match self {
             Engine::Interp(m) => Ok(m.step()),
+            Engine::Cpu(m) => Ok(hybrid::step_machine(m)),
             Engine::Artifact { co, st, gather, rc } => co.step(st, *gather, rc),
+        }
+    }
+
+    /// Execute the tenant's next epoch where the router said: an
+    /// interp machine runs this one epoch on the cilk pool when routed
+    /// [`EngineKind::Cpu`] (mid-run rerouting — the machine itself
+    /// never changes); the dedicated engines ignore the hint.
+    pub fn step_on(&mut self, route: EngineKind) -> Result<bool> {
+        match self {
+            Engine::Interp(m) => match route {
+                EngineKind::Cpu => Ok(hybrid::step_machine(m)),
+                EngineKind::Gpu => Ok(m.step()),
+            },
+            Engine::Cpu(m) => Ok(hybrid::step_machine(m)),
+            Engine::Artifact { co, st, gather, rc } => co.step(st, *gather, rc),
+        }
+    }
+
+    /// Whether this engine can execute epochs on the cilk pool (the
+    /// artifact engine cannot: its epochs are AOT kernel launches, so
+    /// the router pins it to the GPU).
+    pub fn cpu_capable(&self) -> bool {
+        matches!(self, Engine::Interp(_) | Engine::Cpu(_))
+    }
+
+    /// Convert this engine to the variant its (new) device wants — the
+    /// one seam every admission path flows through
+    /// ([`FusedScheduler::admit_tenant`]), so migration and fault
+    /// evacuation onto a CPU device transparently rehome the tenant.
+    /// Machine state is moved, never touched; the artifact engine has
+    /// no CPU form and is left alone.
+    pub fn rehome(self, mode: EngineMode) -> Engine {
+        match (self, mode) {
+            (Engine::Interp(m), EngineMode::Cpu) => Engine::Cpu(m),
+            (Engine::Cpu(m), EngineMode::Gpu | EngineMode::Auto) => {
+                Engine::Interp(m)
+            }
+            (e, _) => e,
         }
     }
 
     /// Epochs this tenant has executed.
     pub fn epochs(&self) -> u64 {
         match self {
-            Engine::Interp(m) => m.stats.epochs,
+            Engine::Interp(m) | Engine::Cpu(m) => m.stats.epochs,
             Engine::Artifact { rc, .. } => rc.stats().epochs,
         }
     }
@@ -197,35 +267,35 @@ impl Engine {
     /// Tasks this tenant has executed (work T1).
     pub fn work(&self) -> u64 {
         match self {
-            Engine::Interp(m) => m.stats.work,
+            Engine::Interp(m) | Engine::Cpu(m) => m.stats.work,
             Engine::Artifact { rc, .. } => rc.stats().work,
         }
     }
 
     pub fn root_result(&self) -> i32 {
         match self {
-            Engine::Interp(m) => m.root_result(),
+            Engine::Interp(m) | Engine::Cpu(m) => m.root_result(),
             Engine::Artifact { st, .. } => st.root_result(),
         }
     }
 
     pub fn res(&self) -> &[i32] {
         match self {
-            Engine::Interp(m) => &m.res,
+            Engine::Interp(m) | Engine::Cpu(m) => &m.res,
             Engine::Artifact { st, .. } => &st.res,
         }
     }
 
     pub fn heap_i(&self) -> &[i32] {
         match self {
-            Engine::Interp(m) => &m.heap_i,
+            Engine::Interp(m) | Engine::Cpu(m) => &m.heap_i,
             Engine::Artifact { st, .. } => &st.heap_i,
         }
     }
 
     pub fn heap_f(&self) -> &[f32] {
         match self {
-            Engine::Interp(m) => &m.heap_f,
+            Engine::Interp(m) | Engine::Cpu(m) => &m.heap_f,
             Engine::Artifact { st, .. } => &st.heap_f,
         }
     }
@@ -234,7 +304,7 @@ impl Engine {
     /// take `&Machine`).
     pub fn machine(&self) -> Option<&Machine> {
         match self {
-            Engine::Interp(m) => Some(m),
+            Engine::Interp(m) | Engine::Cpu(m) => Some(m),
             Engine::Artifact { .. } => None,
         }
     }
@@ -355,6 +425,10 @@ pub struct FusedScheduler {
     /// accumulation in `FusedStats::trace`) — the shard group reads it
     /// every boundary to feed the trace-guided rebalancer.
     last_step: Option<StepTrace>,
+    /// Per-epoch CPU/GPU crossover routing (see [`crate::hybrid`]).
+    /// Under `EngineMode::Cpu`/`Gpu` it degenerates to a constant; its
+    /// per-tenant hysteresis history is cleared as tenants leave.
+    router: Router,
 }
 
 impl FusedScheduler {
@@ -365,6 +439,12 @@ impl FusedScheduler {
         let cfg = SchedConfig { max_active: cfg.max_active.max(1), ..cfg };
         let fuser = Fuser::new(cfg.buckets.clone());
         let policy = Policy::new(cfg.fairness, cfg.capacity, cfg.slice_cap);
+        let router = Router::new(
+            cfg.engine,
+            cfg.crossover,
+            CpuModel::default(),
+            GpuModel::default(),
+        );
         FusedScheduler {
             cfg,
             fuser,
@@ -376,6 +456,7 @@ impl FusedScheduler {
             next_id: 0,
             on_complete: None,
             last_step: None,
+            router,
         }
     }
 
@@ -484,7 +565,11 @@ impl FusedScheduler {
     /// id and accumulated stats — the re-admission half of migration.
     /// Callers that mix this with the `admit_*` constructors own the
     /// id-collision problem; the shard group assigns all ids itself.
-    pub fn admit_tenant(&mut self, t: Tenant) {
+    pub fn admit_tenant(&mut self, mut t: Tenant) {
+        // the rehome seam: admission, migration, and fault evacuation
+        // all pass through here, so a tenant landing on a CPU device
+        // (or returning to a GPU/auto one) swaps engine automatically
+        t.engine = t.engine.rehome(self.cfg.engine);
         if self.can_admit(t.live_load()) {
             self.active.push(t);
         } else {
@@ -502,10 +587,12 @@ impl FusedScheduler {
         if let Some(pos) = self.active.iter().position(|t| t.id == id) {
             let t = self.active.remove(pos);
             self.policy.retire(pos);
+            self.router.retire(id.0);
             self.admit_from_queue();
             return Some(t);
         }
         if let Some(pos) = self.pending.iter().position(|t| t.id == id) {
+            self.router.retire(id.0);
             return self.pending.remove(pos);
         }
         None
@@ -525,6 +612,9 @@ impl FusedScheduler {
         while let Some(t) = self.pending.pop_front() {
             out.push(t);
         }
+        for t in &out {
+            self.router.retire(t.id.0);
+        }
         out
     }
 
@@ -534,6 +624,7 @@ impl FusedScheduler {
     /// [`Outcome::Done`]; the fault layer (cancellation, deadlines,
     /// quarantine, evacuation dead-ends) supplies the rest.
     pub fn finish_tenant(&mut self, t: Tenant, outcome: Outcome) {
+        self.router.retire(t.id.0);
         match outcome {
             Outcome::Done => self.stats.jobs_completed += 1,
             Outcome::Cancelled => self.stats.jobs_cancelled += 1,
@@ -608,7 +699,7 @@ impl FusedScheduler {
             .collect();
         let sel = self.policy.select(&fronts);
 
-        // ---- pack the shared task vector ----
+        // ---- route riders, then pack the GPU side's task vector ----
         let views: Vec<Front> = sel
             .iter()
             .map(|&i| {
@@ -624,54 +715,96 @@ impl FusedScheduler {
                 }
             })
             .collect();
-        let frame = self.fuser.pack(&views);
+        let fronts_kv: Vec<(usize, u64)> =
+            views.iter().map(|v| (v.job.0, v.live)).collect();
+        let pins: Vec<bool> = sel
+            .iter()
+            .map(|&i| !self.active[i].engine.cpu_capable())
+            .collect();
+        let routes = self.router.route_pinned(&fronts_kv, &pins);
 
-        let launches = if self.cfg.fused_kernel {
+        // only GPU-routed riders ship lanes in the fused window;
+        // CPU-routed epochs run on the pool and pay no launch
+        let gpu_views: Vec<Front> = views
+            .iter()
+            .zip(&routes)
+            .filter(|(_, &r)| r == EngineKind::Gpu)
+            .map(|(v, _)| Front {
+                job: v.job,
+                cen: v.cen,
+                lo: v.lo,
+                hi: v.hi,
+                code: v.code,
+                live: v.live,
+            })
+            .collect();
+        let frame = self.fuser.pack(&gpu_views);
+
+        let launches = if gpu_views.is_empty() {
+            0
+        } else if self.cfg.fused_kernel {
             self.fuser.launches_for(frame.window())
         } else {
             frame.slices.iter().map(|s| self.fuser.launches_for(s.len)).sum()
         };
+        let gpu_live: u64 = gpu_views.iter().map(|v| v.live).sum();
+        let gpu_count = gpu_views.len();
+        let total_live: u64 = views.iter().map(|v| v.live).sum();
 
         self.stats.steps += 1;
         self.stats.syncs += 1;
         self.stats.launches += launches;
-        self.stats.work += frame.live;
+        self.stats.work += total_live;
         self.stats.peak_window = self.stats.peak_window.max(frame.window());
         self.stats.peak_active = self.stats.peak_active.max(self.active.len());
         let st = StepTrace {
-            live_per_job: frame.slices.iter().map(|s| s.live).collect(),
+            live_per_job: views.iter().map(|v| v.live).collect(),
             jobs: views.iter().map(|v| v.job).collect(),
             window: frame.window(),
             launches,
-            solo_launches: frame
-                .slices
+            solo_launches: views
                 .iter()
-                .map(|s| self.fuser.launches_for(s.len))
+                .map(|v| self.fuser.launches_for(v.hi - v.lo))
                 .sum(),
             pending: self.pending.len(),
+            engines: routes.clone(),
         };
         if self.cfg.trace {
             self.stats.trace.push(st.clone());
         }
         self.last_step = Some(st);
 
+        // plain copies of what the rider loop needs, so the front
+        // views' borrow of the active set can end here
+        let riders: Vec<(usize, u64, usize)> = sel
+            .iter()
+            .zip(&views)
+            .map(|(&i, v)| (i, v.live, v.hi - v.lo))
+            .collect();
+
         // ---- riders run their epoch; everyone else stalls ----
         let mut selected = vec![false; self.active.len()];
-        for (&i, s) in sel.iter().zip(&frame.slices) {
+        for ((i, live, width), route) in
+            riders.into_iter().zip(routes.iter().copied())
+        {
             selected[i] = true;
-            let solo_launches = self.fuser.launches_for(s.len);
+            let solo_launches = self.fuser.launches_for(width);
             let t = &mut self.active[i];
             t.stats.steps_ridden += 1;
             t.stats.consec_stalls = 0;
-            t.stats.lanes += s.live;
+            t.stats.lanes += live;
             t.stats.solo_syncs += 1;
             t.stats.solo_launches += solo_launches;
-            t.stats.fused_launch_share += if frame.live > 0 {
-                launches as f64 * s.live as f64 / frame.live as f64
-            } else {
-                launches as f64 / sel.len() as f64
+            // CPU-routed epochs ship no lanes, so they take no share of
+            // the fused launches — the GPU riders split all of them
+            t.stats.fused_launch_share += match route {
+                EngineKind::Cpu => 0.0,
+                EngineKind::Gpu if gpu_live > 0 => {
+                    launches as f64 * live as f64 / gpu_live as f64
+                }
+                EngineKind::Gpu => launches as f64 / gpu_count.max(1) as f64,
             };
-            let progressed = t.engine.step()?;
+            let progressed = t.engine.step_on(route)?;
             debug_assert!(progressed, "selected tenant must progress");
         }
         for (i, t) in self.active.iter_mut().enumerate() {
@@ -1073,6 +1206,99 @@ mod tests {
             sched.finished().iter().find(|f| f.id == ids[0]).unwrap();
         assert_eq!(cancelled.outcome, Outcome::Cancelled);
         assert_eq!(sched.stats().jobs_cancelled, 1);
+    }
+
+    #[test]
+    fn engine_modes_are_bit_identical_and_priced() {
+        // the router decides WHERE an epoch runs, never what it
+        // computes: per-job results, epoch counts, and work must match
+        // across all three engine modes, and the trace must price every
+        // step as exactly cpu_us + gpu_us.
+        let specs = ["fib:12", "mergesort:64", "bfs:grid:4"];
+        let mut fingerprints: Vec<Vec<(String, i32, u64, u64)>> = Vec::new();
+        for mode in [EngineMode::Gpu, EngineMode::Cpu, EngineMode::Auto] {
+            let bs = builds(&specs);
+            let cfg = SchedConfig {
+                trace: true,
+                engine: mode,
+                ..Default::default()
+            };
+            let mut sched = FusedScheduler::new(cfg);
+            for b in &bs {
+                sched.admit_build(b);
+            }
+            sched.run_to_completion().unwrap();
+            let mut fp = Vec::new();
+            for fj in sched.finished() {
+                let m = fj.engine.machine().unwrap();
+                fj.kind
+                    .as_ref()
+                    .unwrap()
+                    .verify(m)
+                    .unwrap_or_else(|e| panic!("{mode:?} {}: {e}", fj.label));
+                fp.push((
+                    fj.label.clone(),
+                    m.root_result(),
+                    m.stats.epochs,
+                    m.stats.work,
+                ));
+            }
+            fp.sort();
+            fingerprints.push(fp);
+
+            let gpu = GpuModel::default();
+            let cpu = CpuModel::default();
+            for st in &sched.stats().trace {
+                assert_eq!(st.engines.len(), st.jobs.len());
+                let (c, g) = engine_split_us(&gpu, &cpu, st);
+                let all_cpu =
+                    st.engines.iter().all(|&k| k == EngineKind::Cpu);
+                match mode {
+                    EngineMode::Cpu => {
+                        assert!(all_cpu && g == 0.0 && st.launches == 0)
+                    }
+                    EngineMode::Gpu => assert_eq!(c, 0.0),
+                    EngineMode::Auto => {
+                        assert!((c + g - dev_step_us(&gpu, &cpu, st)).abs()
+                            < 1e-9)
+                    }
+                }
+            }
+        }
+        assert_eq!(fingerprints[0], fingerprints[1], "cpu == gpu");
+        assert_eq!(fingerprints[0], fingerprints[2], "auto == gpu");
+    }
+
+    #[test]
+    fn auto_trace_never_models_worse_than_gpu_trace() {
+        // same jobs, one all-GPU run and one auto run: the modeled
+        // device total of the auto trace must not exceed the GPU one
+        // (the router's greedy-improvement guarantee, end to end)
+        let specs = ["fib:12", "fib:10", "nqueens:5"];
+        let mut totals = Vec::new();
+        for mode in [EngineMode::Gpu, EngineMode::Auto] {
+            let bs = builds(&specs);
+            let cfg = SchedConfig {
+                trace: true,
+                engine: mode,
+                ..Default::default()
+            };
+            let mut sched = FusedScheduler::new(cfg);
+            for b in &bs {
+                sched.admit_build(b);
+            }
+            sched.run_to_completion().unwrap();
+            totals.push(modeled_fused_us(
+                &GpuModel::default(),
+                &sched.stats().trace,
+            ));
+        }
+        assert!(
+            totals[1] <= totals[0] + 1e-6,
+            "auto {} > gpu {}",
+            totals[1],
+            totals[0]
+        );
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! plus the fused-run totals and the modeled-APU formulas (one source
 //! of truth shared by `bench_fusion` and EXPERIMENTS.md).
 
+use crate::hybrid::{CpuModel, EngineKind};
 use crate::simt::GpuModel;
 use crate::tvm::TvmProgram;
 
@@ -60,6 +61,10 @@ pub struct StepTrace {
     /// Tenants parked in the pending queue when this step launched
     /// (admission queue depth under backpressure).
     pub pending: usize,
+    /// Where each rider's epoch ran (parallel to `jobs`). Empty means
+    /// a legacy all-GPU trace — [`engine_split_us`] treats the two
+    /// identically, so pre-hybrid cost arithmetic is unchanged.
+    pub engines: Vec<EngineKind>,
 }
 
 /// Whole-run scheduler totals.
@@ -92,16 +97,63 @@ pub struct FusedStats {
     pub trace: Vec<StepTrace>,
 }
 
+/// Split one step's modeled device cost into `(cpu_us, gpu_us)` by
+/// rider engine — THE pricing formula every layer shares (scheduler
+/// totals, shard group steps, the trace analyzer/PAG, the
+/// `engine-cost-decomposition` invariant).
+///
+/// CPU-routed riders each pay their own [`CpuModel::epoch_us`] (every
+/// pool epoch pays its own dispatch — exactly how the router priced
+/// the move). GPU-routed riders share one fused launch:
+/// [`GpuModel::fused_epoch_us`] over their lives plus overflow tiles
+/// at full launch cost. A trace with no `engines` (pre-hybrid) is
+/// all-GPU, making this reduce *exactly* to the original
+/// `fused_epoch_us + (launches-1)·launch_us` arithmetic.
+pub fn engine_split_us(
+    gpu: &GpuModel,
+    cpu: &CpuModel,
+    s: &StepTrace,
+) -> (f64, f64) {
+    let mut cpu_us = 0.0;
+    let mut any_gpu = false;
+    let mut gpu_lives: Vec<u64> = Vec::new();
+    if s.engines.is_empty() {
+        any_gpu = !s.live_per_job.is_empty();
+        gpu_lives.extend_from_slice(&s.live_per_job);
+    } else {
+        for (k, &live) in s.engines.iter().zip(&s.live_per_job) {
+            match k {
+                EngineKind::Cpu => cpu_us += cpu.epoch_us(live),
+                EngineKind::Gpu => {
+                    any_gpu = true;
+                    gpu_lives.push(live);
+                }
+            }
+        }
+    }
+    let gpu_us = if any_gpu {
+        gpu.fused_epoch_us(&gpu_lives)
+            + s.launches.saturating_sub(1) as f64 * gpu.launch_us
+    } else {
+        0.0
+    };
+    (cpu_us, gpu_us)
+}
+
+/// One step's total modeled device cost: the two engine parts of
+/// [`engine_split_us`] summed (the quantity the group barrier waits
+/// on, and the invariant checker re-derives).
+pub fn dev_step_us(gpu: &GpuModel, cpu: &CpuModel, s: &StepTrace) -> f64 {
+    let (c, g) = engine_split_us(gpu, cpu, s);
+    c + g
+}
+
 /// Modeled APU time (µs) of the fused run: each step is one fused
-/// epoch launch (plus overflow tiles at full launch cost).
+/// epoch launch (plus overflow tiles at full launch cost); CPU-routed
+/// riders are priced through the default [`CpuModel`].
 pub fn modeled_fused_us(m: &GpuModel, trace: &[StepTrace]) -> f64 {
-    trace
-        .iter()
-        .map(|s| {
-            m.fused_epoch_us(&s.live_per_job)
-                + s.launches.saturating_sub(1) as f64 * m.launch_us
-        })
-        .sum()
+    let cpu = CpuModel::default();
+    trace.iter().map(|s| dev_step_us(m, &cpu, s)).sum()
 }
 
 /// Modeled APU time (µs) of a solo per-epoch profile.

@@ -50,6 +50,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::apps;
 use crate::coordinator::{Coordinator, CoordinatorConfig, Workload};
 use crate::fault::{FaultPlan, RetryCfg};
+use crate::hybrid::EngineMode;
 use crate::metrics::Registry;
 use crate::runtime::{AppManifest, Device, Manifest};
 use crate::sched::{
@@ -199,6 +200,7 @@ pub struct SessionBuilder {
     retry: RetryCfg,
     sink: Option<(usize, Box<dyn FnMut(&str)>)>,
     invariants: InvariantMode,
+    engines: Vec<EngineMode>,
 }
 
 impl Default for SessionBuilder {
@@ -213,6 +215,7 @@ impl Default for SessionBuilder {
             retry: RetryCfg::default(),
             sink: None,
             invariants: InvariantMode::Off,
+            engines: Vec::new(),
         }
     }
 }
@@ -259,6 +262,32 @@ impl SessionBuilder {
     /// are conveniences over this).
     pub fn sched(mut self, cfg: SchedConfig) -> Self {
         self.sched = cfg;
+        self
+    }
+
+    /// Execution engine for every device: `Gpu` (fused launches, the
+    /// default), `Cpu` (epochs run on the cilk pool), or `Auto` (the
+    /// front-width crossover router picks per tenant per epoch).
+    /// Results are bit-identical under every mode — only the modeled
+    /// cost and launch accounting change ([`crate::hybrid`]).
+    pub fn engine(mut self, m: EngineMode) -> Self {
+        self.sched.engine = m;
+        self
+    }
+
+    /// Hysteresis margin for `Auto` routing (≥ 1.0; see
+    /// [`crate::hybrid::DEFAULT_MARGIN`]): a routed tenant only flips
+    /// engine when the other side wins by this factor.
+    pub fn crossover(mut self, margin: f64) -> Self {
+        self.sched.crossover = margin;
+        self
+    }
+
+    /// Per-device engine overrides for the sharded backend (mixed
+    /// device groups): `modes[d]` pins device `d`; devices past the
+    /// end inherit the session-wide [`SessionBuilder::engine`].
+    pub fn device_engines(mut self, modes: Vec<EngineMode>) -> Self {
+        self.engines = modes;
         self
     }
 
@@ -382,6 +411,7 @@ impl SessionBuilder {
                 sched,
                 fault: self.fault,
                 retry: self.retry,
+                engines: self.engines,
             }))
         } else {
             Backend::Fused(FusedScheduler::new(sched))

@@ -124,13 +124,21 @@ impl Rebalancer {
     /// the per-device schedulers (read-only: candidate listing);
     /// `alive[d]` marks devices the fault plan has not killed — dead
     /// devices are invisible here (they hold no tenants and must never
-    /// be picked as a destination).
+    /// be picked as a destination); `speeds[d]` is the device's
+    /// relative modeled speed ([`crate::hybrid::device_speed`],
+    /// normalized so the fastest is 1.0) — skew is measured in
+    /// device-*time* (`lanes / speed`), so a slow CPU device looks
+    /// fuller than a fast GPU one with the same lanes. A uniform group
+    /// (all speeds equal) makes exactly the decisions the unweighted
+    /// planner made.
     pub fn plan(
         &mut self,
         loads: &[u64],
         devs: &[FusedScheduler],
         alive: &[bool],
+        speeds: &[f64],
     ) -> Option<Migration> {
+        let spd = |d: usize| speeds.get(d).copied().unwrap_or(1.0).max(1e-9);
         let live: Vec<usize> =
             (0..loads.len()).filter(|&d| alive.get(d).copied().unwrap_or(true)).collect();
         if !self.cfg.enabled || live.len() < 2 {
@@ -144,19 +152,20 @@ impl Rebalancer {
         if total == 0 {
             return None;
         }
+        // loads in device-time units: lanes over relative speed
+        let t = |d: usize| loads[d] as f64 / spd(d);
         let mut src = live[0];
         let mut dst = live[0];
         for &d in &live {
-            let l = loads[d];
-            if l > loads[src] {
+            if t(d) > t(src) {
                 src = d;
             }
-            if l < loads[dst] {
+            if t(d) < t(dst) {
                 dst = d;
             }
         }
-        let mean = total as f64 / live.len() as f64;
-        if (loads[src] as f64) <= mean * self.cfg.skew_threshold.max(1.0) {
+        let mean = live.iter().map(|&d| t(d)).sum::<f64>() / live.len() as f64;
+        if t(src) <= mean * self.cfg.skew_threshold.max(1.0) {
             return None;
         }
         // the destination must be able to *activate* a migrant (a
@@ -169,10 +178,16 @@ impl Rebalancer {
             // moving a device's only tenant just relocates the skew
             return None;
         }
-        // move the tenant that best evens the (src, dst) pair, and only
-        // if the gap strictly shrinks — overshooting a big tenant onto
-        // the idle device would invert the skew and oscillate
-        let gap0 = loads[src] - loads[dst];
+        // move the tenant that best evens the (src, dst) time gap, and
+        // only if the gap strictly shrinks — overshooting a big tenant
+        // onto the idle device would invert the skew and oscillate.
+        // Moving l lanes sheds l/speed(src) and adds l/speed(dst).
+        let gap0 = t(src) - t(dst);
+        let gap_after = |l: u64| {
+            ((loads[src] - l) as f64 / spd(src)
+                - (loads[dst] + l) as f64 / spd(dst))
+                .abs()
+        };
         if self.cfg.mode == RebalanceMode::CriticalPath {
             // prefer the tenant *owning* the recent critical path when
             // it lives on the overloaded device and passes the same
@@ -186,9 +201,10 @@ impl Rebalancer {
                 if let Some(&(id, l)) =
                     tenants.iter().find(|&&(id, _)| id == o.job)
                 {
-                    let fits = l > 0 && l < gap0 && l <= headroom;
-                    if fits
-                        && (loads[src] - l).abs_diff(loads[dst] + l) < gap0
+                    if l > 0
+                        && l <= loads[src]
+                        && l <= headroom
+                        && gap_after(l) < gap0
                     {
                         self.steps_since = 0;
                         return Some(Migration {
@@ -200,12 +216,12 @@ impl Rebalancer {
                 }
             }
         }
-        let mut best: Option<(JobId, u64)> = None;
+        let mut best: Option<(JobId, f64)> = None;
         for &(id, l) in &tenants {
-            if l == 0 || l >= gap0 || l > headroom {
+            if l == 0 || l > loads[src] || l > headroom {
                 continue;
             }
-            let new_gap = (loads[src] - l).abs_diff(loads[dst] + l);
+            let new_gap = gap_after(l);
             let better = match best {
                 Some((_, g)) => new_gap < g,
                 None => new_gap < gap0,
@@ -224,6 +240,9 @@ impl Rebalancer {
 mod tests {
     use super::*;
     use crate::sched::{JobSpec, SchedConfig, Tenant};
+
+    /// Uniform relative speeds: the homogeneous-group baseline.
+    const ONE: [f64; 3] = [1.0, 1.0, 1.0];
 
     fn dev_with(
         builds: &[crate::sched::JobBuild],
@@ -248,8 +267,8 @@ mod tests {
         let bs = builds(&["fib:10", "fib:10"]);
         let devs = vec![dev_with(&bs[..1], 0), dev_with(&bs[1..], 1)];
         let mut r = Rebalancer::new(RebalanceCfg::default());
-        assert_eq!(r.plan(&[100, 100], &devs, &[true, true]), None);
-        assert_eq!(r.plan(&[100, 90], &devs, &[true, true]), None, "below threshold");
+        assert_eq!(r.plan(&[100, 100], &devs, &[true, true], &ONE), None);
+        assert_eq!(r.plan(&[100, 90], &devs, &[true, true], &ONE), None, "below threshold");
     }
 
     #[test]
@@ -261,7 +280,7 @@ mod tests {
             ..Default::default()
         });
         // fresh machines: 1 live lane per tenant => loads (3, 0)
-        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew must trigger");
+        let m = r.plan(&[3, 0], &devs, &[true, true], &ONE).expect("skew must trigger");
         assert_eq!(m.from, DeviceId(0));
         assert_eq!(m.to, DeviceId(1));
     }
@@ -274,7 +293,7 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[500, 0], &devs, &[true, true]), None);
+        assert_eq!(r.plan(&[500, 0], &devs, &[true, true], &ONE), None);
     }
 
     #[test]
@@ -295,7 +314,7 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[30, 1], &devs, &[true, true]), None);
+        assert_eq!(r.plan(&[30, 1], &devs, &[true, true], &ONE), None);
     }
 
     #[test]
@@ -306,10 +325,10 @@ mod tests {
             cooldown: 2,
             ..Default::default()
         });
-        assert!(r.plan(&[3, 0], &devs, &[true, true]).is_some(), "starts eligible");
-        assert_eq!(r.plan(&[3, 0], &devs, &[true, true]), None, "cooldown 1/2");
-        assert_eq!(r.plan(&[3, 0], &devs, &[true, true]), None, "cooldown 2/2");
-        assert!(r.plan(&[3, 0], &devs, &[true, true]).is_some(), "eligible again");
+        assert!(r.plan(&[3, 0], &devs, &[true, true], &ONE).is_some(), "starts eligible");
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, true], &ONE), None, "cooldown 1/2");
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, true], &ONE), None, "cooldown 2/2");
+        assert!(r.plan(&[3, 0], &devs, &[true, true], &ONE).is_some(), "eligible again");
     }
 
     #[test]
@@ -322,13 +341,13 @@ mod tests {
         // the idle device is dead: with one live device left there is
         // no pair to balance, however skewed the loads look
         let devs = vec![dev_with(&bs, 0), dev_with(&[], 3)];
-        assert_eq!(r.plan(&[3, 0], &devs, &[true, false]), None);
+        assert_eq!(r.plan(&[3, 0], &devs, &[true, false], &ONE), None);
         // three devices, the *empty* one dead: the move must target the
         // live low-load device, never the dead slot
         let bs3 = builds(&["fib:10", "fib:10", "fib:10", "fib:10"]);
         let devs3 = vec![dev_with(&bs3[..3], 0), dev_with(&[], 3), dev_with(&bs3[3..], 4)];
         let m = r
-            .plan(&[9, 0, 1], &devs3, &[true, false, true])
+            .plan(&[9, 0, 1], &devs3, &[true, false, true], &ONE)
             .expect("live pair is still skewed");
         assert_eq!(m.from, DeviceId(0));
         assert_eq!(m.to, DeviceId(2));
@@ -342,6 +361,7 @@ mod tests {
             launches: 1,
             solo_launches: jobs.len() as u64,
             pending: 0,
+            engines: Vec::new(),
         };
         GroupStepTrace {
             per_dev: vec![Some(st(d0)), Some(st(d1))],
@@ -349,6 +369,7 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
+            engines: Vec::new(),
         }
     }
 
@@ -363,7 +384,7 @@ mod tests {
         });
         // job 1 dominates the straggler device d0 over the window
         r.observe(&gs(&[(0, 10), (1, 900), (2, 10)], &[(3, 5)]));
-        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        let m = r.plan(&[3, 0], &devs, &[true, true], &ONE).expect("skew fires");
         assert_eq!(m.job, JobId(1), "the critical-path owner moves");
         assert_eq!(m.from, DeviceId(0));
         assert_eq!(m.to, DeviceId(1));
@@ -381,7 +402,7 @@ mod tests {
         // the critical path lives on d1 — not the overloaded device —
         // so the planner takes the ordinary gap-shrinking candidate
         r.observe(&gs(&[(0, 10), (1, 10), (2, 10)], &[(3, 900)]));
-        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        let m = r.plan(&[3, 0], &devs, &[true, true], &ONE).expect("skew fires");
         assert_eq!(m.job, JobId(0), "static candidate order");
         assert_eq!(m.to, DeviceId(1));
     }
@@ -396,8 +417,27 @@ mod tests {
         });
         // same observation as the preference test: a no-op here
         r.observe(&gs(&[(0, 10), (1, 900), (2, 10)], &[(3, 5)]));
-        let m = r.plan(&[3, 0], &devs, &[true, true]).expect("skew fires");
+        let m = r.plan(&[3, 0], &devs, &[true, true], &ONE).expect("skew fires");
         assert_eq!(m.job, JobId(0), "default mode stays load-only");
+    }
+
+    #[test]
+    fn slower_devices_look_fuller_to_the_planner() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10"]);
+        let devs = vec![dev_with(&[], 0), dev_with(&bs, 1)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        // equal lane loads: a uniform group is balanced...
+        assert_eq!(r.plan(&[3, 3], &devs, &[true, true], &ONE), None);
+        // ...but the same lanes on a 4× slower device are 4× the time:
+        // the planner moves work off the slow device onto the fast one
+        let m = r
+            .plan(&[3, 3], &devs, &[true, true], &[1.0, 0.25])
+            .expect("speed skew must trigger");
+        assert_eq!(m.from, DeviceId(1));
+        assert_eq!(m.to, DeviceId(0));
     }
 
     #[test]
@@ -409,6 +449,6 @@ mod tests {
             cooldown: 0,
             ..Default::default()
         });
-        assert_eq!(r.plan(&[1000, 0], &devs, &[true, true]), None);
+        assert_eq!(r.plan(&[1000, 0], &devs, &[true, true], &ONE), None);
     }
 }

@@ -59,10 +59,12 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, Workload};
 use crate::fault::{FaultEvent, FaultKind, FaultPlan, Outcome, RetryCfg};
+use crate::hybrid::{device_speed, CpuModel, EngineMode};
 use crate::sched::{
     FinishedJob, FusedScheduler, FusedStats, JobBuild, JobId, JobLimits,
     SchedConfig, Tenant,
 };
+use crate::simt::GpuModel;
 
 /// A device's index within its group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -91,6 +93,13 @@ pub struct ShardConfig {
     pub fault: Option<FaultPlan>,
     /// Transient-launch-failure retry policy.
     pub retry: RetryCfg,
+    /// Per-device engine overrides: `engines[d]` pins device `d` to an
+    /// engine mode; devices past the end (or an empty vec) inherit
+    /// `sched.engine`. A mixed group models a real APU — some devices
+    /// run the cilk pool, some the GPU, some route per epoch — and
+    /// placement/rebalancing weigh each device's modeled speed
+    /// ([`crate::hybrid::device_speed`]).
+    pub engines: Vec<EngineMode>,
 }
 
 impl Default for ShardConfig {
@@ -102,6 +111,7 @@ impl Default for ShardConfig {
             sched: SchedConfig::default(),
             fault: None,
             retry: RetryCfg::default(),
+            engines: Vec::new(),
         }
     }
 }
@@ -132,13 +142,36 @@ pub struct ShardGroup {
     /// Retries paid by the boundary injection of the *current* step,
     /// copied into its trace entry alongside the backoff.
     retries_this_step: u64,
+    /// Engine mode per device (the resolved `ShardConfig::engines`).
+    engine_modes: Vec<EngineMode>,
+    /// Relative modeled speed per device (1.0 = fastest in the group) —
+    /// uniform groups are all-1.0, so speed weighting changes nothing.
+    speeds: Vec<f64>,
 }
 
 impl ShardGroup {
     pub fn new(cfg: ShardConfig) -> ShardGroup {
         let n = cfg.devices.max(1);
-        let devs: Vec<FusedScheduler> =
-            (0..n).map(|_| FusedScheduler::new(cfg.sched.clone())).collect();
+        let engine_modes: Vec<EngineMode> = (0..n)
+            .map(|d| cfg.engines.get(d).copied().unwrap_or(cfg.sched.engine))
+            .collect();
+        let devs: Vec<FusedScheduler> = engine_modes
+            .iter()
+            .map(|&m| {
+                FusedScheduler::new(SchedConfig {
+                    engine: m,
+                    ..cfg.sched.clone()
+                })
+            })
+            .collect();
+        let gpu = GpuModel::default();
+        let cpu = CpuModel::default();
+        let raw: Vec<f64> = engine_modes
+            .iter()
+            .map(|&m| device_speed(m, &gpu, &cpu))
+            .collect();
+        let top = raw.iter().fold(0.0_f64, |a, &b| a.max(b)).max(1e-9);
+        let speeds: Vec<f64> = raw.iter().map(|&s| (s / top).max(1e-9)).collect();
         let mut fault = cfg.fault.unwrap_or_default();
         fault.events.sort_by_key(|e| e.at_step);
         ShardGroup {
@@ -155,7 +188,21 @@ impl ShardGroup {
             retry: cfg.retry,
             backoff_this_step: 0.0,
             retries_this_step: 0,
+            engine_modes,
+            speeds,
         }
+    }
+
+    /// The engine mode device `d` runs (resolved per-device override).
+    pub fn engine_of(&self, d: usize) -> EngineMode {
+        self.engine_modes.get(d).copied().unwrap_or_default()
+    }
+
+    /// A device's live-lane load scaled by its relative speed — slower
+    /// devices look fuller, so placement and rebalancing route work
+    /// toward fast ones. Uniform groups reduce to raw lanes exactly.
+    fn weighted_load(&self, d: usize, lanes: u64) -> u64 {
+        (lanes as f64 / self.speeds[d]).round() as u64
     }
 
     pub fn devices(&self) -> usize {
@@ -181,7 +228,11 @@ impl ShardGroup {
     fn place(&mut self, app: &str) -> usize {
         let (loads, counts): (Vec<u64>, Vec<usize>) = if self.placer.needs_loads() {
             (
-                self.devs.iter().map(|d| d.live_lanes()).collect(),
+                self.devs
+                    .iter()
+                    .enumerate()
+                    .map(|(d, dev)| self.weighted_load(d, dev.live_lanes()))
+                    .collect(),
                 self.devs
                     .iter()
                     .map(|d| d.active_count() + d.pending_count())
@@ -344,7 +395,11 @@ impl ShardGroup {
     fn least_loaded_alive(&self) -> Option<usize> {
         (0..self.devs.len()).filter(|&d| self.alive[d]).min_by_key(|&d| {
             let dev = &self.devs[d];
-            (dev.live_lanes(), dev.active_count() + dev.pending_count(), d)
+            (
+                self.weighted_load(d, dev.live_lanes()),
+                dev.active_count() + dev.pending_count(),
+                d,
+            )
         })
     }
 
@@ -394,6 +449,7 @@ impl ShardGroup {
             evacuations: self.stats.evacuation_log[evac_mark..].to_vec(),
             retry_backoff_us: self.backoff_this_step,
             retries: self.retries_this_step,
+            engines: self.engine_modes.clone(),
         };
         self.balancer.observe(&gs);
         if self.trace {
@@ -408,13 +464,19 @@ impl ShardGroup {
                 self.devs.iter().map(|d| d.live_lanes()).collect();
             let live_loads: Vec<u64> = loads
                 .iter()
+                .enumerate()
                 .zip(&self.alive)
-                .filter_map(|(&l, &a)| a.then_some(l))
+                .filter_map(|((d, &l), &a)| {
+                    a.then(|| self.weighted_load(d, l))
+                })
                 .collect();
             self.stats.note_imbalance(&live_loads);
-            if let Some(m) =
-                self.balancer.plan(&loads, &self.devs, &self.alive)
-            {
+            if let Some(m) = self.balancer.plan(
+                &loads,
+                &self.devs,
+                &self.alive,
+                &self.speeds,
+            ) {
                 self.migrate(m)?;
             }
         }
@@ -559,6 +621,85 @@ mod tests {
             .iter()
             .any(|e| g.home_of(e.job) == Some(e.to));
         assert!(moved, "home_of must track the executed migrations");
+        assert_eq!(g.finished_count(), 4);
+    }
+
+    #[test]
+    fn mixed_engine_group_is_bit_identical_to_solo() {
+        let specs = ["fib:12", "mergesort:64", "fib:10", "bfs:grid:4"];
+        let bs = builds(&specs);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            engines: vec![EngineMode::Gpu, EngineMode::Cpu],
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        assert_eq!(g.engine_of(0), EngineMode::Gpu);
+        assert_eq!(g.engine_of(1), EngineMode::Cpu);
+        for b in &bs {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+        assert_eq!(g.finished_count(), 4);
+        let mut got: Vec<(String, i32)> = g
+            .finished()
+            .map(|(_, f)| (f.label.clone(), f.engine.root_result()))
+            .collect();
+        got.sort();
+
+        let mut want = Vec::new();
+        for b in &bs {
+            let mut solo = FusedScheduler::new(SchedConfig::default());
+            solo.admit_build(b);
+            solo.run_to_completion().unwrap();
+            let f = &solo.finished()[0];
+            want.push((f.label.clone(), f.engine.root_result()));
+        }
+        want.sort();
+        assert_eq!(got, want, "engine choice must never change results");
+
+        // the group trace names each member's engine mode
+        for t in &g.stats().trace {
+            assert_eq!(
+                t.engines,
+                vec![EngineMode::Gpu, EngineMode::Cpu],
+                "per-device engines ride the group trace"
+            );
+        }
+        // the CPU member's own steps carry all-CPU rider routes
+        let cpu_routed = g.stats().trace.iter().any(|t| {
+            t.per_dev[1].as_ref().is_some_and(|s| {
+                !s.engines.is_empty()
+                    && s.engines
+                        .iter()
+                        .all(|k| *k == crate::hybrid::EngineKind::Cpu)
+            })
+        });
+        assert!(cpu_routed, "device 1 must route its riders to the pool");
+    }
+
+    #[test]
+    fn slow_members_attract_less_placement_weight() {
+        // LeastLoaded with a 4x-slower device 1: equal lane counts look
+        // 4x heavier there, so admissions crowd onto device 0.
+        let bs = builds(&["fib:10", "fib:10", "fib:10", "fib:10"]);
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            engines: vec![EngineMode::Gpu, EngineMode::Cpu],
+            placement: PlacementKind::LeastLoaded,
+            ..Default::default()
+        });
+        // Cpu members model slower on these mixes -> speeds[1] < 1.0
+        assert!(g.speeds[0] > g.speeds[1]);
+        for b in &bs {
+            g.admit_build(b);
+        }
+        assert!(
+            g.stats().placed[0] > g.stats().placed[1],
+            "placement must favor the faster member: {:?}",
+            g.stats().placed
+        );
+        g.run_to_completion().unwrap();
         assert_eq!(g.finished_count(), 4);
     }
 

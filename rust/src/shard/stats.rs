@@ -3,7 +3,8 @@
 //! [`crate::simt::DeviceGroup`] — the V∞ bookkeeping of the `sched`
 //! layer extended with the cross-device barrier dimension.
 
-use crate::sched::{JobId, StepTrace};
+use crate::hybrid::EngineMode;
+use crate::sched::{dev_step_us, JobId, StepTrace};
 use crate::simt::DeviceGroup;
 
 use super::DeviceId;
@@ -13,6 +14,11 @@ use super::DeviceId;
 #[derive(Debug, Clone)]
 pub struct GroupStepTrace {
     pub per_dev: Vec<Option<StepTrace>>,
+    /// Engine mode each device member runs under (`Gpu`/`Cpu`/`Auto`),
+    /// index-aligned with `per_dev`. Empty on legacy traces — pricing
+    /// then falls back to the per-rider `engines` inside each
+    /// [`StepTrace`] (itself empty = all-GPU).
+    pub engines: Vec<EngineMode>,
     /// Devices still alive when this step ran — the barrier tree spans
     /// only these (elastic shrink after a death).
     pub alive: usize,
@@ -100,25 +106,24 @@ impl ShardStats {
     }
 }
 
-/// Modeled cost (µs) of one group step: the slowest device's fused
-/// epoch (its packed live lanes through
-/// [`crate::simt::GpuModel::fused_epoch_us`], overflow tiles at full
-/// launch cost — the same per-device formula `modeled_fused_us` uses)
-/// plus the barrier over the devices *alive at that step* (the barrier
-/// tree shrinks elastically after a death), plus any retry backoff the
-/// step paid, plus one re-launch ([`crate::simt::GpuModel::launch_us`])
-/// per tenant a survivor *received* at this boundary — a death is never
-/// free speedup (dead-ended tenants reach no survivor and cost
-/// nothing).
+/// Modeled cost (µs) of one group step: the slowest device's epoch
+/// (each device priced engine-aware through
+/// [`crate::sched::dev_step_us`] — GPU riders via
+/// [`crate::simt::GpuModel::fused_epoch_us`] with overflow tiles at
+/// full launch cost, CPU riders via
+/// [`crate::hybrid::CpuModel::epoch_us`] — the same per-device formula
+/// `modeled_fused_us` uses) plus the barrier over the devices *alive at
+/// that step* (the barrier tree shrinks elastically after a death),
+/// plus any retry backoff the step paid, plus one re-launch
+/// ([`crate::simt::GpuModel::launch_us`]) per tenant a survivor
+/// *received* at this boundary — a death is never free speedup
+/// (dead-ended tenants reach no survivor and cost nothing).
 pub fn group_step_cost_us(g: &DeviceGroup, gs: &GroupStepTrace) -> f64 {
     let dev_us: Vec<f64> = gs
         .per_dev
         .iter()
         .map(|d| match d {
-            Some(t) => {
-                g.dev.fused_epoch_us(&t.live_per_job)
-                    + t.launches.saturating_sub(1) as f64 * g.dev.launch_us
-            }
+            Some(t) => dev_step_us(&g.dev, &g.cpu, t),
             None => 0.0,
         })
         .collect();
@@ -168,6 +173,7 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            engines: Vec::new(),
         };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t(40)), Some(t(4000))],
@@ -175,9 +181,36 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
+            engines: Vec::new(),
         }];
         let want = g.dev.fused_epoch_us(&[4000]) + g.barrier_us();
         let got = modeled_group_us(&g, &trace);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn cpu_routed_steps_price_through_the_cpu_model() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        let t = StepTrace {
+            live_per_job: vec![10],
+            jobs: vec![JobId(0)],
+            window: 0,
+            launches: 0,
+            solo_launches: 1,
+            pending: 0,
+            engines: vec![crate::hybrid::EngineKind::Cpu],
+        };
+        let gs = GroupStepTrace {
+            per_dev: vec![Some(t), None],
+            alive: 2,
+            evacuations: Vec::new(),
+            retry_backoff_us: 0.0,
+            retries: 0,
+            engines: vec![EngineMode::Cpu, EngineMode::Gpu],
+        };
+        // the pool epoch, not a fused launch, plus the group barrier
+        let want = g.cpu.epoch_us(10) + g.barrier_us();
+        let got = group_step_cost_us(&g, &gs);
         assert!((got - want).abs() < 1e-9, "{got} vs {want}");
     }
 
@@ -191,6 +224,7 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            engines: Vec::new(),
         };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t), None],
@@ -198,6 +232,7 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
+            engines: Vec::new(),
         }];
         let want = g.dev.fused_epoch_us(&[10]) + g.barrier_us();
         assert!((modeled_group_us(&g, &trace) - want).abs() < 1e-9);
@@ -213,6 +248,7 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            engines: Vec::new(),
         };
         let gs = GroupStepTrace {
             per_dev: vec![Some(t), None, None, None],
@@ -220,6 +256,7 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 15.0,
             retries: 3,
+            engines: Vec::new(),
         };
         // one survivor left: the barrier tree collapses to nothing and
         // only the epoch plus the step's retry backoff remains
@@ -238,6 +275,7 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            engines: Vec::new(),
         };
         let base = GroupStepTrace {
             per_dev: vec![Some(t), None],
@@ -245,6 +283,7 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
+            engines: Vec::new(),
         };
         let quiet = group_step_cost_us(&g, &base);
         let mut received = base.clone();

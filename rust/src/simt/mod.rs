@@ -118,6 +118,11 @@ impl GpuModel {
 pub struct DeviceGroup {
     /// The per-device model (all devices identical).
     pub dev: GpuModel,
+    /// The per-device CPU-pool model, for group members running the
+    /// hybrid CPU engine (see [`crate::hybrid`]): a device's epoch
+    /// cost decomposes into a CPU part priced by this model and a GPU
+    /// part priced by `dev`.
+    pub cpu: crate::hybrid::CpuModel,
     /// Devices in the group.
     pub devices: usize,
     /// Per-hop cost of the cross-device completion barrier (µs). The
@@ -128,7 +133,12 @@ pub struct DeviceGroup {
 
 impl DeviceGroup {
     pub fn new(dev: GpuModel, devices: usize) -> DeviceGroup {
-        DeviceGroup { dev, devices: devices.max(1), barrier_hop_us: 2.0 }
+        DeviceGroup {
+            dev,
+            cpu: crate::hybrid::CpuModel::default(),
+            devices: devices.max(1),
+            barrier_hop_us: 2.0,
+        }
     }
 
     /// Whole-group barrier cost: a log2-depth signal tree; free for a

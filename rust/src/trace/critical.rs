@@ -172,8 +172,14 @@ pub struct EpochMetrics {
     /// Window critical-path owner *after* folding this epoch in.
     pub critical: Option<CriticalOwner>,
     /// Per-device modeled compute cost (µs) this epoch — 0 for a
-    /// device that idled (or is dead). Indexed by device.
+    /// device that idled (or is dead). Indexed by device. Engine-aware:
+    /// each entry is [`crate::sched::dev_step_us`].
     pub dev_us: Vec<f64>,
+    /// Modeled CPU-engine compute (µs) this epoch, Σ over devices —
+    /// the pool half of the `eng` stream key.
+    pub cpu_us: f64,
+    /// Modeled GPU-engine compute (µs) this epoch, Σ over devices.
+    pub gpu_us: f64,
 }
 
 /// Streaming per-epoch analyzer: rolls a [`CriticalWindow`] and
@@ -191,14 +197,21 @@ impl Analyzer {
 
     /// Fold one group epoch and report its metrics.
     pub fn push(&mut self, gs: &GroupStepTrace) -> EpochMetrics {
+        let mut cpu_us = 0.0;
+        let mut gpu_us = 0.0;
         let dev_us: Vec<f64> = gs
             .per_dev
             .iter()
             .map(|d| match d {
                 Some(t) => {
-                    self.g.dev.fused_epoch_us(&t.live_per_job)
-                        + t.launches.saturating_sub(1) as f64
-                            * self.g.dev.launch_us
+                    let (c, g) = crate::sched::engine_split_us(
+                        &self.g.dev,
+                        &self.g.cpu,
+                        t,
+                    );
+                    cpu_us += c;
+                    gpu_us += g;
+                    c + g
                 }
                 None => 0.0,
             })
@@ -265,6 +278,8 @@ impl Analyzer {
             straggler_us: straggler.map(|d| dev_us[d]).unwrap_or(0.0),
             critical: self.win.owner(),
             dev_us,
+            cpu_us,
+            gpu_us,
         }
     }
 }
@@ -284,6 +299,7 @@ mod tests {
             launches: 1,
             solo_launches: jobs.len() as u64,
             pending,
+            engines: Vec::new(),
         }
     }
 
@@ -294,6 +310,7 @@ mod tests {
             evacuations: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
+            engines: Vec::new(),
         }
     }
 
@@ -368,6 +385,11 @@ mod tests {
             m.critical.map(|o| (o.device, o.job)),
             Some((DeviceId(1), JobId(1)))
         );
+        // engine decomposition: legacy traces are all-GPU, and the
+        // split always reassembles the per-device total
+        assert_eq!(m.cpu_us, 0.0);
+        let total: f64 = m.dev_us.iter().sum();
+        assert!((m.cpu_us + m.gpu_us - total).abs() < 1e-9);
     }
 
     #[test]

@@ -326,6 +326,13 @@ pub struct Summary {
     pub util: Vec<f64>,
     pub launches: u64,
     pub launches_saved: f64,
+    /// Modeled pool (CPU-engine) compute µs over the run (Σ of the
+    /// records' `eng.cpu_us`).
+    pub cpu_us: f64,
+    /// Modeled fused-launch (GPU-engine) compute µs over the run.
+    pub gpu_us: f64,
+    /// Epochs that routed at least one rider to the pool.
+    pub cpu_epochs: usize,
     pub migrations: usize,
     pub evacuations: usize,
     pub evacuations_dead_end: usize,
@@ -377,6 +384,13 @@ impl Summary {
                 .last()
                 .map(|e| e.launches_saved)
                 .unwrap_or(0.0),
+            cpu_us: r.epochs.iter().map(|e| e.eng.cpu_us).sum(),
+            gpu_us: r.epochs.iter().map(|e| e.eng.gpu_us).sum(),
+            cpu_epochs: r
+                .epochs
+                .iter()
+                .filter(|e| e.eng.cpu_us > 0.0)
+                .count(),
             migrations: r.epochs.iter().map(|e| e.migrations).sum(),
             evacuations: r
                 .epochs
@@ -421,6 +435,10 @@ impl Summary {
         s.push_str(&format!(
             "launches: {} (saved {:.1})\n",
             self.launches, self.launches_saved
+        ));
+        s.push_str(&format!(
+            "engines: cpu {:.3} us ({} epoch(s)) gpu {:.3} us\n",
+            self.cpu_us, self.cpu_epochs, self.gpu_us
         ));
         s.push_str(&format!(
             "migrations: {} evacuations: {} (dead-end {}) retries: {}\n",
@@ -502,6 +520,37 @@ mod tests {
         assert_eq!(a.devices, 2);
         assert!(a.cum_us > 0.0);
         assert!(a.util.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)));
+        // a pure-GPU run still renders the per-engine breakdown line
+        assert!(text.contains("engines: cpu 0.000 us (0 epoch(s))"), "{text}");
+        assert_eq!(a.cpu_epochs, 0);
+        assert!(a.gpu_us > 0.0);
+    }
+
+    #[test]
+    fn summary_splits_engines_for_a_mixed_group() {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            engines: vec![
+                crate::hybrid::EngineMode::Gpu,
+                crate::hybrid::EngineMode::Cpu,
+            ],
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for t in ["fib:12", "mergesort:64", "fib:10"] {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        let mut ls = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| ls.push(l.to_string()));
+        let a = Summary::from_lines(&ls).unwrap();
+        assert!(a.cpu_us > 0.0, "the cpu member must bank pool time");
+        assert!(a.gpu_us > 0.0, "the gpu member must bank launch time");
+        assert!(a.cpu_epochs > 0 && a.cpu_epochs <= a.epochs);
+        assert!(a.render().contains("engines: cpu "), "{}", a.render());
     }
 
     #[test]

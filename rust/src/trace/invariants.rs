@@ -21,6 +21,9 @@
 //! |                      | tree over the devices alive at the step       |
 //! | `cost-decomposition` | `cost_us` == max(`dev_us`) + barrier +        |
 //! |                      | backoff + evacuation re-launches              |
+//! | `engine-cost-decomposition` | `eng.cpu_us` + `eng.gpu_us` == Σ       |
+//! |                      | `dev_us` (the hybrid split never invents or   |
+//! |                      | loses modeled time)                           |
 //! | `cum-consistency`    | `cum_us` == previous `cum_us` + `cost_us`     |
 //! | `alive-monotonic`    | devices never resurrect (alive non-increasing)|
 //! | `critical-owner-pag` | the critical-path owner's device appears as a |
@@ -200,6 +203,19 @@ impl Checker {
             );
         }
 
+        let dev_sum: f64 = r.dev_us.iter().sum();
+        let eng_sum = r.eng.cpu_us + r.eng.gpu_us;
+        if (eng_sum - dev_sum).abs() > TOL {
+            fail(
+                "engine-cost-decomposition",
+                format!(
+                    "eng cpu_us {} + gpu_us {} = {eng_sum} but per-device \
+                     costs sum to {dev_sum}",
+                    r.eng.cpu_us, r.eng.gpu_us
+                ),
+            );
+        }
+
         let want_cum = self.last_cum + r.cost_us;
         if (r.cum_us - want_cum).abs() > TOL {
             fail(
@@ -327,6 +343,46 @@ mod tests {
         // the replayed record also breaks the cumulative-cost chain
         assert!(
             vs.iter().any(|v| v.invariant == "cum-consistency"),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn engine_split_is_checked_and_a_corrupted_one_is_flagged() {
+        // a mixed CPU/GPU group streams a clean engine decomposition
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            engines: vec![
+                crate::hybrid::EngineMode::Gpu,
+                crate::hybrid::EngineMode::Cpu,
+            ],
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for t in ["fib:12", "mergesort:64", "fib:10"] {
+            let b = JobSpec::parse(t).unwrap().instantiate().unwrap();
+            g.admit_build(&b);
+        }
+        g.run_to_completion().unwrap();
+        let mut lines = Vec::new();
+        let mut s = Streamer::new(model(), 8);
+        s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+        let mut c = Checker::new(model(), 8);
+        for l in &lines {
+            let vs = c.check_line(l).expect("well-formed stream");
+            assert!(vs.is_empty(), "{vs:?}\n{l}");
+        }
+        // splice a wrong cpu_us into the first record: the split no
+        // longer reassembles the per-device costs
+        let l = &lines[0];
+        let i = l.find("\"cpu_us\":").unwrap() + "\"cpu_us\":".len();
+        let j = i + l[i..].find(',').unwrap();
+        let bad = format!("{}{}{}", &l[..i], "12345.0", &l[j..]);
+        let mut c2 = Checker::new(model(), 8);
+        let vs = c2.check_line(&bad).unwrap();
+        assert!(
+            vs.iter()
+                .any(|v| v.invariant == "engine-cost-decomposition"),
             "{vs:?}"
         );
     }

@@ -62,7 +62,8 @@
 //! | `critical` | object \| null | window critical-path owner: `{device, job, share, us}` |
 //! | `cum_us` | float | running Σ of `cost_us` (modeled wall time so far) |
 //! | `dev_lanes` | array | live lanes shipped per device (0 = idle/dead) |
-//! | `dev_us` | array | modeled compute µs per device (0 = idle/dead) |
+//! | `dev_us` | array | modeled compute µs per device (0 = idle/dead), engine-aware ([`crate::sched::dev_step_us`]) |
+//! | `eng` | object | engine decomposition: `{cpu_us, gpu_us, modes}` — pool vs fused-launch µs (Σ == Σ `dev_us`) and each member's configured mode |
 //! | `epoch` | int | 1-based group epoch |
 //! | `evacuations` | array | `{from, job, to}` per evacuation at this boundary (`to` null = dead end) |
 //! | `idle_frac` | float | fraction of stepping-device time idled at the barrier |
@@ -102,7 +103,7 @@ pub use inspect::{Replay, Summary};
 pub use invariants::{Checker, InvariantMode, Violation};
 pub use pag::{epoch_edges, Activity, Pag, PagEdge};
 pub use record::{
-    CriticalRef, EpochRecord, EvacRef, OutcomeRecord, Record,
+    CriticalRef, EngRef, EpochRecord, EvacRef, OutcomeRecord, Record,
     ViolationRecord,
 };
 pub use stream::Streamer;

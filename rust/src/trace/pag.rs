@@ -17,7 +17,8 @@
 //! [`crate::trace::CriticalWindow`] attribute the critical path by
 //! looking only at the straggler's compute edges.
 
-use crate::sched::JobId;
+use crate::hybrid::EngineKind;
+use crate::sched::{engine_split_us, JobId};
 use crate::shard::{DeviceId, GroupStepTrace, MigrationEvent};
 use crate::simt::DeviceGroup;
 
@@ -74,8 +75,11 @@ pub struct PagEdge {
 }
 
 /// The PAG edges of one group epoch (1-based `epoch`): per stepping
-/// device one [`Activity::Compute`] edge per rider (its live-lane
-/// share of the device's fused-epoch cost, launch overflow included)
+/// device one [`Activity::Compute`] edge per rider — a GPU-routed
+/// rider gets its live-lane share of the device's *GPU* part (fused
+/// epoch plus launch overflow), a CPU-routed rider gets its exact
+/// [`crate::hybrid::CpuModel::epoch_us`]; the rider edges still sum to
+/// the device's engine-aware [`crate::sched::dev_step_us`] —
 /// and one [`Activity::BarrierIdle`] edge (straggler wait + barrier
 /// over the devices alive at the step + retry backoff + the boundary's
 /// evacuation re-launches, so a stepping device's timeline still sums
@@ -91,10 +95,7 @@ pub fn epoch_edges(
         .per_dev
         .iter()
         .map(|d| match d {
-            Some(t) => {
-                g.dev.fused_epoch_us(&t.live_per_job)
-                    + t.launches.saturating_sub(1) as f64 * g.dev.launch_us
-            }
+            Some(t) => crate::sched::dev_step_us(&g.dev, &g.cpu, t),
             None => 0.0,
         })
         .collect();
@@ -106,14 +107,33 @@ pub fn epoch_edges(
     let mut edges = Vec::new();
     for (d, slot) in gs.per_dev.iter().enumerate() {
         let Some(t) = slot else { continue };
-        let total: u64 = t.live_per_job.iter().sum();
-        let riders = t.jobs.len().max(1) as f64;
-        for (&job, &live) in t.jobs.iter().zip(&t.live_per_job) {
-            // lane-share attribution: Σ over riders == dev_us[d]
-            let share = if total > 0 {
-                live as f64 / total as f64
-            } else {
-                1.0 / riders
+        let (_, gpu_us) = engine_split_us(&g.dev, &g.cpu, t);
+        let kind_of = |i: usize| {
+            t.engines.get(i).copied().unwrap_or(EngineKind::Gpu)
+        };
+        let gpu_total: u64 = t
+            .live_per_job
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| kind_of(i) == EngineKind::Gpu)
+            .map(|(_, &l)| l)
+            .sum();
+        let gpu_riders = (0..t.jobs.len())
+            .filter(|&i| kind_of(i) == EngineKind::Gpu)
+            .count()
+            .max(1) as f64;
+        for (i, (&job, &live)) in
+            t.jobs.iter().zip(&t.live_per_job).enumerate()
+        {
+            // engine-aware attribution: Σ over riders == dev_us[d].
+            // GPU riders split the shared fused launch by lane share;
+            // a CPU rider's pool epoch is priced exactly.
+            let weight_us = match kind_of(i) {
+                EngineKind::Cpu => g.cpu.epoch_us(live),
+                EngineKind::Gpu if gpu_total > 0 => {
+                    gpu_us * live as f64 / gpu_total as f64
+                }
+                EngineKind::Gpu => gpu_us / gpu_riders,
             };
             edges.push(PagEdge {
                 epoch,
@@ -121,7 +141,7 @@ pub fn epoch_edges(
                 activity: Activity::Compute,
                 job: Some(job),
                 to: None,
-                weight_us: dev_us[d] * share,
+                weight_us,
             });
         }
         edges.push(PagEdge {
@@ -294,6 +314,70 @@ mod tests {
             .sum();
         let want = modeled_group_us(&model, &st.trace);
         assert!((total - want).abs() < 1e-6, "{total} vs {want}");
+    }
+
+    #[test]
+    fn engine_routed_edges_split_by_engine_and_still_sum() {
+        use crate::hybrid::{EngineKind, EngineMode};
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            engines: vec![EngineMode::Gpu, EngineMode::Cpu],
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        for b in &builds(&["fib:12", "fib:11", "mergesort:64", "fib:10"]) {
+            g.admit_build(b);
+        }
+        g.run_to_completion().unwrap();
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let st = g.stats();
+        let pag =
+            Pag::from_group_trace(&model, &st.trace, &st.migration_log);
+        // the timeline invariant survives mixed engines
+        for (k, gs) in st.trace.iter().enumerate() {
+            let epoch = k as u64 + 1;
+            let want = group_step_cost_us(&model, gs);
+            for (d, slot) in gs.per_dev.iter().enumerate() {
+                if slot.is_none() {
+                    continue;
+                }
+                let got = pag.device_epoch_us(epoch, d);
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "epoch {epoch} dev {d}: {got} vs {want}"
+                );
+            }
+        }
+        // a CPU-routed rider's compute edge is its exact pool epoch
+        let mut saw_cpu_edge = false;
+        for (k, gs) in st.trace.iter().enumerate() {
+            let Some(t) = &gs.per_dev[1] else { continue };
+            for (i, (&job, &live)) in
+                t.jobs.iter().zip(&t.live_per_job).enumerate()
+            {
+                if t.engines.get(i) != Some(&EngineKind::Cpu) {
+                    continue;
+                }
+                let e = pag
+                    .edges
+                    .iter()
+                    .find(|e| {
+                        e.epoch == k as u64 + 1
+                            && e.device == DeviceId(1)
+                            && e.job == Some(job)
+                            && e.activity == Activity::Compute
+                    })
+                    .expect("every rider gets a compute edge");
+                let want = model.cpu.epoch_us(live);
+                assert!(
+                    (e.weight_us - want).abs() < 1e-9,
+                    "{} vs {want}",
+                    e.weight_us
+                );
+                saw_cpu_edge = true;
+            }
+        }
+        assert!(saw_cpu_edge, "the cpu device must route riders to the pool");
     }
 
     #[test]

@@ -21,6 +21,20 @@ pub struct CriticalRef {
     pub share: f64,
 }
 
+/// The `eng` engine-decomposition object of an epoch record: the
+/// epoch's modeled device cost split by engine, plus each device
+/// member's configured mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngRef {
+    /// Pool (cilk) compute µs, Σ over devices.
+    pub cpu_us: f64,
+    /// Fused-launch compute µs, Σ over devices.
+    pub gpu_us: f64,
+    /// Per-device engine modes (`"cpu"`/`"gpu"`/`"auto"`); empty on a
+    /// record replayed from a pre-hybrid trace entry.
+    pub modes: Vec<String>,
+}
+
 /// One evacuation as an epoch record reports it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvacRef {
@@ -51,6 +65,8 @@ pub struct EpochRecord {
     pub dev_us: Vec<f64>,
     /// Per-device live lanes shipped this epoch.
     pub dev_lanes: Vec<u64>,
+    /// Engine decomposition of the epoch's device cost.
+    pub eng: EngRef,
     pub straggler: Option<DeviceId>,
     pub critical: Option<CriticalRef>,
     pub migrations: usize,
@@ -130,6 +146,23 @@ fn parse_epoch(v: &Json) -> Result<EpochRecord, String> {
                 .ok_or("non-numeric dev_lanes entry".to_string())
         })
         .collect::<Result<_, _>>()?;
+    let e = v.req("eng").map_err(|e| e.to_string())?;
+    let modes: Vec<String> = e
+        .get("modes")
+        .and_then(Json::as_arr)
+        .ok_or("missing array key \"eng.modes\"")?
+        .iter()
+        .map(|m| {
+            m.as_str()
+                .map(str::to_string)
+                .ok_or("non-string eng mode".to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    let eng = EngRef {
+        cpu_us: num(e, "cpu_us")?,
+        gpu_us: num(e, "gpu_us")?,
+        modes,
+    };
     let straggler = match v.req("straggler").map_err(|e| e.to_string())? {
         Json::Null => None,
         s => Some(DeviceId(
@@ -184,6 +217,7 @@ fn parse_epoch(v: &Json) -> Result<EpochRecord, String> {
         retries: uint(v, "retries")?,
         dev_us,
         dev_lanes,
+        eng,
         straggler,
         critical,
         migrations,
@@ -264,6 +298,15 @@ mod tests {
                         e.live_lanes,
                         e.dev_lanes.iter().sum::<u64>(),
                         "lane conservation in record {k}"
+                    );
+                    // default group: both members run the GPU engine,
+                    // and the split reassembles the device cost
+                    assert_eq!(e.eng.modes, vec!["gpu", "gpu"]);
+                    assert_eq!(e.eng.cpu_us, 0.0);
+                    let total: f64 = e.dev_us.iter().sum();
+                    assert!(
+                        (e.eng.cpu_us + e.eng.gpu_us - total).abs() < 1e-6,
+                        "engine split must decompose dev_us in record {k}"
                     );
                 }
                 other => panic!("record {k}: {other:?}"),

@@ -139,6 +139,19 @@ impl Streamer {
                 "dev_us".into(),
                 Json::Arr(m.dev_us.iter().map(|&u| Json::Num(u)).collect()),
             );
+            let mut eng = BTreeMap::new();
+            eng.insert("cpu_us".into(), Json::Num(m.cpu_us));
+            eng.insert("gpu_us".into(), Json::Num(m.gpu_us));
+            eng.insert(
+                "modes".into(),
+                Json::Arr(
+                    gs.engines
+                        .iter()
+                        .map(|e| Json::Str(e.name().into()))
+                        .collect(),
+                ),
+            );
+            rec.insert("eng".into(), Json::Obj(eng));
             rec.insert("epoch".into(), Json::Num(epoch as f64));
             rec.insert("evacuations".into(), Json::Arr(evacuations));
             rec.insert("idle_frac".into(), Json::Num(m.idle_frac));
@@ -198,6 +211,7 @@ mod tests {
         "cum_us",
         "dev_lanes",
         "dev_us",
+        "eng",
         "epoch",
         "evacuations",
         "idle_frac",

@@ -24,6 +24,24 @@ pub struct InterpStats {
     pub peak_tv: usize,
 }
 
+/// The captured effects of one task's turn — everything `run_task`
+/// wrote into its [`TaskCtx`] — so an epoch's live lanes can execute
+/// in parallel (each lane against the immutable pre-epoch state) and
+/// commit sequentially in slot order, bit-identical to
+/// [`Interp::run_epoch`]. Produced by the lane runner handed to
+/// [`Interp::run_epoch_with`]; consumed by its commit loop.
+#[derive(Debug, Clone, Default)]
+pub struct LaneOut {
+    /// The lane's TV slot (commit-order key; debug cross-check).
+    pub slot: usize,
+    pub forks: Vec<(usize, Vec<i32>)>,
+    pub join: Option<(usize, Vec<i32>)>,
+    pub emit: Option<i32>,
+    pub maps: Vec<Vec<i32>>,
+    pub scatters_i: Vec<(usize, i32, ScatterOp)>,
+    pub scatters_f: Vec<(usize, f32, ScatterOp)>,
+}
+
 /// The machine state (mirrors `coordinator::TvState`).
 ///
 /// The machine *owns* its program handle: `P` can be a borrowed `&App`
@@ -276,6 +294,219 @@ impl<P: TvmProgram> Interp<P> {
     pub fn root_result(&self) -> i32 {
         self.res[0]
     }
+
+    /// Like [`step`](Self::step), but the epoch's live lanes execute
+    /// through `pmap` (see [`run_epoch_with`](Self::run_epoch_with)) —
+    /// how the hybrid CPU engine drives the machine lane-parallel on
+    /// the cilk pool without changing what runs.
+    pub fn step_with<F>(&mut self, pmap: F) -> bool
+    where
+        F: Fn(
+            &[(usize, usize)],
+            &(dyn Fn(usize, usize) -> LaneOut + Sync),
+        ) -> Vec<LaneOut>,
+    {
+        let Some(cen) = self.join_stack.pop() else {
+            return false;
+        };
+        let (lo, hi) = self.ndrange_stack.pop().expect("stack parity");
+        if self.stats.epochs >= self.max_epochs {
+            panic!("epoch limit exceeded");
+        }
+        self.run_epoch_with(cen, lo, hi, &pmap);
+        true
+    }
+
+    /// One epoch over `[lo, hi)` with the live lanes executed through a
+    /// caller-supplied mapper — the lane-parallel twin of
+    /// [`run_epoch`](Self::run_epoch), bit-identical by construction.
+    ///
+    /// `pmap` receives `(slot, fork_base)` pairs plus the lane runner
+    /// and must return one [`LaneOut`] per pair *in order*; it may run
+    /// the lanes in any order or in parallel (the runner only reads
+    /// pre-epoch machine state, which is why [`TvmProgram`] is `Sync`).
+    ///
+    /// Fork slot assignment is order-dependent in `run_epoch` (children
+    /// allocate contiguously at `next_free`, and tasks embed the
+    /// returned child slots in their join args), so this runs two
+    /// passes: pass 1 gives every lane the epoch-start base to discover
+    /// per-lane fork counts, a sequential prefix sum assigns the exact
+    /// per-lane bases, and only lanes whose base shifted re-run. Fork
+    /// *counts* are base-independent for deterministic programs (the
+    /// base only changes which slot numbers a task sees), which the
+    /// commit loop cross-checks.
+    pub fn run_epoch_with<F>(&mut self, cen: i32, lo: usize, hi: usize, pmap: &F)
+    where
+        F: Fn(
+            &[(usize, usize)],
+            &(dyn Fn(usize, usize) -> LaneOut + Sync),
+        ) -> Vec<LaneOut>,
+    {
+        let old_next_free = self.next_free;
+        let base0 = self.next_free;
+
+        // live lanes of this epoch, in slot (= commit) order
+        let live: Vec<usize> = (lo..hi)
+            .filter(|&s| {
+                matches!(self.decode(self.code[s]), Some((e, _)) if e == cen)
+            })
+            .collect();
+
+        // ---- parallel phase: immutable borrow of the machine ----
+        let (outs, bases) = {
+            let this = &*self;
+            let seed = (this.stats.epochs as i32).wrapping_mul(0x9E37);
+            let run = |slot: usize, base: usize| -> LaneOut {
+                let (_, tid) = this
+                    .decode(this.code[slot])
+                    .expect("live lane decodes");
+                let mut ctx = TaskCtx {
+                    slot,
+                    cen,
+                    res: &this.res,
+                    heap_i: &this.heap_i,
+                    heap_f: &this.heap_f,
+                    const_i: &this.const_i,
+                    const_f: &this.const_f,
+                    seed,
+                    forks: Vec::new(),
+                    join: None,
+                    emit: None,
+                    maps: Vec::new(),
+                    scatters_i: Vec::new(),
+                    scatters_f: Vec::new(),
+                    next_child_slot: base,
+                };
+                this.prog.run_task(tid, &this.args[slot], &mut ctx);
+                LaneOut {
+                    slot,
+                    forks: ctx.forks,
+                    join: ctx.join,
+                    emit: ctx.emit,
+                    maps: ctx.maps,
+                    scatters_i: ctx.scatters_i,
+                    scatters_f: ctx.scatters_f,
+                }
+            };
+
+            let pairs: Vec<(usize, usize)> =
+                live.iter().map(|&s| (s, base0)).collect();
+            let mut outs = pmap(&pairs, &run);
+            assert_eq!(outs.len(), pairs.len(), "mapper must cover all lanes");
+
+            // prefix-sum the real fork bases
+            let mut bases = Vec::with_capacity(outs.len());
+            let mut nf = base0;
+            for o in &outs {
+                bases.push(nf);
+                nf += o.forks.len();
+            }
+
+            // re-run only lanes whose base shifted (an earlier lane forked)
+            let rerun: Vec<usize> =
+                (0..outs.len()).filter(|&k| bases[k] != base0).collect();
+            if !rerun.is_empty() {
+                let pairs2: Vec<(usize, usize)> =
+                    rerun.iter().map(|&k| (live[k], bases[k])).collect();
+                let outs2 = pmap(&pairs2, &run);
+                assert_eq!(outs2.len(), pairs2.len());
+                for (o2, &k) in outs2.into_iter().zip(&rerun) {
+                    assert_eq!(
+                        o2.forks.len(),
+                        outs[k].forks.len(),
+                        "fork count must not depend on the fork base"
+                    );
+                    outs[k] = o2;
+                }
+            }
+            (outs, bases)
+        };
+
+        // ---- sequential commit, mirroring run_epoch exactly ----
+        let mut join_scheduled = false;
+        let mut pending_maps: Vec<Vec<i32>> = Vec::new();
+        let mut scat_i: Vec<(usize, i32, ScatterOp)> = Vec::new();
+        let mut scat_f: Vec<(usize, f32, ScatterOp)> = Vec::new();
+
+        for (k, out) in outs.into_iter().enumerate() {
+            debug_assert_eq!(out.slot, live[k]);
+            debug_assert_eq!(self.next_free, bases[k]);
+            self.stats.work += 1;
+            scat_i.extend(out.scatters_i);
+            scat_f.extend(out.scatters_f);
+
+            for (ftid, fargs) in out.forks {
+                let s = self.next_free;
+                assert!(s < self.code.len(), "task vector overflow");
+                self.code[s] = self.encode(cen + 1, ftid);
+                self.args[s] = fargs;
+                self.next_free += 1;
+                self.stats.forks += 1;
+            }
+            self.stats.peak_tv = self.stats.peak_tv.max(self.next_free);
+
+            let joined = out.join.is_some();
+            if let Some((jtid, jargs)) = out.join {
+                self.code[out.slot] = self.encode(cen, jtid);
+                self.args[out.slot] = jargs;
+                join_scheduled = true;
+                self.stats.joins += 1;
+            } else {
+                self.code[out.slot] = INVALID;
+            }
+
+            if let Some(v) = out.emit {
+                assert!(!joined, "task cannot emit and join in one turn");
+                self.res[out.slot] = v;
+                self.stats.emits += 1;
+            }
+
+            pending_maps.extend(out.maps);
+        }
+
+        self.stats.epochs += 1;
+
+        for (idx, val, op) in scat_i {
+            let c = &mut self.heap_i[idx];
+            *c = match op {
+                ScatterOp::Set => val,
+                ScatterOp::Min => (*c).min(val),
+                ScatterOp::Max => (*c).max(val),
+                ScatterOp::Add => *c + val,
+            };
+        }
+        for (idx, val, op) in scat_f {
+            let c = &mut self.heap_f[idx];
+            *c = match op {
+                ScatterOp::Set => val,
+                ScatterOp::Min => (*c).min(val),
+                ScatterOp::Max => (*c).max(val),
+                ScatterOp::Add => *c + val,
+            };
+        }
+
+        for m in pending_maps {
+            self.prog.run_map(
+                &m,
+                &mut self.heap_i,
+                &mut self.heap_f,
+                &self.const_i,
+                &self.const_f,
+            );
+            self.stats.maps += 1;
+        }
+
+        tms_update(
+            &mut self.join_stack,
+            &mut self.ndrange_stack,
+            cen,
+            lo,
+            hi,
+            old_next_free,
+            &mut self.next_free,
+            join_scheduled,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -355,5 +586,48 @@ mod tests {
         m.run();
         assert_eq!(m.join_stack.len(), 0);
         assert_eq!(m.ndrange_stack.len(), 0);
+    }
+
+    #[test]
+    fn step_with_is_bit_identical_to_step() {
+        // the mapper-driven epoch (sequential mapper, and a reversed
+        // one — order independence is the point) must leave the machine
+        // in exactly the state run_epoch does, every epoch
+        for n in [0, 1, 10, 13] {
+            let mut a = Interp::new(&Fib, 1 << 16, vec![n]);
+            let mut b = Interp::new(&Fib, 1 << 16, vec![n]);
+            let mut c = Interp::new(&Fib, 1 << 16, vec![n]);
+            loop {
+                let pa = a.step();
+                let pb = b.step_with(|pairs, run| {
+                    pairs.iter().map(|&(s, base)| run(s, base)).collect()
+                });
+                let pc = c.step_with(|pairs, run| {
+                    // run in reverse, return in order
+                    let mut outs: Vec<LaneOut> = pairs
+                        .iter()
+                        .rev()
+                        .map(|&(s, base)| run(s, base))
+                        .collect();
+                    outs.reverse();
+                    outs
+                });
+                assert_eq!(pa, pb);
+                assert_eq!(pa, pc);
+                for m in [&b, &c] {
+                    assert_eq!(a.code, m.code);
+                    assert_eq!(a.args, m.args);
+                    assert_eq!(a.res, m.res);
+                    assert_eq!(a.next_free, m.next_free);
+                    assert_eq!(a.join_stack, m.join_stack);
+                    assert_eq!(a.ndrange_stack, m.ndrange_stack);
+                    assert_eq!(a.stats, m.stats);
+                }
+                if !pa {
+                    break;
+                }
+            }
+            assert_eq!(a.root_result(), fib_ref(n));
+        }
     }
 }

@@ -15,6 +15,6 @@ mod interp;
 mod program;
 mod tms;
 
-pub use interp::{Interp, InterpStats, Machine};
+pub use interp::{Interp, InterpStats, LaneOut, Machine};
 pub use program::{ScatterOp, TaskCtx, TvmProgram, INVALID};
 pub use tms::tms_update;

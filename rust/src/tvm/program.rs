@@ -86,7 +86,14 @@ impl<'a> TaskCtx<'a> {
 }
 
 /// A TREES application in scalar form (mirrors the python `Program`).
-pub trait TvmProgram {
+///
+/// `Send + Sync` is a supertrait bound because the hybrid CPU engine
+/// ([`crate::hybrid`]) runs the live lanes of an epoch in parallel on
+/// the cilk pool: worker threads share the program by reference for
+/// the duration of the epoch. Programs are already immutable during
+/// `run_task` (all mutation goes through the [`TaskCtx`] intents), so
+/// in practice this just forbids interior-mutable program state.
+pub trait TvmProgram: Send + Sync {
     /// Number of task types T (tids are 1..=T, matching the artifact).
     fn num_task_types(&self) -> usize;
 

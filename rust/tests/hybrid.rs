@@ -1,0 +1,204 @@
+//! Hybrid CPU/GPU execution properties (ISSUE 9 acceptance):
+//!
+//! (a) **routing never changes results**: under every engine mode
+//!     (`cpu`, `gpu`, `auto`), fairness policy, and 1..4-device group,
+//!     every job finishes bit-identical (root, res vector, heaps,
+//!     machine counters) to the pure-GPU single-device reference;
+//! (b) `auto` actually reroutes mid-run — narrow fronts visit the
+//!     cilk pool, wide fronts stay fused — and its modeled device
+//!     time never exceeds the pure-GPU run's;
+//! (c) fault evacuations onto a CPU-moded device rehome the tenant's
+//!     engine transparently: survivors stay bit-identical across the
+//!     whole `TREES_FAULT_SEEDS` random-plan matrix and under a
+//!     deterministic death that forces a GPU→CPU device move.
+
+use trees::fault::{FaultPlan, Outcome};
+use trees::hybrid::EngineMode;
+use trees::sched::{dev_step_us, Fairness};
+use trees::session::{Session, SessionBuilder, SessionResult};
+use trees::simt::{DeviceGroup, GpuModel};
+
+fn seeds() -> Vec<u64> {
+    let spec =
+        std::env::var("TREES_FAULT_SEEDS").unwrap_or_else(|_| "0..2".into());
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().expect("TREES_FAULT_SEEDS start");
+        let b: u64 = b.trim().parse().expect("TREES_FAULT_SEEDS end");
+        (a..=b).collect()
+    } else {
+        spec.split(',')
+            .map(|t| t.trim().parse().expect("TREES_FAULT_SEEDS entry"))
+            .collect()
+    }
+}
+
+/// Narrow tails (fib, tsp) plus wide middles (mergesort, bfs): the mix
+/// exercises both sides of the crossover in one serve.
+const MIX: &[&str] =
+    &["fib:12", "mergesort:256", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
+
+fn assert_same_machine(tag: &str, got: &SessionResult, want: &SessionResult) {
+    let (mg, mw) = (
+        got.job.engine.machine().expect("machine-backed engine"),
+        want.job.engine.machine().expect("machine-backed engine"),
+    );
+    assert_eq!(mg.root_result(), mw.root_result(), "{tag}: root");
+    assert_eq!(mg.res, mw.res, "{tag}: res vector");
+    assert_eq!(mg.heap_i, mw.heap_i, "{tag}: heap_i");
+    assert_eq!(mg.heap_f, mw.heap_f, "{tag}: heap_f");
+    assert_eq!(mg.stats.work, mw.stats.work, "{tag}: work");
+    assert_eq!(mg.stats.epochs, mw.stats.epochs, "{tag}: epochs");
+}
+
+fn run_mix(b: SessionBuilder) -> Session {
+    let mut s = b.build().expect("interp sessions build infallibly");
+    for tok in MIX {
+        s.submit_spec(tok).expect("mix token");
+    }
+    s.drain().expect("drain");
+    s
+}
+
+fn assert_matches_reference(tag: &str, s: &Session, reference: &Session) {
+    assert_eq!(s.results().len(), MIX.len(), "{tag}: all finish");
+    for r in s.results() {
+        assert_eq!(r.job.outcome, Outcome::Done, "{tag}: {}", r.job.label);
+        let w = reference
+            .results()
+            .iter()
+            .find(|x| x.job.id == r.job.id)
+            .expect("same admission order");
+        assert_same_machine(&format!("{tag}: {}", r.job.label), r, w);
+    }
+}
+
+#[test]
+fn prop_every_engine_mode_is_bit_identical_to_solo() {
+    let reference = run_mix(Session::builder());
+    for engine in [EngineMode::Cpu, EngineMode::Gpu, EngineMode::Auto] {
+        for fairness in [Fairness::RoundRobin, Fairness::Weighted] {
+            for devices in 1..=4usize {
+                let tag = format!(
+                    "engine {}, {fairness:?}, {devices} devices",
+                    engine.name()
+                );
+                let s = run_mix(
+                    Session::builder()
+                        .engine(engine)
+                        .fairness(fairness)
+                        .devices(devices),
+                );
+                assert_matches_reference(&tag, &s, &reference);
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_reroutes_mid_run_and_never_costs_more_than_gpu() {
+    let trace = |engine| {
+        run_mix(Session::builder().engine(engine).trace(true))
+    };
+    let gpu = trace(EngineMode::Gpu);
+    let auto = trace(EngineMode::Auto);
+
+    // same programs, same epoch boundaries: routing only moves epochs
+    // between engines, it never adds or removes them
+    let (gt, at) = (&gpu.device_stats()[0].trace, &auto.device_stats()[0].trace);
+    assert_eq!(gt.len(), at.len(), "step count must not change");
+
+    let mut saw_cpu = false;
+    let mut saw_gpu = false;
+    for s in at {
+        saw_cpu |= s.engines.iter().any(|e| e.name() == "cpu");
+        saw_gpu |= s.engines.iter().any(|e| e.name() == "gpu");
+    }
+    assert!(saw_cpu, "narrow fronts should visit the cilk pool");
+    assert!(saw_gpu, "wide fronts should stay on the fused GPU path");
+
+    // the router's guarantee: per step, auto's modeled device time is
+    // never worse than the all-GPU window it started from
+    let g = DeviceGroup::new(GpuModel::default(), 1);
+    for (i, (sg, sa)) in gt.iter().zip(at.iter()).enumerate() {
+        let gpu_us = dev_step_us(&g.dev, &g.cpu, sg);
+        let auto_us = dev_step_us(&g.dev, &g.cpu, sa);
+        assert!(
+            auto_us <= gpu_us + 1e-9,
+            "step {i}: auto {auto_us:.3} us > gpu {gpu_us:.3} us"
+        );
+    }
+}
+
+#[test]
+fn pure_cpu_mode_routes_every_epoch_to_the_pool() {
+    let s = run_mix(Session::builder().engine(EngineMode::Cpu).trace(true));
+    let steps = &s.device_stats()[0].trace;
+    assert!(!steps.is_empty());
+    for (i, st) in steps.iter().enumerate() {
+        assert!(
+            st.engines.iter().all(|e| e.name() == "cpu"),
+            "step {i} routed {:?} off the pool",
+            st.engines
+        );
+    }
+}
+
+#[test]
+fn wide_hysteresis_still_preserves_results() {
+    let reference = run_mix(Session::builder());
+    for crossover in [1.0, 4.0] {
+        let s = run_mix(
+            Session::builder().engine(EngineMode::Auto).crossover(crossover),
+        );
+        assert_matches_reference(&format!("crossover {crossover}"), &s, &reference);
+    }
+}
+
+#[test]
+fn prop_auto_survivors_bit_identical_under_random_fault_plans() {
+    let reference = run_mix(Session::builder());
+    for seed in seeds() {
+        for devices in 2..=4usize {
+            for engine in [EngineMode::Cpu, EngineMode::Auto] {
+                let tag = format!(
+                    "seed {seed}, {devices} devices, engine {}",
+                    engine.name()
+                );
+                let s = run_mix(
+                    Session::builder()
+                        .engine(engine)
+                        .devices(devices)
+                        .fault_plan(FaultPlan::random(seed, devices, 30)),
+                );
+                assert_matches_reference(&tag, &s, &reference);
+            }
+        }
+    }
+}
+
+#[test]
+fn evacuation_onto_a_cpu_device_rehomes_the_tenant() {
+    // d0 is a GPU-moded member, d1 a CPU-moded one; d0 dies early, so
+    // its tenants evacuate onto d1 and must transparently become
+    // cilk-pool tenants — and still finish bit-identical.
+    let reference = run_mix(Session::builder());
+    let s = run_mix(
+        Session::builder()
+            .devices(2)
+            .device_engines(vec![EngineMode::Gpu, EngineMode::Cpu])
+            .fault_plan(FaultPlan::parse("die:0@3").expect("plan")),
+    );
+    assert_matches_reference("gpu->cpu evacuation", &s, &reference);
+    let st = s.stats();
+    assert_eq!(st.device_deaths, 1);
+    assert!(st.evacuations >= 1, "d0's tenants moved to the CPU device");
+
+    // after the death every surviving step runs on the CPU member
+    let sh = s.shard_stats().expect("device group");
+    let last = sh.trace.last().expect("group steps recorded");
+    assert_eq!(
+        last.engines,
+        vec![EngineMode::Gpu, EngineMode::Cpu],
+        "per-device modes are recorded in the group trace"
+    );
+}

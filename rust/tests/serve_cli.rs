@@ -139,6 +139,56 @@ fn serve_survives_a_device_death_and_a_wedged_job() {
 }
 
 #[test]
+fn serve_runs_under_every_engine_mode() {
+    for engine in ["cpu", "gpu", "auto"] {
+        let (stdout, stderr, ok) = run_serve(&[
+            "serve",
+            "--jobs",
+            "fib:12,mergesort:64@3",
+            "--engine",
+            engine,
+            "--crossover",
+            "1.5",
+        ]);
+        assert!(
+            ok,
+            "--engine {engine} failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+        );
+        for needle in ["fib(12) = 144", "sorted 64 elements"] {
+            assert!(
+                stdout.contains(needle),
+                "--engine {engine}: missing {needle:?}:\n{stdout}"
+            );
+        }
+        assert!(
+            !stdout.contains("MISMATCH"),
+            "--engine {engine}: mismatched result:\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn serve_rejects_malformed_engine_options() {
+    let (_, stderr, ok) =
+        run_serve(&["serve", "--jobs", "fib:10", "--engine", "tpu"]);
+    assert!(!ok, "unknown engine must be rejected");
+    assert!(
+        stderr.contains("--engine must be cpu|gpu|auto"),
+        "unhelpful error:\n{stderr}"
+    );
+
+    for bad in ["0.5", "nan", "chatter"] {
+        let (_, stderr, ok) =
+            run_serve(&["serve", "--jobs", "fib:10", "--crossover", bad]);
+        assert!(!ok, "--crossover {bad} must be rejected");
+        assert!(
+            stderr.contains("--crossover must be a finite factor >= 1.0"),
+            "unhelpful error for {bad:?}:\n{stderr}"
+        );
+    }
+}
+
+#[test]
 fn serve_rejects_malformed_fault_plans() {
     let (_, stderr, ok) = run_serve(&[
         "serve",

@@ -57,6 +57,7 @@ const KEYS: &[&str] = &[
     "cum_us",
     "dev_lanes",
     "dev_us",
+    "eng",
     "epoch",
     "evacuations",
     "idle_frac",
