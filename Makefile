@@ -15,6 +15,11 @@
 #                   under --engine cpu/gpu/auto per mix, snapshotted
 #                   to BENCH_hybrid.json (asserts auto never loses to
 #                   pure GPU and wins >=1.2x on the narrow-front mix)
+#   make bench-hetero
+#                   the E-HETERO-1 mixed-SKU bench alone: speed-blind
+#                   greedy vs LPT+slice-steals on a 1.0/0.25 pair,
+#                   snapshotted to BENCH_hetero.json (asserts aware
+#                   never loses and wins >=1.2x on the time-skewed mix)
 #   make inspect-smoke
 #                   record a `trees trace` run, replay the recording
 #                   through `trees inspect --invariants strict`, and
@@ -23,7 +28,7 @@
 CARGO ?= cargo
 
 .PHONY: check build test clippy doc fmt fmt-check artifacts bench \
-        bench-hybrid pytest inspect-smoke
+        bench-hybrid bench-hetero pytest inspect-smoke
 
 check: build test clippy doc
 
@@ -56,6 +61,9 @@ bench:
 
 bench-hybrid:
 	cd rust && $(CARGO) bench --bench bench_hybrid
+
+bench-hetero:
+	cd rust && $(CARGO) bench --bench bench_hetero
 
 # The flight-recorder e2e gate: a live `trees trace` run and a
 # `trees inspect` replay of its own recording must print the same

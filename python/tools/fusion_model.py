@@ -1,7 +1,7 @@
 """Deterministic twin of rust/src/sched + rust/src/shard + rust/src/fault
 + rust/src/trace + rust/src/metrics + rust/src/hybrid for the
 EXPERIMENTS.md tables (E-FUSE-1, E-SHARD-1, E-FAULT-1, E-TRACE-1,
-E-OBS-1 and E-HYBRID-1).
+E-OBS-1, E-HYBRID-1 and E-HETERO-1).
 
 The offline container has no Rust toolchain, so this script mirrors the
 exact counting semantics of the fused scheduler (rust/src/sched), the
@@ -24,7 +24,11 @@ gauges) over the same serve feed, and the E-HYBRID-1 twin mirrors the
 rust/src/hybrid crossover router (CpuModel, greedy peel + bulk
 fallback + hysteresis) and snapshots BENCH_hybrid.json — the same
 numbers `cargo bench --bench bench_hybrid` computes from the real
-engines.
+engines. The E-HETERO-1 twin mirrors the heterogeneous group planner
+(per-member speed multipliers, speed-normalized LPT re-packing, and
+one-epoch slice steals under the strict never-worse envelope from
+rust/src/shard/balance.rs) and snapshots BENCH_hetero.json — the twin
+of `cargo bench --bench bench_hetero`.
 
 Run:  python tools/fusion_model.py
 """
@@ -1385,6 +1389,255 @@ def hybrid_table():
     print(f"wrote {path}")
 
 
+# ------------------------------- hetero twins (rust/src/shard speeds,
+# slice steals, LPT — ISSUE 10, E-HETERO-1)
+
+XFER_LANE_US = 0.01          # simt::DeviceGroup::xfer_lane_us
+MIGRATE_STATE_FACTOR = 16.0  # simt::MIGRATE_STATE_FACTOR
+HETERO_SPEEDS = [1.0, 0.25]  # bench_hetero's group: reference + 1/4 bin
+
+
+def steal_xfer_us(lanes):
+    """DeviceGroup::steal_xfer_us twin: one signal hop plus the
+    per-lane front transfer."""
+    return BARRIER_HOP_US + XFER_LANE_US * lanes
+
+
+def migrate_xfer_us(lanes):
+    """DeviceGroup::migrate_xfer_us twin: the whole tenant state moves,
+    not just the live front."""
+    return BARRIER_HOP_US + XFER_LANE_US * lanes * MIGRATE_STATE_FACTOR
+
+
+def member_epoch_us(lanes, speed):
+    """One slice priced on a `speed`-scaled member
+    (DeviceGroup::member + GpuModel::fused_epoch_us twin)."""
+    if lanes == 0:
+        return 0.0
+    return fused_epoch_us([lanes]) / max(speed, 1e-9)
+
+
+def plan_steal_twin(loads, devs, speeds):
+    """balance::Rebalancer::plan_steal twin: the most expensive member
+    (modeled µs on its own SKU) lends half its widest front to the
+    cheapest member for one epoch — only inside the strict never-worse
+    envelope against both no-action and whole-tenant migration."""
+    live = [d for d in range(len(loads)) if True]
+
+    def est(d, lanes):
+        return member_epoch_us(lanes, speeds[d])
+
+    src = max(live, key=lambda d: est(d, loads[d]))
+    dst = min(live, key=lambda d: est(d, loads[d]))
+    if src == dst or est(src, loads[src]) <= est(dst, loads[dst]):
+        return None
+    tenants = devs[src].tenant_loads()
+    if not tenants:
+        return None
+    m, front = max(tenants, key=lambda t: (t[1], -t[0].job))
+    if front < 2:
+        return None
+    half = front // 2
+
+    def total(cost):
+        return max(cost(d) for d in live)
+
+    no_action = total(lambda d: est(d, loads[d]))
+    stolen = total(lambda d:
+                   est(d, loads[d] - half) if d == src
+                   else est(d, loads[d]) + est(d, half)
+                   + steal_xfer_us(half) if d == dst
+                   else est(d, loads[d]))
+    migrated = total(lambda d:
+                     est(d, loads[d] - front) if d == src
+                     else est(d, loads[d] + front)
+                     + migrate_xfer_us(front) if d == dst
+                     else est(d, loads[d]))
+    if stolen < no_action and stolen <= migrated:
+        return m, src, dst, half
+    return None
+
+
+class LptRebalancer:
+    """balance::Rebalancer twin under RebalanceMode::Lpt: when the
+    speed-normalized skew trigger fires, re-pack every tenant largest
+    first onto the least-finishing member, executed only when the
+    modeled makespan strictly shrinks (headroom never binds at this
+    twin's tenant counts)."""
+
+    def __init__(self, speeds, skew=SKEW_THRESHOLD, cooldown=COOLDOWN):
+        self.speeds = speeds
+        self.skew = skew
+        self.cooldown = cooldown
+        self.steps_since = cooldown
+
+    def plan_all(self, loads, devs):
+        live = list(range(len(loads)))
+        if len(live) < 2 or sum(loads) == 0:
+            return []
+        if self.steps_since < self.cooldown:
+            self.steps_since += 1
+            return []
+
+        def spd(d):
+            return max(self.speeds[d], 1e-9)
+
+        def t(d):
+            return loads[d] / spd(d)
+
+        makespan0 = max(t(d) for d in live)
+        mean = sum(t(d) for d in live) / len(live)
+        if makespan0 <= mean * max(self.skew, 1.0):
+            return []
+        items = [(m, l, d) for d in live
+                 for m, l in devs[d].tenant_loads() if l > 0]
+        items.sort(key=lambda it: (-it[1], it[0].job))
+        time_ = [0.0] * len(loads)
+        assign = []
+        for m, l, cur in items:
+            best = live[0]
+            for d in live[1:]:
+                a = time_[d] + l / spd(d)
+                b = time_[best] + l / spd(best)
+                if a + 1e-9 < b or (abs(a - b) <= 1e-9 and d == cur
+                                    and best != cur):
+                    best = d
+            time_[best] += l / spd(best)
+            assign.append((m, cur, best))
+        makespan1 = max(time_[d] for d in live)
+        if makespan1 + 1e-9 >= makespan0:
+            return []
+        moves = [(m, cur, want) for m, cur, want in assign if want != cur]
+        if moves:
+            self.steps_since = 0
+        return moves
+
+
+def run_hetero(tokens, speeds, aware):
+    """bench_hetero `run` twin: a lock-step mixed-SKU group, every
+    member priced on its own scaled model (cost / speed). `aware`
+    switches the planner from speed-blind greedy (the unweighted skew
+    Rebalancer) to LPT over speed-normalized loads plus one-epoch
+    slice steals; pricing is heterogeneous either way, so the ratio
+    isolates what the planner knows, not the hardware."""
+    machines = [build(t) for t in tokens]
+    for i, m in enumerate(machines):
+        m.job = i
+    devs = [ShardDevice() for _ in speeds]
+    for i, m in enumerate(machines):
+        devs[i % len(devs)].admit(m)
+    bal = LptRebalancer(speeds) if aware else Rebalancer()
+    steps = migrations = steals = 0
+    us = 0.0
+    while any(d.has_work() for d in devs):
+        plan = None
+        if aware:
+            loads = [d.live_lanes() for d in devs]
+            plan = plan_steal_twin(loads, devs, speeds)
+        dev_us = [0.0] * len(devs)
+        thief_extra = 0.0
+        thief = None
+        for d, dev in enumerate(devs):
+            if not dev.has_work():
+                continue
+            live_per_job, launches = dev.step()
+            kept = list(live_per_job)
+            if plan is not None and d == plan[1]:
+                m, _src, dst, half = plan
+                jobs = dev.last[0]
+                if m.job in jobs:
+                    k = jobs.index(m.job)
+                    got = min(half, kept[k])
+                    if got > 0:
+                        kept[k] -= got
+                        steals += 1
+                        thief = dst
+                        thief_extra = member_epoch_us(got, speeds[dst]) \
+                            + steal_xfer_us(got)
+            dev_us[d] = (fused_epoch_us(kept)
+                         + (launches - 1) * LAUNCH_US) \
+                / max(speeds[d], 1e-9)
+        if thief is not None:
+            dev_us[thief] += thief_extra
+        steps += 1
+        us += max(dev_us) + barrier_us(len(devs))
+        loads = [d.live_lanes() for d in devs]
+        if aware:
+            moves = bal.plan_all(loads, devs)
+        else:
+            one = bal.plan(loads, devs)
+            moves = [one] if one is not None else []
+        for m, src, dst in moves:
+            pos = devs[src].active.index(m)
+            devs[src].active.pop(pos)
+            devs[src].policy.retire(pos)
+            devs[dst].admit(m)
+            migrations += 1
+    return dict(us=us, steps=steps, migrations=migrations, steals=steals)
+
+
+# The three bench_hetero mixes: narrow uniform work (little to
+# re-pack), equal lanes across unequal SKUs (time skew a lane counter
+# cannot see), and a serve-like blend whose wide sorts round-robin
+# onto the slow member. The floor is each mix's acceptance ratio.
+HETERO_MIXES = [
+    ("uniform narrow: four fibs",
+     ["fib:12", "fib:10", "fib:11", "fib:9"], 1.0),
+    ("time-skewed: equal-lane sorts, 4x-slower member",
+     ["mergesort:1024", "mergesort:1024"], 1.2),
+    ("blended: wide sorts land on the slow member",
+     ["fib:10", "mergesort:2048", "fib:8", "mergesort:512"], 1.0),
+]
+
+
+def hetero_table():
+    print("\nE-HETERO-1 — speed-blind greedy vs LPT+steals, 2 devices, "
+          "SKUs 1.0/0.25 (bench_hetero twin)")
+    print("| mix | blind µs | aware µs | speedup | steps b/a | "
+          "migrations b/a | steals |")
+    print("|" + "---|" * 7)
+    rows = []
+    for name, tokens, floor in HETERO_MIXES:
+        blind = run_hetero(tokens, HETERO_SPEEDS, aware=False)
+        aware = run_hetero(tokens, HETERO_SPEEDS, aware=True)
+        speedup = blind["us"] / max(aware["us"], 1e-9)
+        # E-HETERO-1 acceptance: speed-aware planning never loses, and
+        # wins outright where the skew is invisible to lane counting
+        assert speedup >= 1.0 - 1e-9, (name, blind, aware)
+        assert speedup >= floor - 1e-9, (name, speedup, floor)
+        rows.append((name, blind, aware, speedup))
+        print(f"| {name} | {blind['us']:.0f} | {aware['us']:.0f} | "
+              f"{speedup:.2f}x | {blind['steps']}/{aware['steps']} | "
+              f"{blind['migrations']}/{aware['migrations']} | "
+              f"{aware['steals']} |")
+
+    out = {
+        "bench": "hetero",
+        "devices": len(HETERO_SPEEDS),
+        "speeds": HETERO_SPEEDS,
+        "mixes": [
+            {
+                "mix": name,
+                "blind_us": round(blind["us"], 3),
+                "aware_us": round(aware["us"], 3),
+                "speedup": round(speedup, 4),
+                "steps_blind": blind["steps"],
+                "steps_aware": aware["steps"],
+                "migrations_blind": blind["migrations"],
+                "migrations_aware": aware["migrations"],
+                "steals_aware": aware["steals"],
+            }
+            for name, blind, aware, speedup in rows
+        ],
+    }
+    path = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "BENCH_hetero.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main():
     fuse_table()
     shard_table()
@@ -1392,6 +1645,7 @@ def main():
     trace_table()
     obs_table()
     hybrid_table()
+    hetero_table()
 
 
 if __name__ == "__main__":

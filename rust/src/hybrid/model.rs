@@ -29,15 +29,31 @@ pub struct CpuModel {
     pub dispatch_us: f64,
     /// Per-steal-hop overhead (µs), paid log2(workers) deep per epoch.
     pub steal_us: f64,
+    /// Relative SKU speed multiplier (1.0 = the reference pool; 0.5 a
+    /// half-clocked LITTLE cluster). Every modeled epoch cost divides
+    /// by it, mirroring [`GpuModel::device_speed`].
+    pub device_speed: f64,
 }
 
 impl Default for CpuModel {
     fn default() -> Self {
-        CpuModel { workers: 8, per_task_us: 0.5, dispatch_us: 0.5, steal_us: 0.2 }
+        CpuModel {
+            workers: 8,
+            per_task_us: 0.5,
+            dispatch_us: 0.5,
+            steal_us: 0.2,
+            device_speed: 1.0,
+        }
     }
 }
 
 impl CpuModel {
+    /// This model scaled to a relative SKU speed (floored away from 0).
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        self.device_speed = speed.max(1e-9);
+        self
+    }
+
     /// Modeled µs for one epoch over `live` lanes (0 lanes cost 0 —
     /// nothing is dispatched).
     pub fn epoch_us(&self, live: u64) -> f64 {
@@ -45,9 +61,10 @@ impl CpuModel {
             return 0.0;
         }
         let w = self.workers.max(1) as f64;
-        self.dispatch_us
+        (self.dispatch_us
             + self.steal_us * w.log2()
-            + (live as f64 / w).ceil() * self.per_task_us
+            + (live as f64 / w).ceil() * self.per_task_us)
+            / self.device_speed.max(1e-9)
     }
 
     /// Modeled µs for a whole run: one epoch per front width.
@@ -111,6 +128,19 @@ mod tests {
                 "GPU must win at {wide} lanes"
             );
         }
+    }
+
+    #[test]
+    fn sku_multiplier_scales_pool_epochs_and_speed() {
+        let m = CpuModel::default();
+        let half = m.with_speed(0.5);
+        assert!((half.epoch_us(100) - 2.0 * m.epoch_us(100)).abs() < 1e-9);
+        assert!(half.with_speed(0.0).epoch_us(100).is_finite());
+        // the derived lanes/µs speed halves with the SKU
+        let gpu = GpuModel::default();
+        let full = device_speed(EngineMode::Cpu, &gpu, &m);
+        let slow = device_speed(EngineMode::Cpu, &gpu, &half);
+        assert!((slow - 0.5 * full).abs() < 1e-9 * full);
     }
 
     #[test]

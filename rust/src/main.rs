@@ -44,7 +44,8 @@ use trees::sched::{
 };
 use trees::session::{Arrival, Session, SessionBuilder};
 use trees::shard::{
-    modeled_group_us, PlacementKind, RebalanceCfg, RebalanceMode,
+    modeled_group_us, GroupSpec, PlacementKind, RebalanceCfg,
+    RebalanceMode,
 };
 use trees::simt::{DeviceGroup, GpuModel};
 use trees::trace::{InvariantMode, Replay, Summary};
@@ -64,9 +65,10 @@ USAGE:
               [--capacity N] [--slice-cap N] [--max-active N]
               [--max-live-lanes N] [--fairness round-robin|weighted]
               [--devices N] [--placement round-robin|least-loaded|affinity]
-              [--skew T] [--no-rebalance] [--fault-plan <plan>]
-              [--rebalance-mode skew|critical-path] [--window W] [--trace]
-              [--engine cpu|gpu|auto] [--crossover F]
+              [--group SPEC] [--skew T] [--no-rebalance] [--steal]
+              [--fault-plan <plan>]
+              [--rebalance-mode skew|critical-path|lpt] [--window W]
+              [--trace] [--engine cpu|gpu|auto] [--crossover F]
   trees batch [--jobs <spec>] [--copies K] [--devices N] [--placement P]
   trees trace [serve options] — serve the feed silently and stream
               flight-recorder NDJSON records to stdout: one `epoch`
@@ -115,9 +117,29 @@ barrier, and epoch-boundary tenant migration when live-lane load skews
 past --skew (default 1.5; --no-rebalance pins placement).
 --rebalance-mode critical-path migrates the tenant the sliding-window
 critical-path analyzer (over --window epochs) attributes the group's
-critical path to, instead of the most-live-lanes tenant. serve --trace
-mirrors the trace subcommand's NDJSON stream onto stderr, keeping the
-human-readable service log on stdout.
+critical path to, instead of the most-live-lanes tenant;
+--rebalance-mode lpt re-packs every tenant longest-first over
+speed-normalized loads when skew fires, executed only when the modeled
+makespan strictly improves. serve --trace mirrors the trace
+subcommand's NDJSON stream onto stderr, keeping the human-readable
+service log on stdout.
+
+--group SPEC (serve, trace) describes a heterogeneous device group in
+one flag: comma-separated engine[:speed] members, e.g.
+--group \"gpu:1.0,gpu:0.5,cpu\" — a reference GPU, a half-speed GPU
+bin, and a CPU member. speed is a finite SKU multiplier > 0 (default
+1.0) composed with the engine's own modeled speed; the member list IS
+the group, so --group replaces --devices and --engine (combining them
+is an error). Placement, rebalancing, and stealing weigh each member's
+effective speed; the trace stream echoes the multipliers per record
+(`speeds`).
+
+--steal lets an under-loaded member run a one-epoch slice of the
+widest front on the most loaded member at each group boundary, guarded
+by a strict never-worse modeled envelope against both no-action and
+whole-tenant migration. Steals change pricing attribution only —
+results stay bit-identical — and are recorded per epoch in the trace
+stream (`steals`).
 
 --engine cpu|gpu|auto (serve, batch, trace) picks the execution
 engine: gpu (default) runs every epoch through the fused-launch GPU
@@ -154,8 +176,9 @@ fn real_main() -> Result<()> {
             "copies", "fairness", "devices", "placement", "skew",
             "spec-file", "fault-plan", "rebalance-mode", "window",
             "invariants", "file", "top", "html", "engine", "crossover",
+            "group",
         ],
-        &["trace", "verbose", "help", "no-rebalance"],
+        &["trace", "verbose", "help", "no-rebalance", "steal"],
     )
     .map_err(|e| anyhow!("{e}\n{}", usage()))?;
 
@@ -382,8 +405,9 @@ fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
     let mode = match args.str_or("rebalance-mode", "skew").as_str() {
         "skew" | "skew-threshold" => RebalanceMode::SkewThreshold,
         "critical-path" | "critical" | "cp" => RebalanceMode::CriticalPath,
+        "lpt" => RebalanceMode::Lpt,
         other => bail!(
-            "unknown rebalance mode {other:?} (skew | critical-path)"
+            "unknown rebalance mode {other:?} (skew | critical-path | lpt)"
         ),
     };
     let rebalance = RebalanceCfg {
@@ -393,10 +417,29 @@ fn session_builder(args: &Args, trace: bool) -> Result<SessionBuilder> {
             .map_err(anyhow::Error::msg)?,
         mode,
         window: trace_window(args)?,
+        steal: args.flag("steal"),
         ..rb
     };
-    Ok(Session::builder()
-        .sched(SchedConfig { trace, ..sched_config(args)? })
+    let builder =
+        Session::builder().sched(SchedConfig { trace, ..sched_config(args)? });
+    if let Some(gspec) = args.get("group") {
+        // --group names the whole group in one spec; mixing it with the
+        // per-knob topology flags it deprecates would leave two sources
+        // of truth for the same members
+        for old in ["devices", "engine"] {
+            if args.get(old).is_some() {
+                bail!(
+                    "--group replaces --{old}; describe the whole group \
+                     in the spec (engine[:speed], comma-separated)"
+                );
+            }
+        }
+        let spec = GroupSpec::parse(gspec)?
+            .with_placement(placement)
+            .with_rebalance(rebalance);
+        return Ok(builder.group(spec));
+    }
+    Ok(builder
         .devices(devices)
         .placement(placement)
         .rebalance(rebalance))
@@ -485,6 +528,7 @@ fn serve(args: &Args) -> Result<()> {
     )
     .map_err(anyhow::Error::msg)?;
     if devices == 1
+        && args.get("group").is_none()
         && fault.is_none()
         && !trace
         && !inv.enabled()
@@ -515,7 +559,7 @@ fn serve(args: &Args) -> Result<()> {
     println!(
         "serving {} arrival(s) over {} device(s):",
         arrivals.len(),
-        devices
+        session.devices()
     );
     session.run_feed(
         &arrivals,

@@ -73,7 +73,7 @@ pub use stats::{
 
 use policy::Policy;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -125,6 +125,12 @@ pub struct SchedConfig {
     /// Hysteresis margin for `Auto` routing (≥ 1): how decisively the
     /// other engine must win before a routed tenant flips.
     pub crossover: f64,
+    /// Relative SKU speed of the device this scheduler models (1.0 =
+    /// the reference part). Scales the router's cost models so `Auto`
+    /// routing prices *this* device's engines, and rides into every
+    /// shard-layer pricing decision for the member
+    /// ([`crate::shard::ShardConfig::speeds`]).
+    pub device_speed: f64,
 }
 
 impl Default for SchedConfig {
@@ -141,6 +147,7 @@ impl Default for SchedConfig {
             fairness: Fairness::RoundRobin,
             engine: EngineMode::Gpu,
             crossover: hybrid::DEFAULT_MARGIN,
+            device_speed: 1.0,
         }
     }
 }
@@ -429,6 +436,13 @@ pub struct FusedScheduler {
     /// Under `EngineMode::Cpu`/`Gpu` it degenerates to a constant; its
     /// per-tenant hysteresis history is cleared as tenants leave.
     router: Router,
+    /// One-epoch slice loans, keyed by job: lanes of the tenant's next
+    /// front lent to another device for pricing ([`ShardGroup`] slice
+    /// stealing). Drained into [`StepTrace::stolen`] by the next
+    /// `step()`; loans for tenants not selected that step expire
+    /// unused (the skew they answered is gone by the following
+    /// boundary).
+    loans: BTreeMap<usize, u64>,
 }
 
 impl FusedScheduler {
@@ -442,8 +456,8 @@ impl FusedScheduler {
         let router = Router::new(
             cfg.engine,
             cfg.crossover,
-            CpuModel::default(),
-            GpuModel::default(),
+            CpuModel::default().with_speed(cfg.device_speed),
+            GpuModel::default().with_speed(cfg.device_speed),
         );
         FusedScheduler {
             cfg,
@@ -457,6 +471,7 @@ impl FusedScheduler {
             on_complete: None,
             last_step: None,
             router,
+            loans: BTreeMap::new(),
         }
     }
 
@@ -757,6 +772,18 @@ impl FusedScheduler {
         self.stats.work += total_live;
         self.stats.peak_window = self.stats.peak_window.max(frame.window());
         self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+        // drain slice loans: a loan binds to the lender's *next* front,
+        // so it only prices a rider actually selected this step (and is
+        // clamped to what the rider really shipped); loans whose tenant
+        // sat out expire — the boundary that planned them has passed
+        let mut loans = std::mem::take(&mut self.loans);
+        let mut stolen: Vec<u64> = views
+            .iter()
+            .map(|v| loans.remove(&v.job.0).map_or(0, |l| l.min(v.live)))
+            .collect();
+        if stolen.iter().all(|&s| s == 0) {
+            stolen = Vec::new();
+        }
         let st = StepTrace {
             live_per_job: views.iter().map(|v| v.live).collect(),
             jobs: views.iter().map(|v| v.job).collect(),
@@ -768,10 +795,15 @@ impl FusedScheduler {
                 .sum(),
             pending: self.pending.len(),
             engines: routes.clone(),
+            stolen,
         };
         if self.cfg.trace {
             self.stats.trace.push(st.clone());
         }
+        debug_assert!(
+            st.stolen.is_empty() || st.stolen.len() == st.jobs.len(),
+            "loans must parallel the rider list"
+        );
         self.last_step = Some(st);
 
         // plain copies of what the rider loop needs, so the front
@@ -889,6 +921,21 @@ impl FusedScheduler {
     /// the shard group's per-boundary window sample.
     pub fn last_step(&self) -> Option<&StepTrace> {
         self.last_step.as_ref()
+    }
+
+    /// Lend `lanes` of `job`'s next front to another device for one
+    /// epoch — the slice-stealing seam [`crate::shard::ShardGroup`]
+    /// plans at a group boundary. The loan is pure *pricing*: this
+    /// scheduler still executes the whole front (results stay
+    /// bit-identical to solo), but the next [`StepTrace`] reports the
+    /// lent lanes in [`StepTrace::stolen`] so every cost site bills
+    /// them to the thief instead. Re-lending the same job before it
+    /// steps replaces the loan; an unselected tenant's loan expires
+    /// with the step that skipped it.
+    pub fn lend(&mut self, job: JobId, lanes: u64) {
+        if lanes > 0 {
+            self.loans.insert(job.0, lanes);
+        }
     }
 
     pub fn finished(&self) -> &[FinishedJob] {

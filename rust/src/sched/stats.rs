@@ -65,6 +65,28 @@ pub struct StepTrace {
     /// a legacy all-GPU trace — [`engine_split_us`] treats the two
     /// identically, so pre-hybrid cost arithmetic is unchanged.
     pub engines: Vec<EngineKind>,
+    /// Lanes of each rider's front lent to another group member for
+    /// this epoch (parallel to `jobs`; empty = no loans, the common
+    /// case). A loan only changes *pricing*: the victim's modeled cost
+    /// drops by the lent lanes, the thief's device pays for running
+    /// them ([`crate::shard`] slice stealing). Execution still happens
+    /// on the home scheduler, which is what keeps results bit-identical
+    /// to solo.
+    pub stolen: Vec<u64>,
+}
+
+impl StepTrace {
+    /// Rider `i`'s lanes lent out this step (0 when no loans).
+    pub fn stolen_of(&self, i: usize) -> u64 {
+        self.stolen.get(i).copied().unwrap_or(0)
+    }
+
+    /// Rider `i`'s live lanes net of loans — what its home device is
+    /// priced for.
+    pub fn kept_of(&self, i: usize) -> u64 {
+        let live = self.live_per_job.get(i).copied().unwrap_or(0);
+        live.saturating_sub(self.stolen_of(i))
+    }
 }
 
 /// Whole-run scheduler totals.
@@ -109,6 +131,11 @@ pub struct FusedStats {
 /// at full launch cost. A trace with no `engines` (pre-hybrid) is
 /// all-GPU, making this reduce *exactly* to the original
 /// `fused_epoch_us + (launches-1)·launch_us` arithmetic.
+///
+/// Lanes lent to another device ([`StepTrace::stolen`]) are priced on
+/// the thief's device, not here: each rider contributes only its kept
+/// lanes. With no loans this is the full live front — the legacy
+/// arithmetic, unchanged.
 pub fn engine_split_us(
     gpu: &GpuModel,
     cpu: &CpuModel,
@@ -119,14 +146,15 @@ pub fn engine_split_us(
     let mut gpu_lives: Vec<u64> = Vec::new();
     if s.engines.is_empty() {
         any_gpu = !s.live_per_job.is_empty();
-        gpu_lives.extend_from_slice(&s.live_per_job);
+        gpu_lives
+            .extend((0..s.live_per_job.len()).map(|i| s.kept_of(i)));
     } else {
-        for (k, &live) in s.engines.iter().zip(&s.live_per_job) {
+        for (i, k) in s.engines.iter().enumerate() {
             match k {
-                EngineKind::Cpu => cpu_us += cpu.epoch_us(live),
+                EngineKind::Cpu => cpu_us += cpu.epoch_us(s.kept_of(i)),
                 EngineKind::Gpu => {
                     any_gpu = true;
-                    gpu_lives.push(live);
+                    gpu_lives.push(s.kept_of(i));
                 }
             }
         }

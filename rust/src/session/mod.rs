@@ -58,7 +58,8 @@ use crate::sched::{
     JobLimits, JobSpec, SchedConfig,
 };
 use crate::shard::{
-    DeviceId, PlacementKind, RebalanceCfg, ShardConfig, ShardGroup, ShardStats,
+    DeviceId, GroupSpec, PlacementKind, RebalanceCfg, ShardConfig,
+    ShardGroup, ShardStats,
 };
 use crate::simt::{DeviceGroup, GpuModel};
 use crate::trace::{Checker, InvariantMode, Record, Streamer};
@@ -201,6 +202,7 @@ pub struct SessionBuilder {
     sink: Option<(usize, Box<dyn FnMut(&str)>)>,
     invariants: InvariantMode,
     engines: Vec<EngineMode>,
+    speeds: Vec<f64>,
 }
 
 impl Default for SessionBuilder {
@@ -216,6 +218,7 @@ impl Default for SessionBuilder {
             sink: None,
             invariants: InvariantMode::Off,
             engines: Vec::new(),
+            speeds: Vec::new(),
         }
     }
 }
@@ -286,13 +289,60 @@ impl SessionBuilder {
     /// Per-device engine overrides for the sharded backend (mixed
     /// device groups): `modes[d]` pins device `d`; devices past the
     /// end inherit the session-wide [`SessionBuilder::engine`].
+    /// [`SessionBuilder::build`] rejects a list longer than the device
+    /// count. Deprecated in favor of [`SessionBuilder::group`], which
+    /// names every member's engine and speed together; kept as a thin
+    /// wrapper over the same field.
     pub fn device_engines(mut self, modes: Vec<EngineMode>) -> Self {
         self.engines = modes;
         self
     }
 
+    /// Per-device SKU speed multipliers (1.0 = the reference part;
+    /// 0.5 a half-speed bin): `speeds[d]` scales device `d`'s cost
+    /// models for scheduling, rebalancing, stealing, and trace
+    /// pricing. Empty (the default) means a uniform group, which
+    /// prices exactly like before the heterogeneous extension. A
+    /// non-empty list must name every device —
+    /// [`SessionBuilder::build`] rejects a length mismatch. Prefer
+    /// [`SessionBuilder::group`], which carries speeds and engines
+    /// together.
+    pub fn device_speeds(mut self, speeds: Vec<f64>) -> Self {
+        self.speeds = speeds;
+        self
+    }
+
+    /// Configure the whole device group from one [`GroupSpec`] — the
+    /// unified heterogeneous-group entry point (`--group` on the CLI;
+    /// grammar at [`crate::shard::spec`]). Sets the device count,
+    /// per-member engines and SKU speeds, placement, rebalancing, and
+    /// (when the spec carries one) the `Auto`-routing crossover margin
+    /// in a single call; the member list *is* the group, so the
+    /// per-knob length mismatches [`SessionBuilder::build`] checks for
+    /// cannot arise. The older [`SessionBuilder::devices`] /
+    /// [`SessionBuilder::device_engines`] /
+    /// [`SessionBuilder::device_speeds`] knobs remain as thin wrappers
+    /// over the same fields.
+    pub fn group(mut self, spec: GroupSpec) -> Self {
+        self.devices = spec.devices().max(1);
+        self.engines = spec.engines();
+        self.speeds = spec.speeds();
+        self.placement = spec.placement;
+        self.rebalance = spec.rebalance.clone();
+        if let Some(margin) = spec.crossover {
+            self.sched.crossover = margin;
+        }
+        if let Some(m) = spec.members.first() {
+            // a single-member "group" serves from the fused backend,
+            // which reads the session-wide engine, not the overrides
+            self.sched.engine = m.engine;
+        }
+        self
+    }
+
     /// Device-group size: 1 serves from one fused scheduler, N > 1
-    /// shards tenants across a lock-step group.
+    /// shards tenants across a lock-step group. Prefer
+    /// [`SessionBuilder::group`] for heterogeneous groups.
     pub fn devices(mut self, n: usize) -> Self {
         self.devices = n.max(1);
         self
@@ -385,6 +435,39 @@ impl SessionBuilder {
     /// counts are still recorded per tenant by its coordinator's
     /// `RunCtx` as the artifacts actually execute.
     pub fn build(self) -> Result<Session> {
+        // the per-knob group description can disagree with itself —
+        // the GroupSpec path cannot, but the deprecated wrappers can,
+        // so the mismatch is a structured build error, not a silent
+        // truncation or an index panic later
+        if self.engines.len() > self.devices {
+            bail!(
+                "device_engines names {} engine override(s) for a group \
+                 of {} device(s); every override must address a real \
+                 member (prefer SessionBuilder::group, which cannot \
+                 mismatch)",
+                self.engines.len(),
+                self.devices
+            );
+        }
+        if !self.speeds.is_empty() && self.speeds.len() != self.devices {
+            bail!(
+                "device_speeds lists {} multiplier(s) for a group of {} \
+                 device(s); a non-empty speeds list must name every \
+                 member exactly once (prefer SessionBuilder::group, \
+                 which cannot mismatch)",
+                self.speeds.len(),
+                self.devices
+            );
+        }
+        if let Some(s) = self
+            .speeds
+            .iter()
+            .find(|s| !s.is_finite() || **s <= 0.0)
+        {
+            bail!(
+                "device speed multiplier {s} is not a finite value > 0"
+            );
+        }
         let mut sched = self.sched;
         if let Some(art) = &self.artifacts {
             sched.fused_kernel = false;
@@ -401,8 +484,13 @@ impl SessionBuilder {
                 .context("artifact manifest exposes no usable window buckets")?;
             sched.buckets = buckets;
         }
-        let want_shard =
-            self.devices > 1 || self.fault.is_some() || self.sink.is_some();
+        // non-uniform SKU speeds need the group seam: pricing and the
+        // steal/LPT planners read the speeds off the shard model
+        let hetero = self.speeds.iter().any(|&s| s != 1.0);
+        let want_shard = self.devices > 1
+            || self.fault.is_some()
+            || self.sink.is_some()
+            || hetero;
         let backend = if want_shard {
             Backend::Sharded(ShardGroup::new(ShardConfig {
                 devices: self.devices,
@@ -412,14 +500,16 @@ impl SessionBuilder {
                 fault: self.fault,
                 retry: self.retry,
                 engines: self.engines,
+                speeds: self.speeds.clone(),
             }))
         } else {
             Backend::Fused(FusedScheduler::new(sched))
         };
-        let model = DeviceGroup::new(GpuModel::default(), self.devices);
+        let model = DeviceGroup::new(GpuModel::default(), self.devices)
+            .with_speeds(self.speeds);
         let mode = self.invariants;
         let tracer = self.sink.map(|(window, sink)| Recorder {
-            streamer: Streamer::new(model, window),
+            streamer: Streamer::new(model.clone(), window),
             checker: Checker::new(model, window),
             mode,
             registry: Registry::new(),
@@ -1187,6 +1277,76 @@ mod tests {
             "clean run must not report violations"
         );
         assert_eq!(s.results().len(), 3);
+    }
+
+    #[test]
+    fn build_rejects_mismatched_group_descriptions() {
+        // more engine overrides than devices
+        let e = Session::builder()
+            .devices(2)
+            .device_engines(vec![EngineMode::Gpu; 3])
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("3 engine override(s)"), "{e}");
+        assert!(e.contains("2 device(s)"), "{e}");
+        // a non-empty speeds list of the wrong length
+        let e = Session::builder()
+            .devices(3)
+            .device_speeds(vec![1.0, 0.5])
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("2 multiplier(s)"), "{e}");
+        assert!(e.contains("3 device(s)"), "{e}");
+        // degenerate speed values
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let e = Session::builder()
+                .devices(1)
+                .device_speeds(vec![bad])
+                .build()
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("finite value > 0"), "{bad}: {e}");
+        }
+        // the matched descriptions still build
+        assert!(Session::builder()
+            .devices(2)
+            .device_engines(vec![EngineMode::Gpu, EngineMode::Cpu])
+            .device_speeds(vec![1.0, 0.5])
+            .build()
+            .is_ok());
+        // the GroupSpec path cannot mismatch by construction
+        let spec = crate::shard::GroupSpec::parse("gpu:1.0,gpu:0.5,cpu")
+            .unwrap();
+        assert!(Session::builder().group(spec).build().is_ok());
+    }
+
+    #[test]
+    fn a_group_spec_session_serves_and_verifies() {
+        let spec =
+            crate::shard::GroupSpec::parse("gpu,gpu:0.5,cpu").unwrap();
+        let mut s = Session::builder().group(spec).build().unwrap();
+        for tok in ["fib:12", "mergesort:64", "fib:10", "nqueens:5"] {
+            s.submit_spec(tok).unwrap();
+        }
+        s.drain().unwrap();
+        assert_eq!(s.devices(), 3);
+        assert_eq!(s.results().len(), 4);
+        for r in s.results() {
+            assert_eq!(r.verified(), Some(true), "{}", r.job.label);
+        }
+        // a single hetero member forces the group seam so the SKU
+        // multiplier actually prices the run
+        let spec = crate::shard::GroupSpec::parse("gpu:0.5").unwrap();
+        let mut s = Session::builder().group(spec).build().unwrap();
+        s.submit_spec("fib:10").unwrap();
+        s.drain().unwrap();
+        assert!(
+            s.shard_stats().is_some(),
+            "hetero speeds must route to the sharded backend"
+        );
+        assert_eq!(s.results().len(), 1);
     }
 
     #[test]

@@ -27,10 +27,12 @@
 //! tenant at a quiescent boundary, so results stay bit-identical to
 //! solo runs.
 
+use crate::hybrid::EngineMode;
 use crate::sched::{FusedScheduler, JobId};
 use crate::simt::{DeviceGroup, GpuModel};
 use crate::trace::CriticalWindow;
 
+use super::stats::steal_cost_us;
 use super::{DeviceId, GroupStepTrace};
 
 /// How the rebalancer picks its migrant once the skew trigger fires.
@@ -45,6 +47,13 @@ pub enum RebalanceMode {
     /// passes the same gap-shrinking guards; the static pick
     /// otherwise.
     CriticalPath,
+    /// Longest-processing-time assignment over speed-normalized tenant
+    /// loads: when the skew trigger fires, re-pack *every* tenant onto
+    /// the live devices (largest first onto the least-finishing
+    /// device) and emit the whole set of moves that realizes the new
+    /// assignment — executed only when it strictly shrinks the modeled
+    /// makespan ([`Rebalancer::plan_all`]).
+    Lpt,
 }
 
 /// Rebalancer tunables.
@@ -62,6 +71,13 @@ pub struct RebalanceCfg {
     /// Critical-path attribution window (group epochs) under
     /// [`RebalanceMode::CriticalPath`]; clamped to ≥ 1.
     pub window: usize,
+    /// Allow one-epoch slice steals at group boundaries
+    /// ([`Rebalancer::plan_steal`]): an under-loaded member runs half
+    /// of the widest front on the most loaded member for a single
+    /// epoch, guarded by a strict never-worse modeled envelope against
+    /// both no-action and whole-tenant migration. Off by default —
+    /// steals change pricing attribution, never results.
+    pub steal: bool,
 }
 
 impl Default for RebalanceCfg {
@@ -72,6 +88,7 @@ impl Default for RebalanceCfg {
             cooldown: 2,
             mode: RebalanceMode::SkewThreshold,
             window: 8,
+            steal: false,
         }
     }
 }
@@ -82,6 +99,17 @@ pub struct Migration {
     pub job: JobId,
     pub from: DeviceId,
     pub to: DeviceId,
+}
+
+/// A planned one-epoch slice loan: `lanes` of `job`'s front (resident
+/// on `from`) are *priced* on `to` for the next epoch via
+/// [`crate::sched::FusedScheduler::lend`]. Execution never moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealPlan {
+    pub job: JobId,
+    pub from: DeviceId,
+    pub to: DeviceId,
+    pub lanes: u64,
 }
 
 /// Plans at most one migration per epoch boundary.
@@ -234,6 +262,220 @@ impl Rebalancer {
         self.steps_since = 0;
         Some(Migration { job, from: DeviceId(src), to: DeviceId(dst) })
     }
+
+    /// Plan every migration for this boundary. Under
+    /// [`RebalanceMode::Lpt`] this is a longest-processing-time
+    /// re-pack of all tenants over the live devices (speed-normalized,
+    /// executed only when it strictly shrinks the modeled makespan);
+    /// the other modes keep their single-move [`Rebalancer::plan`].
+    pub fn plan_all(
+        &mut self,
+        loads: &[u64],
+        devs: &[FusedScheduler],
+        alive: &[bool],
+        speeds: &[f64],
+    ) -> Vec<Migration> {
+        if self.cfg.mode == RebalanceMode::Lpt {
+            self.plan_lpt(loads, devs, alive, speeds)
+        } else {
+            self.plan(loads, devs, alive, speeds).into_iter().collect()
+        }
+    }
+
+    fn plan_lpt(
+        &mut self,
+        loads: &[u64],
+        devs: &[FusedScheduler],
+        alive: &[bool],
+        speeds: &[f64],
+    ) -> Vec<Migration> {
+        let spd = |d: usize| speeds.get(d).copied().unwrap_or(1.0).max(1e-9);
+        let live: Vec<usize> = (0..loads.len())
+            .filter(|&d| alive.get(d).copied().unwrap_or(true))
+            .collect();
+        if !self.cfg.enabled || live.len() < 2 {
+            return Vec::new();
+        }
+        if self.steps_since < self.cfg.cooldown {
+            self.steps_since += 1;
+            return Vec::new();
+        }
+        let total: u64 = live.iter().map(|&d| loads[d]).sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        // same trigger as the single-move modes: only act on real skew
+        let t = |d: usize| loads[d] as f64 / spd(d);
+        let makespan0 =
+            live.iter().map(|&d| t(d)).fold(0.0, f64::max);
+        let mean = live.iter().map(|&d| t(d)).sum::<f64>() / live.len() as f64;
+        if makespan0 <= mean * self.cfg.skew_threshold.max(1.0) {
+            return Vec::new();
+        }
+        // every tenant, largest (speed-normalized) first; ties resolve
+        // by job id so the assignment is deterministic
+        let mut items: Vec<(JobId, u64, usize)> = live
+            .iter()
+            .flat_map(|&d| {
+                devs[d]
+                    .tenant_loads()
+                    .into_iter()
+                    .filter(|&(_, l)| l > 0)
+                    .map(move |(id, l)| (id, l, d))
+            })
+            .collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0 .0.cmp(&b.0 .0)));
+        let mut time = vec![0.0_f64; loads.len()];
+        let mut assign: Vec<(JobId, u64, usize, usize)> = Vec::new();
+        for &(id, l, cur) in &items {
+            let mut best = live[0];
+            for &d in &live[1..] {
+                let (a, b) =
+                    (time[d] + l as f64 / spd(d), time[best] + l as f64 / spd(best));
+                if a + 1e-9 < b
+                    || ((a - b).abs() <= 1e-9 && d == cur && best != cur)
+                {
+                    best = d;
+                }
+            }
+            time[best] += l as f64 / spd(best);
+            assign.push((id, l, cur, best));
+        }
+        // only execute a strictly better packing — LPT is a 4/3-OPT
+        // heuristic, and a tie repacked for nothing would just churn
+        let makespan1 = live.iter().map(|&d| time[d]).fold(0.0, f64::max);
+        if makespan1 + 1e-9 >= makespan0 {
+            return Vec::new();
+        }
+        // realize the diff, bounded by each destination's headroom (a
+        // migrant parked in pending runs nothing and skews accounting)
+        let mut headroom: Vec<Option<u64>> =
+            (0..loads.len()).map(|d| devs[d].admit_headroom()).collect();
+        let mut moves = Vec::new();
+        for (id, l, cur, want) in assign {
+            if want == cur {
+                continue;
+            }
+            let Some(room) = headroom[want] else { continue };
+            if l > room {
+                continue;
+            }
+            headroom[want] = Some(room - l);
+            moves.push(Migration {
+                job: id,
+                from: DeviceId(cur),
+                to: DeviceId(want),
+            });
+        }
+        if !moves.is_empty() {
+            self.steps_since = 0;
+        }
+        moves
+    }
+
+    /// Whether the config allows slice steals at all (cheap pre-check
+    /// the shard group makes before scanning loads).
+    pub fn steals_enabled(&self) -> bool {
+        self.cfg.enabled && self.cfg.steal
+    }
+
+    /// Plan at most one one-epoch slice steal for the *upcoming* group
+    /// epoch: the most expensive member (modeled µs for its current
+    /// lanes on its own engine and SKU) lends half of its widest
+    /// tenant front to the cheapest member. Fires only inside a strict
+    /// never-worse envelope — the modeled group step with the steal
+    /// must beat doing nothing *and* be no worse than migrating that
+    /// whole tenant (state transfer priced at
+    /// [`crate::simt::MIGRATE_STATE_FACTOR`]× the slice rate) — so a
+    /// realized steal never models worse than the migration it
+    /// displaced. No cooldown: a loan lasts one epoch and leaves no
+    /// state behind.
+    pub fn plan_steal(
+        &self,
+        loads: &[u64],
+        devs: &[FusedScheduler],
+        alive: &[bool],
+        engines: &[EngineMode],
+        model: &DeviceGroup,
+    ) -> Option<StealPlan> {
+        if !self.steals_enabled() {
+            return None;
+        }
+        let live: Vec<usize> = (0..loads.len())
+            .filter(|&d| alive.get(d).copied().unwrap_or(true))
+            .collect();
+        if live.len() < 2 {
+            return None;
+        }
+        let mode =
+            |d: usize| engines.get(d).copied().unwrap_or(EngineMode::Gpu);
+        // a member's modeled epoch cost for `lanes` on its own scaled
+        // models — Auto members run whichever side is cheaper
+        let est = |d: usize, lanes: u64| -> f64 {
+            if lanes == 0 {
+                return 0.0;
+            }
+            let (gm, cm) = model.member(d);
+            match mode(d) {
+                EngineMode::Gpu => gm.fused_epoch_us(&[lanes]),
+                EngineMode::Cpu => cm.epoch_us(lanes),
+                EngineMode::Auto => {
+                    gm.fused_epoch_us(&[lanes]).min(cm.epoch_us(lanes))
+                }
+            }
+        };
+        let mut src = live[0];
+        let mut dst = live[0];
+        for &d in &live {
+            if est(d, loads[d]) > est(src, loads[src]) {
+                src = d;
+            }
+            if est(d, loads[d]) < est(dst, loads[dst]) {
+                dst = d;
+            }
+        }
+        if src == dst {
+            return None;
+        }
+        // victim slice: half of the widest front on the straggler
+        // (ties take the lowest job id — deterministic)
+        let (job, front) = devs[src]
+            .tenant_loads()
+            .into_iter()
+            .max_by_key(|&(id, l)| (l, std::cmp::Reverse(id.0)))?;
+        if front < 2 {
+            return None;
+        }
+        let slice = front / 2;
+        let total = |f: &dyn Fn(usize) -> f64| {
+            live.iter().map(|&d| f(d)).fold(0.0, f64::max)
+        };
+        let no_action = total(&|d| est(d, loads[d]));
+        let stolen = total(&|d| {
+            if d == src {
+                est(d, loads[d] - slice)
+            } else if d == dst {
+                est(d, loads[d]) + steal_cost_us(model, mode(d), d, slice)
+            } else {
+                est(d, loads[d])
+            }
+        });
+        let migrated = total(&|d| {
+            if d == src {
+                est(d, loads[d] - front)
+            } else if d == dst {
+                est(d, loads[d] + front) + model.migrate_xfer_us(front)
+            } else {
+                est(d, loads[d])
+            }
+        });
+        (stolen < no_action && stolen <= migrated).then_some(StealPlan {
+            job,
+            from: DeviceId(src),
+            to: DeviceId(dst),
+            lanes: slice,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -361,12 +603,14 @@ mod tests {
             launches: 1,
             solo_launches: jobs.len() as u64,
             pending: 0,
+            stolen: Vec::new(),
             engines: Vec::new(),
         };
         GroupStepTrace {
             per_dev: vec![Some(st(d0)), Some(st(d1))],
             alive: 2,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: Vec::new(),
@@ -438,6 +682,127 @@ mod tests {
             .expect("speed skew must trigger");
         assert_eq!(m.from, DeviceId(1));
         assert_eq!(m.to, DeviceId(0));
+    }
+
+    #[test]
+    fn lpt_spreads_tenants_and_avoids_slow_members() {
+        let bs = builds(&["fib:10", "fib:10", "fib:10", "fib:10"]);
+        let devs =
+            vec![dev_with(&bs, 0), dev_with(&[], 4), dev_with(&[], 5)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            mode: RebalanceMode::Lpt,
+            cooldown: 0,
+            ..Default::default()
+        });
+        let moves = r.plan_all(&[4, 0, 0], &devs, &[true; 3], &ONE);
+        assert_eq!(moves.len(), 2, "{moves:?}");
+        assert!(moves.iter().all(|m| m.from == DeviceId(0)));
+        let mut tos: Vec<usize> = moves.iter().map(|m| m.to.0).collect();
+        tos.sort_unstable();
+        assert_eq!(tos, vec![1, 2], "one tenant lands on each idle member");
+
+        // a 4x-slower third member attracts nothing from the re-pack
+        let mut r = Rebalancer::new(RebalanceCfg {
+            mode: RebalanceMode::Lpt,
+            cooldown: 0,
+            ..Default::default()
+        });
+        let moves =
+            r.plan_all(&[4, 0, 0], &devs, &[true; 3], &[1.0, 1.0, 0.25]);
+        assert!(!moves.is_empty());
+        assert!(moves.iter().all(|m| m.to != DeviceId(2)), "{moves:?}");
+
+        // single-move modes keep their one-migration contract
+        let mut r = Rebalancer::new(RebalanceCfg {
+            cooldown: 0,
+            ..Default::default()
+        });
+        assert!(r.plan_all(&[4, 0, 0], &devs, &[true; 3], &ONE).len() <= 1);
+    }
+
+    #[test]
+    fn lpt_leaves_balanced_groups_alone() {
+        let bs = builds(&["fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs[..1], 0), dev_with(&bs[1..], 1)];
+        let mut r = Rebalancer::new(RebalanceCfg {
+            mode: RebalanceMode::Lpt,
+            cooldown: 0,
+            ..Default::default()
+        });
+        assert!(r.plan_all(&[100, 100], &devs, &[true, true], &ONE[..2]).is_empty());
+    }
+
+    #[test]
+    fn slice_steal_fires_inside_the_never_worse_envelope() {
+        let b = builds(&["mergesort:4096"]);
+        let mut wide = FusedScheduler::new(SchedConfig::default());
+        wide.admit_tenant(Tenant::from_build(JobId(0), &b[0]));
+        for _ in 0..10_000 {
+            if wide.live_lanes() >= 1024 {
+                break;
+            }
+            wide.step().unwrap();
+        }
+        assert!(wide.live_lanes() >= 1024, "front must widen for the test");
+        let devs = vec![wide, FusedScheduler::new(SchedConfig::default())];
+        let loads = vec![devs[0].live_lanes(), 0];
+        let r = Rebalancer::new(RebalanceCfg {
+            steal: true,
+            ..Default::default()
+        });
+        // the wide front lives on a 4x-slower SKU; the fast member idles
+        let model = DeviceGroup::new(GpuModel::default(), 2)
+            .with_speeds(vec![0.25, 1.0]);
+        let engines = [EngineMode::Gpu, EngineMode::Gpu];
+        let p = r
+            .plan_steal(&loads, &devs, &[true, true], &engines, &model)
+            .expect("a wide front on the slow member must lend a slice");
+        assert_eq!(p.from, DeviceId(0));
+        assert_eq!(p.to, DeviceId(1));
+        assert_eq!(p.lanes, loads[0] / 2);
+        // re-derive the envelope: stealing must model strictly better
+        // than no action and no worse than whole-tenant migration
+        let (gm0, _) = model.member(0);
+        let (gm1, _) = model.member(1);
+        let no_action = gm0.fused_epoch_us(&[loads[0]]);
+        let stolen = gm0.fused_epoch_us(&[loads[0] - p.lanes]).max(
+            gm1.fused_epoch_us(&[p.lanes]) + model.steal_xfer_us(p.lanes),
+        );
+        let migrated = gm1.fused_epoch_us(&[loads[0]])
+            + model.migrate_xfer_us(loads[0]);
+        assert!(stolen < no_action, "{stolen} vs {no_action}");
+        assert!(stolen <= migrated, "{stolen} vs {migrated}");
+
+        // same group, steals not opted in: the planner stays silent
+        let off = Rebalancer::new(RebalanceCfg::default());
+        assert!(!off.steals_enabled());
+        assert_eq!(
+            off.plan_steal(&loads, &devs, &[true, true], &engines, &model),
+            None
+        );
+    }
+
+    #[test]
+    fn balanced_or_narrow_groups_never_steal() {
+        let bs = builds(&["fib:10", "fib:10"]);
+        let devs = vec![dev_with(&bs[..1], 0), dev_with(&bs[1..], 1)];
+        let r = Rebalancer::new(RebalanceCfg {
+            steal: true,
+            ..Default::default()
+        });
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let engines = [EngineMode::Gpu, EngineMode::Gpu];
+        // equal costs: no (src, dst) pair to lend across
+        assert_eq!(
+            r.plan_steal(&[100, 100], &devs, &[true, true], &engines, &model),
+            None
+        );
+        // fresh fibs are 1-lane fronts: nothing worth slicing, and a
+        // uniform GPU pair would pay an extra launch + transfer anyway
+        assert_eq!(
+            r.plan_steal(&[1, 0], &devs, &[true, true], &engines, &model),
+            None
+        );
     }
 
     #[test]

@@ -46,13 +46,18 @@
 
 mod balance;
 mod place;
+mod spec;
 mod stats;
 
-pub use balance::{Migration, RebalanceCfg, RebalanceMode, Rebalancer};
+pub use balance::{
+    Migration, RebalanceCfg, RebalanceMode, Rebalancer, StealPlan,
+};
 pub use place::{Placement, PlacementKind};
+pub use spec::{GroupSpec, MemberSpec};
 pub use stats::{
-    group_step_cost_us, modeled_group_us, received_evacuations,
-    EvacuationEvent, GroupStepTrace, MigrationEvent, ShardStats,
+    group_dev_us, group_step_cost_us, modeled_group_us,
+    received_evacuations, steal_cost_us, EvacuationEvent, GroupStepTrace,
+    MigrationEvent, ShardStats, StealEvent,
 };
 
 use anyhow::{bail, Result};
@@ -64,7 +69,7 @@ use crate::sched::{
     FinishedJob, FusedScheduler, FusedStats, JobBuild, JobId, JobLimits,
     SchedConfig, Tenant,
 };
-use crate::simt::GpuModel;
+use crate::simt::{DeviceGroup, GpuModel};
 
 /// A device's index within its group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -100,6 +105,14 @@ pub struct ShardConfig {
     /// placement/rebalancing weigh each device's modeled speed
     /// ([`crate::hybrid::device_speed`]).
     pub engines: Vec<EngineMode>,
+    /// Per-device SKU speed multipliers: `speeds[d]` scales device
+    /// `d`'s model instances (1.0 = the reference part; 0.5 a
+    /// half-speed bin — mixed SKUs, big.LITTLE). Devices past the end
+    /// (or an empty vec) are reference-speed, so the default prices
+    /// exactly like a homogeneous group. Composes with `engines`:
+    /// a device's effective speed is its engine's modeled speed times
+    /// this multiplier.
+    pub speeds: Vec<f64>,
 }
 
 impl Default for ShardConfig {
@@ -112,6 +125,7 @@ impl Default for ShardConfig {
             fault: None,
             retry: RetryCfg::default(),
             engines: Vec::new(),
+            speeds: Vec::new(),
         }
     }
 }
@@ -144,9 +158,13 @@ pub struct ShardGroup {
     retries_this_step: u64,
     /// Engine mode per device (the resolved `ShardConfig::engines`).
     engine_modes: Vec<EngineMode>,
-    /// Relative modeled speed per device (1.0 = fastest in the group) —
-    /// uniform groups are all-1.0, so speed weighting changes nothing.
+    /// Relative modeled speed per device (1.0 = fastest in the group),
+    /// combining engine speed and the SKU multiplier — uniform groups
+    /// are all-1.0, so speed weighting changes nothing.
     speeds: Vec<f64>,
+    /// The group cost model (per-member SKU multipliers attached) the
+    /// steal planner prices its never-worse envelope with.
+    model: DeviceGroup,
 }
 
 impl ShardGroup {
@@ -155,11 +173,15 @@ impl ShardGroup {
         let engine_modes: Vec<EngineMode> = (0..n)
             .map(|d| cfg.engines.get(d).copied().unwrap_or(cfg.sched.engine))
             .collect();
+        let sku =
+            |d: usize| cfg.speeds.get(d).copied().unwrap_or(1.0).max(1e-9);
         let devs: Vec<FusedScheduler> = engine_modes
             .iter()
-            .map(|&m| {
+            .enumerate()
+            .map(|(d, &m)| {
                 FusedScheduler::new(SchedConfig {
                     engine: m,
+                    device_speed: sku(d),
                     ..cfg.sched.clone()
                 })
             })
@@ -168,10 +190,12 @@ impl ShardGroup {
         let cpu = CpuModel::default();
         let raw: Vec<f64> = engine_modes
             .iter()
-            .map(|&m| device_speed(m, &gpu, &cpu))
+            .enumerate()
+            .map(|(d, &m)| device_speed(m, &gpu, &cpu) * sku(d))
             .collect();
         let top = raw.iter().fold(0.0_f64, |a, &b| a.max(b)).max(1e-9);
         let speeds: Vec<f64> = raw.iter().map(|&s| (s / top).max(1e-9)).collect();
+        let model = DeviceGroup::new(gpu, n).with_speeds(cfg.speeds.clone());
         let mut fault = cfg.fault.unwrap_or_default();
         fault.events.sort_by_key(|e| e.at_step);
         ShardGroup {
@@ -190,6 +214,7 @@ impl ShardGroup {
             retries_this_step: 0,
             engine_modes,
             speeds,
+            model,
         }
     }
 
@@ -418,6 +443,25 @@ impl ShardGroup {
         if !self.has_work() {
             return Ok(false);
         }
+        // ---- pre-step: maybe lend a slice for this one epoch ----
+        // (planned on the fronts as they stand, before any device
+        // runs; the loan expires with the step whether or not the
+        // victim's scheduler selects the tenant)
+        let mut planned: Option<StealPlan> = None;
+        if self.alive_devices() > 1 && self.balancer.steals_enabled() {
+            let loads: Vec<u64> =
+                self.devs.iter().map(|d| d.live_lanes()).collect();
+            planned = self.balancer.plan_steal(
+                &loads,
+                &self.devs,
+                &self.alive,
+                &self.engine_modes,
+                &self.model,
+            );
+            if let Some(p) = planned {
+                self.devs[p.from.0].lend(p.job, p.lanes);
+            }
+        }
         let mut stepped = vec![false; self.devs.len()];
         for (d, dev) in self.devs.iter_mut().enumerate() {
             if dev.has_work() {
@@ -427,6 +471,28 @@ impl ShardGroup {
         }
         self.stats.group_steps += 1;
         self.stats.group_syncs += 1;
+        // confirm the loan against what the victim actually ran: the
+        // realized steal (possibly clipped to the tenant's live front)
+        // is what the trace prices on the thief
+        let mut steals = Vec::new();
+        if let Some(p) = planned {
+            if let Some(st) = self.devs[p.from.0].last_step() {
+                if let Some(i) = st.jobs.iter().position(|&j| j == p.job) {
+                    let lanes = st.stolen_of(i);
+                    if lanes > 0 {
+                        steals.push(StealEvent {
+                            step: self.stats.group_steps,
+                            job: p.job,
+                            from: p.from,
+                            to: p.to,
+                            lanes,
+                        });
+                    }
+                }
+            }
+        }
+        self.stats.steals += steals.len() as u64;
+        self.stats.steal_log.extend(steals.iter().copied());
         // always assemble this step's group-trace entry: the unbounded
         // accumulation in `stats.trace` stays gated on `trace`, but
         // the rebalancer observes every entry (its critical-path mode
@@ -447,6 +513,7 @@ impl ShardGroup {
             per_dev,
             alive: self.alive_devices(),
             evacuations: self.stats.evacuation_log[evac_mark..].to_vec(),
+            steals,
             retry_backoff_us: self.backoff_this_step,
             retries: self.retries_this_step,
             engines: self.engine_modes.clone(),
@@ -471,7 +538,7 @@ impl ShardGroup {
                 })
                 .collect();
             self.stats.note_imbalance(&live_loads);
-            if let Some(m) = self.balancer.plan(
+            for m in self.balancer.plan_all(
                 &loads,
                 &self.devs,
                 &self.alive,

@@ -1,0 +1,247 @@
+//! The unified heterogeneous-group specification: one value that
+//! names every member of a device group — engine and SKU speed —
+//! plus the placement and rebalancing policy the group runs under.
+//!
+//! Before this type a heterogeneous group was assembled from three
+//! parallel knobs (`devices`, `device_engines`, per-device speeds),
+//! which made it easy to describe a group that could not exist (more
+//! engine overrides than devices, a speeds list of the wrong length).
+//! [`GroupSpec`] is correct by construction: the member list *is* the
+//! group — its length is the device count, and each entry carries that
+//! member's engine and speed together.
+//!
+//! # Grammar (`trees … --group`)
+//!
+//! Comma-separated member tokens, one per device:
+//!
+//! ```text
+//! member  := engine [":" speed]
+//! engine  := "gpu" | "cpu" | "auto"
+//! speed   := finite float > 0     (default 1.0 — the reference SKU)
+//! ```
+//!
+//! `--group "gpu:1.0,gpu:0.5,cpu"` is a three-member group: a
+//! reference GPU, a half-speed GPU bin, and a CPU member at reference
+//! pool speed. Speeds are SKU multipliers relative to the reference
+//! part of the same engine; the engine's own modeled speed (a CPU
+//! member is slower than a GPU one on wide fronts) composes on top —
+//! see [`crate::hybrid::device_speed`].
+//!
+//! [`crate::session::SessionBuilder::group`] consumes a spec whole;
+//! the older `devices` / `device_engines` builder knobs remain as thin
+//! wrappers over the same fields.
+
+use anyhow::{bail, Result};
+
+use crate::hybrid::EngineMode;
+
+use super::{PlacementKind, RebalanceCfg};
+
+/// One device group member: its execution engine and SKU speed
+/// multiplier (1.0 = the reference part for that engine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemberSpec {
+    pub engine: EngineMode,
+    pub speed: f64,
+}
+
+impl MemberSpec {
+    /// A reference-speed member on `engine`.
+    pub fn new(engine: EngineMode) -> MemberSpec {
+        MemberSpec { engine, speed: 1.0 }
+    }
+
+    /// A member with an explicit SKU speed multiplier.
+    pub fn with_speed(engine: EngineMode, speed: f64) -> MemberSpec {
+        MemberSpec { engine, speed }
+    }
+
+    /// Parse one `engine[:speed]` token.
+    pub fn parse(tok: &str) -> Result<MemberSpec> {
+        let tok = tok.trim();
+        let (eng_tok, speed) = match tok.split_once(':') {
+            Some((e, s)) => {
+                let v = s.trim().parse::<f64>().ok().filter(|v| {
+                    v.is_finite() && *v > 0.0
+                });
+                let Some(v) = v else {
+                    bail!(
+                        "bad member speed {s:?} in {tok:?} \
+                         (want a finite multiplier > 0, e.g. gpu:0.5)"
+                    );
+                };
+                (e.trim(), v)
+            }
+            None => (tok, 1.0),
+        };
+        let engine = EngineMode::parse(eng_tok).map_err(|_| {
+            anyhow::anyhow!(
+                "bad member engine {eng_tok:?} in {tok:?} \
+                 (want gpu|cpu|auto, optionally :speed)"
+            )
+        })?;
+        Ok(MemberSpec { engine, speed })
+    }
+}
+
+impl std::fmt::Display for MemberSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if (self.speed - 1.0).abs() < 1e-12 {
+            write!(f, "{}", self.engine.name())
+        } else {
+            write!(f, "{}:{}", self.engine.name(), self.speed)
+        }
+    }
+}
+
+/// A whole device group, described member by member (see module docs
+/// for the `--group` grammar). The member list *is* the group: its
+/// length is the device count.
+#[derive(Debug, Clone)]
+pub struct GroupSpec {
+    pub members: Vec<MemberSpec>,
+    /// Initial placement policy for admitted tenants.
+    pub placement: PlacementKind,
+    /// Epoch-boundary rebalancing knobs (migrations, LPT re-packs,
+    /// slice steals).
+    pub rebalance: RebalanceCfg,
+    /// `Auto`-routing hysteresis margin override (`None` keeps the
+    /// scheduler default, [`crate::hybrid::DEFAULT_MARGIN`]).
+    pub crossover: Option<f64>,
+}
+
+impl GroupSpec {
+    /// A group of `members` under default placement and rebalancing.
+    pub fn new(members: Vec<MemberSpec>) -> GroupSpec {
+        GroupSpec {
+            members,
+            placement: PlacementKind::RoundRobin,
+            rebalance: RebalanceCfg::default(),
+            crossover: None,
+        }
+    }
+
+    /// A homogeneous group: `n` reference-speed members on `engine`.
+    pub fn uniform(n: usize, engine: EngineMode) -> GroupSpec {
+        GroupSpec::new(vec![MemberSpec::new(engine); n.max(1)])
+    }
+
+    /// Parse a comma-separated member list (`"gpu:1.0,gpu:0.5,cpu"`).
+    /// An empty list or an empty token between commas is a structured
+    /// error — a swallowed member is a device the operator thinks
+    /// exists.
+    pub fn parse(s: &str) -> Result<GroupSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("--group is empty (want e.g. \"gpu:1.0,gpu:0.5,cpu\")");
+        }
+        let mut members = Vec::new();
+        for tok in s.split(',') {
+            if tok.trim().is_empty() {
+                bail!(
+                    "empty member token in --group {s:?} \
+                     (a swallowed member is a device you think exists)"
+                );
+            }
+            members.push(MemberSpec::parse(tok)?);
+        }
+        Ok(GroupSpec::new(members))
+    }
+
+    pub fn with_placement(mut self, p: PlacementKind) -> GroupSpec {
+        self.placement = p;
+        self
+    }
+
+    pub fn with_rebalance(mut self, cfg: RebalanceCfg) -> GroupSpec {
+        self.rebalance = cfg;
+        self
+    }
+
+    pub fn with_crossover(mut self, margin: f64) -> GroupSpec {
+        self.crossover = Some(margin);
+        self
+    }
+
+    /// Device count — the member list's length.
+    pub fn devices(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Per-device engine modes, in member order.
+    pub fn engines(&self) -> Vec<EngineMode> {
+        self.members.iter().map(|m| m.engine).collect()
+    }
+
+    /// Per-device SKU speed multipliers, in member order.
+    pub fn speeds(&self) -> Vec<f64> {
+        self.members.iter().map(|m| m.speed).collect()
+    }
+}
+
+impl std::fmt::Display for GroupSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, m) in self.members.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{m}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_documented_grammar_parses() {
+        let g = GroupSpec::parse("gpu:1.0,gpu:0.5,cpu").unwrap();
+        assert_eq!(g.devices(), 3);
+        assert_eq!(
+            g.engines(),
+            vec![EngineMode::Gpu, EngineMode::Gpu, EngineMode::Cpu]
+        );
+        assert_eq!(g.speeds(), vec![1.0, 0.5, 1.0]);
+        // whitespace around tokens and separators is tolerated
+        let g = GroupSpec::parse(" auto : 2 , cpu:0.25 ").unwrap();
+        assert_eq!(g.engines(), vec![EngineMode::Auto, EngineMode::Cpu]);
+        assert_eq!(g.speeds(), vec![2.0, 0.25]);
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for s in ["gpu", "gpu:0.5,cpu", "auto:2,gpu:0.25,cpu"] {
+            let g = GroupSpec::parse(s).unwrap();
+            let back = GroupSpec::parse(&g.to_string()).unwrap();
+            assert_eq!(g.members, back.members, "{s}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_structured_errors() {
+        for (bad, needle) in [
+            ("", "--group is empty"),
+            ("gpu,,cpu", "empty member token"),
+            ("tpu", "bad member engine"),
+            ("gpu:fast", "bad member speed"),
+            ("gpu:0", "bad member speed"),
+            ("gpu:-1", "bad member speed"),
+            ("gpu:inf", "bad member speed"),
+            ("gpu:nan", "bad member speed"),
+        ] {
+            let e = GroupSpec::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(needle), "{bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn uniform_groups_are_reference_speed() {
+        let g = GroupSpec::uniform(3, EngineMode::Gpu);
+        assert_eq!(g.devices(), 3);
+        assert!(g.speeds().iter().all(|&s| s == 1.0));
+        // a zero-member uniform group is clamped to one device
+        assert_eq!(GroupSpec::uniform(0, EngineMode::Cpu).devices(), 1);
+    }
+}

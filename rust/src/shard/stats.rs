@@ -19,6 +19,11 @@ pub struct GroupStepTrace {
     /// then falls back to the per-rider `engines` inside each
     /// [`StepTrace`] (itself empty = all-GPU).
     pub engines: Vec<EngineMode>,
+    /// Slice steals realized this step: a one-epoch loan of part of a
+    /// wide front to an under-loaded member. The lanes stay *executed*
+    /// on the victim's scheduler (bit-identity); pricing moves them to
+    /// the thief ([`group_step_cost_us`]).
+    pub steals: Vec<StealEvent>,
     /// Devices still alive when this step ran — the barrier tree spans
     /// only these (elastic shrink after a death).
     pub alive: usize,
@@ -40,6 +45,23 @@ pub struct MigrationEvent {
     pub job: JobId,
     pub from: DeviceId,
     pub to: DeviceId,
+}
+
+/// One realized slice steal: `lanes` of `job`'s front, resident on
+/// `from`, were priced on `to` for one epoch. Unlike a
+/// [`MigrationEvent`] nothing changes homes — the loan expires at the
+/// next boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealEvent {
+    /// Group step whose epoch ran the lent slice (1-based).
+    pub step: u64,
+    pub job: JobId,
+    /// Victim (the slice's home device).
+    pub from: DeviceId,
+    /// Thief (the under-loaded device the slice was priced on).
+    pub to: DeviceId,
+    /// Lanes lent for the epoch.
+    pub lanes: u64,
 }
 
 /// One tenant evacuated off a dead device — the fault-path sibling of
@@ -65,6 +87,10 @@ pub struct ShardStats {
     /// Tenants moved between devices at epoch boundaries.
     pub migrations: u64,
     pub migration_log: Vec<MigrationEvent>,
+    /// One-epoch slice loans realized (front slices priced on a thief
+    /// for a single epoch — no home change).
+    pub steals: u64,
+    pub steal_log: Vec<StealEvent>,
     /// Devices killed by the fault plan (permanent deaths, including
     /// transient failures that escalated past the retry budget).
     pub device_deaths: u64,
@@ -119,18 +145,65 @@ impl ShardStats {
 /// *received* at this boundary — a death is never free speedup
 /// (dead-ended tenants reach no survivor and cost nothing).
 pub fn group_step_cost_us(g: &DeviceGroup, gs: &GroupStepTrace) -> f64 {
-    let dev_us: Vec<f64> = gs
+    let dev_us = group_dev_us(g, gs);
+    dev_us.iter().copied().fold(0.0, f64::max)
+        + g.barrier_us_over(gs.alive.max(1))
+        + gs.retry_backoff_us
+        + received_evacuations(gs) as f64 * g.dev.launch_us
+}
+
+/// Per-device modeled cost (µs) of one group step, steal billing
+/// included: device `d` pays its own riders' kept lanes (priced with
+/// its member-scaled models), and every slice it *stole* is added on
+/// top — the lent lanes run there plus the front transfer
+/// ([`DeviceGroup::steal_xfer_us`]). The group-step cost is the max of
+/// this vector plus the (elastic) barrier; the trace stream emits it
+/// per device and the invariant checker re-derives it.
+pub fn group_dev_us(g: &DeviceGroup, gs: &GroupStepTrace) -> Vec<f64> {
+    let mut dev_us: Vec<f64> = gs
         .per_dev
         .iter()
-        .map(|d| match d {
-            Some(t) => dev_step_us(&g.dev, &g.cpu, t),
+        .enumerate()
+        .map(|(d, t)| match t {
+            Some(t) => {
+                let (gm, cm) = g.member(d);
+                dev_step_us(&gm, &cm, t)
+            }
             None => 0.0,
         })
         .collect();
-    let live = DeviceGroup { devices: gs.alive.max(1), ..*g };
-    live.group_step_us(&dev_us)
-        + gs.retry_backoff_us
-        + received_evacuations(gs) as f64 * g.dev.launch_us
+    for ev in &gs.steals {
+        if let Some(slot) = dev_us.get_mut(ev.to.0) {
+            let mode = gs
+                .engines
+                .get(ev.to.0)
+                .copied()
+                .unwrap_or(EngineMode::Gpu);
+            *slot += steal_cost_us(g, mode, ev.to.0, ev.lanes);
+        }
+    }
+    dev_us
+}
+
+/// What thief `d` pays to run a stolen `lanes`-wide slice for one
+/// epoch: the slice priced on the thief's *own* scaled models under
+/// its engine mode (`Auto` takes the cheaper side — the router would),
+/// plus the front transfer. The one formula the steal planner, the
+/// group pricing, the PAG edge weight, and the invariant checker
+/// share.
+pub fn steal_cost_us(
+    g: &DeviceGroup,
+    mode: EngineMode,
+    d: usize,
+    lanes: u64,
+) -> f64 {
+    let (gm, cm) = g.member(d);
+    let run = match mode {
+        EngineMode::Gpu => gm.fused_epoch_us(&[lanes]),
+        EngineMode::Cpu => cm.epoch_us(lanes),
+        EngineMode::Auto => gm.fused_epoch_us(&[lanes]).min(cm.epoch_us(lanes)),
+    };
+    run + g.steal_xfer_us(lanes)
 }
 
 /// Evacuations at this boundary that landed on a live survivor (the
@@ -173,12 +246,14 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            stolen: Vec::new(),
             engines: Vec::new(),
         };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t(40)), Some(t(4000))],
             alive: 2,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: Vec::new(),
@@ -198,12 +273,14 @@ mod tests {
             launches: 0,
             solo_launches: 1,
             pending: 0,
+            stolen: Vec::new(),
             engines: vec![crate::hybrid::EngineKind::Cpu],
         };
         let gs = GroupStepTrace {
             per_dev: vec![Some(t), None],
             alive: 2,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: vec![EngineMode::Cpu, EngineMode::Gpu],
@@ -224,12 +301,14 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            stolen: Vec::new(),
             engines: Vec::new(),
         };
         let trace = vec![GroupStepTrace {
             per_dev: vec![Some(t), None],
             alive: 2,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: Vec::new(),
@@ -248,12 +327,14 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            stolen: Vec::new(),
             engines: Vec::new(),
         };
         let gs = GroupStepTrace {
             per_dev: vec![Some(t), None, None, None],
             alive: 1,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 15.0,
             retries: 3,
             engines: Vec::new(),
@@ -266,6 +347,47 @@ mod tests {
     }
 
     #[test]
+    fn stolen_slices_move_pricing_to_the_thief() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        let victim = StepTrace {
+            live_per_job: vec![4000],
+            jobs: vec![JobId(0)],
+            window: 4000,
+            launches: 1,
+            solo_launches: 1,
+            pending: 0,
+            stolen: vec![2000],
+            engines: Vec::new(),
+        };
+        let gs = GroupStepTrace {
+            per_dev: vec![Some(victim), None],
+            alive: 2,
+            evacuations: Vec::new(),
+            steals: vec![StealEvent {
+                step: 1,
+                job: JobId(0),
+                from: DeviceId(0),
+                to: DeviceId(1),
+                lanes: 2000,
+            }],
+            retry_backoff_us: 0.0,
+            retries: 0,
+            engines: Vec::new(),
+        };
+        let dev = group_dev_us(&g, &gs);
+        // the victim is priced for its kept lanes only...
+        assert!((dev[0] - g.dev.fused_epoch_us(&[2000])).abs() < 1e-9);
+        // ...and the thief pays the slice run plus the front transfer
+        let want = steal_cost_us(&g, EngineMode::Gpu, 1, 2000);
+        assert!((dev[1] - want).abs() < 1e-9, "{} vs {want}", dev[1]);
+        assert!(want > g.steal_xfer_us(2000));
+        // group cost is the max of the two plus the barrier
+        let got = group_step_cost_us(&g, &gs);
+        let top = dev[0].max(dev[1]);
+        assert!((got - (top + g.barrier_us())).abs() < 1e-9);
+    }
+
+    #[test]
     fn received_evacuations_charge_a_relaunch_but_dead_ends_do_not() {
         let g = DeviceGroup::new(GpuModel::default(), 2);
         let t = StepTrace {
@@ -275,12 +397,14 @@ mod tests {
             launches: 1,
             solo_launches: 1,
             pending: 0,
+            stolen: Vec::new(),
             engines: Vec::new(),
         };
         let base = GroupStepTrace {
             per_dev: vec![Some(t), None],
             alive: 1,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: Vec::new(),

@@ -29,6 +29,12 @@ pub struct GpuModel {
     /// Divergence penalty factor: 1.0 best case, log2(simd_width) for
     /// the paper's pessimistic 50/50 split.
     pub divergence: f64,
+    /// Relative SKU speed multiplier: 1.0 is the reference part, 0.5 a
+    /// half-speed bin of the same architecture (mixed-SKU groups,
+    /// big.LITTLE). Every modeled epoch cost divides by it, so a slower
+    /// member of a heterogeneous group is slower at everything —
+    /// compute, launch, and transfer alike.
+    pub device_speed: f64,
 }
 
 impl Default for GpuModel {
@@ -41,6 +47,7 @@ impl Default for GpuModel {
             ghz: 0.72,
             launch_us: 10.0,
             divergence: 2.0,
+            device_speed: 1.0,
         }
     }
 }
@@ -52,6 +59,13 @@ impl GpuModel {
         self
     }
 
+    /// This model scaled to a relative SKU speed (floored away from 0
+    /// so a typo'd 0.0 cannot produce infinite costs).
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        self.device_speed = speed.max(1e-9);
+        self
+    }
+
     /// Estimated wall time (µs) for one epoch with `live` active tasks
     /// across `launches` kernel launches.
     pub fn epoch_us(&self, live: u64, launches: u64) -> f64 {
@@ -59,7 +73,8 @@ impl GpuModel {
         let waves = (live as f64 / lanes).ceil().max(1.0);
         let compute_us =
             waves * self.task_cycles * self.divergence / (self.ghz * 1e3);
-        compute_us + launches as f64 * self.launch_us
+        (compute_us + launches as f64 * self.launch_us)
+            / self.device_speed.max(1e-9)
     }
 
     /// Estimated wall time (µs) for one *fused* epoch: the live lanes
@@ -82,8 +97,9 @@ impl GpuModel {
         let coherent = waves - boundary;
         let wave_us = self.task_cycles / (self.ghz * 1e3);
         let split_penalty = (self.simd_width as f64).log2().max(self.divergence);
-        (coherent * self.divergence + boundary * split_penalty) * wave_us
-            + self.launch_us
+        ((coherent * self.divergence + boundary * split_penalty) * wave_us
+            + self.launch_us)
+            / self.device_speed.max(1e-9)
     }
 
     /// Estimate a whole run from a per-epoch trace of
@@ -107,16 +123,29 @@ impl GpuModel {
     }
 }
 
-/// A group of identical devices driven in lock-step by the
-/// [`crate::shard`] subsystem: every global step each device issues one
-/// fused epoch launch, then the whole group meets at a cross-device
-/// completion barrier. The group step therefore costs the *slowest*
-/// device's epoch plus the barrier — load imbalance across devices is
-/// directly visible as idle time, which is what the shard rebalancer
-/// minimizes.
-#[derive(Debug, Clone, Copy)]
+/// State moved by a whole-tenant migration, relative to lending one
+/// epoch's slice: a migrated tenant ships its full task-vector segment
+/// and heap bindings — typically an order of magnitude more bytes than
+/// the live front a steal lends — so the modeled transfer multiplies
+/// the per-lane cost by this factor
+/// ([`DeviceGroup::migrate_xfer_us`]).
+pub const MIGRATE_STATE_FACTOR: f64 = 16.0;
+
+/// A group of devices driven in lock-step by the [`crate::shard`]
+/// subsystem: every global step each device issues one fused epoch
+/// launch, then the whole group meets at a cross-device completion
+/// barrier. The group step therefore costs the *slowest* device's
+/// epoch plus the barrier — load imbalance across devices is directly
+/// visible as idle time, which is what the shard rebalancer minimizes.
+///
+/// Members need not be identical: `speeds[d]` is member `d`'s relative
+/// SKU multiplier (empty = a homogeneous group of reference parts),
+/// and [`DeviceGroup::member`] yields the member's own scaled
+/// [`GpuModel`]/[`CpuModel`] instances — the mixed-SKU / big.LITTLE
+/// shape from ROADMAP item 3.
+#[derive(Debug, Clone)]
 pub struct DeviceGroup {
-    /// The per-device model (all devices identical).
+    /// The reference per-device model (scaled per member by `speeds`).
     pub dev: GpuModel,
     /// The per-device CPU-pool model, for group members running the
     /// hybrid CPU engine (see [`crate::hybrid`]): a device's epoch
@@ -129,6 +158,13 @@ pub struct DeviceGroup {
     /// barrier is modeled as a log2-depth reduction tree over the
     /// group (HSA-era device-to-device signal latency per hop).
     pub barrier_hop_us: f64,
+    /// Per-member relative SKU speed multipliers (1.0 = the reference
+    /// `dev`/`cpu` models; empty = every member 1.0). Members past the
+    /// end of the vector are reference-speed.
+    pub speeds: Vec<f64>,
+    /// Per-lane cost (µs) of moving front state between members — the
+    /// transfer term steals and migrations are priced with.
+    pub xfer_lane_us: f64,
 }
 
 impl DeviceGroup {
@@ -138,17 +174,65 @@ impl DeviceGroup {
             cpu: crate::hybrid::CpuModel::default(),
             devices: devices.max(1),
             barrier_hop_us: 2.0,
+            speeds: Vec::new(),
+            xfer_lane_us: 0.01,
         }
+    }
+
+    /// This group with per-member SKU multipliers attached.
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> DeviceGroup {
+        self.speeds = speeds;
+        self
+    }
+
+    /// Member `d`'s relative speed (1.0 for members past the end of
+    /// `speeds`, floored away from 0).
+    pub fn member_speed(&self, d: usize) -> f64 {
+        self.speeds.get(d).copied().unwrap_or(1.0).max(1e-9)
+    }
+
+    /// Member `d`'s own model instances: the reference models scaled by
+    /// its SKU multiplier. Every pricing site (shard stats, trace
+    /// analyzer, PAG, invariant checker) prices device `d` with these,
+    /// so a half-speed member is consistently twice as expensive.
+    pub fn member(&self, d: usize) -> (GpuModel, crate::hybrid::CpuModel) {
+        let s = self.member_speed(d);
+        (self.dev.with_speed(self.dev.device_speed * s), {
+            let mut c = self.cpu;
+            c.device_speed *= s;
+            c
+        })
     }
 
     /// Whole-group barrier cost: a log2-depth signal tree; free for a
     /// single device (no cross-device completion to wait for).
     pub fn barrier_us(&self) -> f64 {
-        if self.devices <= 1 {
+        self.barrier_us_over(self.devices)
+    }
+
+    /// Barrier cost for a (possibly shrunken) member count — the
+    /// elastic form fault recovery prices a partially dead group with.
+    pub fn barrier_us_over(&self, devices: usize) -> f64 {
+        if devices <= 1 {
             0.0
         } else {
-            self.barrier_hop_us * (self.devices as f64).log2().ceil()
+            self.barrier_hop_us * (devices as f64).log2().ceil()
         }
+    }
+
+    /// Modeled cost of lending `lanes` lanes of a front to another
+    /// member for one epoch (a slice steal): one barrier hop of
+    /// signaling plus the per-lane front transfer.
+    pub fn steal_xfer_us(&self, lanes: u64) -> f64 {
+        self.barrier_hop_us + self.xfer_lane_us * lanes as f64
+    }
+
+    /// Modeled cost of migrating a whole tenant (`lanes` live lanes):
+    /// like a steal, but the tenant's full task-vector state moves, not
+    /// just the live front ([`MIGRATE_STATE_FACTOR`]).
+    pub fn migrate_xfer_us(&self, lanes: u64) -> f64 {
+        self.barrier_hop_us
+            + self.xfer_lane_us * lanes as f64 * MIGRATE_STATE_FACTOR
     }
 
     /// One lock-step group epoch given each device's own epoch cost
@@ -265,6 +349,72 @@ mod tests {
         let skewed = g.imbalance_waste(&[40.0, 0.0, 0.0, 0.0]);
         assert!((skewed - 0.75).abs() < 1e-9, "{skewed}");
         assert_eq!(g.imbalance_waste(&[]), 0.0);
+    }
+
+    #[test]
+    fn device_speed_scales_every_epoch_cost() {
+        let m = GpuModel::default();
+        let half = m.with_speed(0.5);
+        for live in [1u64, 100, 10_000] {
+            assert!(
+                (half.epoch_us(live, 1) - 2.0 * m.epoch_us(live, 1)).abs()
+                    < 1e-9
+            );
+            assert!(
+                (half.fused_epoch_us(&[live])
+                    - 2.0 * m.fused_epoch_us(&[live]))
+                .abs()
+                    < 1e-9
+            );
+        }
+        // the floor keeps a typo'd zero finite
+        assert!(m.with_speed(0.0).epoch_us(64, 1).is_finite());
+    }
+
+    #[test]
+    fn member_models_scale_with_group_speeds() {
+        let g = DeviceGroup::new(GpuModel::default(), 2)
+            .with_speeds(vec![1.0, 0.25]);
+        let (fast, _) = g.member(0);
+        let (slow, slow_cpu) = g.member(1);
+        assert!(
+            (slow.fused_epoch_us(&[512])
+                - 4.0 * fast.fused_epoch_us(&[512]))
+            .abs()
+                < 1e-9
+        );
+        assert!(
+            (slow_cpu.epoch_us(512) - 4.0 * g.cpu.epoch_us(512)).abs() < 1e-9
+        );
+        // members past the end of `speeds` are reference-speed
+        assert_eq!(g.member_speed(7), 1.0);
+        // the uniform default changes nothing
+        let u = DeviceGroup::new(GpuModel::default(), 2);
+        let (d0, c0) = u.member(0);
+        assert_eq!(d0.fused_epoch_us(&[100]), u.dev.fused_epoch_us(&[100]));
+        assert_eq!(c0.epoch_us(100), u.cpu.epoch_us(100));
+    }
+
+    #[test]
+    fn steal_transfer_undercuts_migration_transfer() {
+        let g = DeviceGroup::new(GpuModel::default(), 2);
+        for lanes in [1u64, 64, 4096] {
+            assert!(g.steal_xfer_us(lanes) < g.migrate_xfer_us(lanes));
+        }
+        // both grow with the front, from the same barrier-hop base
+        assert!(g.steal_xfer_us(4096) > g.steal_xfer_us(64));
+        assert!((g.steal_xfer_us(0) - g.barrier_hop_us).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_us_over_matches_shrunk_groups() {
+        let g = DeviceGroup::new(GpuModel::default(), 8);
+        assert_eq!(g.barrier_us_over(8), g.barrier_us());
+        assert_eq!(g.barrier_us_over(1), 0.0);
+        assert_eq!(
+            g.barrier_us_over(4),
+            DeviceGroup::new(GpuModel::default(), 4).barrier_us()
+        );
     }
 
     #[test]

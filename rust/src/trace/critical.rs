@@ -15,6 +15,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::hybrid::EngineMode;
 use crate::sched::JobId;
 use crate::shard::{DeviceId, GroupStepTrace};
 use crate::simt::DeviceGroup;
@@ -65,13 +66,17 @@ impl CriticalWindow {
 
     /// Fold one group epoch into the window: walk the epoch's PAG
     /// edges, find the straggler device, and bank its riders' compute
-    /// edges as this epoch's critical-path segment.
+    /// edges — plus any stolen slices it ran — as this epoch's
+    /// critical-path segment. Steal edges count toward the straggler
+    /// totals so the window's pick agrees with the steal-inclusive
+    /// straggler the stream records.
     pub fn push(&mut self, gs: &GroupStepTrace) {
         self.epochs += 1;
         let edges = epoch_edges(&self.g, self.epochs, gs);
         let mut totals: BTreeMap<usize, f64> = BTreeMap::new();
         for e in &edges {
-            if e.activity == Activity::Compute {
+            if matches!(e.activity, Activity::Compute | Activity::Steal)
+            {
                 *totals.entry(e.device.0).or_insert(0.0) += e.weight_us;
             }
         }
@@ -90,7 +95,10 @@ impl CriticalWindow {
             Some((d, _)) => edges
                 .iter()
                 .filter(|e| {
-                    e.activity == Activity::Compute && e.device.0 == d
+                    matches!(
+                        e.activity,
+                        Activity::Compute | Activity::Steal
+                    ) && e.device.0 == d
                 })
                 .filter_map(|e| e.job.map(|j| (e.device, j, e.weight_us)))
                 .collect(),
@@ -172,8 +180,9 @@ pub struct EpochMetrics {
     /// Window critical-path owner *after* folding this epoch in.
     pub critical: Option<CriticalOwner>,
     /// Per-device modeled compute cost (µs) this epoch — 0 for a
-    /// device that idled (or is dead). Indexed by device. Engine-aware:
-    /// each entry is [`crate::sched::dev_step_us`].
+    /// device that idled (or is dead). Indexed by device. Engine-aware
+    /// and member-scaled, stolen slices billed on the thief: each
+    /// entry matches [`crate::shard::group_dev_us`].
     pub dev_us: Vec<f64>,
     /// Modeled CPU-engine compute (µs) this epoch, Σ over devices —
     /// the pool half of the `eng` stream key.
@@ -192,23 +201,22 @@ pub struct Analyzer {
 
 impl Analyzer {
     pub fn new(g: DeviceGroup, window: usize) -> Analyzer {
-        Analyzer { g, win: CriticalWindow::new(g, window) }
+        Analyzer { win: CriticalWindow::new(g.clone(), window), g }
     }
 
     /// Fold one group epoch and report its metrics.
     pub fn push(&mut self, gs: &GroupStepTrace) -> EpochMetrics {
         let mut cpu_us = 0.0;
         let mut gpu_us = 0.0;
-        let dev_us: Vec<f64> = gs
+        let mut dev_us: Vec<f64> = gs
             .per_dev
             .iter()
-            .map(|d| match d {
+            .enumerate()
+            .map(|(d, t)| match t {
                 Some(t) => {
-                    let (c, g) = crate::sched::engine_split_us(
-                        &self.g.dev,
-                        &self.g.cpu,
-                        t,
-                    );
+                    let (gm, cm) = self.g.member(d);
+                    let (c, g) =
+                        crate::sched::engine_split_us(&gm, &cm, t);
                     cpu_us += c;
                     gpu_us += g;
                     c + g
@@ -216,15 +224,44 @@ impl Analyzer {
                 None => 0.0,
             })
             .collect();
+        // bill stolen slices on the thief — same arithmetic as
+        // `crate::shard::group_dev_us`, kept inline so the engine
+        // decomposition stays exact (a CPU thief's slice is pool time,
+        // anything else fused-launch time)
+        for ev in &gs.steals {
+            if let Some(slot) = dev_us.get_mut(ev.to.0) {
+                let mode = gs
+                    .engines
+                    .get(ev.to.0)
+                    .copied()
+                    .unwrap_or(EngineMode::Gpu);
+                let us = crate::shard::steal_cost_us(
+                    &self.g,
+                    mode,
+                    ev.to.0,
+                    ev.lanes,
+                );
+                *slot += us;
+                if mode == EngineMode::Cpu {
+                    cpu_us += us;
+                } else {
+                    gpu_us += us;
+                }
+            }
+        }
+        // a device participates in this epoch if it stepped or was
+        // billed for a stolen slice — stragglers, idle fractions and
+        // imbalance are computed over the participants
         let stepping: Vec<usize> = gs
             .per_dev
             .iter()
             .enumerate()
-            .filter_map(|(d, s)| s.is_some().then_some(d))
+            .filter_map(|(d, s)| {
+                (s.is_some() || dev_us[d] > 0.0).then_some(d)
+            })
             .collect();
         let max_us = dev_us.iter().copied().fold(0.0, f64::max);
-        let barrier =
-            DeviceGroup { devices: gs.alive.max(1), ..self.g }.barrier_us();
+        let barrier = self.g.barrier_us_over(gs.alive.max(1));
         let mut straggler: Option<usize> = None;
         for &d in &stepping {
             let better = match straggler {
@@ -299,6 +336,7 @@ mod tests {
             launches: 1,
             solo_launches: jobs.len() as u64,
             pending,
+            stolen: Vec::new(),
             engines: Vec::new(),
         }
     }
@@ -308,6 +346,7 @@ mod tests {
             per_dev,
             alive,
             evacuations: Vec::new(),
+            steals: Vec::new(),
             retry_backoff_us: 0.0,
             retries: 0,
             engines: Vec::new(),
@@ -388,6 +427,39 @@ mod tests {
         // engine decomposition: legacy traces are all-GPU, and the
         // split always reassembles the per-device total
         assert_eq!(m.cpu_us, 0.0);
+        let total: f64 = m.dev_us.iter().sum();
+        assert!((m.cpu_us + m.gpu_us - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stolen_slices_bill_the_thief_and_stay_aligned_with_pricing() {
+        use crate::shard::StealEvent;
+        let mut an = Analyzer::new(model(), 4);
+        let mut gs = group(vec![Some(st(&[(0, 4000)], 0)), None], 2);
+        if let Some(t) = gs.per_dev[0].as_mut() {
+            t.stolen = vec![2000];
+        }
+        gs.steals.push(StealEvent {
+            step: 1,
+            job: JobId(0),
+            from: DeviceId(0),
+            to: DeviceId(1),
+            lanes: 2000,
+        });
+        let m = an.push(&gs);
+        let want = group_step_cost_us(&model(), &gs);
+        assert!((m.cost_us - want).abs() < 1e-9, "{} vs {want}", m.cost_us);
+        // the thief never stepped, but its stolen slice (run plus
+        // front transfer) outweighs the victim's kept half — it is
+        // this epoch's straggler, and the window attributes the
+        // critical path to the lent slice on the thief
+        assert!(m.dev_us[1] > m.dev_us[0]);
+        assert_eq!(m.straggler, Some(DeviceId(1)));
+        assert_eq!(
+            m.critical.map(|o| (o.device, o.job)),
+            Some((DeviceId(1), JobId(0)))
+        );
+        // the engine decomposition still reassembles the billed total
         let total: f64 = m.dev_us.iter().sum();
         assert!((m.cpu_us + m.gpu_us - total).abs() < 1e-9);
     }

@@ -334,6 +334,9 @@ pub struct Summary {
     /// Epochs that routed at least one rider to the pool.
     pub cpu_epochs: usize,
     pub migrations: usize,
+    /// One-epoch slice steals billed over the run (Σ of the records'
+    /// `steals` arrays; 0 for pre-heterogeneous recordings).
+    pub steals: usize,
     pub evacuations: usize,
     pub evacuations_dead_end: usize,
     pub retries: u64,
@@ -392,6 +395,7 @@ impl Summary {
                 .filter(|e| e.eng.cpu_us > 0.0)
                 .count(),
             migrations: r.epochs.iter().map(|e| e.migrations).sum(),
+            steals: r.epochs.iter().map(|e| e.steals.len()).sum(),
             evacuations: r
                 .epochs
                 .iter()
@@ -441,8 +445,10 @@ impl Summary {
             self.cpu_us, self.cpu_epochs, self.gpu_us
         ));
         s.push_str(&format!(
-            "migrations: {} evacuations: {} (dead-end {}) retries: {}\n",
+            "migrations: {} steals: {} evacuations: {} (dead-end {}) \
+             retries: {}\n",
             self.migrations,
+            self.steals,
             self.evacuations,
             self.evacuations_dead_end,
             self.retries

@@ -20,7 +20,11 @@
 //! | `barrier-model`      | `barrier_us` matches the shrinking-barrier    |
 //! |                      | tree over the devices alive at the step       |
 //! | `cost-decomposition` | `cost_us` == max(`dev_us`) + barrier +        |
-//! |                      | backoff + evacuation re-launches              |
+//! |                      | backoff + evacuation re-launches (`dev_us`    |
+//! |                      | already carries stolen-slice billing)         |
+//! | `steal-distinct`     | every steal names two distinct devices and a  |
+//! |                      | nonzero slice (a self-steal or empty loan is  |
+//! |                      | a malformed stream)                           |
 //! | `engine-cost-decomposition` | `eng.cpu_us` + `eng.gpu_us` == Σ       |
 //! |                      | `dev_us` (the hybrid split never invents or   |
 //! |                      | loses modeled time)                           |
@@ -173,8 +177,7 @@ impl Checker {
             );
         }
 
-        let want_barrier =
-            DeviceGroup { devices: r.alive.max(1), ..self.g }.barrier_us();
+        let want_barrier = self.g.barrier_us_over(r.alive.max(1));
         if (r.barrier_us - want_barrier).abs() > TOL {
             fail(
                 "barrier-model",
@@ -201,6 +204,19 @@ impl Checker {
                     r.cost_us, r.barrier_us, r.backoff_us
                 ),
             );
+        }
+
+        for s in &r.steals {
+            if s.from == s.to || s.lanes == 0 {
+                fail(
+                    "steal-distinct",
+                    format!(
+                        "steal of job {} moves {} lane(s) from d{} to \
+                         d{}",
+                        s.job.0, s.lanes, s.from.0, s.to.0
+                    ),
+                );
+            }
         }
 
         let dev_sum: f64 = r.dev_us.iter().sum();
@@ -383,6 +399,24 @@ mod tests {
         assert!(
             vs.iter()
                 .any(|v| v.invariant == "engine-cost-decomposition"),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn a_degenerate_steal_is_flagged() {
+        let lines = stream(&["fib:12", "mergesort:64"], None);
+        // splice in a self-steal of zero lanes — both halves of the
+        // steal-distinct claim broken at once
+        let bad = lines[0].replace(
+            "\"steals\":[]",
+            "\"steals\":[{\"from\":1,\"job\":0,\"lanes\":0,\"to\":1}]",
+        );
+        assert_ne!(bad, lines[0], "records carry a steals key");
+        let mut c = Checker::new(model(), 8);
+        let vs = c.check_line(&bad).unwrap();
+        assert!(
+            vs.iter().any(|v| v.invariant == "steal-distinct"),
             "{vs:?}"
         );
     }

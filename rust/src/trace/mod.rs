@@ -13,7 +13,8 @@
 //!   pioneered PAG-over-epochs for dataflow systems; TREES's explicit
 //!   epoch synchronization makes the construction trivial and exact:
 //!   each (device, group epoch) cell gets typed activity edges
-//!   ([`Activity`]: compute, barrier-idle, migration, evacuation)
+//!   ([`Activity`]: compute, barrier-idle, migration, evacuation,
+//!   steal)
 //!   whose µs weights replay the same
 //!   [`crate::shard::group_step_cost_us`] model as the benches, so
 //!   any stepping device's timeline sums to the modeled wall time.
@@ -75,7 +76,13 @@
 //! | `migrations` | array | `{from, job, to}` per rebalancer move at this boundary |
 //! | `pending` | int | tenants parked in pending queues (backpressure) |
 //! | `retries` | int | transient launch failures retried at this boundary |
+//! | `speeds` | array | per-member SKU speed multipliers the stream is priced under (1 = reference; see [`crate::simt::DeviceGroup::with_speeds`]) |
+//! | `steals` | array | `{from, job, lanes, to}` per one-epoch slice steal billed this epoch ([`crate::shard::StealEvent`]) — `dev_us` already includes the thief's bill |
 //! | `straggler` | int \| null | device the group step waited for |
+//!
+//! The `speeds` and `steals` keys are the heterogeneous-group schema
+//! bump; parsers treat them as optional (absent = uniform group, no
+//! steals), so pre-bump recordings replay unchanged.
 //!
 //! `kind:"outcome"` — one per retired job (the session flight
 //! recorder): `{epoch, job, kind, label, lat_us, outcome}` where
@@ -104,6 +111,6 @@ pub use invariants::{Checker, InvariantMode, Violation};
 pub use pag::{epoch_edges, Activity, Pag, PagEdge};
 pub use record::{
     CriticalRef, EngRef, EpochRecord, EvacRef, OutcomeRecord, Record,
-    ViolationRecord,
+    StealRef, ViolationRecord,
 };
 pub use stream::Streamer;

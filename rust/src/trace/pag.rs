@@ -17,7 +17,7 @@
 //! [`crate::trace::CriticalWindow`] attribute the critical path by
 //! looking only at the straggler's compute edges.
 
-use crate::hybrid::EngineKind;
+use crate::hybrid::{EngineKind, EngineMode};
 use crate::sched::{engine_split_us, JobId};
 use crate::shard::{DeviceId, GroupStepTrace, MigrationEvent};
 use crate::simt::DeviceGroup;
@@ -40,6 +40,13 @@ pub enum Activity {
     /// ([`crate::simt::GpuModel::launch_us`]) — the survivor pays to
     /// bring the tenant up; a dead-end (no survivor left) weighs 0.
     Evacuation,
+    /// A one-epoch slice loan: the thief runs part of a victim's wide
+    /// front for this epoch. The edge lives on the *thief's* timeline
+    /// and weighs [`crate::shard::steal_cost_us`] — the slice run on
+    /// the thief's scaled models plus the front transfer. The victim's
+    /// compute edges shrink by the lent lanes, so timelines still sum
+    /// to the group-step cost.
+    Steal,
 }
 
 impl Activity {
@@ -50,6 +57,7 @@ impl Activity {
             Activity::BarrierIdle => "barrier-idle",
             Activity::Migration => "migration",
             Activity::Evacuation => "evacuation",
+            Activity::Steal => "steal",
         }
     }
 }
@@ -67,8 +75,9 @@ pub struct PagEdge {
     /// The tenant involved (`None` for barrier-idle, which the whole
     /// device pays regardless of its riders).
     pub job: Option<JobId>,
-    /// Destination device for moves; `None` elsewhere, and for
-    /// dead-end evacuations with no survivor left.
+    /// Destination device for moves; for steals the *victim* the slice
+    /// came from (the edge itself sits on the thief); `None` elsewhere,
+    /// and for dead-end evacuations with no survivor left.
     pub to: Option<DeviceId>,
     /// Modeled cost (µs) under the group's [`DeviceGroup`] model.
     pub weight_us: f64,
@@ -83,55 +92,52 @@ pub struct PagEdge {
 /// and one [`Activity::BarrierIdle`] edge (straggler wait + barrier
 /// over the devices alive at the step + retry backoff + the boundary's
 /// evacuation re-launches, so a stepping device's timeline still sums
-/// to the full group-step cost), plus the boundary's
-/// [`Activity::Evacuation`] edges. Migration edges live in the group's
-/// separate migration log — [`Pag::from_group_trace`] splices them in.
+/// to the full group-step cost), plus the epoch's [`Activity::Steal`]
+/// edges (a thief's timeline = compute + steal + barrier-idle) and the
+/// boundary's [`Activity::Evacuation`] edges. Per-device pricing uses
+/// the member-scaled models ([`DeviceGroup::member`]), so mixed-SKU
+/// groups weigh each timeline at its own device speed. Migration edges
+/// live in the group's separate migration log —
+/// [`Pag::from_group_trace`] splices them in.
 pub fn epoch_edges(
     g: &DeviceGroup,
     epoch: u64,
     gs: &GroupStepTrace,
 ) -> Vec<PagEdge> {
-    let dev_us: Vec<f64> = gs
-        .per_dev
-        .iter()
-        .map(|d| match d {
-            Some(t) => crate::sched::dev_step_us(&g.dev, &g.cpu, t),
-            None => 0.0,
-        })
-        .collect();
+    // Steal-inclusive, member-scaled per-device totals — the exact
+    // vector group_step_cost_us takes its max over.
+    let dev_us = crate::shard::group_dev_us(g, gs);
     let max_us = dev_us.iter().copied().fold(0.0, f64::max);
-    let barrier =
-        DeviceGroup { devices: gs.alive.max(1), ..*g }.barrier_us();
+    let barrier = g.barrier_us_over(gs.alive.max(1));
     let evac_us = crate::shard::received_evacuations(gs) as f64
         * g.dev.launch_us;
     let mut edges = Vec::new();
     for (d, slot) in gs.per_dev.iter().enumerate() {
         let Some(t) = slot else { continue };
-        let (_, gpu_us) = engine_split_us(&g.dev, &g.cpu, t);
+        let (gm, cm) = g.member(d);
+        let (_, gpu_us) = engine_split_us(&gm, &cm, t);
         let kind_of = |i: usize| {
             t.engines.get(i).copied().unwrap_or(EngineKind::Gpu)
         };
-        let gpu_total: u64 = t
-            .live_per_job
-            .iter()
-            .enumerate()
-            .filter(|&(i, _)| kind_of(i) == EngineKind::Gpu)
-            .map(|(_, &l)| l)
+        let gpu_total: u64 = (0..t.live_per_job.len())
+            .filter(|&i| kind_of(i) == EngineKind::Gpu)
+            .map(|i| t.kept_of(i))
             .sum();
         let gpu_riders = (0..t.jobs.len())
             .filter(|&i| kind_of(i) == EngineKind::Gpu)
             .count()
             .max(1) as f64;
-        for (i, (&job, &live)) in
-            t.jobs.iter().zip(&t.live_per_job).enumerate()
-        {
-            // engine-aware attribution: Σ over riders == dev_us[d].
-            // GPU riders split the shared fused launch by lane share;
-            // a CPU rider's pool epoch is priced exactly.
+        for (i, &job) in t.jobs.iter().enumerate() {
+            // engine-aware attribution over *kept* lanes (lanes lent
+            // to a thief are priced on the thief's Steal edge): Σ over
+            // riders == the device's engine split. GPU riders split
+            // the shared fused launch by lane share; a CPU rider's
+            // pool epoch is priced exactly.
+            let kept = t.kept_of(i);
             let weight_us = match kind_of(i) {
-                EngineKind::Cpu => g.cpu.epoch_us(live),
+                EngineKind::Cpu => cm.epoch_us(kept),
                 EngineKind::Gpu if gpu_total > 0 => {
-                    gpu_us * live as f64 / gpu_total as f64
+                    gpu_us * kept as f64 / gpu_total as f64
                 }
                 EngineKind::Gpu => gpu_us / gpu_riders,
             };
@@ -154,6 +160,23 @@ pub fn epoch_edges(
                 + barrier
                 + gs.retry_backoff_us
                 + evac_us,
+        });
+    }
+    for ev in &gs.steals {
+        let mode = gs
+            .engines
+            .get(ev.to.0)
+            .copied()
+            .unwrap_or(EngineMode::Gpu);
+        edges.push(PagEdge {
+            epoch,
+            device: ev.to,
+            activity: Activity::Steal,
+            job: Some(ev.job),
+            to: Some(ev.from),
+            weight_us: crate::shard::steal_cost_us(
+                g, mode, ev.to.0, ev.lanes,
+            ),
         });
     }
     for ev in &gs.evacuations {
@@ -225,8 +248,9 @@ impl Pag {
     }
 
     /// One device's timeline cost (µs) in one epoch: its compute plus
-    /// its barrier-idle. For any device that stepped this equals the
-    /// modeled group-step cost (the PAG invariant).
+    /// any stolen-slice work plus its barrier-idle. For any device
+    /// that stepped this equals the modeled group-step cost (the PAG
+    /// invariant).
     pub fn device_epoch_us(&self, epoch: u64, device: usize) -> f64 {
         self.edges
             .iter()
@@ -235,7 +259,9 @@ impl Pag {
                     && e.device.0 == device
                     && matches!(
                         e.activity,
-                        Activity::Compute | Activity::BarrierIdle
+                        Activity::Compute
+                            | Activity::Steal
+                            | Activity::BarrierIdle
                     )
             })
             .map(|e| e.weight_us)
@@ -444,10 +470,64 @@ mod tests {
     }
 
     #[test]
+    fn steal_edges_sit_on_the_thief_and_timelines_still_sum() {
+        use crate::sched::StepTrace;
+        use crate::shard::{steal_cost_us, StealEvent};
+        let model = DeviceGroup::new(GpuModel::default(), 2);
+        let st = |job: usize, live: u64, stolen: u64| StepTrace {
+            live_per_job: vec![live],
+            jobs: vec![crate::sched::JobId(job)],
+            window: live as usize,
+            launches: 1,
+            solo_launches: 1,
+            pending: 0,
+            stolen: if stolen > 0 { vec![stolen] } else { Vec::new() },
+            engines: Vec::new(),
+        };
+        let gs = GroupStepTrace {
+            per_dev: vec![Some(st(0, 4000, 2000)), Some(st(1, 100, 0))],
+            alive: 2,
+            evacuations: Vec::new(),
+            steals: vec![StealEvent {
+                step: 1,
+                job: crate::sched::JobId(0),
+                from: DeviceId(0),
+                to: DeviceId(1),
+                lanes: 2000,
+            }],
+            retry_backoff_us: 0.0,
+            retries: 0,
+            engines: Vec::new(),
+        };
+        let pag = Pag::from_group_trace(&model, &[gs.clone()], &[]);
+        let steals: Vec<&PagEdge> = pag.of_kind(Activity::Steal).collect();
+        assert_eq!(steals.len(), 1);
+        let e = steals[0];
+        assert_eq!(e.device, DeviceId(1), "the edge sits on the thief");
+        assert_eq!(e.to, Some(DeviceId(0)), "and names the victim");
+        assert_eq!(e.job, Some(JobId(0)));
+        let want = steal_cost_us(
+            &model,
+            crate::hybrid::EngineMode::Gpu,
+            1,
+            2000,
+        );
+        assert!((e.weight_us - want).abs() < 1e-9);
+        // both timelines — victim (kept lanes) and thief (own front
+        // plus the stolen slice) — still sum to the group-step cost
+        let cost = group_step_cost_us(&model, &gs);
+        for d in 0..2 {
+            let got = pag.device_epoch_us(1, d);
+            assert!((got - cost).abs() < 1e-6, "dev {d}: {got} vs {cost}");
+        }
+    }
+
+    #[test]
     fn activity_names_are_stable() {
         assert_eq!(Activity::Compute.name(), "compute");
         assert_eq!(Activity::BarrierIdle.name(), "barrier-idle");
         assert_eq!(Activity::Migration.name(), "migration");
         assert_eq!(Activity::Evacuation.name(), "evacuation");
+        assert_eq!(Activity::Steal.name(), "steal");
     }
 }

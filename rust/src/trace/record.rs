@@ -44,6 +44,19 @@ pub struct EvacRef {
     pub to: Option<DeviceId>,
 }
 
+/// One slice steal as an epoch record reports it: `lanes` of `job`'s
+/// front, resident on `from`, priced on `to` for this epoch only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealRef {
+    pub job: JobId,
+    /// Victim (the slice's home device).
+    pub from: DeviceId,
+    /// Thief (the device the slice was billed on).
+    pub to: DeviceId,
+    /// Lanes lent for the epoch.
+    pub lanes: u64,
+}
+
 /// One `kind:"epoch"` record — the per-group-epoch schema documented
 /// at [`crate::trace`] (module docs).
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +84,12 @@ pub struct EpochRecord {
     pub critical: Option<CriticalRef>,
     pub migrations: usize,
     pub evacuations: Vec<EvacRef>,
+    /// Slice steals billed this epoch. Empty on records replayed from
+    /// a pre-heterogeneous stream (the key is optional on parse).
+    pub steals: Vec<StealRef>,
+    /// Per-member SKU speed multipliers the stream was priced under.
+    /// Empty on pre-heterogeneous records — i.e. a uniform group.
+    pub speeds: Vec<f64>,
 }
 
 /// One `kind:"outcome"` record — a job retiring with a terminal
@@ -201,6 +220,32 @@ fn parse_epoch(v: &Json) -> Result<EpochRecord, String> {
         .and_then(Json::as_arr)
         .ok_or("missing array key \"migrations\"")?
         .len();
+    // optional since the heterogeneous-group schema bump: absent keys
+    // (a pre-steal stream) parse as "no steals, uniform speeds"
+    let steals: Vec<StealRef> = match v.get("steals").and_then(Json::as_arr)
+    {
+        Some(arr) => arr
+            .iter()
+            .map(|e| {
+                Ok(StealRef {
+                    job: JobId(num(e, "job")? as usize),
+                    from: DeviceId(num(e, "from")? as usize),
+                    to: DeviceId(num(e, "to")? as usize),
+                    lanes: uint(e, "lanes")?,
+                })
+            })
+            .collect::<Result<_, String>>()?,
+        None => Vec::new(),
+    };
+    let speeds: Vec<f64> = match v.get("speeds").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|x| {
+                x.as_f64().ok_or("non-numeric speeds entry".to_string())
+            })
+            .collect::<Result<_, _>>()?,
+        None => Vec::new(),
+    };
     Ok(EpochRecord {
         epoch: uint(v, "epoch")?,
         cost_us: num(v, "cost_us")?,
@@ -222,6 +267,8 @@ fn parse_epoch(v: &Json) -> Result<EpochRecord, String> {
         critical,
         migrations,
         evacuations,
+        steals,
+        speeds,
     })
 }
 
@@ -303,6 +350,10 @@ mod tests {
                     // and the split reassembles the device cost
                     assert_eq!(e.eng.modes, vec!["gpu", "gpu"]);
                     assert_eq!(e.eng.cpu_us, 0.0);
+                    // uniform group, stealing off: unit speeds echoed,
+                    // no steal entries
+                    assert_eq!(e.speeds, vec![1.0, 1.0]);
+                    assert!(e.steals.is_empty());
                     let total: f64 = e.dev_us.iter().sum();
                     assert!(
                         (e.eng.cpu_us + e.eng.gpu_us - total).abs() < 1e-6,
@@ -311,6 +362,35 @@ mod tests {
                 }
                 other => panic!("record {k}: {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn pre_heterogeneous_records_parse_with_empty_defaults() {
+        let mut g = ShardGroup::new(ShardConfig {
+            devices: 2,
+            sched: SchedConfig { trace: true, ..Default::default() },
+            ..Default::default()
+        });
+        let b = JobSpec::parse("fib:10").unwrap().instantiate().unwrap();
+        g.admit_build(&b);
+        g.run_to_completion().unwrap();
+        let mut lines = Vec::new();
+        let mut s =
+            Streamer::new(DeviceGroup::new(GpuModel::default(), 2), 8);
+        s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+        // strip the schema-bump keys — the line an old recorder wrote
+        let line = &lines[0];
+        let start = line.find(",\"speeds\"").expect("speeds key");
+        let end = line.find(",\"straggler\"").expect("straggler key");
+        let legacy = format!("{}{}", &line[..start], &line[end..]);
+        match Record::parse(&legacy) {
+            Ok(Record::Epoch(e)) => {
+                assert!(e.steals.is_empty());
+                assert!(e.speeds.is_empty());
+                assert_eq!(e.epoch, 1);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

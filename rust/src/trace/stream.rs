@@ -20,6 +20,9 @@ use super::critical::Analyzer;
 #[derive(Debug)]
 pub struct Streamer {
     an: Analyzer,
+    /// The group cost model — kept for the per-record `speeds` echo
+    /// (per-member SKU multipliers).
+    g: DeviceGroup,
     /// Trace entries already emitted (cursor into `stats.trace`).
     emitted: usize,
     /// Migration-log cursor (events are in step order).
@@ -34,7 +37,8 @@ impl Streamer {
     /// is the critical-path attribution window in epochs.
     pub fn new(g: DeviceGroup, window: usize) -> Streamer {
         Streamer {
-            an: Analyzer::new(g, window),
+            an: Analyzer::new(g.clone(), window),
+            g,
             emitted: 0,
             migr: 0,
             cum_us: 0.0,
@@ -170,6 +174,30 @@ impl Streamer {
             rec.insert("pending".into(), Json::Num(m.pending as f64));
             rec.insert("retries".into(), Json::Num(gs.retries as f64));
             rec.insert(
+                "speeds".into(),
+                Json::Arr(
+                    (0..gs.per_dev.len())
+                        .map(|d| Json::Num(self.g.member_speed(d)))
+                        .collect(),
+                ),
+            );
+            let steals: Vec<Json> = gs
+                .steals
+                .iter()
+                .map(|ev| {
+                    let mut o = BTreeMap::new();
+                    o.insert("from".into(), Json::Num(ev.from.0 as f64));
+                    o.insert("job".into(), Json::Num(ev.job.0 as f64));
+                    o.insert(
+                        "lanes".into(),
+                        Json::Num(ev.lanes as f64),
+                    );
+                    o.insert("to".into(), Json::Num(ev.to.0 as f64));
+                    Json::Obj(o)
+                })
+                .collect();
+            rec.insert("steals".into(), Json::Arr(steals));
+            rec.insert(
                 "straggler".into(),
                 match m.straggler {
                     Some(d) => Json::Num(d.0 as f64),
@@ -223,6 +251,8 @@ mod tests {
         "migrations",
         "pending",
         "retries",
+        "speeds",
+        "steals",
         "straggler",
     ];
 
@@ -260,7 +290,7 @@ mod tests {
         let g = run(&["fib:12", "fib:13", "mergesort:16"]);
         let model = DeviceGroup::new(GpuModel::default(), 2);
         let mut whole = Vec::new();
-        Streamer::new(model, 8)
+        Streamer::new(model.clone(), 8)
             .drain(g.stats(), &mut |l: &str| whole.push(l.to_string()));
         // drain twice mid-way: the cursor must not re-emit or skip
         let mut parts = Vec::new();

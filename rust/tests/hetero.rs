@@ -1,0 +1,277 @@
+//! Heterogeneous device-group properties (ISSUE 10 acceptance):
+//!
+//! (a) **stealing never changes results**: with per-SKU speeds, slice
+//!     steals enabled, and a `GroupSpec`-built session, every job
+//!     finishes bit-identical (root, res vector, heaps, machine
+//!     counters) to the single-device reference across placement ×
+//!     fairness × 1..4-device groups × the `TREES_FAULT_SEEDS`
+//!     random-fault matrix;
+//! (b) a forced transient skew (wide front pinned to a slow SKU,
+//!     migration trigger parked out of reach) resolves through slice
+//!     steals, not whole-tenant migration;
+//! (c) the modeled transfer cost orders steals strictly under
+//!     migration at every slice width, so a realized steal never
+//!     models worse than the migration it displaced;
+//! (d) a hetero stealing stream passes strict online invariants and
+//!     echoes the member speeds and steal events per record.
+
+use trees::fault::{FaultPlan, Outcome};
+use trees::hybrid::EngineMode;
+use trees::sched::{Fairness, JobSpec, SchedConfig};
+use trees::session::{Session, SessionBuilder, SessionResult};
+use trees::shard::{
+    GroupSpec, MemberSpec, PlacementKind, RebalanceCfg, ShardConfig,
+    ShardGroup,
+};
+use trees::simt::{DeviceGroup, GpuModel};
+use trees::trace::{Checker, Streamer};
+use trees::util::json::Json;
+
+fn seeds() -> Vec<u64> {
+    let spec =
+        std::env::var("TREES_FAULT_SEEDS").unwrap_or_else(|_| "0..2".into());
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().expect("TREES_FAULT_SEEDS start");
+        let b: u64 = b.trim().parse().expect("TREES_FAULT_SEEDS end");
+        (a..=b).collect()
+    } else {
+        spec.split(',')
+            .map(|t| t.trim().parse().expect("TREES_FAULT_SEEDS entry"))
+            .collect()
+    }
+}
+
+/// Narrow tails (fib, tsp) plus wide middles (mergesort, bfs), so both
+/// steal-worthy and steal-proof fronts appear in every run.
+const MIX: &[&str] =
+    &["fib:12", "mergesort:256", "nqueens:5", "fib:10", "bfs:grid:4", "tsp:6"];
+
+/// The most heterogeneous group a given size allows: a reference GPU,
+/// a half-speed GPU bin, a CPU member, an auto-routed half-speed part.
+fn hetero_members(devices: usize) -> Vec<MemberSpec> {
+    let all = [
+        MemberSpec::with_speed(EngineMode::Gpu, 1.0),
+        MemberSpec::with_speed(EngineMode::Gpu, 0.5),
+        MemberSpec::with_speed(EngineMode::Cpu, 1.0),
+        MemberSpec::with_speed(EngineMode::Auto, 0.5),
+    ];
+    all[..devices.min(all.len())].to_vec()
+}
+
+fn assert_same_machine(tag: &str, got: &SessionResult, want: &SessionResult) {
+    let (mg, mw) = (
+        got.job.engine.machine().expect("machine-backed engine"),
+        want.job.engine.machine().expect("machine-backed engine"),
+    );
+    assert_eq!(mg.root_result(), mw.root_result(), "{tag}: root");
+    assert_eq!(mg.res, mw.res, "{tag}: res vector");
+    assert_eq!(mg.heap_i, mw.heap_i, "{tag}: heap_i");
+    assert_eq!(mg.heap_f, mw.heap_f, "{tag}: heap_f");
+    assert_eq!(mg.stats.work, mw.stats.work, "{tag}: work");
+    assert_eq!(mg.stats.epochs, mw.stats.epochs, "{tag}: epochs");
+}
+
+fn run_mix(b: SessionBuilder) -> Session {
+    let mut s = b.build().expect("interp sessions build infallibly");
+    for tok in MIX {
+        s.submit_spec(tok).expect("mix token");
+    }
+    s.drain().expect("drain");
+    s
+}
+
+fn assert_matches_reference(tag: &str, s: &Session, reference: &Session) {
+    assert_eq!(s.results().len(), MIX.len(), "{tag}: all finish");
+    for r in s.results() {
+        assert_eq!(r.job.outcome, Outcome::Done, "{tag}: {}", r.job.label);
+        let w = reference
+            .results()
+            .iter()
+            .find(|x| x.job.id == r.job.id)
+            .expect("same admission order");
+        assert_same_machine(&format!("{tag}: {}", r.job.label), r, w);
+    }
+}
+
+#[test]
+fn prop_stealing_hetero_groups_are_bit_identical_to_solo() {
+    let reference = run_mix(Session::builder());
+    for seed in seeds() {
+        for placement in
+            [PlacementKind::RoundRobin, PlacementKind::LeastLoaded]
+        {
+            for fairness in [Fairness::RoundRobin, Fairness::Weighted] {
+                for devices in 1..=4usize {
+                    let tag = format!(
+                        "seed {seed}, {placement:?}, {fairness:?}, \
+                         {devices} devices"
+                    );
+                    let spec = GroupSpec::new(hetero_members(devices))
+                        .with_placement(placement)
+                        .with_rebalance(RebalanceCfg {
+                            steal: true,
+                            ..Default::default()
+                        });
+                    let mut b =
+                        Session::builder().group(spec).fairness(fairness);
+                    if devices > 1 {
+                        // random deaths + transients at group
+                        // boundaries; survivors must stay identical
+                        b = b.fault_plan(FaultPlan::random(
+                            seed, devices, 30,
+                        ));
+                    }
+                    assert_matches_reference(&tag, &run_mix(b), &reference);
+                }
+            }
+        }
+    }
+}
+
+/// Forced transient skew: a wide mergesort pinned to a quarter-speed
+/// SKU while the fast member idles, with the migration trigger parked
+/// out of reach. The imbalance is one front's width — exactly what a
+/// one-epoch slice loan is for — so the group must resolve it with
+/// steals and zero migrations, and still finish bit-identical.
+#[test]
+fn transient_skew_steals_instead_of_migrating() {
+    let builds: Vec<_> = ["mergesort:4096", "fib:10"]
+        .iter()
+        .map(|t| JobSpec::parse(t).unwrap().instantiate().unwrap())
+        .collect();
+    let mut g = ShardGroup::new(ShardConfig {
+        devices: 2,
+        placement: PlacementKind::Affinity,
+        rebalance: RebalanceCfg {
+            // skew can never clear this bar, so any migration would be
+            // a planner bug; steals carry no trigger, only their
+            // never-worse envelope
+            skew_threshold: 1e9,
+            steal: true,
+            ..Default::default()
+        },
+        sched: SchedConfig { trace: true, ..Default::default() },
+        speeds: vec![0.25, 1.0],
+        ..Default::default()
+    });
+    g.pin("mergesort", 0);
+    g.pin("fib", 1);
+    for b in &builds {
+        g.admit_build(b);
+    }
+    g.run_to_completion().unwrap();
+
+    let st = g.stats();
+    assert!(st.steals >= 1, "the wide front must lend slices");
+    assert_eq!(st.migrations, 0, "no whole-tenant moves past the bar");
+    for ev in &st.steal_log {
+        assert_eq!(ev.from.0, 0, "the slow member is always the victim");
+        assert_eq!(ev.to.0, 1, "the fast member is always the thief");
+        assert!(ev.lanes > 0);
+    }
+    // the trace carries the same events the log does
+    let traced: u64 =
+        st.trace.iter().map(|t| t.steals.len() as u64).sum();
+    assert_eq!(traced, st.steals);
+
+    // results stay bit-identical to dedicated solo runs
+    for b in &builds {
+        let mut solo =
+            trees::sched::FusedScheduler::new(SchedConfig::default());
+        solo.admit_build(b);
+        solo.run_to_completion().unwrap();
+        let want = solo.finished()[0].engine.root_result();
+        let got = g
+            .finished()
+            .find(|(_, f)| f.label == b.label)
+            .map(|(_, f)| f.engine.root_result())
+            .expect("job finished");
+        assert_eq!(got, want, "{}", b.label);
+    }
+
+    // ...and the recorded stream replays cleanly under the checker,
+    // with the SKU multipliers echoed and the steals priced per record
+    let model = DeviceGroup::new(GpuModel::default(), 2)
+        .with_speeds(vec![0.25, 1.0]);
+    let mut lines = Vec::new();
+    let mut s = Streamer::new(model.clone(), 8);
+    s.drain(g.stats(), &mut |l: &str| lines.push(l.to_string()));
+    let mut checker = Checker::new(model, 8);
+    let mut stolen_records = 0;
+    for line in &lines {
+        let vs = checker.check_line(line).expect("well-formed record");
+        assert!(vs.is_empty(), "invariant violation on {line}");
+        let v = Json::parse(line).unwrap();
+        assert_eq!(
+            v.get("speeds").map(|s| s.to_string()),
+            Some("[0.25,1]".to_string()),
+            "{line}"
+        );
+        let steals = v.get("steals").and_then(Json::as_arr).unwrap();
+        stolen_records += u64::from(!steals.is_empty());
+    }
+    assert!(stolen_records >= 1, "steals must reach the stream");
+}
+
+/// The transfer model's ordering: moving a slice for one epoch prices
+/// strictly under migrating the same lanes' whole-tenant state, at
+/// every width — the arithmetic backstop behind the planner's
+/// `stolen <= migrated` envelope.
+#[test]
+fn steal_transfer_always_undercuts_migration_transfer() {
+    let model = DeviceGroup::new(GpuModel::default(), 2)
+        .with_speeds(vec![0.25, 1.0]);
+    for lanes in [1u64, 2, 64, 256, 1024, 4096, 1 << 16] {
+        let steal = model.steal_xfer_us(lanes);
+        let migrate = model.migrate_xfer_us(lanes);
+        assert!(
+            steal < migrate,
+            "lanes {lanes}: steal {steal} >= migrate {migrate}"
+        );
+    }
+}
+
+/// End-to-end through the session facade: a `GroupSpec` group with
+/// stealing on streams its flight recorder under strict invariants —
+/// the member-scaled pricing must stay in lockstep across the
+/// streamer, analyzer, PAG, and checker.
+#[test]
+fn strict_invariants_hold_for_a_hetero_stealing_stream() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    let lines: Rc<RefCell<Vec<String>>> = Rc::default();
+    let tap = Rc::clone(&lines);
+    let mut spec = GroupSpec::parse("gpu,gpu:0.5,cpu").unwrap();
+    spec.rebalance.steal = true;
+    let mut s = Session::builder()
+        .group(spec)
+        .trace_sink(8, move |l: &str| {
+            tap.borrow_mut().push(l.to_string());
+        })
+        .invariants(trees::trace::InvariantMode::Strict)
+        .build()
+        .unwrap();
+    for tok in MIX {
+        s.submit_spec(tok).unwrap();
+    }
+    // strict mode aborts the drain on the first violation
+    s.drain().unwrap();
+    s.finish_trace().unwrap();
+    assert_eq!(s.results().len(), MIX.len());
+    let lines = lines.borrow();
+    assert!(
+        !lines.iter().any(|l| l.contains("\"kind\":\"violation\"")),
+        "clean hetero run must not report violations"
+    );
+    let epoch = lines
+        .iter()
+        .find(|l| l.contains("\"kind\":\"epoch\""))
+        .expect("epoch records streamed");
+    let v = Json::parse(epoch).unwrap();
+    assert_eq!(
+        v.get("speeds").map(|s| s.to_string()),
+        Some("[1,0.5,1]".to_string()),
+        "{epoch}"
+    );
+    assert!(v.get("steals").and_then(Json::as_arr).is_some(), "{epoch}");
+}
